@@ -1,0 +1,47 @@
+//! MoE training scenario (the paper's Qwen3-7B-A1.5B setting, scaled):
+//! trains the top-2-of-8 routed-expert model with every FP4 recipe on the
+//! pure-Rust simulator and reports the Fig.-6(b)/Table-1 style comparison.
+//!
+//! Run: cargo run --release --example moe_train -- [steps]
+
+use averis::config::{ExperimentConfig, ModelPreset};
+use averis::coordinator::sim_train_run;
+use averis::quant::QuantRecipe;
+
+fn main() -> anyhow::Result<()> {
+    let steps: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(60);
+    println!("MoE (8 experts, top-2) training, {steps} steps per recipe\n");
+
+    let mut rows = Vec::new();
+    for recipe in QuantRecipe::PAPER_SET {
+        let mut exp = ExperimentConfig::defaults(ModelPreset::MoeSmall, recipe);
+        exp.train.steps = steps;
+        exp.train.batch = 4;
+        exp.train.seq = 48;
+        exp.train.eval_every = 0;
+        exp.out_dir = "runs/moe".to_string();
+        println!("== {recipe} ==");
+        let r = sim_train_run(&exp, false)?;
+        println!(
+            "  final loss {:.4}   heldout {:.4}   {:.2} s/step",
+            r.final_train_loss, r.final_eval_loss, r.sec_per_step
+        );
+        rows.push((recipe, r.final_eval_loss));
+    }
+
+    let bf16 = rows
+        .iter()
+        .find(|(r, _)| *r == QuantRecipe::Bf16)
+        .map(|&(_, l)| l)
+        .unwrap_or(f32::NAN);
+    println!("\nheld-out loss gaps vs BF16 (paper Fig. 6b / Table 1 protocol):");
+    for (recipe, loss) in &rows {
+        if *recipe == QuantRecipe::Bf16 {
+            println!("  {:<16} {loss:.4}  (reference)", recipe.to_string());
+        } else {
+            let gap = 100.0 * (loss - bf16) / bf16;
+            println!("  {:<16} {loss:.4}  ({gap:+.2}%)", recipe.to_string());
+        }
+    }
+    Ok(())
+}

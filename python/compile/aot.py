@@ -1,0 +1,108 @@
+"""AOT pipeline: lower the per-recipe train/eval steps to HLO **text** and
+write artifacts/ for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    RECIPES,
+    ModelConfig,
+    TrainHyper,
+    example_args,
+    flat_init,
+    make_eval_step,
+    make_train_step,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--recipes", default=",".join(RECIPES))
+    ap.add_argument("--skip-eval", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = ModelConfig()
+    hp = TrainHyper()
+    theta, _, n_params = flat_init(cfg)
+    ex = example_args(cfg)
+
+    # initial parameters (and zero moments) as a raw f32 LE binary blob the
+    # Rust side memory-maps — identical init across recipes (paper protocol)
+    theta_path = os.path.join(args.out_dir, "theta0.f32")
+    with open(theta_path, "wb") as f:
+        f.write(bytes(memoryview(jax.device_get(theta))))
+    print(f"wrote {theta_path} ({n_params} params)")
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "d_ff": cfg.d_ff,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+        },
+        "hyper": {
+            "peak_lr": hp.peak_lr,
+            "min_lr": hp.min_lr,
+            "warmup": hp.warmup,
+            "total_steps": hp.total_steps,
+            "grad_clip": hp.grad_clip,
+        },
+        "n_params": int(n_params),
+        "train_signature": "(theta[n], m[n], v[n], tokens[b,s]i32, targets[b,s]i32, step i32) -> (theta, m, v, loss)",
+        "eval_signature": "(theta[n], tokens[b,s]i32, targets[b,s]i32) -> (loss,)",
+        "artifacts": {},
+    }
+
+    for recipe in args.recipes.split(","):
+        train_fn = make_train_step(cfg, hp, recipe)
+        lowered = jax.jit(train_fn).lower(*ex)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"train_{recipe}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+        manifest["artifacts"][f"train_{recipe}"] = os.path.basename(path)
+
+        if not args.skip_eval:
+            eval_fn = make_eval_step(cfg, recipe)
+            lowered = jax.jit(eval_fn).lower(ex[0], ex[3], ex[4])
+            text = to_hlo_text(lowered)
+            path = os.path.join(args.out_dir, f"eval_{recipe}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+            manifest["artifacts"][f"eval_{recipe}"] = os.path.basename(path)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

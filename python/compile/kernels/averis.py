@@ -1,0 +1,60 @@
+"""Layer-1 Pallas kernel: Averis mean extraction + residual centering.
+
+The entire preprocessing cost of Averis (paper Table 2) is one feature-wise
+mean reduction and one broadcast subtract. The kernel computes both in a
+single pass over a (TILE_L, m) stripe grid with a VMEM accumulator: pass 1
+accumulates column sums across grid steps; pass 2 (separate kernel) subtracts
+the broadcast mean — on TPU this is the canonical two-kernel reduction, and
+the subtract fuses into the consumer quantization kernel so the whole Averis
+preprocessing is one extra VPU pass (vs. the Hadamard baseline's per-tile
+matmul). ``interpret=True`` for CPU-PJRT execution.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_L = 64
+
+
+def _colsum_kernel(x_ref, o_ref):
+    """Accumulate column sums across the row-stripe grid."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...], axis=0, keepdims=True)
+
+
+def _center_kernel(x_ref, mu_ref, o_ref):
+    o_ref[...] = x_ref[...] - mu_ref[...]
+
+
+def mean_residual_split(x):
+    """(μ, X_R) via Pallas kernels. Matches ``ref.mean_residual_split``."""
+    l, m = x.shape
+    tile_l = TILE_L if l % TILE_L == 0 else l
+    grid = (l // tile_l,)
+    colsum = pl.pallas_call(
+        _colsum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_l, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, m), x.dtype),
+        interpret=True,
+    )(x)
+    mu = colsum[0] / jnp.float32(l)
+    residual = pl.pallas_call(
+        _center_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_l, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_l, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, m), x.dtype),
+        interpret=True,
+    )(x, mu[None, :])
+    return mu, residual

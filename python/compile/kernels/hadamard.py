@@ -1,0 +1,50 @@
+"""Layer-1 Pallas kernel: tiled 16-point Hadamard transform (the NVIDIA-style
+outlier-smoothing baseline's preprocessing step).
+
+Each grid step loads a (TILE_L, m) stripe into VMEM, reshapes it to
+(TILE_L, m/16, 16) and contracts the last axis with the constant orthonormal
+H₁₆ — on TPU this is an MXU-shaped (…,16)×(16,16) matmul with the Hadamard
+matrix resident in VMEM, which is exactly how the paper's baseline maps the
+CUDA tile transform to hardware. ``interpret=True`` for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE = 16
+TILE_L = 64
+
+
+def _hadamard_kernel(x_ref, h_ref, o_ref):
+    x = x_ref[...]
+    h = h_ref[...]
+    tile_l, m = x.shape
+    xb = x.reshape(tile_l, m // TILE, TILE)
+    o_ref[...] = (xb @ h).reshape(tile_l, m)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def tiled_hadamard(x, tile=TILE):
+    """Pallas tiled Hadamard along the last axis of (l, m). Involutory."""
+    assert tile == TILE, "kernel is specialized to the 16-point transform"
+    l, m = x.shape
+    assert m % TILE == 0
+    tile_l = TILE_L if l % TILE_L == 0 else l
+    h = ref.hadamard_matrix(TILE)
+    grid = (l // tile_l,)
+    return pl.pallas_call(
+        _hadamard_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_l, m), lambda i: (i, 0)),
+            pl.BlockSpec((TILE, TILE), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_l, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, m), x.dtype),
+        interpret=True,
+    )(x, h)

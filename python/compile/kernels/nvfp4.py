@@ -1,0 +1,86 @@
+"""Layer-1 Pallas kernel: fused NVFP4 blockwise quantize-dequantize.
+
+One grid step processes a (TILE_L, m) stripe of the activation resident in
+VMEM: block-amax reduction, two-level scale derivation (per-tensor f32 scale
+precomputed and broadcast; per-16-block E4M3 scale), E2M1 rounding, and the
+dequantized write — a single HBM round-trip per tensor.
+
+TPU adaptation (DESIGN.md §6): the 16-element NVFP4 block maps onto the lane
+axis of the (8,128) vector registers; the E2M1 rounding ladder is pure VPU
+`select` arithmetic (no gather); on real hardware the kernel would fuse into
+the MXU GeMM epilogue/prologue. Here it runs with ``interpret=True`` so it
+lowers to plain HLO that the CPU PJRT client executes (the Mosaic path needs
+a TPU plugin).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = ref.BLOCK
+TILE_L = 64
+
+
+def _e2m1_round_vec(mag):
+    """Branch-free E2M1 rounding ladder on non-negative values (VPU-friendly:
+    three uniform-grid roundings + two selects)."""
+    mag = jnp.minimum(mag, ref.E2M1_MAX)
+    lo = jnp.round(mag * 2.0) / 2.0
+    mid = jnp.round(mag)
+    hi = jnp.round(mag / 2.0) * 2.0
+    return jnp.where(mag < 1.75, lo, jnp.where(mag < 3.5, mid, hi))
+
+
+def _quant_kernel(tscale_ref, x_ref, o_ref):
+    """Kernel body: quantize-dequantize one (tile_l, m) stripe."""
+    x = x_ref[...]
+    tile_l, m = x.shape
+    tscale = tscale_ref[0]
+    xb = x.reshape(tile_l, m // BLOCK, BLOCK)
+    block_amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    raw = block_amax / ref.E2M1_MAX / tscale
+    bscale = jnp.maximum(
+        jnp.clip(raw, -ref.E4M3_MAX, ref.E4M3_MAX)
+        .astype(jnp.float8_e4m3fn)
+        .astype(jnp.float32),
+        ref.E4M3_MIN_SUBNORMAL,
+    )
+    denom = bscale * tscale
+    scaled = xb / denom
+    q = jnp.sign(scaled) * _e2m1_round_vec(jnp.abs(scaled))
+    out = jnp.where(block_amax > 0, q * denom, 0.0)
+    o_ref[...] = out.reshape(tile_l, m)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def nvfp4_quant_dequant(x, block=BLOCK):
+    """Pallas-kernel NVFP4 fake-quant along the last axis of (l, m).
+
+    Matches ``ref.nvfp4_quant_dequant`` bit-for-bit (pytest enforces this).
+    """
+    assert block == BLOCK, "kernel is specialized to the NVFP4 block of 16"
+    l, m = x.shape
+    assert m % BLOCK == 0
+    tile_l = TILE_L if l % TILE_L == 0 else l
+    # per-tensor scale is a cross-tile reduction — computed once outside the
+    # grid (on HW: a tiny pre-pass or carried from the previous step's amax)
+    tensor_amax = jnp.max(jnp.abs(x))
+    tscale = jnp.where(
+        tensor_amax > 0, tensor_amax / (ref.E4M3_MAX * ref.E2M1_MAX), 1.0
+    )[None]
+    grid = (l // tile_l,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tile_l, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_l, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, m), x.dtype),
+        interpret=True,
+    )(tscale, x)

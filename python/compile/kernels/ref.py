@@ -1,0 +1,126 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite checks every kernel against, and
+they are themselves cross-validated against the Rust implementation (same
+E2M1 grid, same two-level E4M3 block scaling, same orthonormal FWHT) by the
+integration tests.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# --- E2M1 element format -----------------------------------------------------
+
+E2M1_MAX = 6.0
+E2M1_VALUES = jnp.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=jnp.float32)
+
+E4M3_MAX = 448.0
+E4M3_MIN_SUBNORMAL = 2.0 ** -9
+
+
+def e2m1_round(x):
+    """Round to the E2M1 grid, round-to-nearest with ties matching the
+    4-bit hardware convention (ties to even code == jnp.round's ties-to-even
+    in each uniform segment of the grid)."""
+    mag = jnp.minimum(jnp.abs(x), E2M1_MAX)
+    # three uniform segments: [0,2) step .5, [2,4) step 1, [4,6] step 2
+    lo = jnp.round(mag * 2.0) / 2.0
+    mid = jnp.round(mag)
+    hi = jnp.round(mag / 2.0) * 2.0
+    q = jnp.where(mag < 1.75, lo, jnp.where(mag < 3.5, mid, hi))
+    return jnp.sign(x) * q
+
+
+def e2m1_round_sr(x, key):
+    """Stochastic rounding to the E2M1 grid (unbiased)."""
+    mag = jnp.minimum(jnp.abs(x), E2M1_MAX)
+    grid = E2M1_VALUES
+    hi_idx = jnp.clip(jnp.searchsorted(grid, mag, side="left"), 1, 7)
+    lo = grid[hi_idx - 1]
+    hi = grid[hi_idx]
+    p_hi = jnp.where(hi > lo, (mag - lo) / (hi - lo), 0.0)
+    u = jax.random.uniform(key, shape=x.shape)
+    q = jnp.where(u < p_hi, hi, lo)
+    return jnp.sign(x) * q
+
+
+def e4m3_quantize(x):
+    """Round to the nearest representable E4M3 (fn) value, saturating."""
+    clipped = jnp.clip(x, -E4M3_MAX, E4M3_MAX)
+    return clipped.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+
+
+# --- NVFP4 blockwise quantizer ------------------------------------------------
+
+BLOCK = 16
+
+
+def nvfp4_quant_dequant(x, block=BLOCK, sr_key=None):
+    """Fake-quant an (l, m) matrix to NVFP4 along the last axis:
+    E2M1 elements, per-16-block E4M3 scales, one per-tensor f32 scale.
+    With ``sr_key`` the element rounding is stochastic (backward operands)."""
+    l, m = x.shape
+    assert m % block == 0, f"last dim {m} not divisible by block {block}"
+    xb = x.reshape(l, m // block, block)
+    tensor_amax = jnp.max(jnp.abs(x))
+    tscale = jnp.where(tensor_amax > 0, tensor_amax / (E4M3_MAX * E2M1_MAX), 1.0)
+    block_amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    raw_scale = block_amax / E2M1_MAX / tscale
+    bscale = jnp.maximum(e4m3_quantize(raw_scale), E4M3_MIN_SUBNORMAL)
+    denom = bscale * tscale
+    scaled = xb / denom
+    if sr_key is None:
+        q = e2m1_round(scaled)
+    else:
+        q = e2m1_round_sr(scaled, sr_key)
+    out = q * denom
+    out = jnp.where(block_amax > 0, out, 0.0)
+    return out.reshape(l, m)
+
+
+def nvfp4_quant_dequant_t(x, block=BLOCK, sr_key=None):
+    """Fake-quant along the *first* axis (blocks over rows) — the layout for
+    operands whose reduction axis is axis 0 (e.g. W in Y = X·W, or X/D in the
+    wgrad GeMM)."""
+    return nvfp4_quant_dequant(x.T, block=block, sr_key=sr_key).T
+
+
+# --- Tiled Hadamard -----------------------------------------------------------
+
+
+def hadamard_matrix(t):
+    """Orthonormal Sylvester Hadamard matrix of size t (power of two)."""
+    assert t & (t - 1) == 0
+    h = jnp.array([[1.0]], dtype=jnp.float32)
+    n = 1
+    while n < t:
+        h = jnp.block([[h, h], [h, -h]])
+        n *= 2
+    return h / jnp.sqrt(jnp.float32(t))
+
+
+def tiled_hadamard(x, tile=16):
+    """Apply the orthonormal Hadamard transform to every consecutive tile of
+    the last axis. Involutory (H = Hᵀ = H⁻¹ after normalization)."""
+    l, m = x.shape
+    assert m % tile == 0
+    h = hadamard_matrix(tile)
+    return (x.reshape(l, m // tile, tile) @ h).reshape(l, m)
+
+
+# --- Averis mean-residual split -------------------------------------------------
+
+
+def mean_residual_split(x):
+    """(μ, X_R): feature-wise mean over tokens and the centered residual."""
+    mu = jnp.mean(x, axis=0)
+    return mu, x - mu[None, :]
+
+
+def averis_forward_ref(x, w, block=BLOCK):
+    """Eq. (8): Ŷ = 1·(μ̄_X W̄) + X̄_R W̄ (pure-jnp reference)."""
+    mu, xr = mean_residual_split(x)
+    mu_q = nvfp4_quant_dequant(mu[None, :], block=block)[0]
+    xr_q = nvfp4_quant_dequant(xr, block=block)
+    w_q = nvfp4_quant_dequant_t(w, block=block)
+    return mu_q[None, :] @ w_q + xr_q @ w_q

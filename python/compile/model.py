@@ -1,0 +1,338 @@
+"""Layer-2: JAX Qwen3-style Transformer with quantized GeMMs (W4A4G4) and a
+full AdamW train step, AOT-lowered to HLO text for the Rust coordinator.
+
+Mirrors the pure-Rust simulator one-to-one:
+  * pre-norm blocks: RMSNorm → GQA attention (RoPE) → residual,
+    RMSNorm → SwiGLU FFN → residual; tied LM head (kept unquantized).
+  * every linear GeMM routes through ``quantized_gemm`` — a ``custom_vjp``
+    whose forward applies the recipe's preprocessing (tiled Hadamard /
+    Averis mean-residual split, as Pallas kernels) + NVFP4 fake-quant, and
+    whose backward quantizes the dgrad/wgrad GeMM operands with stochastic
+    rounding (paper §4).
+
+The exported functions take a *flat* f32 parameter vector (plus flat AdamW
+moments), so the Rust side sees a fixed 6-argument signature regardless of
+architecture: (theta, m, v, tokens, targets, step) → (theta', m', v', loss).
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import averis as averis_kernel
+from .kernels import hadamard as hadamard_kernel
+from .kernels import nvfp4 as nvfp4_kernel
+from .kernels import ref
+
+RECIPES = ("bf16", "nvfp4", "nvfp4_hadamard", "averis", "averis_hadamard")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    d_ff: int = 352
+    seq: int = 64
+    batch: int = 8
+    rope_base: float = 10_000.0
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def tokens_per_step(self):
+        return self.batch * self.seq
+
+
+@dataclass(frozen=True)
+class TrainHyper:
+    peak_lr: float = 3e-3
+    min_lr: float = 3e-4
+    warmup: int = 20
+    total_steps: int = 400
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+# --- parameters ---------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key):
+    """Initialize the parameter pytree (dict), mirroring rust Params::init."""
+    d, dh = cfg.d_model, cfg.head_dim
+    keys = jax.random.split(key, 64)
+    ki = iter(keys)
+
+    def lin(k, rows, cols):
+        std = (2.0 / (rows + cols)) ** 0.5
+        return std * jax.random.normal(k, (rows, cols), jnp.float32)
+
+    params = {"embed": 0.02 * jax.random.normal(next(ki), (cfg.vocab, d), jnp.float32)}
+    for i in range(cfg.n_layers):
+        params[f"blk{i}"] = {
+            "attn_norm": jnp.ones((d,), jnp.float32),
+            "wq": lin(next(ki), d, cfg.n_heads * dh),
+            "wk": lin(next(ki), d, cfg.n_kv_heads * dh),
+            "wv": lin(next(ki), d, cfg.n_kv_heads * dh),
+            "wo": lin(next(ki), cfg.n_heads * dh, d),
+            "ffn_norm": jnp.ones((d,), jnp.float32),
+            "w_gate": lin(next(ki), d, cfg.d_ff),
+            "w_up": lin(next(ki), d, cfg.d_ff),
+            "w_down": lin(next(ki), cfg.d_ff, d),
+        }
+    params["final_norm"] = jnp.ones((d,), jnp.float32)
+    return params
+
+
+def flat_init(cfg: ModelConfig, seed=0):
+    """(theta_flat, unravel_fn, n_params)."""
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    theta, unravel = ravel_pytree(params)
+    return theta, unravel, theta.shape[0]
+
+
+# --- quantized GeMM -----------------------------------------------------------
+
+
+def _fwd_quant_x(x, recipe):
+    """Forward-operand preprocessing + quantization of the activation."""
+    if recipe == "bf16":
+        return x
+    if recipe == "nvfp4":
+        return nvfp4_kernel.nvfp4_quant_dequant(x)
+    if recipe == "nvfp4_hadamard":
+        return nvfp4_kernel.nvfp4_quant_dequant(hadamard_kernel.tiled_hadamard(x))
+    raise ValueError(recipe)
+
+
+def _fwd_quant_w(w, recipe, rotate):
+    if recipe == "bf16":
+        return w
+    wq = w
+    if rotate:  # rotate along K (rows) to cancel the activation rotation
+        wq = hadamard_kernel.tiled_hadamard(wq.T).T
+    return ref.nvfp4_quant_dequant_t(wq)
+
+
+def make_quantized_gemm(recipe: str):
+    """Build the recipe's quantized GeMM: y = x @ w with quantized fwd and
+    quantized, stochastically-rounded backward GeMMs (custom_vjp)."""
+    assert recipe in RECIPES, recipe
+
+    @jax.custom_vjp
+    def qgemm(x, w, seed):
+        return _forward(x, w)
+
+    def _forward(x, w):
+        if recipe == "bf16":
+            return x @ w
+        if recipe in ("nvfp4", "nvfp4_hadamard"):
+            rot = recipe == "nvfp4_hadamard"
+            return _fwd_quant_x(x, recipe) @ _fwd_quant_w(w, recipe, rot)
+        # averis / averis_hadamard — Eq. (8)
+        mu, xr = averis_kernel.mean_residual_split(x)
+        mu_q = ref.nvfp4_quant_dequant(mu[None, :])
+        if recipe == "averis_hadamard":
+            xr = hadamard_kernel.tiled_hadamard(xr)
+            wq_rot = _fwd_quant_w(w, recipe, True)
+            xr_q = nvfp4_kernel.nvfp4_quant_dequant(xr)
+            wq_plain = ref.nvfp4_quant_dequant_t(w)
+            return mu_q @ wq_plain + xr_q @ wq_rot
+        xr_q = nvfp4_kernel.nvfp4_quant_dequant(xr)
+        wq = ref.nvfp4_quant_dequant_t(w)
+        return mu_q @ wq + xr_q @ wq
+
+    def fwd(x, w, seed):
+        return qgemm(x, w, seed), (x, w, seed)
+
+    def bwd(res, dy):
+        x, w, seed = res
+        if recipe == "bf16":
+            return dy @ w.T, x.T @ dy, None
+        key = jax.random.fold_in(jax.random.PRNGKey(7), seed)
+        k1, k2 = jax.random.split(key)
+        if recipe in ("averis", "averis_hadamard"):
+            # Eq. (9): dgrad with split D
+            mu_d, dr = ref.mean_residual_split(dy)
+            mu_d_q = ref.nvfp4_quant_dequant(mu_d[None, :])[0]
+            dr_q = ref.nvfp4_quant_dequant(dr, sr_key=k1)
+            w_k = ref.nvfp4_quant_dequant(w)  # blocks along n = K of dgrad
+            dx = dr_q @ w_k.T + (mu_d_q[None, :] @ w_k.T)
+            # Eq. (10): wgrad from split operands
+            mu_x, xr = ref.mean_residual_split(x)
+            mu_x_q = ref.nvfp4_quant_dequant(mu_x[None, :])[0]
+            xr_q = ref.nvfp4_quant_dequant_t(xr)
+            dr_qt = ref.nvfp4_quant_dequant_t(dr, sr_key=k2)
+            l = x.shape[0]
+            dw = xr_q.T @ dr_qt + l * jnp.outer(mu_x_q, mu_d_q)
+            return dx, dw, None
+        # vanilla / hadamard backward
+        if recipe == "nvfp4_hadamard":
+            dy_r = ref.tiled_hadamard(dy)
+            w_r = ref.tiled_hadamard(w)  # along n = K of dgrad
+            dq = ref.nvfp4_quant_dequant(dy_r, sr_key=k1)
+            wq = ref.nvfp4_quant_dequant(w_r)
+            dx = dq @ wq.T
+            # wgrad: rotate along K=l when possible (l % 16 == 0 in our shapes)
+            x_r = ref.tiled_hadamard(x.T).T
+            dy_c = ref.tiled_hadamard(dy.T).T
+            xq = ref.nvfp4_quant_dequant_t(x_r)
+            dq2 = ref.nvfp4_quant_dequant_t(dy_c, sr_key=k2)
+            dw = xq.T @ dq2
+            return dx, dw, None
+        dq = ref.nvfp4_quant_dequant(dy, sr_key=k1)
+        wq = ref.nvfp4_quant_dequant(w)
+        dx = dq @ wq.T
+        xq = ref.nvfp4_quant_dequant_t(x)
+        dq2 = ref.nvfp4_quant_dequant_t(dy, sr_key=k2)
+        dw = xq.T @ dq2
+        return dx, dw, None
+
+    qgemm.defvjp(fwd, bwd)
+    return qgemm
+
+
+# --- model forward ------------------------------------------------------------
+
+
+def rmsnorm(x, gain, eps=1e-6):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def rope_tables(cfg: ModelConfig):
+    half = cfg.head_dim // 2
+    pos = jnp.arange(cfg.seq, dtype=jnp.float32)[:, None]
+    theta = cfg.rope_base ** (-2.0 * jnp.arange(half, dtype=jnp.float32) / cfg.head_dim)
+    ang = pos * theta[None, :]
+    return jnp.cos(ang), jnp.sin(ang)  # (seq, half)
+
+
+def apply_rope(x, cos, sin):
+    """x: (b, s, h, dh) → rotated pairs (2t, 2t+1)."""
+    b, s, h, dh = x.shape
+    xe = x[..., 0::2]
+    xo = x[..., 1::2]
+    c = cos[None, :, None, :]
+    sn = sin[None, :, None, :]
+    ye = xe * c - xo * sn
+    yo = xe * sn + xo * c
+    return jnp.stack([ye, yo], axis=-1).reshape(b, s, h, dh)
+
+
+def forward_logits(params, tokens, cfg: ModelConfig, qgemm, seed):
+    """tokens: (batch, seq) int32 → logits (batch*seq, vocab)."""
+    b, s = tokens.shape
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    groups = h // kv
+    cos, sin = rope_tables(cfg)
+    x = params["embed"][tokens.reshape(-1)]  # (l, d)
+    l = b * s
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    for i in range(cfg.n_layers):
+        blk = params[f"blk{i}"]
+        xn = rmsnorm(x, blk["attn_norm"])
+        q = qgemm(xn, blk["wq"], seed).reshape(b, s, h, dh)
+        k = qgemm(xn, blk["wk"], seed).reshape(b, s, kv, dh)
+        v = qgemm(xn, blk["wv"], seed).reshape(b, s, kv, dh)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        # GQA: repeat kv heads
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+        scores = jnp.einsum("bihd,bjhd->bhij", q, k) / jnp.sqrt(jnp.float32(dh))
+        scores = jnp.where(mask[None, None, :, :] > 0, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhij,bjhd->bihd", probs, v).reshape(l, h * dh)
+        x = x + qgemm(attn, blk["wo"], seed)
+        fn_in = rmsnorm(x, blk["ffn_norm"])
+        g = qgemm(fn_in, blk["w_gate"], seed)
+        u = qgemm(fn_in, blk["w_up"], seed)
+        hdn = jax.nn.silu(g) * u
+        x = x + qgemm(hdn, blk["w_down"], seed)
+    xf = rmsnorm(x, params["final_norm"])
+    return xf @ params["embed"].T  # tied head, unquantized (paper setting)
+
+
+def loss_fn(params, tokens, targets, cfg, qgemm, seed):
+    logits = forward_logits(params, tokens, cfg, qgemm, seed)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    t = targets.reshape(-1)
+    nll = -jnp.take_along_axis(logp, t[:, None], axis=-1)
+    return jnp.mean(nll)
+
+
+# --- train / eval steps -------------------------------------------------------
+
+
+def lr_at(step, hp: TrainHyper):
+    warm = hp.peak_lr * (step + 1.0) / hp.warmup
+    prog = jnp.clip((step - hp.warmup) / max(hp.total_steps - hp.warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decayed = hp.min_lr + (hp.peak_lr - hp.min_lr) * cos
+    return jnp.where(step < hp.warmup, warm, decayed)
+
+
+def make_train_step(cfg: ModelConfig, hp: TrainHyper, recipe: str):
+    """(theta, m, v, tokens, targets, step) → (theta', m', v', loss)."""
+    qgemm = make_quantized_gemm(recipe)
+    _, unravel, _ = flat_init(cfg)
+
+    def train_step(theta, m, v, tokens, targets, step):
+        params = unravel(theta)
+        seed = step.astype(jnp.int32)
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, tokens, targets, cfg, qgemm, seed)
+        )(params)
+        g, _ = ravel_pytree(grads)
+        # global-norm clip
+        gn = jnp.sqrt(jnp.sum(g * g))
+        g = g * jnp.minimum(1.0, hp.grad_clip / (gn + 1e-12))
+        # AdamW
+        t = step.astype(jnp.float32) + 1.0
+        m2 = hp.beta1 * m + (1.0 - hp.beta1) * g
+        v2 = hp.beta2 * v + (1.0 - hp.beta2) * g * g
+        mhat = m2 / (1.0 - hp.beta1 ** t)
+        vhat = v2 / (1.0 - hp.beta2 ** t)
+        lr = lr_at(step.astype(jnp.float32), hp)
+        theta2 = theta - lr * (mhat / (jnp.sqrt(vhat) + hp.eps) + hp.weight_decay * theta)
+        return theta2, m2, v2, loss
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, recipe: str):
+    """(theta, tokens, targets) → loss, with the recipe's (quantized) forward
+    — the paper's 'NVFP4 forward evaluation' protocol for Table 1."""
+    qgemm = make_quantized_gemm(recipe)
+    _, unravel, _ = flat_init(cfg)
+
+    def eval_step(theta, tokens, targets):
+        params = unravel(theta)
+        return loss_fn(params, tokens, targets, cfg, qgemm, jnp.int32(0))
+
+    return eval_step
+
+
+def example_args(cfg: ModelConfig):
+    """ShapeDtypeStructs for lowering the train step."""
+    n = flat_init(cfg)[2]
+    f = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n,), f),
+        jax.ShapeDtypeStruct((n,), f),
+        jax.ShapeDtypeStruct((n,), f),
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )

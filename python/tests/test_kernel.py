@@ -1,0 +1,186 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Sweeps shapes and value regimes (hypothesis-style parameter grids — the
+offline image lacks the hypothesis package, so the sweep is explicit) and
+asserts the Pallas kernels match the pure-jnp oracles exactly, plus format-
+level invariants of the NVFP4 quantizer, the Hadamard transform, and the
+Averis split.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import averis as averis_k
+from compile.kernels import hadamard as hadamard_k
+from compile.kernels import nvfp4 as nvfp4_k
+from compile.kernels import ref
+
+SHAPES = [(16, 16), (64, 32), (128, 64), (64, 128), (100, 48), (256, 16)]
+SCALES = [0.01, 1.0, 37.5]
+SEEDS = [0, 1]
+
+
+def rand(shape, scale, seed):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+# --- NVFP4 kernel vs ref -------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("scale", SCALES)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_nvfp4_kernel_matches_ref(shape, scale, seed):
+    x = rand(shape, scale, seed)
+    a = nvfp4_k.nvfp4_quant_dequant(x)
+    b = ref.nvfp4_quant_dequant(x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)
+
+
+def test_nvfp4_zero_matrix():
+    x = jnp.zeros((32, 32))
+    np.testing.assert_array_equal(np.asarray(nvfp4_k.nvfp4_quant_dequant(x)), 0.0)
+
+
+def test_nvfp4_idempotent():
+    x = rand((64, 64), 1.0, 3)
+    q1 = ref.nvfp4_quant_dequant(x)
+    q2 = ref.nvfp4_quant_dequant(q1)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("scale", SCALES)
+def test_nvfp4_relative_error_bound(scale):
+    x = rand((256, 128), scale, 5)
+    q = ref.nvfp4_quant_dequant(x)
+    err = float(jnp.linalg.norm(q - x) / jnp.linalg.norm(x))
+    assert 0.0 < err < 0.2, err
+
+
+def test_nvfp4_outlier_crushes_block():
+    """The paper's premise: one outlier per block destroys the block's tail."""
+    base = jnp.full((1, 16), 0.05)
+    dirty = base.at[0, 7].set(60.0)
+    qc = np.asarray(ref.nvfp4_quant_dequant(base))
+    qd = np.asarray(ref.nvfp4_quant_dequant(dirty))
+    clean_err = np.abs(np.delete(qc[0], 7) - 0.05).sum()
+    dirty_err = np.abs(np.delete(qd[0], 7) - 0.05).sum()
+    assert dirty_err > 5 * max(clean_err, 1e-4)
+
+
+def test_e2m1_grid_fixed_points():
+    for v in [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]:
+        assert float(ref.e2m1_round(jnp.float32(v))) == v
+        assert float(ref.e2m1_round(jnp.float32(-v))) == -v
+
+
+def test_e2m1_ties_to_even_code():
+    # matches the Rust codec convention (see rust/src/quant/fp4.rs tests)
+    pairs = [(0.25, 0.0), (0.75, 1.0), (2.5, 2.0), (5.0, 4.0)]
+    for x, want in pairs:
+        assert float(ref.e2m1_round(jnp.float32(x))) == want, x
+
+
+def test_e2m1_sr_unbiased():
+    key = jax.random.PRNGKey(0)
+    x = jnp.full((20000,), 0.37)
+    q = ref.e2m1_round_sr(x, key)
+    assert abs(float(q.mean()) - 0.37) < 0.01
+
+
+def test_e4m3_saturates_and_roundtrips():
+    assert float(ref.e4m3_quantize(jnp.float32(500.0))) == 448.0
+    for v in [1.0, 1.125, 0.5, 448.0, 208.0]:
+        assert float(ref.e4m3_quantize(jnp.float32(v))) == v
+
+
+# --- Hadamard kernel vs ref -----------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_hadamard_kernel_matches_ref(shape, seed):
+    x = rand(shape, 1.0, seed)
+    a = hadamard_k.tiled_hadamard(x)
+    b = ref.tiled_hadamard(x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+def test_hadamard_involutory():
+    x = rand((64, 64), 1.0, 7)
+    y = ref.tiled_hadamard(ref.tiled_hadamard(x))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-5, atol=1e-5)
+
+
+def test_hadamard_preserves_norm():
+    x = rand((32, 128), 2.0, 8)
+    assert abs(float(jnp.linalg.norm(ref.tiled_hadamard(x)) / jnp.linalg.norm(x)) - 1) < 1e-5
+
+
+def test_hadamard_smooths_spike():
+    x = jnp.zeros((1, 16)).at[0, 3].set(16.0)
+    y = ref.tiled_hadamard(x)
+    assert abs(float(jnp.max(jnp.abs(y))) - 4.0) < 1e-5
+
+
+def test_hadamard_gemm_invariance():
+    x = rand((32, 32), 1.0, 9)
+    w = rand((32, 8), 1.0, 10)
+    xh = ref.tiled_hadamard(x)
+    wh = ref.tiled_hadamard(w.T).T
+    np.testing.assert_allclose(np.asarray(xh @ wh), np.asarray(x @ w), rtol=1e-4, atol=1e-4)
+
+
+# --- Averis kernel vs ref -------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_averis_split_matches_ref(shape, seed):
+    x = rand(shape, 1.0, seed)
+    mu1, r1 = averis_k.mean_residual_split(x)
+    mu2, r2 = ref.mean_residual_split(x)
+    np.testing.assert_allclose(np.asarray(mu1), np.asarray(mu2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-5, atol=1e-5)
+
+
+def test_averis_residual_centered():
+    x = rand((128, 32), 1.0, 11) + 3.0
+    _, r = averis_k.mean_residual_split(x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(r, axis=0)), 0.0, atol=1e-5)
+
+
+def test_averis_reconstruction_exact():
+    x = rand((96, 48), 1.0, 12)
+    mu, r = averis_k.mean_residual_split(x)
+    np.testing.assert_allclose(np.asarray(r + mu[None, :]), np.asarray(x), rtol=1e-6, atol=1e-6)
+
+
+def _outlier_column_matrix(l, m, bias, noise, seed):
+    """Sparse outlier-column mean bias — the paper's §2.3 regime."""
+    x = noise * jax.random.normal(jax.random.PRNGKey(seed), (l, m))
+    mu = np.zeros((m,), np.float32)
+    mu[3::16] = bias
+    return x + jnp.asarray(mu)[None, :]
+
+
+def test_averis_forward_beats_vanilla_on_outlier_columns():
+    x = _outlier_column_matrix(128, 64, 8.0, 0.3, 13)
+    w = 0.1 * jax.random.normal(jax.random.PRNGKey(14), (64, 32))
+    exact = x @ w
+    y_averis = ref.averis_forward_ref(x, w)
+    y_plain = ref.nvfp4_quant_dequant(x) @ ref.nvfp4_quant_dequant_t(w)
+    e_a = float(jnp.linalg.norm(y_averis - exact) / jnp.linalg.norm(exact))
+    e_p = float(jnp.linalg.norm(y_plain - exact) / jnp.linalg.norm(exact))
+    assert e_a < e_p, (e_a, e_p)
+
+
+def test_mean_removal_contracts_tail():
+    """App. C: residual tail is much lighter than the raw tail."""
+    x = _outlier_column_matrix(512, 128, 8.0, 0.5, 15)
+    _, r = ref.mean_residual_split(x)
+    raw_amax = float(jnp.max(jnp.abs(x)))
+    res_amax = float(jnp.max(jnp.abs(r)))
+    assert res_amax < 0.5 * raw_amax

@@ -1,0 +1,91 @@
+//! Hot-path microbenchmarks used by the §Perf optimization loop
+//! (EXPERIMENTS.md §Perf records before/after numbers from this bench):
+//! GeMM GFLOP/s, fused NVFP4 quantizer throughput, FWHT throughput,
+//! mean-split throughput, and the quantized-GeMM composite.
+//!
+//! Run: cargo bench --bench kernel_microbench
+
+use averis::bench_harness::{bench, BenchOpts, TablePrinter};
+use averis::quant::averis::mean_residual_split_inplace;
+use averis::quant::hadamard::tiled_hadamard_inplace;
+use averis::quant::{Nvfp4Quantizer, QuantRecipe};
+use averis::quant::gemm::QuantGemm;
+use averis::tensor::{Mat, Rng};
+
+fn main() {
+    let mut rng = Rng::new(21);
+    let opts = BenchOpts { warmup_iters: 2, iters: 8 };
+    let t = TablePrinter::new(&["kernel", "shape", "mean ms", "throughput"], &[24, 18, 10, 16]);
+
+    // GeMM
+    for &n in &[256usize, 512] {
+        let a = Mat::randn(n, n, 1.0, &mut rng);
+        let b = Mat::randn(n, n, 1.0, &mut rng);
+        let stats = bench(opts, || std::hint::black_box(a.matmul(&b)));
+        let gflops = 2.0 * (n as f64).powi(3) / (stats.mean() / 1e3) / 1e9;
+        t.row(&[
+            "matmul".into(),
+            format!("{n}x{n}x{n}"),
+            format!("{:.2}", stats.mean()),
+            format!("{gflops:.2} GFLOP/s"),
+        ]);
+    }
+
+    // fused NVFP4 quantizer
+    let x = Mat::randn(4096, 1024, 1.0, &mut rng);
+    let quant = Nvfp4Quantizer::nvfp4();
+    let mut scratch = x.clone();
+    let stats = bench(opts, || {
+        scratch.data.copy_from_slice(&x.data);
+        quant.quantize_dequant_rows_inplace(&mut scratch, None);
+    });
+    let gels = x.numel() as f64 / (stats.mean() / 1e3) / 1e9;
+    t.row(&[
+        "nvfp4 quant (fused)".into(),
+        "4096x1024".into(),
+        format!("{:.2}", stats.mean()),
+        format!("{gels:.2} Gelem/s"),
+    ]);
+
+    // FWHT
+    let mut scratch2 = x.clone();
+    let stats = bench(opts, || {
+        scratch2.data.copy_from_slice(&x.data);
+        tiled_hadamard_inplace(&mut scratch2, 16);
+    });
+    let gels = x.numel() as f64 / (stats.mean() / 1e3) / 1e9;
+    t.row(&[
+        "tiled hadamard".into(),
+        "4096x1024".into(),
+        format!("{:.2}", stats.mean()),
+        format!("{gels:.2} Gelem/s"),
+    ]);
+
+    // mean split
+    let mut scratch3 = x.clone();
+    let stats = bench(opts, || {
+        scratch3.data.copy_from_slice(&x.data);
+        std::hint::black_box(mean_residual_split_inplace(&mut scratch3));
+    });
+    let gels = x.numel() as f64 / (stats.mean() / 1e3) / 1e9;
+    t.row(&[
+        "averis mean split".into(),
+        "4096x1024".into(),
+        format!("{:.2}", stats.mean()),
+        format!("{gels:.2} Gelem/s"),
+    ]);
+
+    // composite quantized GeMM per recipe
+    let xg = Mat::randn(512, 256, 1.0, &mut rng);
+    let wg = Mat::randn(256, 128, 0.1, &mut rng);
+    for recipe in [QuantRecipe::Bf16, QuantRecipe::Nvfp4, QuantRecipe::Averis, QuantRecipe::Nvfp4Hadamard] {
+        let mut g = QuantGemm::new(recipe, 1);
+        let stats = bench(opts, || std::hint::black_box(g.forward(&xg, &wg)));
+        t.row(&[
+            format!("qgemm fwd [{recipe}]"),
+            "512x256x128".into(),
+            format!("{:.2}", stats.mean()),
+            "-".into(),
+        ]);
+    }
+}

@@ -1,0 +1,70 @@
+//! Table 3 reproduction: end-to-end training-step latency for vanilla NVFP4,
+//! Averis, and NVFP4-Hadamard on both model scales (dense ~0.6B stand-in and
+//! MoE ~7B-A1.5B stand-in), reporting each method's overhead over vanilla.
+//!
+//! Paper numbers (Blackwell): 0.6B — Averis +2.01%, Hadamard +6.80%;
+//! 7B MoE — Averis +2.20%, Hadamard +7.62%. The comparable quantity here is
+//! the overhead ordering and rough magnitude, on the Rust simulator hot path.
+//!
+//! Run: cargo bench --bench table3_e2e_step
+
+use averis::bench_harness::{bench, BenchOpts, TablePrinter};
+use averis::data::{Corpus, CorpusConfig};
+use averis::model::{ModelConfig, Params, Taps, Transformer};
+use averis::quant::QuantRecipe;
+use averis::tensor::Rng;
+
+fn step_ms(cfg: ModelConfig, recipe: QuantRecipe, batch: usize, seq: usize) -> (f64, f64) {
+    let corpus = Corpus::generate(
+        CorpusConfig { vocab: cfg.vocab, tokens: 1 << 15, ..Default::default() },
+        1,
+    );
+    let params = Params::init(&cfg, &mut Rng::new(3));
+    let mut model = Transformer::new(cfg, recipe, 4);
+    let mut batcher = averis::data::Batcher::new(corpus.train, batch, seq, 5);
+    let (x, y) = batcher.next_batch();
+    let stats = bench(BenchOpts { warmup_iters: 1, iters: 5 }, || {
+        let mut taps = Taps::disabled();
+        let (logits, cache) = model.forward(&params, &x, batch, seq, &mut taps);
+        let (_loss, grads) =
+            model.loss_and_backward(&params, &cache, &logits, &y, batch, seq, &mut taps);
+        std::hint::black_box(grads);
+    });
+    (stats.mean(), stats.std())
+}
+
+fn main() {
+    println!("Table 3: end-to-end training-step latency (fwd+bwd, Rust simulator)\n");
+    let t = TablePrinter::new(
+        &["model", "recipe", "mean ms", "std", "overhead"],
+        &[22, 16, 10, 8, 9],
+    );
+    let configs = [
+        ("qwen3-0.6b-sim (dense)", ModelConfig::dense_small(256), 2usize, 48usize),
+        ("qwen3-7b-a1.5b-sim (moe)", ModelConfig::moe_small(256), 2, 48),
+    ];
+    for (name, cfg, batch, seq) in configs {
+        let (base, _) = step_ms(cfg, QuantRecipe::Nvfp4, batch, seq);
+        for recipe in [QuantRecipe::Nvfp4, QuantRecipe::Averis, QuantRecipe::Nvfp4Hadamard] {
+            let (mean, std) = if recipe == QuantRecipe::Nvfp4 {
+                (base, 0.0)
+            } else {
+                step_ms(cfg, recipe, batch, seq)
+            };
+            let overhead = 100.0 * (mean - base) / base;
+            t.row(&[
+                name.into(),
+                recipe.to_string(),
+                format!("{mean:.1}"),
+                format!("{std:.1}"),
+                if recipe == QuantRecipe::Nvfp4 {
+                    "-".into()
+                } else {
+                    format!("{overhead:+.2}%")
+                },
+            ]);
+        }
+    }
+    println!("\npaper (Blackwell): 0.6B Averis +2.01% Hadamard +6.80%;");
+    println!("                   7B  Averis +2.20% Hadamard +7.62%");
+}

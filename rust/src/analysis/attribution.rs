@@ -1,0 +1,128 @@
+//! Outlier attribution (paper §2.3, Fig. 4): for the top-p% entries of X by
+//! |magnitude|, measure the squared contribution shares of the rank-one mean
+//! component vs the residual:
+//!   ρ_mean = (M_X)²_ij / X²_ij,   ρ_res = X̃²_ij / X²_ij.
+
+use crate::tensor::ops::{median, percentile};
+use crate::tensor::Mat;
+
+/// Attribution result over the top-quantile entry set.
+#[derive(Clone, Debug)]
+pub struct AttributionStats {
+    /// per-entry mean shares ρ_mean for the top entries
+    pub mean_shares: Vec<f32>,
+    /// per-entry residual shares ρ_res
+    pub res_shares: Vec<f32>,
+    pub median_mean_share: f32,
+    pub median_res_share: f32,
+    /// fraction of top entries that are mean-dominated (ρ_mean > 0.5)
+    pub frac_mean_dominated: f32,
+}
+
+/// Compute attribution over the top `top_frac` fraction of entries
+/// (paper uses 0.001 = top-0.1%).
+pub fn outlier_attribution(x: &Mat, top_frac: f64) -> AttributionStats {
+    let n = x.numel();
+    let k = ((n as f64 * top_frac).ceil() as usize).clamp(1, n);
+    // threshold = (1-top_frac) quantile of |x|
+    let abs: Vec<f32> = x.data.iter().map(|v| v.abs()).collect();
+    let thresh = percentile(&abs, 100.0 * (1.0 - top_frac));
+    let mu = x.col_mean();
+    let mut mean_shares = Vec::with_capacity(k + 8);
+    let mut res_shares = Vec::with_capacity(k + 8);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        for j in 0..x.cols {
+            let v = row[j];
+            if v.abs() < thresh || v == 0.0 {
+                continue;
+            }
+            let m = mu[j];
+            let r = v - m;
+            let v2 = v * v;
+            mean_shares.push((m * m / v2).min(4.0));
+            res_shares.push((r * r / v2).min(4.0));
+        }
+    }
+    if mean_shares.is_empty() {
+        // degenerate (all-equal matrix): attribute everything to the mean
+        mean_shares.push(1.0);
+        res_shares.push(0.0);
+    }
+    let frac_dom =
+        mean_shares.iter().filter(|&&s| s > 0.5).count() as f32 / mean_shares.len() as f32;
+    AttributionStats {
+        median_mean_share: median(&mean_shares),
+        median_res_share: median(&res_shares),
+        frac_mean_dominated: frac_dom,
+        mean_shares,
+        res_shares,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn pure_mean_matrix_fully_mean_attributed() {
+        let mu = vec![5.0f32, -3.0, 2.0, 8.0];
+        let mut x = Mat::zeros(64, 4);
+        x.add_row_vec(&mu);
+        let a = outlier_attribution(&x, 0.01);
+        assert!(a.median_mean_share > 0.99);
+        assert!(a.median_res_share < 0.01);
+        assert!(a.frac_mean_dominated > 0.99);
+    }
+
+    #[test]
+    fn zero_mean_noise_residual_attributed() {
+        let mut rng = Rng::new(170);
+        let mut x = Mat::randn(256, 64, 1.0, &mut rng);
+        let mu = x.col_mean();
+        x.sub_row_vec(&mu);
+        let a = outlier_attribution(&x, 0.001);
+        assert!(a.median_res_share > 0.95, "res share {}", a.median_res_share);
+        assert!(a.frac_mean_dominated < 0.05);
+    }
+
+    #[test]
+    fn strong_bias_shifts_attribution_to_mean() {
+        // the paper's early→late transition: residual-dominated at low bias,
+        // mean-dominated (~95% median share) at high bias
+        let mut rng = Rng::new(171);
+        let make = |bias: f32, noise: f32, rng: &mut Rng| {
+            let mut x = Mat::randn(512, 128, noise, rng);
+            let mut mu = vec![0.0f32; 128];
+            // a few large-mean columns, like real outlier feature dims
+            for j in (0..128).step_by(16) {
+                mu[j] = bias;
+            }
+            x.add_row_vec(&mu);
+            x
+        };
+        // early: weak mean, comparable noise → residual-dominated tops;
+        // late: |m|/τ ≫ 1 → mean-dominated tops (paper: median share ≈ 95%)
+        let early = outlier_attribution(&make(0.3, 0.5, &mut rng), 0.001);
+        let late = outlier_attribution(&make(6.0, 0.1, &mut rng), 0.001);
+        assert!(late.median_mean_share > 0.85, "late {}", late.median_mean_share);
+        assert!(early.median_mean_share < 0.3, "early {}", early.median_mean_share);
+        assert!(late.frac_mean_dominated > 0.9);
+    }
+
+    #[test]
+    fn shares_roughly_complementary() {
+        // ρ_mean + ρ_res + 2·cross = 1; for top entries the two shares should
+        // bracket 1 from both sides on average
+        let mut rng = Rng::new(172);
+        let mut x = Mat::randn(128, 64, 1.0, &mut rng);
+        let mu = Mat::randn(1, 64, 1.5, &mut rng);
+        x.add_row_vec(&mu.data);
+        let a = outlier_attribution(&x, 0.01);
+        for (m, r) in a.mean_shares.iter().zip(a.res_shares.iter()) {
+            let cross = 1.0 - m - r; // = 2·m̃·r̃/x²
+            assert!(cross.abs() <= 2.0 + 1e-3, "m {m} r {r}");
+        }
+    }
+}

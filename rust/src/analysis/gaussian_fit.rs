@@ -1,0 +1,130 @@
+//! Gaussianity diagnostics (paper Fig. 5 / Assumption 1): compare raw
+//! activations vs mean-removed residuals against a Gaussian fit, via
+//! excess kurtosis, a Jarque–Bera-style statistic, and QQ-plot data.
+
+use crate::linalg::norm_ppf;
+use crate::tensor::Mat;
+
+/// Moments + normality statistics of a sample.
+#[derive(Clone, Copy, Debug)]
+pub struct FitStats {
+    pub mean: f64,
+    pub std: f64,
+    pub skewness: f64,
+    /// excess kurtosis (0 for a Gaussian)
+    pub excess_kurtosis: f64,
+    /// Jarque–Bera statistic (≈0 for Gaussian samples; grows with n for
+    /// heavy-tailed data)
+    pub jarque_bera: f64,
+}
+
+/// Compute moment statistics of a sample.
+pub fn fit_stats(xs: &[f32]) -> FitStats {
+    let n = xs.len() as f64;
+    assert!(n >= 4.0);
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let mut m2 = 0.0;
+    let mut m3 = 0.0;
+    let mut m4 = 0.0;
+    for &x in xs {
+        let d = x as f64 - mean;
+        m2 += d * d;
+        m3 += d * d * d;
+        m4 += d * d * d * d;
+    }
+    m2 /= n;
+    m3 /= n;
+    m4 /= n;
+    let std = m2.sqrt();
+    let skewness = if m2 > 0.0 { m3 / m2.powf(1.5) } else { 0.0 };
+    let excess_kurtosis = if m2 > 0.0 { m4 / (m2 * m2) - 3.0 } else { 0.0 };
+    let jb = n / 6.0 * (skewness * skewness + excess_kurtosis * excess_kurtosis / 4.0);
+    FitStats { mean, std, skewness, excess_kurtosis, jarque_bera: jb }
+}
+
+/// QQ-plot data: (theoretical Gaussian quantile, empirical quantile) pairs at
+/// `points` evenly spaced probability levels. A Gaussian sample lies on y=x
+/// after standardization.
+pub fn qq_data(xs: &[f32], points: usize) -> Vec<(f64, f64)> {
+    let stats = fit_stats(xs);
+    let mut sorted: Vec<f32> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let mut out = Vec::with_capacity(points);
+    for k in 1..=points {
+        let p = k as f64 / (points as f64 + 1.0);
+        let theo = norm_ppf(p);
+        let idx = ((p * n as f64) as usize).min(n - 1);
+        let emp = (sorted[idx] as f64 - stats.mean) / stats.std.max(1e-12);
+        out.push((theo, emp));
+    }
+    out
+}
+
+/// Raw-vs-residual comparison for one activation matrix (Fig. 5): returns
+/// (raw stats, residual stats). The paper's claim: the residual is much
+/// closer to Gaussian (smaller |excess kurtosis| / JB).
+pub fn raw_vs_residual(x: &Mat) -> (FitStats, FitStats) {
+    let raw = fit_stats(&x.data);
+    let mu = x.col_mean();
+    let mut r = x.clone();
+    r.sub_row_vec(&mu);
+    let res = fit_stats(&r.data);
+    (raw, res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn gaussian_sample_has_small_jb() {
+        let mut rng = Rng::new(180);
+        let xs: Vec<f32> = (0..20_000).map(|_| rng.normal()).collect();
+        let s = fit_stats(&xs);
+        assert!(s.excess_kurtosis.abs() < 0.15, "kurt {}", s.excess_kurtosis);
+        assert!(s.skewness.abs() < 0.1);
+    }
+
+    #[test]
+    fn heavy_tailed_sample_flagged() {
+        // mixture: mostly small + rare large → high kurtosis
+        let mut rng = Rng::new(181);
+        let xs: Vec<f32> = (0..20_000)
+            .map(|_| if rng.uniform() < 0.01 { rng.normal() * 20.0 } else { rng.normal() })
+            .collect();
+        let s = fit_stats(&xs);
+        assert!(s.excess_kurtosis > 5.0, "kurt {}", s.excess_kurtosis);
+        assert!(s.jarque_bera > 1000.0);
+    }
+
+    #[test]
+    fn qq_gaussian_on_diagonal() {
+        let mut rng = Rng::new(182);
+        let xs: Vec<f32> = (0..50_000).map(|_| rng.normal_ms(2.0, 3.0)).collect();
+        for (theo, emp) in qq_data(&xs, 21) {
+            assert!((theo - emp).abs() < 0.1, "qq ({theo},{emp})");
+        }
+    }
+
+    #[test]
+    fn mean_removal_restores_gaussianity() {
+        // per-column means drawn from a wide distribution make the pooled raw
+        // data strongly non-Gaussian; the residual is Gaussian by construction
+        let mut rng = Rng::new(183);
+        let mut x = Mat::randn(512, 64, 1.0, &mut rng);
+        let mut mu = vec![0.0f32; 64];
+        for (j, m) in mu.iter_mut().enumerate() {
+            *m = if j % 8 == 0 { 12.0 } else { 0.0 };
+        }
+        x.add_row_vec(&mu);
+        let (raw, res) = raw_vs_residual(&x);
+        assert!(
+            raw.excess_kurtosis.abs() > 3.0 * res.excess_kurtosis.abs().max(0.05),
+            "raw kurt {} res kurt {}",
+            raw.excess_kurtosis,
+            res.excess_kurtosis
+        );
+    }
+}

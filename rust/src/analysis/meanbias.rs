@@ -1,0 +1,155 @@
+//! Mean-bias diagnostics (paper §2.1–2.2, Figs. 1 & 2).
+
+use crate::linalg::{top_k_svd, Svd};
+use crate::tensor::ops::cosine;
+use crate::tensor::{Mat, Rng};
+
+/// Normalized mean-bias ratio  R = ‖μ_X‖₂ / √(‖X‖_F² / l)  (paper §2.2).
+/// R ∈ [0, 1]; R² is the fraction of the matrix's mean-square energy carried
+/// by the rank-one mean component.
+pub fn mean_bias_ratio(x: &Mat) -> f32 {
+    let mu = x.col_mean();
+    let mu_norm = crate::tensor::ops::l2_norm(&mu);
+    let rms = (x.fro_norm().powi(2) / x.rows as f32).sqrt();
+    if rms == 0.0 {
+        0.0
+    } else {
+        mu_norm / rms
+    }
+}
+
+/// Full Fig.-1-style report for one activation matrix.
+#[derive(Clone, Debug)]
+pub struct MeanBiasReport {
+    /// top singular values (spectrum head, Fig. 1A)
+    pub top_singular_values: Vec<f32>,
+    /// R ratio
+    pub ratio: f32,
+    /// |cos(μ, v_k)| for the top-k right singular vectors (Fig. 1C)
+    pub mu_vk_cos: Vec<f32>,
+    /// cos(u₁, e) alignment of the leading left vector with all-ones (β₁)
+    pub beta1: f32,
+    /// token-wise cosine similarities with the mean direction (Fig. 1B)
+    pub token_cos_mean: Vec<f32>,
+    /// token-wise cosine similarities with v₂ (the non-mean direction)
+    pub token_cos_v2: Vec<f32>,
+}
+
+/// Compute the report using a top-k truncated SVD (k small).
+pub fn mean_bias_report(x: &Mat, k: usize, rng: &mut Rng) -> MeanBiasReport {
+    let svd = top_k_svd(x, k.max(2), 35, rng);
+    report_from_svd(x, &svd)
+}
+
+/// Report from a precomputed SVD (lets callers reuse the factorization).
+pub fn report_from_svd(x: &Mat, svd: &Svd) -> MeanBiasReport {
+    let mu = x.col_mean();
+    let k = svd.s.len();
+    let mu_vk_cos: Vec<f32> = (0..k)
+        .map(|t| {
+            let vk: Vec<f32> = (0..x.cols).map(|j| svd.v.at(j, t)).collect();
+            cosine(&mu, &vk).abs()
+        })
+        .collect();
+    // β₁ = <u₁, 1/√l>
+    let l = x.rows;
+    let beta1 = (0..l).map(|i| svd.u.at(i, 0)).sum::<f32>() / (l as f32).sqrt();
+    // token-wise cosines
+    let v2: Vec<f32> = (0..x.cols).map(|j| svd.v.at(j, 1.min(k - 1))).collect();
+    let mut token_cos_mean = Vec::with_capacity(l);
+    let mut token_cos_v2 = Vec::with_capacity(l);
+    for i in 0..l {
+        token_cos_mean.push(cosine(x.row(i), &mu));
+        token_cos_v2.push(cosine(x.row(i), &v2));
+    }
+    MeanBiasReport {
+        top_singular_values: svd.s.clone(),
+        ratio: mean_bias_ratio(x),
+        mu_vk_cos,
+        beta1: beta1.abs(),
+        token_cos_mean,
+        token_cos_v2,
+    }
+}
+
+/// Fraction of tokens whose cosine with the mean direction is positive —
+/// the "one-sidedness" summary of Fig. 1B.
+pub fn one_sidedness(report: &MeanBiasReport) -> f32 {
+    let n = report.token_cos_mean.len();
+    if n == 0 {
+        return 0.0;
+    }
+    report.token_cos_mean.iter().filter(|&&c| c > 0.0).count() as f32 / n as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_biased(l: usize, m: usize, bias: f32, noise: f32, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut x = Mat::randn(l, m, noise, &mut rng);
+        let mu = Mat::randn(1, m, bias, &mut rng);
+        x.add_row_vec(&mu.data);
+        x
+    }
+
+    #[test]
+    fn ratio_zero_for_centered() {
+        let mut rng = Rng::new(160);
+        let mut x = Mat::randn(64, 32, 1.0, &mut rng);
+        let mu = x.col_mean();
+        x.sub_row_vec(&mu);
+        assert!(mean_bias_ratio(&x) < 1e-5);
+    }
+
+    #[test]
+    fn ratio_one_for_pure_mean() {
+        // X = 1·μᵀ exactly ⇒ R = 1
+        let mu = vec![1.0f32, -2.0, 0.5, 3.0];
+        let mut x = Mat::zeros(16, 4);
+        x.add_row_vec(&mu);
+        assert!((mean_bias_ratio(&x) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ratio_increases_with_bias() {
+        let low = mean_bias_ratio(&mean_biased(128, 64, 0.2, 1.0, 161));
+        let high = mean_bias_ratio(&mean_biased(128, 64, 3.0, 1.0, 161));
+        assert!(high > low + 0.2, "low {low} high {high}");
+    }
+
+    #[test]
+    fn report_on_biased_data_matches_paper_phenomenology() {
+        let x = mean_biased(256, 96, 2.5, 0.5, 162);
+        let mut rng = Rng::new(163);
+        let rep = mean_bias_report(&x, 4, &mut rng);
+        // μ aligns with v1 far more than with later directions (Fig. 1C)
+        assert!(rep.mu_vk_cos[0] > 0.95, "mu-v1 cos {}", rep.mu_vk_cos[0]);
+        assert!(rep.mu_vk_cos[0] > 2.0 * rep.mu_vk_cos[1]);
+        // leading left vector aligns with all-ones (β₁ large)
+        assert!(rep.beta1 > 0.9, "beta1 {}", rep.beta1);
+        // tokens are one-sided along the mean direction (Fig. 1B)
+        assert!(one_sidedness(&rep) > 0.95);
+        // dominant spectral spike (Fig. 1A)
+        assert!(rep.top_singular_values[0] > 3.0 * rep.top_singular_values[1]);
+    }
+
+    #[test]
+    fn unbiased_data_is_far_less_one_sided_than_biased() {
+        // raw iid Gaussian data has a small positive one-sidedness bias
+        // (each token contributes 1/l of the empirical mean), but it must be
+        // far below the near-unanimous alignment of biased data
+        let mut rng = Rng::new(164);
+        let x = Mat::randn(128, 48, 1.0, &mut rng);
+        let mut r2 = Rng::new(165);
+        let rep = mean_bias_report(&x, 3, &mut r2);
+        let os_unbiased = one_sidedness(&rep);
+        let xb = mean_biased(128, 48, 2.5, 0.5, 166);
+        let mut r3 = Rng::new(167);
+        let os_biased = one_sidedness(&mean_bias_report(&xb, 3, &mut r3));
+        assert!(os_unbiased < 0.9, "unbiased one-sidedness {os_unbiased}");
+        assert!(os_biased > 0.97, "biased one-sidedness {os_biased}");
+        assert!(os_biased > os_unbiased);
+    }
+}

@@ -1,0 +1,21 @@
+//! Mean-bias analysis pipeline — reproduces the measurements of paper §2 and
+//! the appendices on activations captured from the simulator's taps:
+//!
+//!  * `meanbias`   — ratio R, μ–v_k alignment, token-cos diagnostics (Fig. 1/2)
+//!  * `operator_trace` — per-operator R and adjacent-stage mean-cos (Fig. 3)
+//!  * `attribution` — top-0.1% outlier mean/residual shares (Fig. 4)
+//!  * `gaussian_fit` — raw-vs-residual Gaussianity, QQ data (Fig. 5)
+//!  * `variance`   — diagonal variance approximation check (App. B)
+//!  * `tails`      — raw-vs-residual tail contraction (App. C)
+//!  * `theorem1`   — Monte-Carlo + closed-form validation of Theorem 1
+
+pub mod attribution;
+pub mod gaussian_fit;
+pub mod meanbias;
+pub mod operator_trace;
+pub mod tails;
+pub mod theorem1;
+pub mod variance;
+
+pub use attribution::{outlier_attribution, AttributionStats};
+pub use meanbias::{mean_bias_ratio, MeanBiasReport};

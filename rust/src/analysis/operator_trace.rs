@@ -1,0 +1,117 @@
+//! Operator-level mean-bias trace (paper §2.2, Fig. 3): track the ratio R
+//! and the adjacent-stage mean-direction cosine across the forward operator
+//! chain of each block (block input → attn input → attn output → residual →
+//! FFN input → FFN output → block output).
+
+use super::meanbias::mean_bias_ratio;
+use crate::model::{TapStage, Taps};
+use crate::tensor::ops::cosine;
+
+/// One stage's measurements.
+#[derive(Clone, Debug)]
+pub struct StagePoint {
+    pub layer: usize,
+    pub stage: TapStage,
+    pub ratio: f32,
+    /// cos(μ_this, μ_previous-stage); 1.0 for the first stage
+    pub mean_cos_prev: f32,
+}
+
+/// Trace R and adjacent-stage mean cosines through every captured block.
+pub fn operator_trace(taps: &Taps, n_layers: usize) -> Vec<StagePoint> {
+    let mut out = Vec::new();
+    for layer in 0..n_layers {
+        let mut prev_mu: Option<Vec<f32>> = None;
+        for stage in TapStage::FORWARD_CHAIN {
+            let Some(x) = taps.get(layer, stage) else { continue };
+            let mu = x.col_mean();
+            let cos_prev = match &prev_mu {
+                Some(p) if p.len() == mu.len() => cosine(p, &mu),
+                _ => 1.0,
+            };
+            out.push(StagePoint { layer, stage, ratio: mean_bias_ratio(x), mean_cos_prev: cos_prev });
+            prev_mu = Some(mu);
+        }
+    }
+    out
+}
+
+/// Summary used by the Fig.-3 driver: does an operator amplify R, and how
+/// much does it rotate the mean direction?
+#[derive(Clone, Debug)]
+pub struct OperatorEffect {
+    pub layer: usize,
+    pub operator: &'static str,
+    pub r_in: f32,
+    pub r_out: f32,
+    pub mean_cos: f32,
+}
+
+/// Extract the attention and FFN operator effects per layer.
+pub fn operator_effects(taps: &Taps, n_layers: usize) -> Vec<OperatorEffect> {
+    let mut out = Vec::new();
+    for layer in 0..n_layers {
+        if let (Some(xin), Some(xout)) =
+            (taps.get(layer, TapStage::AttnInput), taps.get(layer, TapStage::AttnOutput))
+        {
+            out.push(OperatorEffect {
+                layer,
+                operator: "attention",
+                r_in: mean_bias_ratio(xin),
+                r_out: mean_bias_ratio(xout),
+                mean_cos: cosine(&xin.col_mean(), &xout.col_mean()),
+            });
+        }
+        if let (Some(xin), Some(xout)) =
+            (taps.get(layer, TapStage::FfnInput), taps.get(layer, TapStage::FfnOutput))
+        {
+            out.push(OperatorEffect {
+                layer,
+                operator: "ffn",
+                r_in: mean_bias_ratio(xin),
+                r_out: mean_bias_ratio(xout),
+                mean_cos: cosine(&xin.col_mean(), &xout.col_mean()),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, Params, Transformer};
+    use crate::quant::QuantRecipe;
+    use crate::tensor::Rng;
+
+    fn run_taps() -> (Taps, usize) {
+        let cfg = ModelConfig::test_tiny(64);
+        let params = Params::init(&cfg, &mut Rng::new(220));
+        let mut model = Transformer::new(cfg, QuantRecipe::Bf16, 0);
+        let mut rng = Rng::new(221);
+        let tokens: Vec<u32> = (0..32).map(|_| rng.below(64) as u32).collect();
+        let mut taps = Taps::enabled();
+        let _ = model.forward(&params, &tokens, 2, 16, &mut taps);
+        (taps, cfg.n_layers)
+    }
+
+    #[test]
+    fn trace_covers_all_stages() {
+        let (taps, n) = run_taps();
+        let trace = operator_trace(&taps, n);
+        assert_eq!(trace.len(), n * TapStage::FORWARD_CHAIN.len());
+        for p in &trace {
+            assert!(p.ratio.is_finite() && p.ratio >= 0.0);
+            assert!(p.mean_cos_prev.is_finite());
+        }
+    }
+
+    #[test]
+    fn effects_cover_both_operators() {
+        let (taps, n) = run_taps();
+        let fx = operator_effects(&taps, n);
+        assert_eq!(fx.len(), 2 * n);
+        assert!(fx.iter().any(|e| e.operator == "attention"));
+        assert!(fx.iter().any(|e| e.operator == "ffn"));
+    }
+}

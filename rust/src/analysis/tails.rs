@@ -1,0 +1,85 @@
+//! Tail-contraction diagnostics (paper App. C): compare the high-magnitude
+//! tail of raw activations vs mean-centered residuals.
+
+use crate::tensor::ops::percentile;
+use crate::tensor::Mat;
+
+/// Tail summary of one sample.
+#[derive(Clone, Copy, Debug)]
+pub struct TailStats {
+    pub amax: f32,
+    pub p999: f32,
+    pub p99: f32,
+    /// fraction of entries with |x| > 4·rms (far-tail exceedance rate)
+    pub far_tail_frac: f32,
+}
+
+pub fn tail_stats(xs: &[f32]) -> TailStats {
+    let abs: Vec<f32> = xs.iter().map(|v| v.abs()).collect();
+    let rms = (abs.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / abs.len() as f64)
+        .sqrt() as f32;
+    let thresh = 4.0 * rms;
+    let far = abs.iter().filter(|&&v| v > thresh).count() as f32 / abs.len() as f32;
+    TailStats {
+        amax: abs.iter().fold(0.0f32, |a, &b| a.max(b)),
+        p999: percentile(&abs, 99.9),
+        p99: percentile(&abs, 99.0),
+        far_tail_frac: far,
+    }
+}
+
+/// App.-C comparison: (raw tail, residual tail) for one activation matrix.
+pub fn raw_vs_residual_tails(x: &Mat) -> (TailStats, TailStats) {
+    let raw = tail_stats(&x.data);
+    let mu = x.col_mean();
+    let mut r = x.clone();
+    r.sub_row_vec(&mu);
+    let res = tail_stats(&r.data);
+    (raw, res)
+}
+
+/// Dynamic-range proxy the quantizer cares about: amax / median|x|.
+pub fn dynamic_range(xs: &[f32]) -> f32 {
+    let abs: Vec<f32> = xs.iter().map(|v| v.abs()).collect();
+    let med = percentile(&abs, 50.0).max(1e-12);
+    abs.iter().fold(0.0f32, |a, &b| a.max(b)) / med
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn mean_removal_contracts_tail_on_biased_data() {
+        let mut rng = Rng::new(200);
+        let mut x = Mat::randn(512, 128, 0.5, &mut rng);
+        let mut mu = vec![0.0f32; 128];
+        for j in (0..128).step_by(10) {
+            mu[j] = 8.0;
+        }
+        x.add_row_vec(&mu);
+        let (raw, res) = raw_vs_residual_tails(&x);
+        assert!(res.amax < 0.5 * raw.amax, "amax {} → {}", raw.amax, res.amax);
+        assert!(res.p999 < 0.5 * raw.p999);
+    }
+
+    #[test]
+    fn centered_data_unchanged() {
+        let mut rng = Rng::new(201);
+        let mut x = Mat::randn(256, 64, 1.0, &mut rng);
+        let mu = x.col_mean();
+        x.sub_row_vec(&mu);
+        let (raw, res) = raw_vs_residual_tails(&x);
+        assert!((raw.amax - res.amax).abs() / raw.amax < 0.05);
+    }
+
+    #[test]
+    fn dynamic_range_detects_outliers() {
+        let mut v = vec![1.0f32; 100];
+        let dr_flat = dynamic_range(&v);
+        v[0] = 100.0;
+        let dr_spiky = dynamic_range(&v);
+        assert!(dr_spiky > 50.0 * dr_flat);
+    }
+}

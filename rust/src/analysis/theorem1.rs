@@ -1,0 +1,123 @@
+//! Theorem-1 validation (paper §2.3 + App. E): the exact two-sided Gaussian
+//! tail formula (Eq. 4), its far-tail one-sided asymptotic (Eq. 6), and the
+//! amplification ratio vs the zero-mean baseline (Eq. 7), checked both in
+//! closed form and by Monte-Carlo on the Gaussian row-sampling model.
+
+use crate::linalg::gaussian::{log_q, q_function};
+use crate::tensor::Rng;
+
+/// Eq. (4): P(|Y| > t) for Y ~ N(m, τ²).
+pub fn exact_two_sided_tail(t: f64, m: f64, tau: f64) -> f64 {
+    q_function((t - m.abs()) / tau) + q_function((t + m.abs()) / tau)
+}
+
+/// Eq. (6): far-tail one-sided approximation Q((t−|m|)/τ).
+pub fn one_sided_tail(t: f64, m: f64, tau: f64) -> f64 {
+    q_function((t - m.abs()) / tau)
+}
+
+/// Eq. (7): predicted amplification ratio P(|Y|>t) / P(|Y⁰|>t) with
+/// Y⁰ ~ N(0, τ²), in log space for far tails:
+///   log ratio ≈ log(t / (2(t−|m|))) + (2t|m| − m²) / (2τ²).
+pub fn log_amplification_eq7(t: f64, m: f64, tau: f64) -> f64 {
+    let m = m.abs();
+    assert!(t > m, "Eq. 7 requires t > |m|");
+    (t / (2.0 * (t - m))).ln() + (2.0 * t * m - m * m) / (2.0 * tau * tau)
+}
+
+/// Exact log amplification from the tail formulas (for validating Eq. 7).
+pub fn log_amplification_exact(t: f64, m: f64, tau: f64) -> f64 {
+    let num = exact_two_sided_tail(t, m, tau).max(f64::MIN_POSITIVE).ln();
+    // baseline 2Q(t/τ) via log_q for far tails
+    let den = (2.0f64).ln() + log_q(t / tau);
+    num - den
+}
+
+/// Monte-Carlo estimate of P(|Y| > t) with Y = m + τ·Z.
+pub fn monte_carlo_tail(t: f64, m: f64, tau: f64, n: usize, rng: &mut Rng) -> f64 {
+    let mut hits = 0usize;
+    for _ in 0..n {
+        let y = m + tau * rng.normal() as f64;
+        if y.abs() > t {
+            hits += 1;
+        }
+    }
+    hits as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq4_matches_monte_carlo() {
+        let mut rng = Rng::new(210);
+        for &(t, m, tau) in &[(2.0, 1.0, 1.0), (3.0, 2.0, 0.8), (1.5, 0.0, 1.0)] {
+            let exact = exact_two_sided_tail(t, m, tau);
+            let mc = monte_carlo_tail(t, m, tau, 400_000, &mut rng);
+            assert!(
+                (exact - mc).abs() < 5e-3 + 0.05 * exact,
+                "t={t} m={m} τ={tau}: exact {exact} mc {mc}"
+            );
+        }
+    }
+
+    #[test]
+    fn eq6_one_sided_dominates_in_far_tail() {
+        // Q((t+|m|)/τ) must become negligible vs Q((t−|m|)/τ)
+        let (m, tau) = (3.0, 0.5);
+        for &t in &[4.0, 5.0, 6.0] {
+            let two = exact_two_sided_tail(t, m, tau);
+            let one = one_sided_tail(t, m, tau);
+            assert!((two - one).abs() / one < 1e-6, "t={t}: {two} vs {one}");
+        }
+    }
+
+    #[test]
+    fn eq7_matches_exact_log_ratio_asymptotically() {
+        // the approximation tightens as (t−|m|)/τ and t|m|/τ² grow
+        let (m, tau) = (2.0, 0.4);
+        let mut prev_err = f64::INFINITY;
+        for &t in &[3.0, 4.0, 5.0] {
+            let approx = log_amplification_eq7(t, m, tau);
+            let exact = log_amplification_exact(t, m, tau);
+            let rel = (approx - exact).abs() / exact.abs();
+            assert!(rel < 0.1, "t={t}: approx {approx} exact {exact}");
+            assert!(rel <= prev_err + 1e-9, "error should shrink with t");
+            prev_err = rel;
+        }
+    }
+
+    #[test]
+    fn amplification_is_exponential_in_mean() {
+        // the paper's core claim: amplification grows exponentially with |m|
+        let (t, tau) = (5.0, 0.5);
+        let a1 = log_amplification_eq7(t, 1.0, tau);
+        let a2 = log_amplification_eq7(t, 2.0, tau);
+        let a3 = log_amplification_eq7(t, 3.0, tau);
+        // log-ratio grows ~linearly in m ⇒ ratio exponential
+        assert!(a2 - a1 > 5.0);
+        assert!(a3 - a2 > 5.0);
+    }
+
+    #[test]
+    fn zero_mean_gives_no_amplification() {
+        let la = log_amplification_exact(4.0, 0.0, 1.0);
+        assert!(la.abs() < 1e-6, "zero mean should give ratio 1, log {la}");
+    }
+
+    #[test]
+    fn mc_confirms_amplification_in_reachable_regime() {
+        // in a regime where MC can resolve both tails
+        let mut rng = Rng::new(211);
+        let (t, tau) = (2.5, 1.0);
+        let p_biased = monte_carlo_tail(t, 1.5, tau, 400_000, &mut rng);
+        let p_zero = monte_carlo_tail(t, 0.0, tau, 400_000, &mut rng);
+        let mc_ratio = p_biased / p_zero;
+        let predicted = (log_amplification_exact(t, 1.5, tau)).exp();
+        assert!(
+            (mc_ratio - predicted).abs() / predicted < 0.15,
+            "mc {mc_ratio} vs predicted {predicted}"
+        );
+    }
+}

@@ -1,0 +1,80 @@
+//! Benchmark harness (criterion is unavailable offline): warmup + timed
+//! iterations with mean/std/min reporting, and the table printers that
+//! render paper-style rows for the bench binaries.
+
+use crate::metrics::TimingStats;
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Benchmark settings.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup_iters: 3, iters: 10 }
+    }
+}
+
+/// Time `f` with warmup; returns per-iteration stats in ms.
+pub fn bench<R>(opts: BenchOpts, mut f: impl FnMut() -> R) -> TimingStats {
+    for _ in 0..opts.warmup_iters {
+        black_box(f());
+    }
+    let mut stats = TimingStats::default();
+    for _ in 0..opts.iters {
+        let t = Instant::now();
+        black_box(f());
+        stats.record(t.elapsed().as_secs_f64() * 1e3);
+    }
+    stats
+}
+
+/// Fixed-width paper-style table printer.
+pub struct TablePrinter {
+    widths: Vec<usize>,
+}
+
+impl TablePrinter {
+    pub fn new(header: &[&str], widths: &[usize]) -> Self {
+        assert_eq!(header.len(), widths.len());
+        let mut line = String::new();
+        for (h, w) in header.iter().zip(widths.iter()) {
+            line.push_str(&format!("{h:>w$}  ", w = w));
+        }
+        println!("{line}");
+        println!("{}", "-".repeat(line.len()));
+        TablePrinter { widths: widths.to_vec() }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        assert_eq!(cells.len(), self.widths.len());
+        let mut line = String::new();
+        for (c, w) in cells.iter().zip(self.widths.iter()) {
+            line.push_str(&format!("{c:>w$}  ", w = w));
+        }
+        println!("{line}");
+    }
+}
+
+/// Format milliseconds like the paper's tables.
+pub fn fmt_ms(v: f64) -> String {
+    format!("{v:.4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_requested_iters() {
+        let stats = bench(BenchOpts { warmup_iters: 1, iters: 5 }, || {
+            std::hint::black_box((0..1000).sum::<u64>())
+        });
+        assert_eq!(stats.samples_ms.len(), 5);
+        assert!(stats.mean() >= 0.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Hand-rolled CLI (no clap in the offline image): subcommands + --key value
+//! flags.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug)]
+pub struct CliArgs {
+    pub command: Command,
+    flags: BTreeMap<String, String>,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Command {
+    /// Train one recipe (simulator or PJRT path).
+    Train,
+    /// Regenerate the analysis figures (Figs. 1–5, App. B/C/D, Thm. 1).
+    Analyze,
+    /// Reproduce Table 1 (loss + downstream probes across recipes).
+    Table1,
+    /// Reproduce Fig. 6 loss curves across all recipes.
+    Fig6,
+    /// Quantization-error demo on synthetic data.
+    QuantDemo,
+    /// Print artifact/manifest info.
+    Info,
+    Help,
+}
+
+impl Command {
+    fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "train" => Ok(Command::Train),
+            "analyze" => Ok(Command::Analyze),
+            "table1" => Ok(Command::Table1),
+            "fig6" => Ok(Command::Fig6),
+            "quant-demo" => Ok(Command::QuantDemo),
+            "info" => Ok(Command::Info),
+            "help" | "--help" | "-h" => Ok(Command::Help),
+            other => Err(format!("unknown command '{other}' — try `averis help`")),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+averis — Averis FP4-training reproduction (see DESIGN.md)
+
+USAGE:
+  averis <command> [--flag value]...
+
+COMMANDS:
+  train       train one recipe
+              --recipe bf16|nvfp4|nvfp4-hadamard|averis|averis-hadamard|mxfp4|svd-split
+              --model dense|moe|tiny      --steps N  --batch N  --seq N
+              --engine sim|pjrt           --artifacts DIR  --out DIR
+              --config FILE               (key = value overrides)
+  analyze     regenerate Figs. 1-5, App. B/C/D, Theorem-1 validation
+              --steps N (instrumented training length)  --out DIR
+  table1      Table 1: loss gap + downstream probes across recipes
+              --steps N  --model dense|moe  --out DIR
+  fig6        Fig. 6: training-loss curves for all recipes
+              --steps N  --model dense|moe  --engine sim|pjrt  --out DIR
+  quant-demo  quantization-error comparison on synthetic mean-biased data
+  info        print artifact manifest / environment info
+  help        this message
+
+Benches (paper Tables 2-3): cargo bench --bench table2_preproc_overhead
+                            cargo bench --bench table3_e2e_step
+";
+
+impl CliArgs {
+    pub fn parse(argv: &[String]) -> Result<Self, String> {
+        if argv.is_empty() {
+            return Ok(CliArgs { command: Command::Help, flags: BTreeMap::new() });
+        }
+        let command = Command::parse(&argv[0])?;
+        let mut flags = BTreeMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(format!("expected --flag, got '{a}'"));
+            };
+            let value = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                i += 1;
+                argv[i].clone()
+            } else {
+                "true".to_string() // boolean flag
+            };
+            flags.insert(key.to_string(), value);
+            i += 1;
+        }
+        Ok(CliArgs { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = CliArgs::parse(&s(&["train", "--recipe", "averis", "--steps", "10"])).unwrap();
+        assert_eq!(a.command, Command::Train);
+        assert_eq!(a.get("recipe"), Some("averis"));
+        assert_eq!(a.get_parse::<u64>("steps").unwrap(), Some(10));
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = CliArgs::parse(&s(&["analyze", "--fast"])).unwrap();
+        assert_eq!(a.get("fast"), Some("true"));
+    }
+
+    #[test]
+    fn rejects_unknown_command() {
+        assert!(CliArgs::parse(&s(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        assert_eq!(CliArgs::parse(&[]).unwrap().command, Command::Help);
+    }
+}

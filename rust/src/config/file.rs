@@ -1,0 +1,82 @@
+//! Minimal config-file parser: `key = value` lines, `#`/`;` comments,
+//! optional `[section]` headers flattened into `section.key`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct ConfigFile {
+    map: BTreeMap<String, String>,
+}
+
+impl ConfigFile {
+    pub fn parse_str(text: &str) -> Result<Self, String> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(format!("line {}: expected key = value", lineno + 1));
+            };
+            let key = line[..eq].trim();
+            let mut value = line[eq + 1..].trim();
+            // strip surrounding quotes
+            if value.len() >= 2 && value.starts_with('"') && value.ends_with('"') {
+                value = &value[1..value.len() - 1];
+            }
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            map.insert(full_key, value.to_string());
+        }
+        Ok(ConfigFile { map })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, String> {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+        Self::parse_str(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = (&String, &String)> {
+        self.map.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_kv_comments_sections() {
+        let f = ConfigFile::parse_str(
+            "# comment\nsteps = 10\n[train]\nlr = 0.001\nname = \"run a\"\n",
+        )
+        .unwrap();
+        assert_eq!(f.get("steps"), Some("10"));
+        assert_eq!(f.get("train.lr"), Some("0.001"));
+        assert_eq!(f.get("train.name"), Some("run a"));
+        assert_eq!(f.get("missing"), None);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ConfigFile::parse_str("not a kv line").is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Configuration system: experiment configs (model preset × recipe × run
+//! settings), a minimal INI/TOML-subset file parser, and the hand-rolled CLI
+//! argument parser (the offline image has no clap).
+
+pub mod cli;
+pub mod file;
+
+pub use cli::{CliArgs, Command};
+pub use file::ConfigFile;
+
+use crate::data::CorpusConfig;
+use crate::model::config::{FfnKind, ModelConfig};
+use crate::quant::QuantRecipe;
+use crate::train::TrainConfig;
+
+/// Model-scale preset, standing in for the paper's two model settings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelPreset {
+    /// Qwen3-0.6B-dense stand-in (see DESIGN.md §3 for the scale mapping)
+    DenseSmall,
+    /// Qwen3-7B-A1.5B-MoE stand-in
+    MoeSmall,
+    /// unit-test scale
+    Tiny,
+}
+
+impl ModelPreset {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" | "dense-small" | "0.6b" => Ok(ModelPreset::DenseSmall),
+            "moe" | "moe-small" | "7b-a1.5b" => Ok(ModelPreset::MoeSmall),
+            "tiny" => Ok(ModelPreset::Tiny),
+            other => Err(format!("unknown model preset '{other}' (dense|moe|tiny)")),
+        }
+    }
+
+    pub fn model_config(self, vocab: usize) -> ModelConfig {
+        match self {
+            ModelPreset::DenseSmall => ModelConfig::dense_small(vocab),
+            ModelPreset::MoeSmall => ModelConfig::moe_small(vocab),
+            ModelPreset::Tiny => ModelConfig::test_tiny(vocab),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelPreset::DenseSmall => "qwen3-0.6b-sim",
+            ModelPreset::MoeSmall => "qwen3-7b-a1.5b-sim",
+            ModelPreset::Tiny => "tiny",
+        }
+    }
+
+    pub fn is_moe(self) -> bool {
+        matches!(self, ModelPreset::MoeSmall)
+    }
+}
+
+/// A full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub preset: ModelPreset,
+    pub recipe: QuantRecipe,
+    pub train: TrainConfig,
+    pub corpus: CorpusConfig,
+    pub out_dir: String,
+}
+
+impl ExperimentConfig {
+    pub fn defaults(preset: ModelPreset, recipe: QuantRecipe) -> Self {
+        let corpus = CorpusConfig { vocab: 256, tokens: 1 << 17, ..Default::default() };
+        let train = TrainConfig {
+            steps: 150,
+            batch: 4,
+            seq: 64,
+            eval_every: 25,
+            ..Default::default()
+        };
+        ExperimentConfig { preset, recipe, train, corpus, out_dir: "runs".to_string() }
+    }
+
+    pub fn model_config(&self) -> ModelConfig {
+        let mut cfg = self.preset.model_config(self.corpus.vocab);
+        cfg.max_seq = cfg.max_seq.max(self.train.seq);
+        cfg
+    }
+
+    pub fn run_name(&self) -> String {
+        format!("{}_{}", self.preset.name(), self.recipe.artifact_stem())
+    }
+}
+
+/// Apply `key = value` overrides from a parsed config file.
+pub fn apply_overrides(exp: &mut ExperimentConfig, file: &ConfigFile) -> Result<(), String> {
+    for (k, v) in file.entries() {
+        match k.as_str() {
+            "steps" => exp.train.steps = v.parse().map_err(|e| format!("steps: {e}"))?,
+            "batch" => exp.train.batch = v.parse().map_err(|e| format!("batch: {e}"))?,
+            "seq" => exp.train.seq = v.parse().map_err(|e| format!("seq: {e}"))?,
+            "peak_lr" => exp.train.peak_lr = v.parse().map_err(|e| format!("peak_lr: {e}"))?,
+            "grad_clip" => exp.train.grad_clip = v.parse().map_err(|e| format!("grad_clip: {e}"))?,
+            "eval_every" => exp.train.eval_every = v.parse().map_err(|e| format!("eval_every: {e}"))?,
+            "seed" => exp.train.seed = v.parse().map_err(|e| format!("seed: {e}"))?,
+            "vocab" => exp.corpus.vocab = v.parse().map_err(|e| format!("vocab: {e}"))?,
+            "corpus_tokens" => exp.corpus.tokens = v.parse().map_err(|e| format!("corpus_tokens: {e}"))?,
+            "recipe" => exp.recipe = v.parse()?,
+            "model" => exp.preset = ModelPreset::parse(v)?,
+            "out_dir" => exp.out_dir = v.clone(),
+            other => return Err(format!("unknown config key '{other}'")),
+        }
+    }
+    Ok(())
+}
+
+/// Number of experts in the MoE preset exposed for bench labeling.
+pub fn moe_arity(cfg: &ModelConfig) -> Option<(usize, usize)> {
+    match cfg.ffn {
+        FfnKind::Moe { experts, top_k } => Some((experts, top_k)),
+        FfnKind::Dense => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_parse() {
+        assert_eq!(ModelPreset::parse("dense").unwrap(), ModelPreset::DenseSmall);
+        assert_eq!(ModelPreset::parse("MoE").unwrap(), ModelPreset::MoeSmall);
+        assert!(ModelPreset::parse("huge").is_err());
+    }
+
+    #[test]
+    fn defaults_are_valid() {
+        let e = ExperimentConfig::defaults(ModelPreset::DenseSmall, QuantRecipe::Averis);
+        e.model_config().validate().unwrap();
+        assert!(e.run_name().contains("averis"));
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut e = ExperimentConfig::defaults(ModelPreset::Tiny, QuantRecipe::Bf16);
+        let f = ConfigFile::parse_str("steps = 7\nrecipe = averis\n# comment\nseq=32").unwrap();
+        apply_overrides(&mut e, &f).unwrap();
+        assert_eq!(e.train.steps, 7);
+        assert_eq!(e.recipe, QuantRecipe::Averis);
+        assert_eq!(e.train.seq, 32);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut e = ExperimentConfig::defaults(ModelPreset::Tiny, QuantRecipe::Bf16);
+        let f = ConfigFile::parse_str("bogus = 1").unwrap();
+        assert!(apply_overrides(&mut e, &f).is_err());
+    }
+}

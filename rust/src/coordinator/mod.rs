@@ -1,0 +1,18 @@
+//! L3 coordinator — the experiment orchestrator.
+//!
+//! Owns process lifecycle: resolves an `ExperimentConfig` to either the PJRT
+//! path (AOT-compiled JAX train step, Python off the step path) or the
+//! pure-Rust simulator path, drives the step loop, writes metric sinks, runs
+//! downstream probe evaluation, and exposes the figure/table drivers that
+//! regenerate every experiment in the paper (DESIGN.md §5).
+
+pub mod figures;
+pub mod pjrt_train;
+pub mod probe_eval;
+pub mod runs;
+pub mod sim_train;
+
+pub use pjrt_train::{pjrt_train_run, PjrtRunResult};
+pub use probe_eval::{evaluate_probes, ProbeResult};
+pub use runs::RunDir;
+pub use sim_train::sim_train_run;

@@ -1,0 +1,77 @@
+//! PJRT training loop: the end-to-end path where the model's fwd/bwd/update
+//! is the AOT-compiled JAX+Pallas HLO and Rust owns everything else —
+//! data generation, batching, the step loop, metrics, checkpoints.
+
+use crate::data::{Batcher, Corpus, CorpusConfig};
+use crate::metrics::{CsvSink, JsonObj, TimingStats};
+use crate::quant::QuantRecipe;
+use crate::runtime::{ArtifactStore, EvalStep, TrainState, TrainStep};
+use anyhow::Result;
+use std::path::Path;
+
+/// Result of one PJRT run.
+pub struct PjrtRunResult {
+    pub recipe: QuantRecipe,
+    pub loss_curve: Vec<(u64, f32)>,
+    pub final_eval_loss: f32,
+    pub sec_per_step: f64,
+    pub theta: Vec<f32>,
+}
+
+/// Train for `steps` with the AOT artifact of `recipe`; writes loss.csv and
+/// summary.json into `out_dir`.
+pub fn pjrt_train_run(
+    client: &xla::PjRtClient,
+    store: &ArtifactStore,
+    recipe: QuantRecipe,
+    steps: u64,
+    seed: u64,
+    out_dir: &Path,
+) -> Result<PjrtRunResult> {
+    let m = &store.manifest;
+    let train = TrainStep::load(client, &store.train_hlo(recipe)?, m.batch, m.seq)?;
+    let eval = EvalStep::load(client, &store.eval_hlo(recipe)?, m.batch, m.seq)?;
+
+    // data: synthetic corpus (identical across recipes for comparability)
+    let corpus = Corpus::generate(
+        CorpusConfig { vocab: m.vocab, tokens: 1 << 18, ..Default::default() },
+        0xC0FFEE,
+    );
+    let mut batcher = Batcher::new(corpus.train.clone(), m.batch, m.seq, seed);
+    let eval_batcher = Batcher::new(corpus.heldout.clone(), m.batch, m.seq, 0);
+    let eval_set = eval_batcher.eval_batches(4);
+
+    let mut state = TrainState::new(&store.theta0()?);
+    let mut csv = CsvSink::create(out_dir.join("loss.csv"), &["step", "loss"])?;
+    let mut timing = TimingStats::default();
+    let mut curve = Vec::with_capacity(steps as usize);
+    for s in 0..steps {
+        let (x, y) = batcher.next_batch();
+        let loss = timing.time(|| train.step(&mut state, &x, &y))?;
+        csv.row(&[s as f64, loss as f64])?;
+        curve.push((s, loss));
+    }
+    // held-out eval with the recipe's (quantized) forward
+    let mut acc = 0.0f64;
+    for (x, y) in &eval_set {
+        acc += eval.loss(&state.theta, x, y)? as f64;
+    }
+    let final_eval = (acc / eval_set.len() as f64) as f32;
+
+    let summary = JsonObj::new()
+        .str("recipe", &recipe.to_string())
+        .int("steps", steps as i64)
+        .num("final_train_loss", curve.last().map(|&(_, l)| l as f64).unwrap_or(f64::NAN))
+        .num("final_eval_loss", final_eval as f64)
+        .num("sec_per_step", timing.mean() / 1e3)
+        .num("step_ms_std", timing.std());
+    summary.write(out_dir.join("summary.json"))?;
+
+    Ok(PjrtRunResult {
+        recipe,
+        loss_curve: curve,
+        final_eval_loss: final_eval,
+        sec_per_step: timing.mean() / 1e3,
+        theta: state.theta_host()?,
+    })
+}

@@ -1,0 +1,88 @@
+//! Downstream probe evaluation (Table-1 downstream stand-in): score a
+//! trained model on the synthetic probe tasks with the recipe's (quantized)
+//! forward pass — the paper's "NVFP4 forward evaluation" protocol.
+
+use crate::data::{Corpus, ProbeSet, ProbeTask};
+use crate::model::{ModelConfig, Params, Taps, Transformer};
+use crate::quant::QuantRecipe;
+
+/// Accuracy per probe task.
+#[derive(Clone, Debug)]
+pub struct ProbeResult {
+    pub task: ProbeTask,
+    pub accuracy: f32,
+    pub n: usize,
+}
+
+/// Greedy next-token accuracy of `params` on each probe task, evaluated with
+/// `eval_recipe`'s forward pass (e.g. NVFP4 for the low-bit rows of Table 1).
+pub fn evaluate_probes(
+    cfg: ModelConfig,
+    params: &Params,
+    eval_recipe: QuantRecipe,
+    corpus: &Corpus,
+    n_examples: usize,
+    ctx_len: usize,
+) -> Vec<ProbeResult> {
+    let mut model = Transformer::new(cfg, eval_recipe, 0xEA1);
+    let mut out = Vec::new();
+    for task in ProbeTask::ALL {
+        let set = ProbeSet::build(corpus, task, ctx_len, n_examples, 0xBEEF);
+        let mut correct = 0usize;
+        for ex in &set.examples {
+            let s = ex.context.len();
+            let mut taps = Taps::disabled();
+            let (logits, _) = model.forward(params, &ex.context, 1, s, &mut taps);
+            // greedy prediction at the last position
+            let last = logits.row(s - 1);
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for (j, &v) in last.iter().enumerate() {
+                if v > best_v {
+                    best_v = v;
+                    best = j;
+                }
+            }
+            if best as u32 == ex.answer {
+                correct += 1;
+            }
+        }
+        out.push(ProbeResult {
+            task,
+            accuracy: correct as f32 / set.examples.len().max(1) as f32,
+            n: set.examples.len(),
+        });
+    }
+    out
+}
+
+/// Mean accuracy across tasks (the Table-1 "Avg" column).
+pub fn mean_accuracy(results: &[ProbeResult]) -> f32 {
+    if results.is_empty() {
+        return 0.0;
+    }
+    results.iter().map(|r| r.accuracy).sum::<f32>() / results.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CorpusConfig;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn probes_run_and_report() {
+        let cfg = ModelConfig::test_tiny(64);
+        let params = Params::init(&cfg, &mut Rng::new(1));
+        let corpus =
+            Corpus::generate(CorpusConfig { tokens: 1 << 13, vocab: 64, ..Default::default() }, 2);
+        let res = evaluate_probes(cfg, &params, QuantRecipe::Nvfp4, &corpus, 8, 24);
+        assert_eq!(res.len(), 3);
+        for r in &res {
+            assert!(r.accuracy >= 0.0 && r.accuracy <= 1.0);
+            assert_eq!(r.n, 8);
+        }
+        let avg = mean_accuracy(&res);
+        assert!(avg >= 0.0 && avg <= 1.0);
+    }
+}

@@ -1,0 +1,52 @@
+//! Run registry: one directory per run under `runs/`, holding loss CSVs,
+//! summaries, and analysis outputs; plus helpers to list prior runs.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// A run's output directory.
+#[derive(Clone, Debug)]
+pub struct RunDir {
+    pub path: PathBuf,
+}
+
+impl RunDir {
+    /// Create `base/name` (idempotent).
+    pub fn create(base: impl AsRef<Path>, name: &str) -> std::io::Result<Self> {
+        let path = base.as_ref().join(name);
+        fs::create_dir_all(&path)?;
+        Ok(RunDir { path })
+    }
+
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+
+    /// List run names under a base directory.
+    pub fn list(base: impl AsRef<Path>) -> Vec<String> {
+        let Ok(rd) = fs::read_dir(base) else { return Vec::new() };
+        let mut names: Vec<String> = rd
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().is_dir())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .collect();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_and_list() {
+        let base = std::env::temp_dir().join("averis_runs_test");
+        let _ = fs::remove_dir_all(&base);
+        let r = RunDir::create(&base, "exp1").unwrap();
+        assert!(r.path.exists());
+        fs::write(r.file("loss.csv"), "x").unwrap();
+        let names = RunDir::list(&base);
+        assert_eq!(names, vec!["exp1".to_string()]);
+    }
+}

@@ -1,0 +1,44 @@
+//! Simulator training runs: drive `train::train` from an `ExperimentConfig`
+//! and persist curves + summaries in the run registry.
+
+use crate::config::ExperimentConfig;
+use crate::data::Corpus;
+use crate::metrics::{CsvSink, JsonObj};
+use crate::train::{train, TrainResult};
+use anyhow::Result;
+
+use super::runs::RunDir;
+
+/// Run one simulator experiment and persist outputs. Set `capture_taps` to
+/// instrument the early/late checkpoints for the analysis pipeline.
+pub fn sim_train_run(exp: &ExperimentConfig, capture_taps: bool) -> Result<TrainResult> {
+    let corpus = Corpus::generate(exp.corpus, 0xC0FFEE);
+    let mut tc = exp.train;
+    tc.tap_steps = [capture_taps, capture_taps];
+    let result = train(
+        exp.model_config(),
+        exp.recipe,
+        tc,
+        corpus.train.clone(),
+        corpus.heldout.clone(),
+    );
+
+    let run = RunDir::create(&exp.out_dir, &exp.run_name())?;
+    let mut csv = CsvSink::create(run.file("loss.csv"), &["step", "loss"])?;
+    for &(s, l) in &result.loss_curve {
+        csv.row(&[s as f64, l as f64])?;
+    }
+    let mut ecsv = CsvSink::create(run.file("eval.csv"), &["step", "heldout_loss"])?;
+    for &(s, l) in &result.eval_curve {
+        ecsv.row(&[s as f64, l as f64])?;
+    }
+    JsonObj::new()
+        .str("recipe", &exp.recipe.to_string())
+        .str("model", exp.preset.name())
+        .int("steps", exp.train.steps as i64)
+        .num("final_train_loss", result.final_train_loss as f64)
+        .num("final_eval_loss", result.final_eval_loss as f64)
+        .num("sec_per_step", result.sec_per_step)
+        .write(run.file("summary.json"))?;
+    Ok(result)
+}

@@ -1,0 +1,153 @@
+//! Synthetic structured corpus generator.
+
+use crate::tensor::rng::zipf_cdf;
+use crate::tensor::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CorpusConfig {
+    pub vocab: usize,
+    /// total tokens to generate
+    pub tokens: usize,
+    /// number of latent Markov states (topics)
+    pub states: usize,
+    /// probability of staying in the current state
+    pub stickiness: f32,
+    /// probability of opening a copy episode at any position
+    pub copy_rate: f32,
+    /// copy episode span length
+    pub copy_len: usize,
+    /// Zipf exponent for the per-state unigram distributions
+    pub zipf_s: f64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            vocab: 256,
+            tokens: 1 << 18,
+            states: 8,
+            stickiness: 0.95,
+            copy_rate: 0.02,
+            copy_len: 8,
+            zipf_s: 1.1,
+        }
+    }
+}
+
+/// A generated corpus with a train/held-out split.
+pub struct Corpus {
+    pub cfg: CorpusConfig,
+    pub train: Vec<u32>,
+    pub heldout: Vec<u32>,
+}
+
+impl Corpus {
+    /// Generate deterministically from a seed. 90/10 train/held-out split.
+    pub fn generate(cfg: CorpusConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        // per-state vocab permutation so states have distinct Zipf heads
+        let cdf = zipf_cdf(cfg.vocab, cfg.zipf_s);
+        let mut perms: Vec<Vec<u32>> = Vec::with_capacity(cfg.states);
+        for _ in 0..cfg.states {
+            let mut p: Vec<u32> = (0..cfg.vocab as u32).collect();
+            // Fisher–Yates
+            for i in (1..p.len()).rev() {
+                let j = rng.below(i + 1);
+                p.swap(i, j);
+            }
+            perms.push(p);
+        }
+        let mut tokens = Vec::with_capacity(cfg.tokens);
+        let mut state = 0usize;
+        let mut i = 0usize;
+        while i < cfg.tokens {
+            // state transition
+            if rng.uniform() > cfg.stickiness {
+                state = rng.below(cfg.states);
+            }
+            // copy episode: emit a sentinel, then replay a recent span —
+            // learnable long-range structure (induction-head food)
+            if tokens.len() > 4 * cfg.copy_len && rng.uniform() < cfg.copy_rate {
+                let span = cfg.copy_len.min(cfg.tokens - i);
+                let start = tokens.len() - 2 * cfg.copy_len;
+                for k in 0..span {
+                    let t: u32 = tokens[start + k];
+                    tokens.push(t);
+                    i += 1;
+                    if i >= cfg.tokens {
+                        break;
+                    }
+                }
+                continue;
+            }
+            let z = rng.zipf(&cdf);
+            tokens.push(perms[state][z]);
+            i += 1;
+        }
+        let split = cfg.tokens * 9 / 10;
+        let heldout = tokens.split_off(split);
+        Corpus { cfg, train: tokens, heldout }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let cfg = CorpusConfig { tokens: 4096, ..Default::default() };
+        let a = Corpus::generate(cfg, 7);
+        let b = Corpus::generate(cfg, 7);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.heldout, b.heldout);
+    }
+
+    #[test]
+    fn split_sizes() {
+        let cfg = CorpusConfig { tokens: 10_000, ..Default::default() };
+        let c = Corpus::generate(cfg, 1);
+        assert_eq!(c.train.len(), 9000);
+        assert_eq!(c.heldout.len(), 1000);
+    }
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let cfg = CorpusConfig { tokens: 8192, vocab: 100, ..Default::default() };
+        let c = Corpus::generate(cfg, 2);
+        assert!(c.train.iter().all(|&t| (t as usize) < 100));
+    }
+
+    #[test]
+    fn zipfian_head_dominates() {
+        let cfg = CorpusConfig { tokens: 1 << 16, ..Default::default() };
+        let c = Corpus::generate(cfg, 3);
+        let mut counts = vec![0usize; cfg.vocab];
+        for &t in &c.train {
+            counts[t as usize] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top10: usize = counts[..10].iter().sum();
+        assert!(
+            top10 > c.train.len() / 5,
+            "Zipf head too flat: top-10 {top10} of {}",
+            c.train.len()
+        );
+    }
+
+    #[test]
+    fn copy_structure_present() {
+        // with copy episodes, the corpus should contain repeated 6-grams far
+        // more often than an iid stream would
+        let cfg = CorpusConfig { tokens: 1 << 15, copy_rate: 0.05, ..Default::default() };
+        let c = Corpus::generate(cfg, 4);
+        let mut repeats = 0usize;
+        let w = cfg.copy_len;
+        for i in (2 * w)..(c.train.len() - w) {
+            if c.train[i..i + w] == c.train[i - 2 * w..i - w] {
+                repeats += 1;
+            }
+        }
+        assert!(repeats > 10, "expected copy episodes, found {repeats}");
+    }
+}

@@ -1,0 +1,17 @@
+//! Synthetic-corpus substrate (DCLM stand-in, see DESIGN.md §3).
+//!
+//! The generator produces a structured token language with the statistical
+//! properties that make LLM pretraining loss curves informative:
+//!  * Zipfian unigram distribution (natural-language frequency law),
+//!  * a latent topic/state Markov chain (local n-gram predictability),
+//!  * long-range copy/induction episodes (the signal induction heads learn),
+//! plus a deterministic held-out split and downstream probe tasks
+//! (cloze / copy / induction) used as the Table-1 downstream stand-ins.
+
+pub mod batcher;
+pub mod corpus;
+pub mod probes;
+
+pub use batcher::Batcher;
+pub use corpus::{Corpus, CorpusConfig};
+pub use probes::{ProbeSet, ProbeTask};

@@ -1,0 +1,159 @@
+//! Downstream probe tasks — the Table-1 downstream-evaluation stand-ins
+//! (see DESIGN.md §3: ARC/RACE/… are unavailable offline; these probes
+//! measure the same quantity — task accuracy of the trained model under an
+//! NVFP4-quantized forward pass — on tasks the synthetic corpus makes
+//! learnable).
+//!
+//!  * `Cloze`      — predict the masked last token of a frequent local bigram
+//!                   context (n-gram knowledge; LAMBADA-like protocol).
+//!  * `Copy`       — after seeing a span twice, predict its continuation
+//!                   (exact long-range recall).
+//!  * `Induction`  — after `A B … A`, predict `B` (induction-head probe;
+//!                   the mechanism behind in-context cloze tasks).
+
+use super::corpus::Corpus;
+use crate::tensor::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProbeTask {
+    Cloze,
+    Copy,
+    Induction,
+}
+
+impl ProbeTask {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProbeTask::Cloze => "Cloze",
+            ProbeTask::Copy => "Copy",
+            ProbeTask::Induction => "Induction",
+        }
+    }
+
+    pub const ALL: [ProbeTask; 3] = [ProbeTask::Cloze, ProbeTask::Copy, ProbeTask::Induction];
+}
+
+/// One probe instance: a context and the expected next token.
+#[derive(Clone, Debug)]
+pub struct ProbeExample {
+    pub context: Vec<u32>,
+    pub answer: u32,
+}
+
+/// A set of probe examples per task, drawn from the held-out split.
+pub struct ProbeSet {
+    pub task: ProbeTask,
+    pub examples: Vec<ProbeExample>,
+}
+
+impl ProbeSet {
+    /// Build `n` examples of `task` with contexts of length `ctx_len` from
+    /// the held-out stream.
+    pub fn build(corpus: &Corpus, task: ProbeTask, ctx_len: usize, n: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let held = &corpus.heldout;
+        let mut examples = Vec::with_capacity(n);
+        let mut guard = 0usize;
+        while examples.len() < n && guard < n * 200 {
+            guard += 1;
+            match task {
+                ProbeTask::Cloze => {
+                    // natural continuation: any held-out position; answer is
+                    // the true next token
+                    let pos = ctx_len + rng.below(held.len() - ctx_len - 1);
+                    examples.push(ProbeExample {
+                        context: held[pos - ctx_len..pos].to_vec(),
+                        answer: held[pos],
+                    });
+                }
+                ProbeTask::Copy => {
+                    // synthesize: [prefix | span | span-prefix] → next span tok
+                    let span_len = 6usize.min(ctx_len / 3);
+                    let prefix_len = ctx_len - 2 * span_len;
+                    let p0 = rng.below(held.len() - ctx_len - 2);
+                    let mut ctx = held[p0..p0 + prefix_len].to_vec();
+                    let span: Vec<u32> =
+                        (0..span_len).map(|k| held[(p0 + prefix_len + k) % held.len()]).collect();
+                    ctx.extend_from_slice(&span);
+                    ctx.extend_from_slice(&span[..span_len - 1]);
+                    let answer = span[span_len - 1];
+                    examples.push(ProbeExample { context: ctx, answer });
+                }
+                ProbeTask::Induction => {
+                    // [noise | A B | noise | A] → B, with A a cue token that
+                    // does not occur elsewhere in the context (well-posed)
+                    let p0 = rng.below(held.len() - ctx_len - 2);
+                    let mut ctx = held[p0..p0 + ctx_len - 3].to_vec();
+                    let mut a = held[rng.below(held.len())];
+                    let mut tries = 0;
+                    while ctx.contains(&a) && tries < 50 {
+                        a = held[rng.below(held.len())];
+                        tries += 1;
+                    }
+                    if ctx.contains(&a) {
+                        continue; // could not find a clean cue; resample
+                    }
+                    let b = held[rng.below(held.len())];
+                    let mid = ctx.len() / 2;
+                    ctx[mid] = a;
+                    ctx[mid + 1] = b;
+                    ctx.push(a);
+                    examples.push(ProbeExample { context: ctx, answer: b });
+                }
+            }
+        }
+        ProbeSet { task, examples }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusConfig;
+
+    fn corpus() -> Corpus {
+        Corpus::generate(CorpusConfig { tokens: 1 << 14, ..Default::default() }, 9)
+    }
+
+    #[test]
+    fn builds_requested_count() {
+        let c = corpus();
+        for task in ProbeTask::ALL {
+            let p = ProbeSet::build(&c, task, 24, 50, 1);
+            assert_eq!(p.examples.len(), 50, "{}", task.name());
+        }
+    }
+
+    #[test]
+    fn contexts_have_requested_length() {
+        let c = corpus();
+        let p = ProbeSet::build(&c, ProbeTask::Cloze, 24, 10, 2);
+        assert!(p.examples.iter().all(|e| e.context.len() == 24));
+        let p = ProbeSet::build(&c, ProbeTask::Induction, 24, 10, 2);
+        // induction contexts: ctx_len-3 noise + pushed A = ctx_len-2
+        assert!(p.examples.iter().all(|e| e.context.len() == 24 - 2));
+    }
+
+    #[test]
+    fn induction_answer_follows_cue() {
+        let c = corpus();
+        let p = ProbeSet::build(&c, ProbeTask::Induction, 20, 20, 3);
+        for e in &p.examples {
+            let a = *e.context.last().unwrap();
+            // find earlier A; next token must be the answer
+            let mid = e.context.iter().position(|&t| t == a).unwrap();
+            assert_eq!(e.context[mid + 1], e.answer);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = corpus();
+        let p1 = ProbeSet::build(&c, ProbeTask::Copy, 24, 5, 4);
+        let p2 = ProbeSet::build(&c, ProbeTask::Copy, 24, 5, 4);
+        for (a, b) in p1.examples.iter().zip(p2.examples.iter()) {
+            assert_eq!(a.context, b.context);
+            assert_eq!(a.answer, b.answer);
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! # Averis — mean–residual splitting quantization for FP4 LLM training
+//!
+//! Full-system reproduction of *"The Curse and Blessing of Mean Bias in
+//! FP4-Quantized LLM Training"*: the NVFP4/MXFP4 numeric-format substrate,
+//! the tiled-Hadamard baseline, the Averis method (quantized forward/dgrad/
+//! wgrad GeMMs with mean–residual splitting), a pure-Rust quantized-training
+//! Transformer simulator, the mean-bias analysis pipeline (paper §2,
+//! Figs. 1–5, Theorem 1), and a PJRT runtime + coordinator that trains
+//! JAX/Pallas-AOT-compiled models with Python off the step path.
+//!
+//! See DESIGN.md for the architecture and the per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod analysis;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod train;

@@ -1,0 +1,154 @@
+//! Gaussian special functions: erf, Φ, Q = 1−Φ, and the inverse CDF (ppf).
+//!
+//! Used by the Theorem-1 tail-amplification validation (`analysis::theorem1`)
+//! and by QQ-plot generation (`analysis::gaussian_fit`). All in f64 for
+//! far-tail accuracy.
+
+/// Error function, Abramowitz & Stegun 7.1.26-style rational approximation
+/// refined with one Newton step against the derivative — |err| < 1e-12 after
+/// refinement is not needed here; the base approx (~1.5e-7) suffices for
+/// plotting, and for far tails we use `log_q` below instead.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF Φ(x).
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Upper-tail Q(x) = 1 − Φ(x), computed via erfc-style continued fraction for
+/// large x to avoid catastrophic cancellation.
+pub fn q_function(x: f64) -> f64 {
+    if x < 0.0 {
+        return 1.0 - q_function(-x);
+    }
+    if x < 8.0 {
+        // complementary form of the rational approximation keeps precision
+        let t = 1.0 / (1.0 + 0.3275911 * x / std::f64::consts::SQRT_2);
+        let xs = x / std::f64::consts::SQRT_2;
+        let poly = (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736)
+            * t
+            + 0.254829592)
+            * t;
+        0.5 * poly * (-xs * xs).exp()
+    } else {
+        // Mills-ratio asymptotic: Q(x) ≈ φ(x)/x · (1 − 1/x² + 3/x⁴)
+        let phi = (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt();
+        phi / x * (1.0 - 1.0 / (x * x) + 3.0 / (x * x * x * x))
+    }
+}
+
+/// ln Q(x) for far tails where Q underflows (x ≳ 38).
+pub fn log_q(x: f64) -> f64 {
+    if x < 8.0 {
+        return q_function(x).max(f64::MIN_POSITIVE).ln();
+    }
+    // ln(φ(x)/x) + ln(1 − 1/x² + 3/x⁴)
+    -0.5 * x * x - 0.5 * (2.0 * std::f64::consts::PI).ln() - x.ln()
+        + (1.0 - 1.0 / (x * x) + 3.0 / (x * x * x * x)).ln()
+}
+
+/// Inverse standard normal CDF (Acklam's algorithm), |rel err| < 1.15e-9.
+pub fn norm_ppf(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "ppf domain: {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    let x = if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    // one Halley refinement using the forward CDF
+    let e = norm_cdf(x) - p;
+    let u = e * (2.0 * std::f64::consts::PI).sqrt() * (0.5 * x * x).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 1e-9);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(3.0) - 0.9999779095).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cdf_symmetry() {
+        // A&S rational approximation: |err| ~ 1.5e-7
+        for &x in &[0.0, 0.5, 1.0, 2.5] {
+            assert!((norm_cdf(x) + norm_cdf(-x) - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn q_function_values() {
+        // Q(1.96) ≈ 0.0249979
+        assert!((q_function(1.96) - 0.0249979).abs() < 1e-5);
+        // Q(0) = 0.5
+        assert!((q_function(0.0) - 0.5).abs() < 1e-9);
+        // large-x consistency with log_q
+        for &x in &[9.0, 12.0, 20.0] {
+            let lq = log_q(x);
+            let q = q_function(x);
+            assert!((lq - q.ln()).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn ppf_inverts_cdf() {
+        for &p in &[0.001, 0.025, 0.2, 0.5, 0.8, 0.975, 0.999] {
+            let x = norm_ppf(p);
+            assert!((norm_cdf(x) - p).abs() < 1e-7, "p={p} x={x}");
+        }
+    }
+}

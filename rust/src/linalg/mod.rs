@@ -1,0 +1,9 @@
+//! Numerical linear algebra substrate: SVD, power iteration, Gaussian special
+//! functions. Needed by the mean-bias analysis pipeline (§2 of the paper) and
+//! by the Metis-style SVD-quantization ablation baseline.
+
+pub mod gaussian;
+pub mod svd;
+
+pub use gaussian::{erf, norm_cdf, norm_ppf, q_function};
+pub use svd::{svd, top_k_svd, Svd};

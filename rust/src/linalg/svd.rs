@@ -1,0 +1,287 @@
+//! Singular value decomposition.
+//!
+//! Two engines:
+//!  * `svd` — one-sided Jacobi on AᵀA-implicit rotations: exact full SVD for
+//!    the modest matrices the analysis pipeline sees (activations are
+//!    sub-sampled to ≤ 512×512 before spectral diagnostics).
+//!  * `top_k_svd` — block power iteration with Gram–Schmidt reorthogonalization
+//!    for the top-k triplets of large activation matrices (used by the
+//!    Metis-style SVD-quantization ablation, where only v₁/σ₁ matter).
+
+use crate::tensor::{Mat, Rng};
+
+/// SVD result: X ≈ U · diag(s) · Vᵀ with U (l×r), s (r), V (m×r),
+/// singular values sorted descending.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f32>,
+    pub v: Mat,
+}
+
+impl Svd {
+    /// Reconstruct the rank-`k` truncation.
+    pub fn reconstruct(&self, k: usize) -> Mat {
+        let k = k.min(self.s.len());
+        let (l, m) = (self.u.rows, self.v.rows);
+        let mut out = Mat::zeros(l, m);
+        for t in 0..k {
+            let s = self.s[t];
+            for i in 0..l {
+                let us = self.u.at(i, t) * s;
+                if us == 0.0 {
+                    continue;
+                }
+                let row = out.row_mut(i);
+                for j in 0..m {
+                    row[j] += us * self.v.at(j, t);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Full SVD by one-sided Jacobi (Hestenes). Works on X (l×m) directly by
+/// orthogonalizing columns of a working copy; suitable for min(l,m) ≲ 768.
+pub fn svd(x: &Mat) -> Svd {
+    // Work on the transpose if cols > rows so we orthogonalize the smaller side.
+    if x.cols > x.rows {
+        let s = svd(&x.transpose());
+        return Svd { u: s.v, s: s.s, v: s.u };
+    }
+    let (l, m) = (x.rows, x.cols);
+    // A is a working copy whose columns converge to u_k * sigma_k
+    let mut a = x.clone();
+    let mut v = Mat::eye(m);
+    let max_sweeps = 60;
+    let eps = 1e-10f64;
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..m - 1 {
+            for q in p + 1..m {
+                // gram entries over columns p, q
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..l {
+                    let ap = a.data[i * m + p] as f64;
+                    let aq = a.data[i * m + q] as f64;
+                    app += ap * ap;
+                    aqq += aq * aq;
+                    apq += ap * aq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation that zeroes the (p,q) Gram entry
+                let zeta = (aqq - app) / (2.0 * apq);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..l {
+                    let ap = a.data[i * m + p];
+                    let aq = a.data[i * m + q];
+                    a.data[i * m + p] = (c * ap as f64 - s * aq as f64) as f32;
+                    a.data[i * m + q] = (s * ap as f64 + c * aq as f64) as f32;
+                }
+                for i in 0..m {
+                    let vp = v.data[i * m + p];
+                    let vq = v.data[i * m + q];
+                    v.data[i * m + p] = (c * vp as f64 - s * vq as f64) as f32;
+                    v.data[i * m + q] = (s * vp as f64 + c * vq as f64) as f32;
+                }
+            }
+        }
+        if off < 1e-9 {
+            break;
+        }
+    }
+
+    // singular values = column norms of A; U = normalized columns
+    let mut order: Vec<usize> = (0..m).collect();
+    let mut sv = vec![0.0f32; m];
+    for j in 0..m {
+        let mut n2 = 0.0f64;
+        for i in 0..l {
+            let x = a.data[i * m + j] as f64;
+            n2 += x * x;
+        }
+        sv[j] = n2.sqrt() as f32;
+    }
+    order.sort_by(|&i, &j| sv[j].partial_cmp(&sv[i]).unwrap());
+
+    let mut u = Mat::zeros(l, m);
+    let mut vv = Mat::zeros(m, m);
+    let mut s_sorted = vec![0.0f32; m];
+    for (new_j, &old_j) in order.iter().enumerate() {
+        let s = sv[old_j];
+        s_sorted[new_j] = s;
+        let inv = if s > 1e-20 { 1.0 / s } else { 0.0 };
+        for i in 0..l {
+            u.data[i * m + new_j] = a.data[i * m + old_j] * inv;
+        }
+        for i in 0..m {
+            vv.data[i * m + new_j] = v.data[i * m + old_j];
+        }
+    }
+    Svd { u, s: s_sorted, v: vv }
+}
+
+/// Top-k SVD via subspace (block power) iteration on XᵀX, returning the k
+/// leading triplets. `iters` ~ 30 suffices when σ₁/σ₂ gaps are healthy
+/// (which is exactly the anisotropic regime the paper studies).
+pub fn top_k_svd(x: &Mat, k: usize, iters: usize, rng: &mut Rng) -> Svd {
+    let (l, m) = (x.rows, x.cols);
+    let k = k.min(l.min(m));
+    // V0: random m×k, orthonormalized
+    let mut v = Mat::randn(m, k, 1.0, rng);
+    gram_schmidt_cols(&mut v);
+    for _ in 0..iters {
+        // W = Xᵀ (X V): m×k
+        let xv = x.matmul(&v); // l×k
+        let mut w = x.matmul_at(&xv); // m×k (Xᵀ·XV)
+        gram_schmidt_cols(&mut w);
+        v = w;
+    }
+    // Rayleigh–Ritz: B = X V (l×k); svd of small B gives final rotation
+    let b = x.matmul(&v); // l×k
+    let small = svd(&b); // B = Ub Sb Vbᵀ with Vb k×k
+    // U = Ub (first k cols), s = Sb, V = V · Vb
+    let mut u = Mat::zeros(l, k);
+    for i in 0..l {
+        for j in 0..k {
+            u.data[i * k + j] = small.u.at(i, j);
+        }
+    }
+    let vb = &small.v; // k×k
+    let mut vfin = Mat::zeros(m, k);
+    for i in 0..m {
+        for j in 0..k {
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += v.at(i, t) * vb.at(t, j);
+            }
+            vfin.data[i * k + j] = acc;
+        }
+    }
+    Svd { u, s: small.s[..k].to_vec(), v: vfin }
+}
+
+/// Modified Gram–Schmidt orthonormalization of the columns of `a`, in place.
+fn gram_schmidt_cols(a: &mut Mat) {
+    let (n, k) = (a.rows, a.cols);
+    for j in 0..k {
+        for p in 0..j {
+            let mut dot = 0.0f64;
+            for i in 0..n {
+                dot += a.data[i * k + j] as f64 * a.data[i * k + p] as f64;
+            }
+            for i in 0..n {
+                a.data[i * k + j] -= (dot as f32) * a.data[i * k + p];
+            }
+        }
+        let mut norm = 0.0f64;
+        for i in 0..n {
+            norm += (a.data[i * k + j] as f64).powi(2);
+        }
+        let norm = norm.sqrt() as f32;
+        let inv = if norm > 1e-20 { 1.0 / norm } else { 0.0 };
+        for i in 0..n {
+            a.data[i * k + j] *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::rel_error;
+
+    fn reconstruct_full(s: &Svd) -> Mat {
+        s.reconstruct(s.s.len())
+    }
+
+    #[test]
+    fn svd_reconstructs_random() {
+        let mut rng = Rng::new(21);
+        for &(l, m) in &[(12usize, 8usize), (8, 12), (20, 20), (5, 1)] {
+            let x = Mat::randn(l, m, 1.0, &mut rng);
+            let d = svd(&x);
+            assert!(rel_error(&reconstruct_full(&d), &x) < 1e-4, "{l}x{m}");
+        }
+    }
+
+    #[test]
+    fn svd_singular_values_sorted_and_match_norm() {
+        let mut rng = Rng::new(22);
+        let x = Mat::randn(30, 10, 1.0, &mut rng);
+        let d = svd(&x);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        let fro2: f32 = d.s.iter().map(|s| s * s).sum();
+        assert!((fro2.sqrt() - x.fro_norm()).abs() / x.fro_norm() < 1e-4);
+    }
+
+    #[test]
+    fn svd_orthonormal_factors() {
+        let mut rng = Rng::new(23);
+        let x = Mat::randn(16, 9, 1.0, &mut rng);
+        let d = svd(&x);
+        // VᵀV = I
+        let vtv = d.v.matmul_at(&d.v);
+        for i in 0..9 {
+            for j in 0..9 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv.at(i, j) - expect).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn svd_rank_one_exact() {
+        // X = s * u vᵀ must give sigma_1 = s * |u| |v|, others ~0
+        let u = vec![1.0f32, 2.0, -1.0, 0.5];
+        let v = vec![3.0f32, -1.0, 2.0];
+        let mut x = Mat::zeros(4, 3);
+        for i in 0..4 {
+            for j in 0..3 {
+                *x.at_mut(i, j) = 2.0 * u[i] * v[j];
+            }
+        }
+        let d = svd(&x);
+        let expected = 2.0 * (u.iter().map(|x| x * x).sum::<f32>()
+            * v.iter().map(|x| x * x).sum::<f32>())
+        .sqrt();
+        assert!((d.s[0] - expected).abs() / expected < 1e-5);
+        assert!(d.s[1] < 1e-4 * expected);
+    }
+
+    #[test]
+    fn top_k_matches_full_svd_leading_values() {
+        let mut rng = Rng::new(24);
+        // anisotropic matrix: strong rank-1 + noise (the paper's regime)
+        let mut x = Mat::randn(64, 32, 0.3, &mut rng);
+        let u = Mat::randn(64, 1, 1.0, &mut rng);
+        let v = Mat::randn(1, 32, 1.0, &mut rng);
+        let spike = u.matmul(&v);
+        x.axpy(3.0, &spike);
+        let full = svd(&x);
+        let top = top_k_svd(&x, 3, 40, &mut rng);
+        for i in 0..3 {
+            assert!(
+                (full.s[i] - top.s[i]).abs() / full.s[i] < 1e-2,
+                "sigma_{i}: {} vs {}",
+                full.s[i],
+                top.s[i]
+            );
+        }
+        // leading directions match up to sign
+        let cos = crate::tensor::ops::cosine(
+            &(0..32).map(|j| full.v.at(j, 0)).collect::<Vec<_>>(),
+            &(0..32).map(|j| top.v.at(j, 0)).collect::<Vec<_>>(),
+        );
+        assert!(cos.abs() > 0.999, "v1 cos {cos}");
+    }
+}

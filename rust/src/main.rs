@@ -1,0 +1,278 @@
+//! `averis` — CLI entrypoint of the L3 coordinator.
+//!
+//! See `averis help` (config::cli::USAGE) for commands; DESIGN.md §5 maps
+//! each paper table/figure to its driver.
+
+use anyhow::{bail, Result};
+use averis::config::cli::{CliArgs, Command, USAGE};
+use averis::config::{apply_overrides, ConfigFile, ExperimentConfig, ModelPreset};
+use averis::coordinator::{evaluate_probes, figures, pjrt_train_run, sim_train_run, RunDir};
+use averis::coordinator::probe_eval::mean_accuracy;
+use averis::data::{Corpus, CorpusConfig};
+use averis::metrics::CsvSink;
+use averis::quant::averis::split_vs_plain_error;
+use averis::quant::{Nvfp4Quantizer, QuantRecipe};
+use averis::runtime::ArtifactStore;
+use averis::tensor::{Mat, Rng};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match CliArgs::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Build an ExperimentConfig from CLI flags (+ optional --config file).
+fn experiment_from_args(args: &CliArgs) -> Result<ExperimentConfig> {
+    let preset = ModelPreset::parse(&args.get_or("model", "dense")).map_err(anyhow::Error::msg)?;
+    let recipe: QuantRecipe =
+        args.get_or("recipe", "averis").parse().map_err(anyhow::Error::msg)?;
+    let mut exp = ExperimentConfig::defaults(preset, recipe);
+    if let Some(path) = args.get("config") {
+        let file = ConfigFile::load(path).map_err(anyhow::Error::msg)?;
+        apply_overrides(&mut exp, &file).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(v) = args.get_parse::<u64>("steps").map_err(anyhow::Error::msg)? {
+        exp.train.steps = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("batch").map_err(anyhow::Error::msg)? {
+        exp.train.batch = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("seq").map_err(anyhow::Error::msg)? {
+        exp.train.seq = v;
+    }
+    if let Some(v) = args.get_parse::<u64>("seed").map_err(anyhow::Error::msg)? {
+        exp.train.seed = v;
+    }
+    if let Some(v) = args.get("out") {
+        exp.out_dir = v.to_string();
+    }
+    Ok(exp)
+}
+
+fn run(args: &CliArgs) -> Result<()> {
+    match args.command {
+        Command::Help => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Command::Info => info(args),
+        Command::QuantDemo => quant_demo(),
+        Command::Train => train_cmd(args),
+        Command::Analyze => analyze_cmd(args),
+        Command::Fig6 => fig6_cmd(args),
+        Command::Table1 => table1_cmd(args),
+    }
+}
+
+fn info(args: &CliArgs) -> Result<()> {
+    println!("averis {} — FP4 mean-bias reproduction", env!("CARGO_PKG_VERSION"));
+    let dir = args.get_or("artifacts", "artifacts");
+    match ArtifactStore::open(&dir) {
+        Ok(store) => {
+            let m = &store.manifest;
+            println!("artifacts: {dir}");
+            println!(
+                "  model: vocab={} d_model={} layers={} batch={} seq={}  ({} params)",
+                m.vocab, m.d_model, m.n_layers, m.batch, m.seq, m.n_params
+            );
+            for r in QuantRecipe::PAPER_SET {
+                let t = store.train_hlo(r).is_ok();
+                let e = store.eval_hlo(r).is_ok();
+                println!("  {r:<16} train={t} eval={e}");
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn quant_demo() -> Result<()> {
+    println!("NVFP4 quantization error on synthetic activations (rel. L2):\n");
+    let mut rng = Rng::new(42);
+    let quant = Nvfp4Quantizer::nvfp4();
+    for (name, bias, noise) in [
+        ("centered Gaussian", 0.0f32, 1.0f32),
+        ("mild mean bias", 2.0, 1.0),
+        ("outlier columns (paper regime)", 8.0, 0.3),
+    ] {
+        let mut x = Mat::randn(512, 128, noise, &mut rng);
+        let mut mu = vec![0.0f32; 128];
+        for (j, v) in mu.iter_mut().enumerate() {
+            if j % 16 == 3 {
+                *v = bias;
+            }
+        }
+        x.add_row_vec(&mu);
+        let (plain, split) = split_vs_plain_error(&x, &quant);
+        println!(
+            "  {name:<32} vanilla {plain:.4}   averis-split {split:.4}   ({:.2}x)",
+            plain / split.max(1e-9)
+        );
+    }
+    Ok(())
+}
+
+fn train_cmd(args: &CliArgs) -> Result<()> {
+    let exp = experiment_from_args(args)?;
+    let engine = args.get_or("engine", "sim");
+    match engine.as_str() {
+        "sim" => {
+            println!(
+                "simulator training: {} / {} / {} steps",
+                exp.preset.name(),
+                exp.recipe,
+                exp.train.steps
+            );
+            let r = sim_train_run(&exp, false)?;
+            println!(
+                "final train loss (ema) {:.4}   heldout {:.4}   {:.2} s/step",
+                r.final_train_loss, r.final_eval_loss, r.sec_per_step
+            );
+        }
+        "pjrt" => {
+            if exp.preset.is_moe() {
+                bail!("PJRT artifacts cover the dense model; use --engine sim for MoE");
+            }
+            let store = ArtifactStore::open(args.get_or("artifacts", "artifacts"))?;
+            let client = xla::PjRtClient::cpu()?;
+            println!(
+                "PJRT training on {} ({} devices): {} / {} steps",
+                client.platform_name(),
+                client.device_count(),
+                exp.recipe,
+                exp.train.steps
+            );
+            let run = RunDir::create(&exp.out_dir, &format!("pjrt_{}", exp.run_name()))?;
+            let r = pjrt_train_run(&client, &store, exp.recipe, exp.train.steps, exp.train.seed, &run.path)?;
+            println!(
+                "final loss {:.4}   heldout(eval-quantized) {:.4}   {:.3} s/step",
+                r.loss_curve.last().map(|&(_, l)| l).unwrap_or(f32::NAN),
+                r.final_eval_loss,
+                r.sec_per_step
+            );
+        }
+        other => bail!("unknown engine '{other}' (sim|pjrt)"),
+    }
+    Ok(())
+}
+
+fn analyze_cmd(args: &CliArgs) -> Result<()> {
+    let mut exp = experiment_from_args(args)?;
+    // analysis wants the richest mean-bias signal: dense model, BF16 weights
+    exp.recipe = QuantRecipe::Bf16;
+    if args.get("steps").is_none() {
+        exp.train.steps = 120;
+    }
+    figures::all_figures(&exp)
+}
+
+fn fig6_cmd(args: &CliArgs) -> Result<()> {
+    let engine = args.get_or("engine", "sim");
+    let base = experiment_from_args(args)?;
+    let run = RunDir::create(&base.out_dir, "fig6")?;
+    let mut summary: Vec<(QuantRecipe, f32, f32)> = Vec::new();
+    if engine == "pjrt" {
+        let store = ArtifactStore::open(args.get_or("artifacts", "artifacts"))?;
+        let client = xla::PjRtClient::cpu()?;
+        for recipe in QuantRecipe::PAPER_SET {
+            println!("== {recipe} ==");
+            let rdir = RunDir::create(&run.path, recipe.artifact_stem())?;
+            let r = pjrt_train_run(&client, &store, recipe, base.train.steps, base.train.seed, &rdir.path)?;
+            let fl = r.loss_curve.last().map(|&(_, l)| l).unwrap_or(f32::NAN);
+            summary.push((recipe, fl, r.final_eval_loss));
+        }
+    } else {
+        for recipe in QuantRecipe::PAPER_SET {
+            println!("== {recipe} ==");
+            let mut exp = base.clone();
+            exp.recipe = recipe;
+            exp.out_dir = run.path.to_string_lossy().to_string();
+            let r = sim_train_run(&exp, false)?;
+            summary.push((recipe, r.final_train_loss, r.final_eval_loss));
+        }
+    }
+    // Fig-6-style summary with loss gaps vs BF16
+    let bf16 = summary
+        .iter()
+        .find(|(r, _, _)| *r == QuantRecipe::Bf16)
+        .map(|&(_, _, e)| e)
+        .unwrap_or(f32::NAN);
+    let mut csv = CsvSink::create(run.file("fig6_summary.csv"), &["recipe", "final_loss", "heldout", "gap_pct"])?;
+    println!("\nFig. 6 summary ({} engine):", engine);
+    println!("{:<18} {:>10} {:>10} {:>9}", "recipe", "train", "heldout", "gap%");
+    for (r, tl, el) in &summary {
+        let gap = 100.0 * (el - bf16) / bf16;
+        csv.row_labeled(&r.to_string(), &[*tl as f64, *el as f64, gap as f64])?;
+        println!("{:<18} {:>10.4} {:>10.4} {:>8.2}%", r.to_string(), tl, el, gap);
+    }
+    Ok(())
+}
+
+fn table1_cmd(args: &CliArgs) -> Result<()> {
+    let base = experiment_from_args(args)?;
+    let run = RunDir::create(&base.out_dir, "table1")?;
+    let corpus = Corpus::generate(
+        CorpusConfig { vocab: base.corpus.vocab, tokens: base.corpus.tokens, ..base.corpus },
+        0xC0FFEE,
+    );
+    let n_probes = 60;
+    let ctx = 32;
+    let mut rows = Vec::new();
+    for recipe in QuantRecipe::PAPER_SET {
+        println!("== training {recipe} ==");
+        let mut exp = base.clone();
+        exp.recipe = recipe;
+        exp.out_dir = run.path.to_string_lossy().to_string();
+        let r = sim_train_run(&exp, false)?;
+        // downstream: NVFP4 forward for low-bit rows, BF16 forward for BF16
+        let eval_recipe =
+            if recipe == QuantRecipe::Bf16 { QuantRecipe::Bf16 } else { QuantRecipe::Nvfp4 };
+        let probes =
+            evaluate_probes(exp.model_config(), &r.params, eval_recipe, &corpus, n_probes, ctx);
+        rows.push((recipe, r.final_eval_loss, probes));
+    }
+    let bf16_loss = rows
+        .iter()
+        .find(|(r, _, _)| *r == QuantRecipe::Bf16)
+        .map(|&(_, l, _)| l)
+        .unwrap_or(f32::NAN);
+    let mut csv = CsvSink::create(
+        run.file("table1.csv"),
+        &["recipe", "loss", "gap_pct", "cloze", "copy", "induction", "avg"],
+    )?;
+    println!("\nTable 1 (downstream probes in %, NVFP4 forward eval for FP4 rows):");
+    println!(
+        "{:<18} {:>8} {:>8} {:>8} {:>8} {:>10} {:>8}",
+        "recipe", "loss", "gap%", "cloze", "copy", "induction", "avg"
+    );
+    for (recipe, loss, probes) in &rows {
+        let gap = 100.0 * (loss - bf16_loss) / bf16_loss;
+        let acc: Vec<f64> = probes.iter().map(|p| 100.0 * p.accuracy as f64).collect();
+        let avg = 100.0 * mean_accuracy(probes) as f64;
+        csv.row_labeled(
+            &recipe.to_string(),
+            &[*loss as f64, gap as f64, acc[0], acc[1], acc[2], avg],
+        )?;
+        println!(
+            "{:<18} {:>8.4} {:>7.2}% {:>8.2} {:>8.2} {:>10.2} {:>8.2}",
+            recipe.to_string(),
+            loss,
+            gap,
+            acc[0],
+            acc[1],
+            acc[2],
+            avg
+        );
+    }
+    println!("\nwritten to {}", run.file("table1.csv").display());
+    Ok(())
+}

@@ -1,0 +1,174 @@
+//! Metric sinks: CSV writers for loss curves and analysis series, a tiny
+//! JSON writer for run summaries, and wall-clock timers with mean/std.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Append-style CSV writer with a fixed header.
+pub struct CsvSink {
+    path: PathBuf,
+    file: fs::File,
+    cols: usize,
+}
+
+impl CsvSink {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut file = fs::File::create(&path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvSink { path: path.as_ref().to_path_buf(), file, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row width mismatch");
+        let mut line = String::new();
+        for (i, v) in values.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            let _ = write!(line, "{v}");
+        }
+        writeln!(self.file, "{line}")
+    }
+
+    pub fn row_labeled(&mut self, label: &str, values: &[f64]) -> std::io::Result<()> {
+        assert_eq!(values.len() + 1, self.cols);
+        let mut line = String::from(label);
+        for v in values {
+            let _ = write!(line, ",{v}");
+        }
+        writeln!(self.file, "{line}")
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Minimal JSON object writer (flat string/number maps + nested objects),
+/// enough for run summaries without serde.
+#[derive(Default)]
+pub struct JsonObj {
+    parts: Vec<String>,
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn num(mut self, key: &str, v: f64) -> Self {
+        self.parts.push(format!("\"{key}\": {v}"));
+        self
+    }
+
+    pub fn int(mut self, key: &str, v: i64) -> Self {
+        self.parts.push(format!("\"{key}\": {v}"));
+        self
+    }
+
+    pub fn str(mut self, key: &str, v: &str) -> Self {
+        self.parts.push(format!("\"{key}\": \"{}\"", v.replace('"', "\\\"")));
+        self
+    }
+
+    pub fn obj(mut self, key: &str, v: JsonObj) -> Self {
+        self.parts.push(format!("\"{key}\": {}", v.render()));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        format!("{{{}}}", self.parts.join(", "))
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.render())
+    }
+}
+
+/// Timing statistics over repeated measurements.
+#[derive(Clone, Debug, Default)]
+pub struct TimingStats {
+    pub samples_ms: Vec<f64>,
+}
+
+impl TimingStats {
+    pub fn record(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    /// Time one closure invocation in ms and record it.
+    pub fn time<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        self.record(t.elapsed().as_secs_f64() * 1e3);
+        r
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return f64::NAN;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.samples_ms.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples_ms.iter().map(|v| (v - m).powi(2)).sum::<f64>()
+            / (self.samples_ms.len() - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples_ms.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_writes_rows() {
+        let dir = std::env::temp_dir().join("averis_test_csv");
+        let path = dir.join("x.csv");
+        {
+            let mut s = CsvSink::create(&path, &["step", "loss"]).unwrap();
+            s.row(&[0.0, 5.5]).unwrap();
+            s.row(&[1.0, 5.2]).unwrap();
+        }
+        let text = fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("step,loss"));
+    }
+
+    #[test]
+    fn json_renders() {
+        let j = JsonObj::new().str("name", "x").num("v", 1.5).int("n", 3);
+        let s = j.render();
+        assert!(s.contains("\"name\": \"x\""));
+        assert!(s.contains("\"v\": 1.5"));
+    }
+
+    #[test]
+    fn timing_stats() {
+        let mut t = TimingStats::default();
+        for v in [1.0, 2.0, 3.0] {
+            t.record(v);
+        }
+        assert!((t.mean() - 2.0).abs() < 1e-9);
+        assert!((t.std() - 1.0).abs() < 1e-9);
+        assert_eq!(t.min(), 1.0);
+    }
+}

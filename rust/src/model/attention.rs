@@ -1,0 +1,378 @@
+//! Grouped-query causal self-attention with RoPE, forward + backward.
+//!
+//! The four projection GeMMs (Wq/Wk/Wv/Wo) route through `QuantGemm`
+//! (W4A4G4); the attention score/value batched matmuls stay in f32, matching
+//! the paper's setting where the quantized GeMMs are the weight GeMMs of the
+//! linear layers (attention BMMs are not NVFP4 GeMMs in the NVIDIA recipe).
+//!
+//! Input is the flattened token matrix X (l×d) with l = batch·seq; the
+//! attention core iterates sequences.
+
+use super::params::AttnParams;
+use super::rope::RopeTables;
+use crate::quant::gemm::QuantGemm;
+use crate::tensor::ops::softmax_rows;
+use crate::tensor::Mat;
+
+/// Static shape info for one attention call.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnShape {
+    pub batch: usize,
+    pub seq: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl AttnShape {
+    pub fn tokens(&self) -> usize {
+        self.batch * self.seq
+    }
+}
+
+/// Forward cache for the backward pass.
+pub struct AttnCache {
+    /// input X (l×d) — needed for wgrad of Wq/Wk/Wv
+    pub x: Mat,
+    /// rotated Q (l×h·dh), rotated K and V (l×kv·dh)
+    pub q: Mat,
+    pub k: Mat,
+    pub v: Mat,
+    /// attention probabilities, one (s×s) per (batch, head)
+    pub probs: Vec<Mat>,
+    /// concatenated head outputs (l×h·dh) — input to Wo
+    pub attn_out: Mat,
+}
+
+/// Forward pass. Returns (output (l×d), cache).
+pub fn attn_forward(
+    x: &Mat,
+    p: &AttnParams,
+    rope: &RopeTables,
+    shape: AttnShape,
+    gemm: &mut QuantGemm,
+) -> (Mat, AttnCache) {
+    let AttnShape { batch, seq, n_heads, n_kv_heads, head_dim } = shape;
+    let l = shape.tokens();
+    assert_eq!(x.rows, l);
+    let groups = n_heads / n_kv_heads;
+    let scale = 1.0 / (head_dim as f32).sqrt();
+
+    // projections (quantized GeMMs)
+    let mut q = gemm.forward(x, &p.wq); // l × h·dh
+    let mut k = gemm.forward(x, &p.wk); // l × kv·dh
+    let v = gemm.forward(x, &p.wv); // l × kv·dh
+
+    // RoPE on q, k per token position
+    for b in 0..batch {
+        for t in 0..seq {
+            let row = b * seq + t;
+            let qrow = q.row_mut(row);
+            for h in 0..n_heads {
+                rope.apply(&mut qrow[h * head_dim..(h + 1) * head_dim], t);
+            }
+            let krow = k.row_mut(row);
+            for h in 0..n_kv_heads {
+                rope.apply(&mut krow[h * head_dim..(h + 1) * head_dim], t);
+            }
+        }
+    }
+
+    // attention core per (batch, head)
+    let mut attn_out = Mat::zeros(l, n_heads * head_dim);
+    let mut probs = Vec::with_capacity(batch * n_heads);
+    for b in 0..batch {
+        let base = b * seq;
+        for h in 0..n_heads {
+            let kvh = h / groups;
+            // scores s×s with causal mask
+            let mut s_mat = Mat::full(seq, seq, f32::NEG_INFINITY);
+            for i in 0..seq {
+                let qi = &q.row(base + i)[h * head_dim..(h + 1) * head_dim];
+                for j in 0..=i {
+                    let kj = &k.row(base + j)[kvh * head_dim..(kvh + 1) * head_dim];
+                    let mut dot = 0.0f32;
+                    for t in 0..head_dim {
+                        dot += qi[t] * kj[t];
+                    }
+                    *s_mat.at_mut(i, j) = dot * scale;
+                }
+            }
+            softmax_rows(&mut s_mat);
+            // O_h = P · V_h
+            for i in 0..seq {
+                let orow = &mut attn_out.row_mut(base + i)[h * head_dim..(h + 1) * head_dim];
+                for j in 0..=i {
+                    let pij = s_mat.at(i, j);
+                    if pij == 0.0 {
+                        continue;
+                    }
+                    let vj = &v.row(base + j)[kvh * head_dim..(kvh + 1) * head_dim];
+                    for t in 0..head_dim {
+                        orow[t] += pij * vj[t];
+                    }
+                }
+            }
+            probs.push(s_mat);
+        }
+    }
+
+    // output projection (quantized GeMM)
+    let y = gemm.forward(&attn_out, &p.wo);
+    let cache = AttnCache { x: x.clone(), q, k, v, probs, attn_out };
+    (y, cache)
+}
+
+/// Gradients of one attention block's parameters.
+pub struct AttnGrads {
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+}
+
+/// Backward pass: given dL/dy (l×d), returns (dL/dx, parameter grads).
+pub fn attn_backward(
+    dy: &Mat,
+    p: &AttnParams,
+    rope: &RopeTables,
+    shape: AttnShape,
+    cache: &AttnCache,
+    gemm: &mut QuantGemm,
+) -> (Mat, AttnGrads) {
+    let AttnShape { batch, seq, n_heads, n_kv_heads, head_dim } = shape;
+    let l = shape.tokens();
+    let groups = n_heads / n_kv_heads;
+    let scale = 1.0 / (head_dim as f32).sqrt();
+
+    // Wo: dW = attn_outᵀ dy ; d(attn_out) = dy Woᵀ
+    let d_wo = gemm.wgrad(&cache.attn_out, dy);
+    let d_attn_out = gemm.dgrad(dy, &p.wo);
+
+    // attention core backward
+    let mut dq = Mat::zeros(l, n_heads * head_dim);
+    let mut dk = Mat::zeros(l, n_kv_heads * head_dim);
+    let mut dv = Mat::zeros(l, n_kv_heads * head_dim);
+    for b in 0..batch {
+        let base = b * seq;
+        for h in 0..n_heads {
+            let kvh = h / groups;
+            let probs = &cache.probs[b * n_heads + h];
+            // dP[i,j] = dO_i · V_j ; dV_j += P[i,j] dO_i
+            let mut dp = Mat::zeros(seq, seq);
+            for i in 0..seq {
+                let doi = &d_attn_out.row(base + i)[h * head_dim..(h + 1) * head_dim];
+                for j in 0..=i {
+                    let vj = &cache.v.row(base + j)[kvh * head_dim..(kvh + 1) * head_dim];
+                    let mut dot = 0.0f32;
+                    for t in 0..head_dim {
+                        dot += doi[t] * vj[t];
+                    }
+                    *dp.at_mut(i, j) = dot;
+                    let pij = probs.at(i, j);
+                    if pij != 0.0 {
+                        let dvj = &mut dv.row_mut(base + j)[kvh * head_dim..(kvh + 1) * head_dim];
+                        for t in 0..head_dim {
+                            dvj[t] += pij * doi[t];
+                        }
+                    }
+                }
+            }
+            // softmax backward: dS = P ∘ (dP − rowdot(dP,P))
+            for i in 0..seq {
+                let mut rowdot = 0.0f64;
+                for j in 0..=i {
+                    rowdot += dp.at(i, j) as f64 * probs.at(i, j) as f64;
+                }
+                let rd = rowdot as f32;
+                for j in 0..=i {
+                    let pij = probs.at(i, j);
+                    let ds = pij * (dp.at(i, j) - rd) * scale;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    // dQr_i += ds · Kr_j ; dKr_j += ds · Qr_i
+                    let kj = &cache.k.row(base + j)[kvh * head_dim..(kvh + 1) * head_dim];
+                    let qi = &cache.q.row(base + i)[h * head_dim..(h + 1) * head_dim];
+                    {
+                        let dqi = &mut dq.row_mut(base + i)[h * head_dim..(h + 1) * head_dim];
+                        for t in 0..head_dim {
+                            dqi[t] += ds * kj[t];
+                        }
+                    }
+                    {
+                        let dkj = &mut dk.row_mut(base + j)[kvh * head_dim..(kvh + 1) * head_dim];
+                        for t in 0..head_dim {
+                            dkj[t] += ds * qi[t];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // inverse RoPE on dq, dk (gradient of a rotation is the inverse rotation)
+    for b in 0..batch {
+        for t in 0..seq {
+            let row = b * seq + t;
+            let qrow = dq.row_mut(row);
+            for h in 0..n_heads {
+                rope.apply_inverse(&mut qrow[h * head_dim..(h + 1) * head_dim], t);
+            }
+            let krow = dk.row_mut(row);
+            for h in 0..n_kv_heads {
+                rope.apply_inverse(&mut krow[h * head_dim..(h + 1) * head_dim], t);
+            }
+        }
+    }
+
+    // projection backward (quantized GeMMs)
+    let d_wq = gemm.wgrad(&cache.x, &dq);
+    let d_wk = gemm.wgrad(&cache.x, &dk);
+    let d_wv = gemm.wgrad(&cache.x, &dv);
+    let mut dx = gemm.dgrad(&dq, &p.wq);
+    dx.axpy(1.0, &gemm.dgrad(&dk, &p.wk));
+    dx.axpy(1.0, &gemm.dgrad(&dv, &p.wv));
+
+    (dx, AttnGrads { wq: d_wq, wk: d_wk, wv: d_wv, wo: d_wo })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::recipe::QuantRecipe;
+    use crate::tensor::Rng;
+
+    fn setup(batch: usize, seq: usize) -> (Mat, AttnParams, RopeTables, AttnShape, Mat) {
+        let mut rng = Rng::new(100);
+        let (d, h, kv, dh) = (16usize, 4usize, 2usize, 4usize);
+        let shape = AttnShape { batch, seq, n_heads: h, n_kv_heads: kv, head_dim: dh };
+        let x = Mat::randn(batch * seq, d, 0.5, &mut rng);
+        let p = AttnParams {
+            wq: Mat::randn(d, h * dh, 0.2, &mut rng),
+            wk: Mat::randn(d, kv * dh, 0.2, &mut rng),
+            wv: Mat::randn(d, kv * dh, 0.2, &mut rng),
+            wo: Mat::randn(h * dh, d, 0.2, &mut rng),
+        };
+        let rope = RopeTables::new(dh, seq, 10_000.0);
+        let c = Mat::randn(batch * seq, d, 1.0, &mut rng);
+        (x, p, rope, shape, c)
+    }
+
+    #[test]
+    fn forward_shape() {
+        let (x, p, rope, shape, _) = setup(2, 8);
+        let mut g = QuantGemm::new(QuantRecipe::Bf16, 0);
+        let (y, _) = attn_forward(&x, &p, &rope, shape, &mut g);
+        assert_eq!((y.rows, y.cols), (16, 16));
+    }
+
+    #[test]
+    fn causality_future_tokens_do_not_affect_past() {
+        let (x, p, rope, shape, _) = setup(1, 8);
+        let mut g = QuantGemm::new(QuantRecipe::Bf16, 0);
+        let (y1, _) = attn_forward(&x, &p, &rope, shape, &mut g);
+        // perturb the last token; outputs for earlier positions must not move
+        let mut x2 = x.clone();
+        for v in x2.row_mut(7) {
+            *v += 1.0;
+        }
+        let (y2, _) = attn_forward(&x2, &p, &rope, shape, &mut g);
+        for i in 0..7 {
+            for j in 0..16 {
+                assert!(
+                    (y1.at(i, j) - y2.at(i, j)).abs() < 1e-5,
+                    "causality broken at ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backward_input_grad_matches_finite_difference() {
+        let (x, p, rope, shape, c) = setup(1, 6);
+        let mut g = QuantGemm::new(QuantRecipe::Bf16, 0);
+        let loss = |x: &Mat, g: &mut QuantGemm| -> f32 {
+            let (y, _) = attn_forward(x, &p, &rope, shape, g);
+            y.data.iter().zip(c.data.iter()).map(|(a, b)| a * b).sum()
+        };
+        let (_, cache) = attn_forward(&x, &p, &rope, shape, &mut g);
+        let (dx, _) = attn_backward(&c, &p, &rope, shape, &cache, &mut g);
+        let eps = 1e-3;
+        for idx in [0usize, 17, 40, 80] {
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let mut xm = x.clone();
+            xm.data[idx] -= eps;
+            let fd = (loss(&xp, &mut g) - loss(&xm, &mut g)) / (2.0 * eps);
+            assert!(
+                (fd - dx.data[idx]).abs() < 3e-2 * (1.0 + fd.abs()),
+                "dx[{idx}]: fd {fd} vs analytic {}",
+                dx.data[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn backward_weight_grads_match_finite_difference() {
+        let (x, p, rope, shape, c) = setup(1, 5);
+        let mut g = QuantGemm::new(QuantRecipe::Bf16, 0);
+        let (_, cache) = attn_forward(&x, &p, &rope, shape, &mut g);
+        let (_, grads) = attn_backward(&c, &p, &rope, shape, &cache, &mut g);
+        let eps = 1e-3;
+        // check a few entries of each weight grad
+        let check = |which: &str, grad: &Mat, get: &dyn Fn(&AttnParams) -> Mat, idx: usize| {
+            let mut pp = p.clone();
+            let mut pm = p.clone();
+            match which {
+                "wq" => {
+                    pp.wq.data[idx] += eps;
+                    pm.wq.data[idx] -= eps;
+                }
+                "wk" => {
+                    pp.wk.data[idx] += eps;
+                    pm.wk.data[idx] -= eps;
+                }
+                "wv" => {
+                    pp.wv.data[idx] += eps;
+                    pm.wv.data[idx] -= eps;
+                }
+                _ => {
+                    pp.wo.data[idx] += eps;
+                    pm.wo.data[idx] -= eps;
+                }
+            }
+            let _ = get;
+            let mut g2 = QuantGemm::new(QuantRecipe::Bf16, 0);
+            let lp: f32 = {
+                let (y, _) = attn_forward(&x, &pp, &rope, shape, &mut g2);
+                y.data.iter().zip(c.data.iter()).map(|(a, b)| a * b).sum()
+            };
+            let lm: f32 = {
+                let (y, _) = attn_forward(&x, &pm, &rope, shape, &mut g2);
+                y.data.iter().zip(c.data.iter()).map(|(a, b)| a * b).sum()
+            };
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad.data[idx]).abs() < 3e-2 * (1.0 + fd.abs()),
+                "{which}[{idx}]: fd {fd} vs {}",
+                grad.data[idx]
+            );
+        };
+        check("wq", &grads.wq, &|p| p.wq.clone(), 7);
+        check("wk", &grads.wk, &|p| p.wk.clone(), 11);
+        check("wv", &grads.wv, &|p| p.wv.clone(), 23);
+        check("wo", &grads.wo, &|p| p.wo.clone(), 31);
+    }
+
+    #[test]
+    fn quantized_forward_close_to_exact() {
+        let (x, p, rope, shape, _) = setup(2, 16);
+        let mut gb = QuantGemm::new(QuantRecipe::Bf16, 0);
+        let mut ga = QuantGemm::new(QuantRecipe::Averis, 0);
+        let (y_exact, _) = attn_forward(&x, &p, &rope, shape, &mut gb);
+        let (y_q, _) = attn_forward(&x, &p, &rope, shape, &mut ga);
+        let err = crate::tensor::ops::rel_error(&y_q, &y_exact);
+        assert!(err < 0.35, "quantized attention diverged: {err}");
+    }
+}

@@ -1,0 +1,161 @@
+//! Model hyperparameter configuration (Qwen3-style decoder-only).
+
+/// FFN variant: dense SwiGLU or top-k routed mixture of experts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FfnKind {
+    Dense,
+    /// `experts` total, `top_k` active per token (Qwen3-MoE style).
+    Moe { experts: usize, top_k: usize },
+}
+
+/// Architecture hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// KV heads for grouped-query attention (n_heads % n_kv_heads == 0).
+    pub n_kv_heads: usize,
+    /// SwiGLU hidden dim (per expert when MoE).
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub ffn: FfnKind,
+    /// RoPE base frequency.
+    pub rope_base: f32,
+    /// Tie LM head to the embedding matrix.
+    pub tie_embeddings: bool,
+}
+
+impl ModelConfig {
+    /// Scaled-down stand-in for Qwen3-0.6B dense (see DESIGN.md §3):
+    /// same architecture family, laptop-scale dims.
+    pub fn dense_small(vocab: usize) -> Self {
+        ModelConfig {
+            vocab,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 8,
+            n_kv_heads: 4,
+            d_ff: 352,
+            max_seq: 128,
+            ffn: FfnKind::Dense,
+            rope_base: 10_000.0,
+            tie_embeddings: true,
+        }
+    }
+
+    /// Tiny config for unit tests (fast fwd/bwd).
+    pub fn test_tiny(vocab: usize) -> Self {
+        ModelConfig {
+            vocab,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 64,
+            max_seq: 32,
+            ffn: FfnKind::Dense,
+            rope_base: 10_000.0,
+            tie_embeddings: true,
+        }
+    }
+
+    /// Scaled-down stand-in for Qwen3-7B-A1.5B MoE: routed experts, top-2.
+    pub fn moe_small(vocab: usize) -> Self {
+        ModelConfig {
+            vocab,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 8,
+            n_kv_heads: 4,
+            d_ff: 160,
+            max_seq: 128,
+            ffn: FfnKind::Moe { experts: 8, top_k: 2 },
+            rope_base: 10_000.0,
+            tie_embeddings: true,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Query heads per KV head (GQA group size).
+    pub fn gqa_groups(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let dh = self.head_dim();
+        let attn = d * (self.n_heads * dh) // Wq
+            + d * (self.n_kv_heads * dh) * 2 // Wk, Wv
+            + (self.n_heads * dh) * d; // Wo
+        let ffn = match self.ffn {
+            FfnKind::Dense => 3 * d * self.d_ff,
+            FfnKind::Moe { experts, .. } => experts * 3 * d * self.d_ff + d * experts,
+        };
+        let per_layer = attn + ffn + 2 * d; // + two RMSNorm gains
+        let emb = self.vocab * d;
+        let head = if self.tie_embeddings { 0 } else { self.vocab * d };
+        emb + self.n_layers * per_layer + d /* final norm */ + head
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.d_model % self.n_heads != 0 {
+            return Err(format!("d_model {} % n_heads {} != 0", self.d_model, self.n_heads));
+        }
+        if self.n_heads % self.n_kv_heads != 0 {
+            return Err(format!(
+                "n_heads {} % n_kv_heads {} != 0",
+                self.n_heads, self.n_kv_heads
+            ));
+        }
+        if self.head_dim() % 2 != 0 {
+            return Err("head_dim must be even for RoPE".into());
+        }
+        if let FfnKind::Moe { experts, top_k } = self.ffn {
+            if top_k == 0 || top_k > experts {
+                return Err(format!("MoE top_k {top_k} out of range for {experts} experts"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        ModelConfig::dense_small(256).validate().unwrap();
+        ModelConfig::moe_small(256).validate().unwrap();
+        ModelConfig::test_tiny(64).validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ModelConfig::test_tiny(64);
+        c.n_heads = 3;
+        assert!(c.validate().is_err());
+        let mut c2 = ModelConfig::test_tiny(64);
+        c2.ffn = FfnKind::Moe { experts: 2, top_k: 3 };
+        assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn param_count_positive_and_scales() {
+        let small = ModelConfig::test_tiny(64).param_count();
+        let big = ModelConfig::dense_small(256).param_count();
+        assert!(small > 0 && big > small);
+    }
+
+    #[test]
+    fn gqa_groups() {
+        let c = ModelConfig::dense_small(256);
+        assert_eq!(c.gqa_groups(), 2);
+    }
+}

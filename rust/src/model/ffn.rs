@@ -1,0 +1,135 @@
+//! SwiGLU feed-forward network (Qwen3-style), forward + backward, with all
+//! three GeMMs (gate / up / down) quantized through `QuantGemm`.
+//!
+//!   h = silu(X·W_gate) ⊙ (X·W_up),  y = h · W_down
+
+use super::params::FfnParams;
+use crate::quant::gemm::QuantGemm;
+use crate::tensor::ops::{silu, silu_grad};
+use crate::tensor::Mat;
+
+/// Forward cache.
+pub struct FfnCache {
+    pub x: Mat,
+    /// pre-activation gate (X·W_gate)
+    pub g_pre: Mat,
+    /// up projection (X·W_up)
+    pub u: Mat,
+    /// h = silu(g_pre) ⊙ u — input of the down GeMM
+    pub h: Mat,
+}
+
+/// Forward pass: returns (y, cache).
+pub fn ffn_forward(x: &Mat, p: &FfnParams, gemm: &mut QuantGemm) -> (Mat, FfnCache) {
+    let g_pre = gemm.forward(x, &p.w_gate);
+    let u = gemm.forward(x, &p.w_up);
+    let mut h = Mat::zeros(g_pre.rows, g_pre.cols);
+    for i in 0..h.numel() {
+        h.data[i] = silu(g_pre.data[i]) * u.data[i];
+    }
+    let y = gemm.forward(&h, &p.w_down);
+    (y, FfnCache { x: x.clone(), g_pre, u, h })
+}
+
+/// Parameter gradients.
+pub struct FfnGrads {
+    pub w_gate: Mat,
+    pub w_up: Mat,
+    pub w_down: Mat,
+}
+
+/// Backward pass: given dL/dy, returns (dL/dx, grads).
+pub fn ffn_backward(
+    dy: &Mat,
+    p: &FfnParams,
+    cache: &FfnCache,
+    gemm: &mut QuantGemm,
+) -> (Mat, FfnGrads) {
+    // down projection
+    let d_w_down = gemm.wgrad(&cache.h, dy);
+    let dh = gemm.dgrad(dy, &p.w_down);
+    // elementwise SwiGLU backward
+    let mut dg_pre = Mat::zeros(dh.rows, dh.cols);
+    let mut du = Mat::zeros(dh.rows, dh.cols);
+    for i in 0..dh.numel() {
+        let g = cache.g_pre.data[i];
+        dg_pre.data[i] = dh.data[i] * cache.u.data[i] * silu_grad(g);
+        du.data[i] = dh.data[i] * silu(g);
+    }
+    // gate / up projections
+    let d_w_gate = gemm.wgrad(&cache.x, &dg_pre);
+    let d_w_up = gemm.wgrad(&cache.x, &du);
+    let mut dx = gemm.dgrad(&dg_pre, &p.w_gate);
+    dx.axpy(1.0, &gemm.dgrad(&du, &p.w_up));
+    (dx, FfnGrads { w_gate: d_w_gate, w_up: d_w_up, w_down: d_w_down })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::recipe::QuantRecipe;
+    use crate::tensor::Rng;
+
+    fn setup() -> (Mat, FfnParams, Mat) {
+        let mut rng = Rng::new(110);
+        let x = Mat::randn(12, 16, 0.5, &mut rng);
+        let p = FfnParams {
+            w_gate: Mat::randn(16, 24, 0.2, &mut rng),
+            w_up: Mat::randn(16, 24, 0.2, &mut rng),
+            w_down: Mat::randn(24, 16, 0.2, &mut rng),
+        };
+        let c = Mat::randn(12, 16, 1.0, &mut rng);
+        (x, p, c)
+    }
+
+    #[test]
+    fn forward_shape() {
+        let (x, p, _) = setup();
+        let mut g = QuantGemm::new(QuantRecipe::Bf16, 0);
+        let (y, _) = ffn_forward(&x, &p, &mut g);
+        assert_eq!((y.rows, y.cols), (12, 16));
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let (x, p, c) = setup();
+        let mut g = QuantGemm::new(QuantRecipe::Bf16, 0);
+        let loss = |x: &Mat, p: &FfnParams| -> f32 {
+            let mut g = QuantGemm::new(QuantRecipe::Bf16, 0);
+            let (y, _) = ffn_forward(x, p, &mut g);
+            y.data.iter().zip(c.data.iter()).map(|(a, b)| a * b).sum()
+        };
+        let (_, cache) = ffn_forward(&x, &p, &mut g);
+        let (dx, grads) = ffn_backward(&c, &p, &cache, &mut g);
+        let eps = 1e-3;
+        for idx in [0usize, 33, 100] {
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let mut xm = x.clone();
+            xm.data[idx] -= eps;
+            let fd = (loss(&xp, &p) - loss(&xm, &p)) / (2.0 * eps);
+            assert!((fd - dx.data[idx]).abs() < 2e-2 * (1.0 + fd.abs()), "dx[{idx}]");
+        }
+        for idx in [5usize, 50] {
+            let mut pp = p.clone();
+            pp.w_gate.data[idx] += eps;
+            let mut pm = p.clone();
+            pm.w_gate.data[idx] -= eps;
+            let fd = (loss(&x, &pp) - loss(&x, &pm)) / (2.0 * eps);
+            assert!(
+                (fd - grads.w_gate.data[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "w_gate[{idx}] fd {fd} vs {}",
+                grads.w_gate.data[idx]
+            );
+            let mut pp = p.clone();
+            pp.w_down.data[idx] += eps;
+            let mut pm = p.clone();
+            pm.w_down.data[idx] -= eps;
+            let fd = (loss(&x, &pp) - loss(&x, &pm)) / (2.0 * eps);
+            assert!(
+                (fd - grads.w_down.data[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "w_down[{idx}]"
+            );
+        }
+    }
+}

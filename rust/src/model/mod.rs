@@ -1,0 +1,25 @@
+//! Pure-Rust Qwen3-style Transformer with manual backprop.
+//!
+//! Every linear-layer GeMM (QKV/O projections, SwiGLU gate/up/down, MoE
+//! experts, LM head) routes through `quant::gemm::QuantGemm`, so a
+//! `QuantRecipe` switch re-routes all forward, input-gradient and
+//! weight-gradient GeMMs — the paper's W4A4G4 setting.
+//!
+//! The model doubles as the *measurement substrate* for the analysis
+//! pipeline: `taps` capture the named activation matrices of paper §2
+//! (FFN inputs, attention inputs, block outputs) at any training step.
+
+pub mod attention;
+pub mod config;
+pub mod ffn;
+pub mod moe;
+pub mod norm;
+pub mod params;
+pub mod rope;
+pub mod taps;
+pub mod transformer;
+
+pub use config::ModelConfig;
+pub use params::Params;
+pub use taps::{TapStage, Taps};
+pub use transformer::Transformer;

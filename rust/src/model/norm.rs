@@ -1,0 +1,118 @@
+//! RMSNorm with learned gain, forward + backward.
+//!
+//! y[i,j] = g[j] · x[i,j] / rms(x[i,·]),  rms = √(mean(x²) + ε)
+
+use crate::tensor::Mat;
+
+pub const RMS_EPS: f32 = 1e-6;
+
+/// Cache for the backward pass.
+pub struct RmsNormCache {
+    /// 1/rms per row.
+    pub inv_rms: Vec<f32>,
+    /// normalized input x/rms (needed for both dgain and dx).
+    pub x_hat: Mat,
+}
+
+/// Forward: returns (y, cache).
+pub fn rmsnorm_forward(x: &Mat, gain: &[f32]) -> (Mat, RmsNormCache) {
+    assert_eq!(gain.len(), x.cols);
+    let mut y = Mat::zeros(x.rows, x.cols);
+    let mut x_hat = Mat::zeros(x.rows, x.cols);
+    let mut inv_rms = vec![0.0f32; x.rows];
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let ms: f32 =
+            (row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.cols as f64) as f32;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        inv_rms[i] = inv;
+        let yh = x_hat.row_mut(i);
+        for j in 0..x.cols {
+            yh[j] = row[j] * inv;
+        }
+        let yr = y.row_mut(i);
+        for j in 0..x.cols {
+            yr[j] = yh[j] * gain[j];
+        }
+    }
+    (y, RmsNormCache { inv_rms, x_hat })
+}
+
+/// Backward: given dL/dy, returns (dL/dx, dL/dgain).
+pub fn rmsnorm_backward(dy: &Mat, gain: &[f32], cache: &RmsNormCache) -> (Mat, Vec<f32>) {
+    let (rows, cols) = (dy.rows, dy.cols);
+    let mut dx = Mat::zeros(rows, cols);
+    let mut dgain = vec![0.0f32; cols];
+    for i in 0..rows {
+        let dyr = dy.row(i);
+        let xh = cache.x_hat.row(i);
+        let inv = cache.inv_rms[i];
+        // dgain[j] += dy[j] * x_hat[j]
+        for j in 0..cols {
+            dgain[j] += dyr[j] * xh[j];
+        }
+        // dx = inv * (g·dy − x_hat · mean(g·dy·x_hat))
+        let mut dot = 0.0f64;
+        for j in 0..cols {
+            dot += (dyr[j] * gain[j]) as f64 * xh[j] as f64;
+        }
+        let mean_dot = (dot / cols as f64) as f32;
+        let dxr = dx.row_mut(i);
+        for j in 0..cols {
+            dxr[j] = inv * (dyr[j] * gain[j] - xh[j] * mean_dot);
+        }
+    }
+    (dx, dgain)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn forward_unit_rms() {
+        let mut rng = Rng::new(80);
+        let x = Mat::randn(5, 16, 3.0, &mut rng);
+        let gain = vec![1.0f32; 16];
+        let (y, _) = rmsnorm_forward(&x, &gain);
+        for i in 0..5 {
+            let ms: f32 = y.row(i).iter().map(|v| v * v).sum::<f32>() / 16.0;
+            assert!((ms - 1.0).abs() < 1e-3, "row {i} ms {ms}");
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let mut rng = Rng::new(81);
+        let x = Mat::randn(3, 8, 1.0, &mut rng);
+        let gain: Vec<f32> = (0..8).map(|i| 0.5 + 0.1 * i as f32).collect();
+        // loss = sum(y * c) for fixed random c
+        let c = Mat::randn(3, 8, 1.0, &mut rng);
+        let (_, cache) = rmsnorm_forward(&x, &gain);
+        let (dx, dgain) = rmsnorm_backward(&c, &gain, &cache);
+        let loss = |x: &Mat, g: &[f32]| -> f32 {
+            let (y, _) = rmsnorm_forward(x, g);
+            y.data.iter().zip(c.data.iter()).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-3;
+        // dx check on several coords
+        for idx in [0usize, 5, 11, 23] {
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let mut xm = x.clone();
+            xm.data[idx] -= eps;
+            let fd = (loss(&xp, &gain) - loss(&xm, &gain)) / (2.0 * eps);
+            assert!((fd - dx.data[idx]).abs() < 2e-2, "dx[{idx}] fd {fd} vs {}", dx.data[idx]);
+        }
+        // dgain check
+        for j in [0usize, 3, 7] {
+            let mut gp = gain.clone();
+            gp[j] += eps;
+            let mut gm = gain.clone();
+            gm[j] -= eps;
+            let fd = (loss(&x, &gp) - loss(&x, &gm)) / (2.0 * eps);
+            assert!((fd - dgain[j]).abs() < 2e-2, "dgain[{j}] fd {fd} vs {}", dgain[j]);
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Parameter containers: initialization, gradient buffers, and a flat
+//! iterator the optimizer walks. Layout mirrors Qwen3: per-block attention
+//! (Wq/Wk/Wv/Wo) + FFN (dense SwiGLU or routed experts) + two RMSNorm gains,
+//! tied embeddings by default.
+
+use super::config::{FfnKind, ModelConfig};
+use crate::tensor::{Mat, Rng};
+
+/// One attention block's projections.
+#[derive(Clone, Debug)]
+pub struct AttnParams {
+    pub wq: Mat, // d × (h·dh)
+    pub wk: Mat, // d × (kv·dh)
+    pub wv: Mat, // d × (kv·dh)
+    pub wo: Mat, // (h·dh) × d
+}
+
+/// One SwiGLU FFN's projections.
+#[derive(Clone, Debug)]
+pub struct FfnParams {
+    pub w_gate: Mat, // d × f
+    pub w_up: Mat,   // d × f
+    pub w_down: Mat, // f × d
+}
+
+/// MoE FFN: router + experts.
+#[derive(Clone, Debug)]
+pub struct MoeParams {
+    pub router: Mat, // d × E
+    pub experts: Vec<FfnParams>,
+}
+
+/// FFN parameters for one block.
+#[derive(Clone, Debug)]
+pub enum BlockFfn {
+    Dense(FfnParams),
+    Moe(MoeParams),
+}
+
+/// One transformer block.
+#[derive(Clone, Debug)]
+pub struct BlockParams {
+    pub attn_norm: Vec<f32>, // RMSNorm gain, len d
+    pub attn: AttnParams,
+    pub ffn_norm: Vec<f32>,
+    pub ffn: BlockFfn,
+}
+
+/// Full model parameters.
+#[derive(Clone, Debug)]
+pub struct Params {
+    pub embed: Mat, // V × d (tied LM head: logits = X · embedᵀ)
+    pub blocks: Vec<BlockParams>,
+    pub final_norm: Vec<f32>,
+    /// Untied head (None when tied).
+    pub lm_head: Option<Mat>, // d × V
+}
+
+fn init_linear(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+    // truncated-normal-ish scaled init (GPT-style 0.02 adjusted by fan-in)
+    let std = (2.0 / (rows + cols) as f32).sqrt();
+    Mat::randn(rows, cols, std, rng)
+}
+
+impl Params {
+    /// Random initialization.
+    pub fn init(cfg: &ModelConfig, rng: &mut Rng) -> Self {
+        cfg.validate().expect("invalid model config");
+        let d = cfg.d_model;
+        let dh = cfg.head_dim();
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            let attn = AttnParams {
+                wq: init_linear(d, cfg.n_heads * dh, rng),
+                wk: init_linear(d, cfg.n_kv_heads * dh, rng),
+                wv: init_linear(d, cfg.n_kv_heads * dh, rng),
+                wo: init_linear(cfg.n_heads * dh, d, rng),
+            };
+            let ffn = match cfg.ffn {
+                FfnKind::Dense => BlockFfn::Dense(FfnParams {
+                    w_gate: init_linear(d, cfg.d_ff, rng),
+                    w_up: init_linear(d, cfg.d_ff, rng),
+                    w_down: init_linear(cfg.d_ff, d, rng),
+                }),
+                FfnKind::Moe { experts, .. } => BlockFfn::Moe(MoeParams {
+                    router: init_linear(d, experts, rng),
+                    experts: (0..experts)
+                        .map(|_| FfnParams {
+                            w_gate: init_linear(d, cfg.d_ff, rng),
+                            w_up: init_linear(d, cfg.d_ff, rng),
+                            w_down: init_linear(cfg.d_ff, d, rng),
+                        })
+                        .collect(),
+                }),
+            };
+            blocks.push(BlockParams {
+                attn_norm: vec![1.0; d],
+                attn,
+                ffn_norm: vec![1.0; d],
+                ffn,
+            });
+        }
+        Params {
+            embed: Mat::randn(cfg.vocab, d, 0.02, rng),
+            blocks,
+            final_norm: vec![1.0; d],
+            lm_head: if cfg.tie_embeddings { None } else { Some(init_linear(d, cfg.vocab, rng)) },
+        }
+    }
+
+    /// Zero-filled gradient buffers with the same shapes.
+    pub fn zeros_like(&self) -> Self {
+        let mut z = self.clone();
+        z.for_each_mut(|t| t.iter_mut().for_each(|x| *x = 0.0));
+        z
+    }
+
+    /// Visit every parameter tensor as a mutable flat slice, in a fixed
+    /// deterministic order (the optimizer relies on this ordering).
+    pub fn for_each_mut(&mut self, mut f: impl FnMut(&mut [f32])) {
+        f(&mut self.embed.data);
+        for b in self.blocks.iter_mut() {
+            f(&mut b.attn_norm);
+            f(&mut b.attn.wq.data);
+            f(&mut b.attn.wk.data);
+            f(&mut b.attn.wv.data);
+            f(&mut b.attn.wo.data);
+            f(&mut b.ffn_norm);
+            match &mut b.ffn {
+                BlockFfn::Dense(ffn) => {
+                    f(&mut ffn.w_gate.data);
+                    f(&mut ffn.w_up.data);
+                    f(&mut ffn.w_down.data);
+                }
+                BlockFfn::Moe(moe) => {
+                    f(&mut moe.router.data);
+                    for e in moe.experts.iter_mut() {
+                        f(&mut e.w_gate.data);
+                        f(&mut e.w_up.data);
+                        f(&mut e.w_down.data);
+                    }
+                }
+            }
+        }
+        f(&mut self.final_norm);
+        if let Some(h) = self.lm_head.as_mut() {
+            f(&mut h.data);
+        }
+    }
+
+    /// Visit tensors of `self` and `other` pairwise (same ordering); used by
+    /// the optimizer to walk (param, grad) pairs without flattening copies.
+    pub fn zip_for_each_mut(&mut self, other: &mut Self, mut f: impl FnMut(&mut [f32], &mut [f32])) {
+        // collect raw slices in order from both, then zip
+        let mut a: Vec<*mut [f32]> = Vec::new();
+        self.for_each_mut(|s| a.push(s as *mut [f32]));
+        let mut b: Vec<*mut [f32]> = Vec::new();
+        other.for_each_mut(|s| b.push(s as *mut [f32]));
+        assert_eq!(a.len(), b.len(), "param structure mismatch");
+        for (pa, pb) in a.into_iter().zip(b.into_iter()) {
+            // SAFETY: slices originate from disjoint structs borrowed mutably
+            // for the duration of this call; pointers are unique per struct
+            // because for_each_mut visits disjoint fields.
+            unsafe { f(&mut *pa, &mut *pb) }
+        }
+    }
+
+    /// Total number of scalar parameters.
+    pub fn count(&mut self) -> usize {
+        let mut n = 0;
+        self.for_each_mut(|s| n += s.len());
+        n
+    }
+
+    /// Global L2 norm over all parameters (or gradients).
+    pub fn global_norm(&mut self) -> f32 {
+        let mut acc = 0.0f64;
+        self.for_each_mut(|s| {
+            for &x in s.iter() {
+                acc += (x as f64) * (x as f64);
+            }
+        });
+        acc.sqrt() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_matches_config_param_count() {
+        let cfg = ModelConfig::test_tiny(64);
+        let mut p = Params::init(&cfg, &mut Rng::new(1));
+        assert_eq!(p.count(), cfg.param_count());
+        let cfg2 = ModelConfig::moe_small(128);
+        let mut p2 = Params::init(&cfg2, &mut Rng::new(2));
+        assert_eq!(p2.count(), cfg2.param_count());
+    }
+
+    #[test]
+    fn zeros_like_shapes_and_zeroing() {
+        let cfg = ModelConfig::test_tiny(64);
+        let p = Params::init(&cfg, &mut Rng::new(3));
+        let mut z = p.zeros_like();
+        let mut total = 0.0f32;
+        z.for_each_mut(|s| total += s.iter().map(|x| x.abs()).sum::<f32>());
+        assert_eq!(total, 0.0);
+        assert_eq!(z.count(), p.clone().count());
+    }
+
+    #[test]
+    fn zip_walks_pairs_in_order() {
+        let cfg = ModelConfig::test_tiny(64);
+        let mut p = Params::init(&cfg, &mut Rng::new(4));
+        let mut g = p.zeros_like();
+        // g += p via zip, then g must equal p
+        p.zip_for_each_mut(&mut g, |ps, gs| {
+            for (x, y) in ps.iter().zip(gs.iter_mut()) {
+                *y += *x;
+            }
+        });
+        let mut diff = 0.0f32;
+        p.zip_for_each_mut(&mut g, |ps, gs| {
+            for (x, y) in ps.iter().zip(gs.iter()) {
+                diff += (x - y).abs();
+            }
+        });
+        assert_eq!(diff, 0.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Rotary position embeddings (RoPE), forward and backward.
+//!
+//! Applied per head to Q and K: each consecutive pair (x[2t], x[2t+1]) within
+//! a head is rotated by angle pos·θ_t with θ_t = base^(−2t/dh). The backward
+//! pass is rotation by the opposite angle (rotations are orthogonal).
+
+/// Precomputed cos/sin tables for positions 0..max_seq.
+#[derive(Clone, Debug)]
+pub struct RopeTables {
+    pub head_dim: usize,
+    /// [pos][t] tables, t in 0..head_dim/2
+    pub cos: Vec<Vec<f32>>,
+    pub sin: Vec<Vec<f32>>,
+}
+
+impl RopeTables {
+    pub fn new(head_dim: usize, max_seq: usize, base: f32) -> Self {
+        assert!(head_dim % 2 == 0);
+        let half = head_dim / 2;
+        let mut cos = Vec::with_capacity(max_seq);
+        let mut sin = Vec::with_capacity(max_seq);
+        for pos in 0..max_seq {
+            let mut c = Vec::with_capacity(half);
+            let mut s = Vec::with_capacity(half);
+            for t in 0..half {
+                let theta = (base as f64).powf(-2.0 * t as f64 / head_dim as f64);
+                let angle = pos as f64 * theta;
+                c.push(angle.cos() as f32);
+                s.push(angle.sin() as f32);
+            }
+            cos.push(c);
+            sin.push(s);
+        }
+        RopeTables { head_dim, cos, sin }
+    }
+
+    /// Rotate one head-vector slice in place for a given position.
+    #[inline]
+    pub fn apply(&self, v: &mut [f32], pos: usize) {
+        debug_assert_eq!(v.len(), self.head_dim);
+        let c = &self.cos[pos];
+        let s = &self.sin[pos];
+        for t in 0..self.head_dim / 2 {
+            let (a, b) = (v[2 * t], v[2 * t + 1]);
+            v[2 * t] = a * c[t] - b * s[t];
+            v[2 * t + 1] = a * s[t] + b * c[t];
+        }
+    }
+
+    /// Inverse rotation (backward pass / gradient transport).
+    #[inline]
+    pub fn apply_inverse(&self, v: &mut [f32], pos: usize) {
+        debug_assert_eq!(v.len(), self.head_dim);
+        let c = &self.cos[pos];
+        let s = &self.sin[pos];
+        for t in 0..self.head_dim / 2 {
+            let (a, b) = (v[2 * t], v[2 * t + 1]);
+            v[2 * t] = a * c[t] + b * s[t];
+            v[2 * t + 1] = -a * s[t] + b * c[t];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let rope = RopeTables::new(8, 16, 10_000.0);
+        let mut rng = Rng::new(90);
+        for pos in [0usize, 1, 7, 15] {
+            let mut v: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+            let n0: f32 = v.iter().map(|x| x * x).sum();
+            rope.apply(&mut v, pos);
+            let n1: f32 = v.iter().map(|x| x * x).sum();
+            assert!((n0 - n1).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn inverse_undoes_rotation() {
+        let rope = RopeTables::new(16, 32, 10_000.0);
+        let mut rng = Rng::new(91);
+        let orig: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+        let mut v = orig.clone();
+        rope.apply(&mut v, 13);
+        rope.apply_inverse(&mut v, 13);
+        for (a, b) in orig.iter().zip(v.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn position_zero_is_identity() {
+        let rope = RopeTables::new(8, 4, 10_000.0);
+        let orig = vec![1.0f32, -2.0, 3.0, 0.5, -1.5, 2.5, 0.0, 1.0];
+        let mut v = orig.clone();
+        rope.apply(&mut v, 0);
+        assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn relative_property_dot_depends_on_distance() {
+        // <R_p q, R_p k> == <q, k> rotated consistently: dot(R_m q, R_n k)
+        // depends only on n−m. Check dot(R_1 q, R_3 k) == dot(R_5 q, R_7 k).
+        let rope = RopeTables::new(8, 16, 10_000.0);
+        let mut rng = Rng::new(92);
+        let q: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+        let k: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+        let dot_at = |mq: usize, nk: usize| -> f32 {
+            let mut qq = q.clone();
+            let mut kk = k.clone();
+            rope.apply(&mut qq, mq);
+            rope.apply(&mut kk, nk);
+            qq.iter().zip(kk.iter()).map(|(a, b)| a * b).sum()
+        };
+        assert!((dot_at(1, 3) - dot_at(5, 7)).abs() < 1e-4);
+        assert!((dot_at(0, 2) - dot_at(9, 11)).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,133 @@
+//! Activation taps: named capture points used by the analysis pipeline
+//! (paper §2). A `Taps` collector is threaded through the forward/backward
+//! pass; when enabled it clones the requested activation matrices so the
+//! analysis code can compute spectra, mean-bias ratios, outlier attribution,
+//! etc., on exactly the tensors the paper instruments (FFN inputs, attention
+//! inputs, operator stages, output gradients).
+
+use crate::tensor::Mat;
+use std::collections::BTreeMap;
+
+/// Capture points inside one transformer block (paper Fig. 3 operator
+/// stages) plus the output-gradient tap (App. D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TapStage {
+    /// residual-stream input of the block
+    BlockInput,
+    /// post-RMSNorm input to the attention projections
+    AttnInput,
+    /// attention output (after Wo), before residual add
+    AttnOutput,
+    /// residual stream after attention add
+    PostAttnResidual,
+    /// post-RMSNorm input to the FFN — the paper's primary tensor
+    FfnInput,
+    /// FFN output before residual add
+    FfnOutput,
+    /// residual stream leaving the block
+    BlockOutput,
+    /// backward: dL/dY of the FFN down GeMM (output gradient, App. D)
+    FfnOutputGrad,
+    /// backward: dL/dY of the attention output GeMM
+    AttnOutputGrad,
+}
+
+impl TapStage {
+    pub fn name(self) -> &'static str {
+        match self {
+            TapStage::BlockInput => "block_input",
+            TapStage::AttnInput => "attn_input",
+            TapStage::AttnOutput => "attn_output",
+            TapStage::PostAttnResidual => "post_attn_residual",
+            TapStage::FfnInput => "ffn_input",
+            TapStage::FfnOutput => "ffn_output",
+            TapStage::BlockOutput => "block_output",
+            TapStage::FfnOutputGrad => "ffn_output_grad",
+            TapStage::AttnOutputGrad => "attn_output_grad",
+        }
+    }
+
+    /// The forward operator-chain order used by the Fig. 3 trace.
+    pub const FORWARD_CHAIN: [TapStage; 7] = [
+        TapStage::BlockInput,
+        TapStage::AttnInput,
+        TapStage::AttnOutput,
+        TapStage::PostAttnResidual,
+        TapStage::FfnInput,
+        TapStage::FfnOutput,
+        TapStage::BlockOutput,
+    ];
+}
+
+/// Collector keyed by (layer, stage).
+#[derive(Default)]
+pub struct Taps {
+    pub enabled: bool,
+    store: BTreeMap<(usize, TapStage), Mat>,
+}
+
+impl Taps {
+    pub fn disabled() -> Self {
+        Taps { enabled: false, store: BTreeMap::new() }
+    }
+
+    pub fn enabled() -> Self {
+        Taps { enabled: true, store: BTreeMap::new() }
+    }
+
+    #[inline]
+    pub fn record(&mut self, layer: usize, stage: TapStage, x: &Mat) {
+        if self.enabled {
+            self.store.insert((layer, stage), x.clone());
+        }
+    }
+
+    pub fn get(&self, layer: usize, stage: TapStage) -> Option<&Mat> {
+        self.store.get(&(layer, stage))
+    }
+
+    pub fn take(&mut self, layer: usize, stage: TapStage) -> Option<Mat> {
+        self.store.remove(&(layer, stage))
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&(usize, TapStage), &Mat)> {
+        self.store.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_taps_record_nothing() {
+        let mut t = Taps::disabled();
+        t.record(0, TapStage::FfnInput, &Mat::zeros(2, 2));
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn enabled_taps_store_and_retrieve() {
+        let mut t = Taps::enabled();
+        let m = Mat::full(2, 3, 1.5);
+        t.record(1, TapStage::AttnInput, &m);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get(1, TapStage::AttnInput).unwrap().data, m.data);
+        assert!(t.get(0, TapStage::AttnInput).is_none());
+    }
+
+    #[test]
+    fn stage_names_unique() {
+        use std::collections::HashSet;
+        let names: HashSet<&str> = TapStage::FORWARD_CHAIN.iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), TapStage::FORWARD_CHAIN.len());
+    }
+}

@@ -1,0 +1,244 @@
+//! E2M1 ("FP4") element codec.
+//!
+//! Layout: 1 sign bit, 2 exponent bits, 1 mantissa bit. Representable
+//! magnitudes: {0, 0.5, 1, 1.5, 2, 3, 4, 6}. This is the element format of
+//! both NVFP4 and MXFP4.
+//!
+//! The hot path never branches per element: round-to-nearest-even over the
+//! 8-point grid is a straight threshold ladder, and encode/decode use LUTs.
+
+use crate::tensor::Rng;
+
+/// The non-negative E2M1 grid in code order (code 0..=7).
+pub const E2M1_VALUES: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// Largest representable magnitude.
+pub const E2M1_MAX: f32 = 6.0;
+
+/// Midpoints between adjacent grid values; used for RTNE thresholds.
+/// Ties (exact midpoints) round to the value with even mantissa, matching
+/// IEEE round-to-nearest-even applied on the 4-bit grid:
+///   0.25→0.0(even), 0.75→1.0, 1.25→1.5→(1.5 has odd mantissa; even neighbor
+///   is 1.0)… — we follow the hardware convention of rounding half-to-even in
+///   *code space*: codes with LSB 0 are "even".
+const MIDPOINTS: [f32; 7] = [0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0];
+
+/// Quantize a magnitude-scaled value to the nearest E2M1 code (0..=7), RTNE.
+/// `x` must be non-negative. (Reference ladder; the hot path uses the
+/// branchless segment form in `e2m1_quantize` — see §Perf in EXPERIMENTS.md.)
+#[inline]
+fn nearest_code(x: f32) -> u8 {
+    let mut c = 0u8;
+    for (i, &m) in MIDPOINTS.iter().enumerate() {
+        if x > m {
+            c = i as u8 + 1;
+        } else if x == m {
+            // tie: round half to even code
+            let lo = i as u8;
+            let hi = i as u8 + 1;
+            c = if lo & 1 == 0 { lo } else { hi };
+            return c;
+        }
+    }
+    c
+}
+
+/// Round a real value to the E2M1 grid (round-to-nearest, ties-to-even-code),
+/// saturating at ±6.
+///
+/// Branchless segment form: the grid is uniform with step 0.5 on [0,2),
+/// 1 on [2,4) and 2 on [4,6]; `round_ties_even` inside each segment
+/// reproduces ties-to-even-code exactly (pinned by unit tests and by the
+/// python contract in kernels/ref.py). ~4x faster than the threshold ladder
+/// on the fused quantizer hot path.
+#[inline]
+pub fn e2m1_quantize(x: f32) -> f32 {
+    let mag = x.abs().min(E2M1_MAX);
+    let lo = (mag * 2.0).round_ties_even() * 0.5;
+    let mid = mag.round_ties_even();
+    let hi = (mag * 0.5).round_ties_even() * 2.0;
+    let v = if mag < 1.75 {
+        lo
+    } else if mag < 3.5 {
+        mid
+    } else {
+        hi
+    };
+    if x.is_sign_negative() {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Reference (ladder) implementation kept for differential testing.
+#[inline]
+pub fn e2m1_quantize_ladder(x: f32) -> f32 {
+    let mag = x.abs().min(E2M1_MAX);
+    let v = E2M1_VALUES[nearest_code(mag) as usize];
+    if x.is_sign_negative() {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Stochastic rounding to the E2M1 grid: round to one of the two bracketing
+/// grid points with probability proportional to proximity. Unbiased:
+/// E[sr(x)] = clamp(x). Used for backward-GeMM operands per the paper.
+#[inline]
+pub fn e2m1_quantize_sr(x: f32, rng: &mut Rng) -> f32 {
+    let neg = x.is_sign_negative();
+    let mag = x.abs();
+    if mag >= E2M1_MAX {
+        return if neg { -E2M1_MAX } else { E2M1_MAX };
+    }
+    // find bracketing grid points
+    let mut hi_idx = 1;
+    while E2M1_VALUES[hi_idx] < mag {
+        hi_idx += 1;
+    }
+    let lo = E2M1_VALUES[hi_idx - 1];
+    let hi = E2M1_VALUES[hi_idx];
+    let p_hi = (mag - lo) / (hi - lo);
+    let v = if rng.uniform() < p_hi { hi } else { lo };
+    if neg {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Encode a (pre-rounded) E2M1 value to its 4-bit code: bit3 = sign,
+/// bits2..0 = magnitude code.
+#[inline]
+pub fn e2m1_encode(v: f32) -> u8 {
+    let sign = if v.is_sign_negative() { 8u8 } else { 0u8 };
+    let mag = v.abs();
+    // exact match against the grid (values are exact in f32)
+    let code = E2M1_VALUES
+        .iter()
+        .position(|&g| g == mag)
+        .expect("e2m1_encode: value not on grid") as u8;
+    sign | code
+}
+
+/// Decode a 4-bit E2M1 code to f32.
+#[inline]
+pub fn e2m1_decode(code: u8) -> f32 {
+    let v = E2M1_VALUES[(code & 7) as usize];
+    if code & 8 != 0 {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Pack two 4-bit codes into one byte (lo nibble = first element).
+#[inline]
+pub fn pack_nibbles(a: u8, b: u8) -> u8 {
+    (a & 0xF) | (b << 4)
+}
+
+/// Unpack a byte into two 4-bit codes.
+#[inline]
+pub fn unpack_nibbles(byte: u8) -> (u8, u8) {
+    (byte & 0xF, byte >> 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_points_are_fixed() {
+        for &v in &E2M1_VALUES {
+            assert_eq!(e2m1_quantize(v), v);
+            assert_eq!(e2m1_quantize(-v), -v);
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(e2m1_quantize(100.0), 6.0);
+        assert_eq!(e2m1_quantize(-7.0), -6.0);
+        assert_eq!(e2m1_quantize(f32::INFINITY), 6.0);
+    }
+
+    #[test]
+    fn rounding_nearest() {
+        assert_eq!(e2m1_quantize(0.3), 0.5);
+        assert_eq!(e2m1_quantize(0.2), 0.0);
+        assert_eq!(e2m1_quantize(1.1), 1.0);
+        assert_eq!(e2m1_quantize(1.4), 1.5);
+        assert_eq!(e2m1_quantize(2.6), 3.0);
+        assert_eq!(e2m1_quantize(4.9), 4.0);
+        assert_eq!(e2m1_quantize(5.1), 6.0);
+        assert_eq!(e2m1_quantize(-2.4), -2.0);
+    }
+
+    #[test]
+    fn ties_round_to_even_code() {
+        // 0.25 between codes 0 (0.0, even) and 1 (0.5, odd) → 0.0
+        assert_eq!(e2m1_quantize(0.25), 0.0);
+        // 0.75 between codes 1 (0.5, odd) and 2 (1.0, even) → 1.0
+        assert_eq!(e2m1_quantize(0.75), 1.0);
+        // 2.5 between codes 4 (2.0, even) and 5 (3.0, odd) → 2.0
+        assert_eq!(e2m1_quantize(2.5), 2.0);
+        // 5.0 is itself a midpoint between 4.0 (code 6, even) and 6.0 (code 7) → 4.0
+        assert_eq!(e2m1_quantize(5.0), 4.0);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for code in 0u8..16 {
+            let v = e2m1_decode(code);
+            // -0.0 encodes back to 8, 0.0 to 0; both decode to 0.0
+            assert_eq!(e2m1_decode(e2m1_encode(v)).abs(), v.abs());
+        }
+    }
+
+    #[test]
+    fn nibble_pack_roundtrip() {
+        for a in 0u8..16 {
+            for b in 0u8..16 {
+                assert_eq!(unpack_nibbles(pack_nibbles(a, b)), (a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased() {
+        let mut rng = Rng::new(77);
+        for &x in &[0.3f32, 1.2, 2.7, -4.5, 5.5, 0.05] {
+            let n = 40_000;
+            let mean: f64 = (0..n).map(|_| e2m1_quantize_sr(x, &mut rng) as f64).sum::<f64>()
+                / n as f64;
+            assert!(
+                (mean - x as f64).abs() < 0.02,
+                "SR biased at {x}: mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn branchless_matches_ladder_reference() {
+        // differential test across a dense sweep including all midpoints
+        let mut x = -7.0f32;
+        while x <= 7.0 {
+            assert_eq!(
+                e2m1_quantize(x),
+                e2m1_quantize_ladder(x),
+                "mismatch at {x}"
+            );
+            x += 0.015625; // 1/64 steps hit every midpoint exactly
+        }
+    }
+
+    #[test]
+    fn stochastic_rounding_saturates() {
+        let mut rng = Rng::new(5);
+        assert_eq!(e2m1_quantize_sr(9.0, &mut rng), 6.0);
+        assert_eq!(e2m1_quantize_sr(-9.0, &mut rng), -6.0);
+    }
+}

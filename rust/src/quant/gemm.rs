@@ -1,0 +1,262 @@
+//! Quantized GeMM dispatch: one entry point per training GeMM
+//! (forward / dgrad / wgrad), parameterized by `QuantRecipe`.
+//!
+//! This is the seam between the numeric-format substrate and the model layer:
+//! the pure-Rust Transformer calls these three functions for every linear
+//! layer, so a recipe change re-routes *all* GeMMs in fwd+bwd, exactly like
+//! the paper's W4A4G4 setting. The JAX/L2 implementation mirrors this module
+//! one-to-one (python/compile/model.py::quantized_gemm).
+
+use super::averis::{averis_dgrad, averis_forward, averis_wgrad, mean_residual_split};
+use super::hadamard::{tiled_hadamard, tiled_hadamard_inplace};
+use super::nvfp4::{Nvfp4Config, Nvfp4Quantizer};
+use super::recipe::QuantRecipe;
+use super::svd_split::svd_split_forward;
+use crate::tensor::{Mat, Rng};
+
+/// Hadamard tile size used by the NVIDIA-style baseline (paper Table 2).
+pub const HADAMARD_TILE: usize = 16;
+
+/// Quantized-GeMM engine: owns the quantizer configs and the SR stream.
+pub struct QuantGemm {
+    pub recipe: QuantRecipe,
+    fwd_quant: Nvfp4Quantizer,
+    bwd_quant: Nvfp4Quantizer,
+    rng: Rng,
+}
+
+impl QuantGemm {
+    pub fn new(recipe: QuantRecipe, seed: u64) -> Self {
+        let (fwd_cfg, bwd_cfg) = match recipe {
+            QuantRecipe::Mxfp4 => (Nvfp4Config::mxfp4(), Nvfp4Config::mxfp4()),
+            _ => (Nvfp4Config::nvfp4(), Nvfp4Config::nvfp4_sr()),
+        };
+        QuantGemm {
+            recipe,
+            fwd_quant: Nvfp4Quantizer::new(fwd_cfg),
+            bwd_quant: Nvfp4Quantizer::new(bwd_cfg),
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Forward GeMM: Y = X·W with X (l×m), W (m×n).
+    pub fn forward(&mut self, x: &Mat, w: &Mat) -> Mat {
+        match self.recipe {
+            QuantRecipe::Bf16 => x.matmul(w),
+            QuantRecipe::Nvfp4 | QuantRecipe::Mxfp4 => {
+                let xq = self.fwd_quant.quantize_dequant_rows(x, None);
+                let wq = self.fwd_quant.quantize_dequant_cols(w, None);
+                xq.matmul(&wq)
+            }
+            QuantRecipe::Nvfp4Hadamard => {
+                // rotate both operands along K, quantize, multiply — the
+                // rotation cancels in the product but smooths outliers first.
+                // K not tileable (e.g. an 8-wide MoE router): skip BOTH
+                // rotations (they must be paired or the product changes).
+                if x.cols % HADAMARD_TILE != 0 {
+                    let xq = self.fwd_quant.quantize_dequant_rows(x, None);
+                    let wq = self.fwd_quant.quantize_dequant_cols(w, None);
+                    return xq.matmul(&wq);
+                }
+                let xh = tiled_hadamard(x, HADAMARD_TILE);
+                let wh = tiled_hadamard(&w.transpose(), HADAMARD_TILE).transpose();
+                let xq = self.fwd_quant.quantize_dequant_rows(&xh, None);
+                let wq = self.fwd_quant.quantize_dequant_cols(&wh, None);
+                xq.matmul(&wq)
+            }
+            QuantRecipe::Averis => averis_forward(x, w, &self.fwd_quant, None),
+            QuantRecipe::AverisHadamard => {
+                if x.cols % HADAMARD_TILE != 0 {
+                    return averis_forward(x, w, &self.fwd_quant, None);
+                }
+                // Averis split first, then Hadamard smoothing on the residual
+                let (mu, mut xr) = mean_residual_split(x);
+                tiled_hadamard_inplace(&mut xr, HADAMARD_TILE);
+                let wh = tiled_hadamard(&w.transpose(), HADAMARD_TILE).transpose();
+                let mu_q = self.fwd_quant.quantize_dequant_vec(&mu);
+                self.fwd_quant.quantize_dequant_rows_inplace(&mut xr, None);
+                let wq = self.fwd_quant.quantize_dequant_cols(&wh, None);
+                let mut y = xr.matmul(&wq);
+                // rank-one term uses the *unrotated* quantized weight
+                let wq_plain = self.fwd_quant.quantize_dequant_cols(w, None);
+                let mu_mat = Mat::from_vec(1, mu_q.len(), mu_q);
+                let mu_w = mu_mat.matmul(&wq_plain);
+                y.add_row_vec(&mu_w.data);
+                y
+            }
+            QuantRecipe::SvdSplit => svd_split_forward(x, w, &self.fwd_quant, &mut self.rng),
+        }
+    }
+
+    /// Input-gradient GeMM: ∂X = D·Wᵀ with D (l×n), W (m×n) *pre-transposed
+    /// convention*: here `w` is the forward weight (m×n), reduction over n.
+    pub fn dgrad(&mut self, d: &Mat, w: &Mat) -> Mat {
+        match self.recipe {
+            QuantRecipe::Bf16 => d.matmul_bt(w),
+            QuantRecipe::Nvfp4 | QuantRecipe::Mxfp4 => {
+                let dq = self.bwd_quant.quantize_dequant_rows(d, Some(&mut self.rng));
+                let wq = self.fwd_quant.quantize_dequant_rows(w, None); // blocks along n
+                dq.matmul_bt(&wq)
+            }
+            QuantRecipe::Nvfp4Hadamard => {
+                // K of the dgrad GeMM is n (cols of d and w); skip paired
+                // rotations when not tileable
+                if d.cols % HADAMARD_TILE != 0 {
+                    let dq = self.bwd_quant.quantize_dequant_rows(d, Some(&mut self.rng));
+                    let wq = self.fwd_quant.quantize_dequant_rows(w, None);
+                    return dq.matmul_bt(&wq);
+                }
+                let dh = tiled_hadamard(d, HADAMARD_TILE);
+                let wh = tiled_hadamard(w, HADAMARD_TILE); // along n (K of this GeMM)
+                let dq = self.bwd_quant.quantize_dequant_rows(&dh, Some(&mut self.rng));
+                let wq = self.fwd_quant.quantize_dequant_rows(&wh, None);
+                dq.matmul_bt(&wq)
+            }
+            QuantRecipe::Averis | QuantRecipe::AverisHadamard => {
+                averis_dgrad(d, w, &self.bwd_quant, &self.fwd_quant, &mut self.rng)
+            }
+            QuantRecipe::SvdSplit => {
+                let dq = self.bwd_quant.quantize_dequant_rows(d, Some(&mut self.rng));
+                let wq = self.fwd_quant.quantize_dequant_rows(w, None);
+                dq.matmul_bt(&wq)
+            }
+        }
+    }
+
+    /// Weight-gradient GeMM: ∂W = Xᵀ·D with X (l×m), D (l×n), reduction over l.
+    pub fn wgrad(&mut self, x: &Mat, d: &Mat) -> Mat {
+        match self.recipe {
+            QuantRecipe::Bf16 => x.matmul_at(d),
+            QuantRecipe::Nvfp4 | QuantRecipe::Mxfp4 | QuantRecipe::SvdSplit => {
+                let xq = self.fwd_quant.quantize_dequant_cols(x, None);
+                let dq = self.bwd_quant.quantize_dequant_cols(d, Some(&mut self.rng));
+                xq.matmul_at(&dq)
+            }
+            QuantRecipe::Nvfp4Hadamard => {
+                // rotate along K = l: transform columns ⇒ rows of the transpose
+                let xh = tiled_hadamard_cols(x);
+                let dh = tiled_hadamard_cols(d);
+                let xq = self.fwd_quant.quantize_dequant_cols(&xh, None);
+                let dq = self.bwd_quant.quantize_dequant_cols(&dh, Some(&mut self.rng));
+                xq.matmul_at(&dq)
+            }
+            QuantRecipe::Averis | QuantRecipe::AverisHadamard => {
+                averis_wgrad(x, d, &self.fwd_quant, &self.bwd_quant, &mut self.rng)
+            }
+        }
+    }
+}
+
+/// Hadamard transform along the column (token) axis: H applied to each
+/// column, i.e. FWHT over rows. Requires rows divisible by the tile.
+/// Falls back to identity when not tileable (ragged batch tails).
+pub fn tiled_hadamard_cols(x: &Mat) -> Mat {
+    if x.rows % HADAMARD_TILE != 0 {
+        return x.clone();
+    }
+    tiled_hadamard(&x.transpose(), HADAMARD_TILE).transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::rel_error;
+
+    /// Sparse-outlier-column mean bias (the paper's §2.3 regime).
+    fn mean_biased(l: usize, m: usize, bias: f32, noise: f32, rng: &mut Rng) -> Mat {
+        let mut x = Mat::randn(l, m, noise, rng);
+        let mut mu = vec![0.0f32; m];
+        for (j, v) in mu.iter_mut().enumerate() {
+            if j % 16 == 3 {
+                *v = bias * (1.0 + 0.3 * rng.normal());
+            }
+        }
+        x.add_row_vec(&mu);
+        x
+    }
+
+    #[test]
+    fn bf16_recipe_is_exact() {
+        let mut rng = Rng::new(60);
+        let x = Mat::randn(16, 32, 1.0, &mut rng);
+        let w = Mat::randn(32, 8, 1.0, &mut rng);
+        let mut g = QuantGemm::new(QuantRecipe::Bf16, 0);
+        assert!(rel_error(&g.forward(&x, &w), &x.matmul(&w)) < 1e-6);
+    }
+
+    #[test]
+    fn all_recipes_approximate_exact_gemm() {
+        let mut rng = Rng::new(61);
+        let x = mean_biased(64, 64, 1.5, 0.5, &mut rng);
+        let w = Mat::randn(64, 32, 0.15, &mut rng);
+        let exact = x.matmul(&w);
+        for r in [
+            QuantRecipe::Nvfp4,
+            QuantRecipe::Nvfp4Hadamard,
+            QuantRecipe::Averis,
+            QuantRecipe::AverisHadamard,
+            QuantRecipe::Mxfp4,
+        ] {
+            let mut g = QuantGemm::new(r, 1);
+            let y = g.forward(&x, &w);
+            let e = rel_error(&y, &exact);
+            assert!(e < 0.25, "{r}: fwd err {e}");
+        }
+    }
+
+    #[test]
+    fn recipe_error_ordering_on_mean_biased_activations() {
+        // the paper's headline numeric: Averis < Hadamard < vanilla on
+        // strongly mean-biased activations
+        let mut rng = Rng::new(62);
+        let x = mean_biased(256, 128, 3.0, 0.3, &mut rng);
+        let w = Mat::randn(128, 64, 0.1, &mut rng);
+        let exact = x.matmul(&w);
+        let err = |r: QuantRecipe| {
+            let mut g = QuantGemm::new(r, 3);
+            rel_error(&g.forward(&x, &w), &exact)
+        };
+        let e_vanilla = err(QuantRecipe::Nvfp4);
+        let e_averis = err(QuantRecipe::Averis);
+        assert!(
+            e_averis < e_vanilla,
+            "averis {e_averis} should beat vanilla {e_vanilla}"
+        );
+    }
+
+    #[test]
+    fn dgrad_and_wgrad_all_recipes() {
+        let mut rng = Rng::new(63);
+        let x = mean_biased(32, 48, 1.0, 0.5, &mut rng);
+        let w = Mat::randn(48, 16, 0.2, &mut rng);
+        let d = Mat::randn(32, 16, 0.3, &mut rng);
+        let exact_dx = d.matmul_bt(&w);
+        let exact_dw = x.matmul_at(&d);
+        for r in [
+            QuantRecipe::Bf16,
+            QuantRecipe::Nvfp4,
+            QuantRecipe::Nvfp4Hadamard,
+            QuantRecipe::Averis,
+            QuantRecipe::AverisHadamard,
+        ] {
+            let mut g = QuantGemm::new(r, 7);
+            let dx = g.dgrad(&d, &w);
+            let dw = g.wgrad(&x, &d);
+            assert_eq!((dx.rows, dx.cols), (32, 48), "{r}");
+            assert_eq!((dw.rows, dw.cols), (48, 16), "{r}");
+            let edx = rel_error(&dx, &exact_dx);
+            let edw = rel_error(&dw, &exact_dw);
+            let tol = if r == QuantRecipe::Bf16 { 1e-5 } else { 0.45 };
+            assert!(edx < tol, "{r} dgrad err {edx}");
+            assert!(edw < tol, "{r} wgrad err {edw}");
+        }
+    }
+
+    #[test]
+    fn hadamard_cols_ragged_fallback() {
+        let mut rng = Rng::new(64);
+        let x = Mat::randn(17, 32, 1.0, &mut rng); // 17 not divisible by 16
+        let y = tiled_hadamard_cols(&x);
+        assert_eq!(y.data, x.data);
+    }
+}

@@ -1,0 +1,172 @@
+//! Tiled Hadamard transform — the NVIDIA-style outlier-smoothing baseline.
+//!
+//! The baseline reshapes X (l×m) into [l, m/T, T] tiles and applies an
+//! orthonormal T×T Hadamard transform along the last axis (T = 16 in the
+//! paper's Table 2). Because H/√T is orthogonal, applying it to both GeMM
+//! operands preserves the product: (X Hᵀ)(H Wᵀᵀ) = X W, while spreading
+//! within-tile outliers across the tile before quantization.
+//!
+//! The transform here is the fast Walsh–Hadamard (FWHT) butterfly — O(T log T)
+//! per tile rather than a T×T matmul — which is the *optimized* form; Table 2
+//! measures this implementation against Averis's single mean reduction.
+
+use crate::tensor::Mat;
+
+/// Dense T×T Hadamard matrix (Sylvester construction), scaled by 1/√T so it
+/// is orthonormal. `t` must be a power of two.
+pub fn hadamard_matrix(t: usize) -> Mat {
+    assert!(t.is_power_of_two(), "Hadamard size must be a power of two");
+    let mut h = Mat::from_vec(1, 1, vec![1.0]);
+    let mut n = 1;
+    while n < t {
+        let mut next = Mat::zeros(2 * n, 2 * n);
+        for i in 0..n {
+            for j in 0..n {
+                let v = h.at(i, j);
+                *next.at_mut(i, j) = v;
+                *next.at_mut(i, j + n) = v;
+                *next.at_mut(i + n, j) = v;
+                *next.at_mut(i + n, j + n) = -v;
+            }
+        }
+        h = next;
+        n *= 2;
+    }
+    let scale = 1.0 / (t as f32).sqrt();
+    h.scale(scale);
+    h
+}
+
+/// In-place fast Walsh–Hadamard transform of a length-T slice (T = 2^k),
+/// normalized by 1/√T (so the transform is involutory: applying it twice
+/// returns the input).
+#[inline]
+pub fn fwht_inplace(v: &mut [f32]) {
+    let t = v.len();
+    debug_assert!(t.is_power_of_two());
+    let mut h = 1;
+    while h < t {
+        let step = h * 2;
+        let mut i = 0;
+        while i < t {
+            for j in i..i + h {
+                let x = v[j];
+                let y = v[j + h];
+                v[j] = x + y;
+                v[j + h] = x - y;
+            }
+            i += step;
+        }
+        h = step;
+    }
+    let scale = 1.0 / (t as f32).sqrt();
+    for x in v.iter_mut() {
+        *x *= scale;
+    }
+}
+
+/// Tiled Hadamard transform: apply the orthonormal T-point FWHT to every
+/// consecutive tile of `tile` elements in every row of `x`. `x.cols` must be
+/// divisible by `tile`. Returns a new matrix.
+pub fn tiled_hadamard(x: &Mat, tile: usize) -> Mat {
+    let mut out = x.clone();
+    tiled_hadamard_inplace(&mut out, tile);
+    out
+}
+
+/// In-place tiled Hadamard — the benchmarked hot path.
+pub fn tiled_hadamard_inplace(x: &mut Mat, tile: usize) {
+    assert!(tile.is_power_of_two());
+    assert_eq!(x.cols % tile, 0, "cols {} not divisible by tile {}", x.cols, tile);
+    let cols = x.cols;
+    for i in 0..x.rows {
+        let row = &mut x.data[i * cols..(i + 1) * cols];
+        for chunk in row.chunks_exact_mut(tile) {
+            fwht_inplace(chunk);
+        }
+    }
+}
+
+/// Inverse tiled Hadamard. The normalized FWHT is involutory, so the inverse
+/// is the same transform; kept as a named function for call-site clarity.
+pub fn tiled_hadamard_inverse(x: &Mat, tile: usize) -> Mat {
+    tiled_hadamard(x, tile)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::rel_error;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn hadamard_matrix_is_orthonormal() {
+        for &t in &[2usize, 4, 16, 32] {
+            let h = hadamard_matrix(t);
+            let hht = h.matmul_bt(&h);
+            for i in 0..t {
+                for j in 0..t {
+                    let e = if i == j { 1.0 } else { 0.0 };
+                    assert!((hht.at(i, j) - e).abs() < 1e-5, "t={t} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_matches_dense_matrix() {
+        let mut rng = Rng::new(31);
+        let t = 16;
+        let h = hadamard_matrix(t);
+        let x = Mat::randn(1, t, 1.0, &mut rng);
+        let dense = x.matmul_bt(&h); // x·Hᵀ ; H symmetric for Sylvester
+        let mut fast = x.data.clone();
+        fwht_inplace(&mut fast);
+        for (a, b) in dense.data.iter().zip(fast.iter()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fwht_is_involutory() {
+        let mut rng = Rng::new(32);
+        let x = Mat::randn(4, 64, 1.0, &mut rng);
+        let once = tiled_hadamard(&x, 16);
+        let twice = tiled_hadamard(&once, 16);
+        assert!(rel_error(&twice, &x) < 1e-5);
+    }
+
+    #[test]
+    fn transform_preserves_norm() {
+        let mut rng = Rng::new(33);
+        let x = Mat::randn(8, 128, 1.0, &mut rng);
+        let y = tiled_hadamard(&x, 16);
+        assert!((x.fro_norm() - y.fro_norm()).abs() / x.fro_norm() < 1e-5);
+    }
+
+    #[test]
+    fn smooths_single_outlier_across_tile() {
+        // a lone spike of 16.0 becomes 16 entries of ±4.0 after the 16-point
+        // orthonormal transform — dynamic range drops by √T
+        let mut v = vec![0.0f32; 16];
+        v[3] = 16.0;
+        let x = Mat::from_vec(1, 16, v);
+        let y = tiled_hadamard(&x, 16);
+        let amax = y.abs_max();
+        assert!((amax - 4.0).abs() < 1e-5, "amax {amax}");
+    }
+
+    #[test]
+    fn gemm_invariance_under_paired_transform() {
+        // (X Hᵀ)(H W) = X W since HᵀH = I
+        let mut rng = Rng::new(34);
+        let x = Mat::randn(8, 32, 1.0, &mut rng);
+        let w = Mat::randn(32, 5, 1.0, &mut rng);
+        let xh = tiled_hadamard(&x, 16);
+        // apply H to W along K (rows): transform Wᵀ rows then transpose back
+        let wh = tiled_hadamard(&w.transpose(), 16).transpose();
+        let y1 = xh.matmul(&wh);
+        let y2 = x.matmul(&w);
+        assert!(rel_error(&y1, &y2) < 1e-4);
+    }
+}

@@ -1,0 +1,25 @@
+//! Numeric-format substrate: FP4 (E2M1) / FP8 (E4M3, E5M2) / E8M0 codecs,
+//! the NVFP4 and MXFP4 blockwise quantizers, tiled Hadamard smoothing
+//! (NVIDIA-style baseline), the Metis-style SVD split (ablation), and the
+//! paper's contribution: Averis mean–residual splitting (`averis`).
+//!
+//! All quantizers are *bit-exact simulations*: values are quantized to the
+//! real E2M1 grid with real E4M3/E8M0 block scales, then dequantized to f32
+//! ("fake quant"), which is the standard methodology the paper itself uses
+//! for its Hopper training runs.
+
+pub mod averis;
+pub mod fp4;
+pub mod fp8;
+pub mod gemm;
+pub mod hadamard;
+pub mod nvfp4;
+pub mod recipe;
+pub mod svd_split;
+
+pub use averis::{averis_dgrad, averis_forward, averis_wgrad, mean_residual_split};
+pub use fp4::{e2m1_decode, e2m1_encode, e2m1_quantize, e2m1_quantize_sr, E2M1_MAX, E2M1_VALUES};
+pub use fp8::{e4m3_quantize, e5m2_quantize, e8m0_quantize, E4M3_MAX};
+pub use hadamard::{hadamard_matrix, tiled_hadamard, tiled_hadamard_inverse};
+pub use nvfp4::{Nvfp4Config, Nvfp4Quantizer, Rounding, ScaleFormat};
+pub use recipe::QuantRecipe;

@@ -1,0 +1,425 @@
+//! NVFP4 / MXFP4 blockwise quantizers.
+//!
+//! NVFP4 (NVIDIA Blackwell): E2M1 elements, blocks of 16 along the GeMM
+//! reduction (K) axis, one E4M3 block scale, plus a single per-tensor f32
+//! scale chosen so block scales use the full E4M3 range:
+//!
+//!   tensor_scale  = amax(X) / (E4M3_MAX · E2M1_MAX)
+//!   block_scale_b = Q_e4m3( amax(block_b) / E2M1_MAX / tensor_scale )
+//!   x̂             = Q_e2m1( x / (block_scale_b · tensor_scale) ) · block_scale_b · tensor_scale
+//!
+//! MXFP4 (OCP Microscaling): E2M1 elements, blocks of 32, one E8M0
+//! (power-of-two) scale, no tensor scale.
+//!
+//! Both are exposed through one `Nvfp4Quantizer` configured by
+//! `Nvfp4Config { block, scale_format, rounding }`. The training hot path
+//! uses the fused `quantize_dequant_rows/cols` ("fake quant"): one pass that
+//! computes block amax, derives the scale, rounds, and writes the dequantized
+//! f32 — this is also the function whose cost Table 2/3 measure.
+
+use super::fp4::{e2m1_encode, e2m1_quantize, e2m1_quantize_sr, E2M1_MAX};
+use super::fp8::{e4m3_quantize, e8m0_quantize, E4M3_MAX};
+use crate::tensor::{Mat, Rng};
+
+/// Element rounding mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    /// Round-to-nearest (ties to even code) — forward-pass operands.
+    Rtne,
+    /// Stochastic rounding — backward-GeMM gradient operands (unbiased).
+    Stochastic,
+}
+
+/// Block-scale encoding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleFormat {
+    /// E4M3 block scale + per-tensor f32 scale (NVFP4).
+    E4M3TwoLevel,
+    /// E8M0 power-of-two block scale (MXFP4).
+    E8M0,
+}
+
+/// Quantizer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Nvfp4Config {
+    pub block: usize,
+    pub scale_format: ScaleFormat,
+    pub rounding: Rounding,
+}
+
+impl Nvfp4Config {
+    /// NVFP4 defaults: block 16, E4M3 two-level scales, RTNE.
+    pub fn nvfp4() -> Self {
+        Nvfp4Config { block: 16, scale_format: ScaleFormat::E4M3TwoLevel, rounding: Rounding::Rtne }
+    }
+
+    /// NVFP4 with stochastic rounding (backward operands).
+    pub fn nvfp4_sr() -> Self {
+        Nvfp4Config { rounding: Rounding::Stochastic, ..Self::nvfp4() }
+    }
+
+    /// MXFP4 defaults: block 32, E8M0 scales, RTNE.
+    pub fn mxfp4() -> Self {
+        Nvfp4Config { block: 32, scale_format: ScaleFormat::E8M0, rounding: Rounding::Rtne }
+    }
+}
+
+/// A quantized tensor in storage form: packed 4-bit codes + per-block scales
+/// + the tensor scale. Row-major blocks along rows.
+#[derive(Clone, Debug)]
+pub struct QuantizedMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub block: usize,
+    /// two E2M1 codes per byte, row-major, rows padded to even block count
+    pub codes: Vec<u8>,
+    /// one decoded f32 scale per block (already E4M3/E8M0-rounded)
+    pub scales: Vec<f32>,
+    pub tensor_scale: f32,
+}
+
+impl QuantizedMat {
+    /// Bytes of storage used (codes + 1 byte per scale) — for the memory
+    /// accounting in EXPERIMENTS.md.
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len() + self.scales.len() + 4
+    }
+
+    /// Dequantize back to f32.
+    pub fn dequantize(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        let bpr = self.cols.div_ceil(self.block); // blocks per row
+        for i in 0..self.rows {
+            for b in 0..bpr {
+                let s = self.scales[i * bpr + b] * self.tensor_scale;
+                let j0 = b * self.block;
+                let j1 = (j0 + self.block).min(self.cols);
+                for j in j0..j1 {
+                    let flat = i * self.cols + j;
+                    let byte = self.codes[flat / 2];
+                    let code = if flat % 2 == 0 { byte & 0xF } else { byte >> 4 };
+                    out.data[flat] = super::fp4::e2m1_decode(code) * s;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The blockwise FP4 quantizer.
+#[derive(Clone, Copy, Debug)]
+pub struct Nvfp4Quantizer {
+    pub cfg: Nvfp4Config,
+}
+
+impl Nvfp4Quantizer {
+    pub fn new(cfg: Nvfp4Config) -> Self {
+        Nvfp4Quantizer { cfg }
+    }
+
+    pub fn nvfp4() -> Self {
+        Self::new(Nvfp4Config::nvfp4())
+    }
+
+    pub fn mxfp4() -> Self {
+        Self::new(Nvfp4Config::mxfp4())
+    }
+
+    /// Per-tensor scale for the two-level scheme.
+    fn tensor_scale(&self, amax: f32) -> f32 {
+        match self.cfg.scale_format {
+            ScaleFormat::E4M3TwoLevel => {
+                if amax == 0.0 {
+                    1.0
+                } else {
+                    amax / (E4M3_MAX * E2M1_MAX)
+                }
+            }
+            ScaleFormat::E8M0 => 1.0,
+        }
+    }
+
+    /// Encode the scale of one block given its amax and the tensor scale.
+    #[inline]
+    fn block_scale(&self, amax: f32, tscale: f32) -> f32 {
+        if amax == 0.0 {
+            return 0.0;
+        }
+        match self.cfg.scale_format {
+            ScaleFormat::E4M3TwoLevel => {
+                let raw = amax / E2M1_MAX / tscale;
+                // never encode 0 for a nonzero block; clamp to min subnormal
+                e4m3_quantize(raw).max(0.001953125)
+            }
+            ScaleFormat::E8M0 => e8m0_quantize(amax / E2M1_MAX),
+        }
+    }
+
+    /// Fused fake-quant along **rows** (blocks over consecutive columns —
+    /// the layout when the matrix's K axis is its column axis, e.g. X (l×m)
+    /// in Y = X·W with K = m). This is THE hot function of the simulator.
+    pub fn quantize_dequant_rows(&self, x: &Mat, rng: Option<&mut Rng>) -> Mat {
+        let mut out = x.clone();
+        self.quantize_dequant_rows_inplace(&mut out, rng);
+        out
+    }
+
+    /// In-place variant used by the perf-optimized training hot path.
+    pub fn quantize_dequant_rows_inplace(&self, x: &mut Mat, mut rng: Option<&mut Rng>) {
+        let tscale = self.tensor_scale(x.abs_max());
+        let block = self.cfg.block;
+        let cols = x.cols;
+        for i in 0..x.rows {
+            let row = &mut x.data[i * cols..(i + 1) * cols];
+            let mut j0 = 0;
+            while j0 < cols {
+                let j1 = (j0 + block).min(cols);
+                let blk = &mut row[j0..j1];
+                let mut amax = 0.0f32;
+                for &v in blk.iter() {
+                    amax = amax.max(v.abs());
+                }
+                let s = self.block_scale(amax, tscale) * tscale;
+                if s == 0.0 {
+                    for v in blk.iter_mut() {
+                        *v = 0.0;
+                    }
+                } else {
+                    let inv = 1.0 / s;
+                    match self.cfg.rounding {
+                        Rounding::Rtne => {
+                            for v in blk.iter_mut() {
+                                *v = e2m1_quantize(*v * inv) * s;
+                            }
+                        }
+                        Rounding::Stochastic => {
+                            let r = rng.as_deref_mut().expect("SR needs an Rng");
+                            for v in blk.iter_mut() {
+                                *v = e2m1_quantize_sr(*v * inv, r) * s;
+                            }
+                        }
+                    }
+                }
+                j0 = j1;
+            }
+        }
+    }
+
+    /// Fused fake-quant along **columns** (blocks over consecutive rows —
+    /// the layout when K is the row axis, e.g. W (m×n) in Y = X·W with
+    /// K = m, or X (l×m) in the wgrad GeMM XᵀD with K = l).
+    pub fn quantize_dequant_cols(&self, x: &Mat, mut rng: Option<&mut Rng>) -> Mat {
+        let tscale = self.tensor_scale(x.abs_max());
+        let block = self.cfg.block;
+        let (rows, cols) = (x.rows, x.cols);
+        let mut out = x.clone();
+        let mut i0 = 0;
+        while i0 < rows {
+            let i1 = (i0 + block).min(rows);
+            for j in 0..cols {
+                let mut amax = 0.0f32;
+                for i in i0..i1 {
+                    amax = amax.max(out.data[i * cols + j].abs());
+                }
+                let s = self.block_scale(amax, tscale) * tscale;
+                if s == 0.0 {
+                    for i in i0..i1 {
+                        out.data[i * cols + j] = 0.0;
+                    }
+                } else {
+                    let inv = 1.0 / s;
+                    match self.cfg.rounding {
+                        Rounding::Rtne => {
+                            for i in i0..i1 {
+                                let v = &mut out.data[i * cols + j];
+                                *v = e2m1_quantize(*v * inv) * s;
+                            }
+                        }
+                        Rounding::Stochastic => {
+                            let r = rng.as_deref_mut().expect("SR needs an Rng");
+                            for i in i0..i1 {
+                                let v = &mut out.data[i * cols + j];
+                                *v = e2m1_quantize_sr(*v * inv, r) * s;
+                            }
+                        }
+                    }
+                }
+            }
+            i0 = i1;
+        }
+        out
+    }
+
+    /// Quantize a row-major matrix to storage form (packed codes + scales).
+    /// Blocks along rows. Used for the memory-footprint accounting and the
+    /// codec round-trip tests; the training path uses the fused fake-quant.
+    pub fn quantize_store(&self, x: &Mat) -> QuantizedMat {
+        assert_eq!(self.cfg.rounding, Rounding::Rtne, "storage path is RTNE");
+        let tscale = self.tensor_scale(x.abs_max());
+        let block = self.cfg.block;
+        let (rows, cols) = (x.rows, x.cols);
+        let bpr = cols.div_ceil(block);
+        let mut codes = vec![0u8; (rows * cols).div_ceil(2)];
+        let mut scales = vec![0.0f32; rows * bpr];
+        for i in 0..rows {
+            for b in 0..bpr {
+                let j0 = b * block;
+                let j1 = (j0 + block).min(cols);
+                let mut amax = 0.0f32;
+                for j in j0..j1 {
+                    amax = amax.max(x.data[i * cols + j].abs());
+                }
+                let s = self.block_scale(amax, tscale);
+                scales[i * bpr + b] = s;
+                let denom = s * tscale;
+                for j in j0..j1 {
+                    let flat = i * cols + j;
+                    let q = if denom == 0.0 {
+                        0.0
+                    } else {
+                        e2m1_quantize(x.data[flat] / denom)
+                    };
+                    let code = e2m1_encode(q);
+                    if flat % 2 == 0 {
+                        codes[flat / 2] |= code;
+                    } else {
+                        codes[flat / 2] |= code << 4;
+                    }
+                }
+            }
+        }
+        QuantizedMat { rows, cols, block, codes, scales, tensor_scale: tscale }
+    }
+
+    /// Quantize a vector (1×n) along its length. Convenience for μ vectors.
+    /// Always RTNE: the mean is a forward-style operand even inside backward
+    /// GeMMs (it is a deterministic statistic, not a noisy gradient sample).
+    pub fn quantize_dequant_vec(&self, v: &[f32]) -> Vec<f32> {
+        let m = Mat::from_vec(1, v.len(), v.to_vec());
+        let rtne = Nvfp4Quantizer::new(Nvfp4Config { rounding: Rounding::Rtne, ..self.cfg });
+        rtne.quantize_dequant_rows(&m, None).data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::rel_error;
+
+    #[test]
+    fn exact_representables_survive() {
+        // a block whose values are exact multiples of a power-of-two scale
+        let vals: Vec<f32> = (0..16).map(|i| (i % 7) as f32 - 3.0).collect();
+        let x = Mat::from_vec(1, 16, vals);
+        let q = Nvfp4Quantizer::nvfp4().quantize_dequant_rows(&x, None);
+        // all magnitudes ≤ 6 with amax 3 → representable after scaling
+        assert!(rel_error(&q, &x) < 0.05, "err {}", rel_error(&q, &x));
+    }
+
+    #[test]
+    fn zero_matrix_stays_zero() {
+        let x = Mat::zeros(4, 32);
+        let q = Nvfp4Quantizer::nvfp4().quantize_dequant_rows(&x, None);
+        assert!(q.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn quant_error_within_format_bound() {
+        let mut rng = Rng::new(42);
+        let x = Mat::randn(64, 128, 1.0, &mut rng);
+        let q = Nvfp4Quantizer::nvfp4().quantize_dequant_rows(&x, None);
+        let err = rel_error(&q, &x);
+        // E2M1 with blockwise scales on Gaussian data lands ~4-8% relative
+        assert!(err > 0.0 && err < 0.2, "err {err}");
+    }
+
+    #[test]
+    fn storage_roundtrip_matches_fused() {
+        let mut rng = Rng::new(43);
+        let x = Mat::randn(8, 48, 2.0, &mut rng);
+        let quant = Nvfp4Quantizer::nvfp4();
+        let fused = quant.quantize_dequant_rows(&x, None);
+        let stored = quant.quantize_store(&x).dequantize();
+        assert!(rel_error(&stored, &fused) < 1e-6);
+    }
+
+    #[test]
+    fn storage_is_4bit_plus_scales() {
+        let mut rng = Rng::new(44);
+        let x = Mat::randn(32, 64, 1.0, &mut rng);
+        let s = Nvfp4Quantizer::nvfp4().quantize_store(&x);
+        // 32*64/2 code bytes + 32*4 scale bytes + 4
+        assert_eq!(s.codes.len(), 32 * 64 / 2);
+        assert_eq!(s.scales.len(), 32 * 4);
+        assert!(s.storage_bytes() < 32 * 64 * 4 / 4); // ≥4x smaller than f32
+    }
+
+    #[test]
+    fn cols_quantization_matches_rows_of_transpose() {
+        let mut rng = Rng::new(45);
+        let x = Mat::randn(48, 20, 1.0, &mut rng);
+        let quant = Nvfp4Quantizer::nvfp4();
+        let a = quant.quantize_dequant_cols(&x, None);
+        let b = quant.quantize_dequant_rows(&x.transpose(), None).transpose();
+        assert!(rel_error(&a, &b) < 1e-6);
+    }
+
+    #[test]
+    fn outlier_inflates_block_error() {
+        // the paper's core numerical premise: one outlier in a block crushes
+        // the other 15 values' resolution
+        let mut base = vec![0.05f32; 16];
+        let x_clean = Mat::from_vec(1, 16, base.clone());
+        base[7] = 60.0; // outlier
+        let x_dirty = Mat::from_vec(1, 16, base);
+        let quant = Nvfp4Quantizer::nvfp4();
+        let qc = quant.quantize_dequant_rows(&x_clean, None);
+        let qd = quant.quantize_dequant_rows(&x_dirty, None);
+        let clean_err: f32 = (0..16)
+            .filter(|&j| j != 7)
+            .map(|j| (qc.data[j] - 0.05).abs())
+            .sum();
+        let dirty_err: f32 = (0..16)
+            .filter(|&j| j != 7)
+            .map(|j| (qd.data[j] - 0.05).abs())
+            .sum();
+        assert!(
+            dirty_err > 5.0 * clean_err.max(1e-4),
+            "outlier should inflate error: clean {clean_err} dirty {dirty_err}"
+        );
+    }
+
+    #[test]
+    fn mxfp4_block32_e8m0() {
+        let mut rng = Rng::new(46);
+        let x = Mat::randn(16, 64, 1.0, &mut rng);
+        let q = Nvfp4Quantizer::mxfp4().quantize_dequant_rows(&x, None);
+        let err = rel_error(&q, &x);
+        assert!(err > 0.0 && err < 0.3, "err {err}");
+    }
+
+    #[test]
+    fn sr_variant_unbiased_on_matrix() {
+        let mut rng = Rng::new(47);
+        let x = Mat::full(1, 16, 0.37);
+        let quant = Nvfp4Quantizer::new(Nvfp4Config::nvfp4_sr());
+        let n = 3000;
+        let mut acc = 0.0f64;
+        for _ in 0..n {
+            let q = quant.quantize_dequant_rows(&x, Some(&mut rng));
+            acc += q.data.iter().map(|&v| v as f64).sum::<f64>() / 16.0;
+        }
+        let mean = acc / n as f64;
+        assert!((mean - 0.37).abs() < 0.01, "SR mean {mean}");
+    }
+
+    #[test]
+    fn ragged_tail_block() {
+        // cols not divisible by block
+        let mut rng = Rng::new(48);
+        let x = Mat::randn(3, 21, 1.0, &mut rng);
+        let q = Nvfp4Quantizer::nvfp4().quantize_dequant_rows(&x, None);
+        assert_eq!(q.cols, 21);
+        assert!(rel_error(&q, &x) < 0.25);
+    }
+}

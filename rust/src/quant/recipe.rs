@@ -1,0 +1,134 @@
+//! Quantization recipes — the five training configurations of the paper's
+//! evaluation (Fig. 6 / Table 1) plus ablation variants.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// A full W4A4G4 training recipe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QuantRecipe {
+    /// Full-precision reference (f32 on CPU standing in for BF16).
+    Bf16,
+    /// Vanilla NVFP4: blockwise E2M1+E4M3, no outlier treatment.
+    Nvfp4,
+    /// NVFP4 + tiled 16×16 Hadamard smoothing (NVIDIA-style baseline).
+    Nvfp4Hadamard,
+    /// NVFP4 + Averis mean–residual splitting (the paper's method).
+    Averis,
+    /// Averis + Hadamard on the residual (paper's combination row).
+    AverisHadamard,
+    /// MXFP4 ablation (block-32 E8M0 scales) — no outlier treatment.
+    Mxfp4,
+    /// Metis-style rank-1 SVD split ablation (spectral-space baseline).
+    SvdSplit,
+}
+
+impl QuantRecipe {
+    /// All recipes evaluated in Fig. 6 / Table 1.
+    pub const PAPER_SET: [QuantRecipe; 5] = [
+        QuantRecipe::Bf16,
+        QuantRecipe::Nvfp4,
+        QuantRecipe::Nvfp4Hadamard,
+        QuantRecipe::Averis,
+        QuantRecipe::AverisHadamard,
+    ];
+
+    /// Does this recipe quantize at all?
+    pub fn is_quantized(self) -> bool {
+        self != QuantRecipe::Bf16
+    }
+
+    /// Does this recipe apply the tiled Hadamard transform?
+    pub fn uses_hadamard(self) -> bool {
+        matches!(self, QuantRecipe::Nvfp4Hadamard | QuantRecipe::AverisHadamard)
+    }
+
+    /// Does this recipe apply mean–residual splitting?
+    pub fn uses_mean_split(self) -> bool {
+        matches!(self, QuantRecipe::Averis | QuantRecipe::AverisHadamard)
+    }
+
+    /// Artifact file stem for the AOT-compiled train step of this recipe.
+    pub fn artifact_stem(self) -> &'static str {
+        match self {
+            QuantRecipe::Bf16 => "bf16",
+            QuantRecipe::Nvfp4 => "nvfp4",
+            QuantRecipe::Nvfp4Hadamard => "nvfp4_hadamard",
+            QuantRecipe::Averis => "averis",
+            QuantRecipe::AverisHadamard => "averis_hadamard",
+            QuantRecipe::Mxfp4 => "mxfp4",
+            QuantRecipe::SvdSplit => "svd_split",
+        }
+    }
+}
+
+impl fmt::Display for QuantRecipe {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            QuantRecipe::Bf16 => "BF16",
+            QuantRecipe::Nvfp4 => "NVFP4",
+            QuantRecipe::Nvfp4Hadamard => "NVFP4-Hadamard",
+            QuantRecipe::Averis => "Averis",
+            QuantRecipe::AverisHadamard => "Averis-Hadamard",
+            QuantRecipe::Mxfp4 => "MXFP4",
+            QuantRecipe::SvdSplit => "SVD-Split",
+        };
+        f.write_str(s)
+    }
+}
+
+impl FromStr for QuantRecipe {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "bf16" | "fp32" | "full" => Ok(QuantRecipe::Bf16),
+            "nvfp4" | "fp4" | "vanilla" => Ok(QuantRecipe::Nvfp4),
+            "nvfp4-hadamard" | "hadamard" => Ok(QuantRecipe::Nvfp4Hadamard),
+            "averis" => Ok(QuantRecipe::Averis),
+            "averis-hadamard" => Ok(QuantRecipe::AverisHadamard),
+            "mxfp4" => Ok(QuantRecipe::Mxfp4),
+            "svd-split" | "svd" | "metis" => Ok(QuantRecipe::SvdSplit),
+            other => Err(format!(
+                "unknown recipe '{other}' (expected bf16|nvfp4|nvfp4-hadamard|averis|averis-hadamard|mxfp4|svd-split)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for r in [
+            QuantRecipe::Bf16,
+            QuantRecipe::Nvfp4,
+            QuantRecipe::Nvfp4Hadamard,
+            QuantRecipe::Averis,
+            QuantRecipe::AverisHadamard,
+            QuantRecipe::Mxfp4,
+            QuantRecipe::SvdSplit,
+        ] {
+            let s = r.to_string();
+            assert_eq!(s.parse::<QuantRecipe>().unwrap(), r, "{s}");
+        }
+    }
+
+    #[test]
+    fn aliases() {
+        assert_eq!("fp4".parse::<QuantRecipe>().unwrap(), QuantRecipe::Nvfp4);
+        assert_eq!("metis".parse::<QuantRecipe>().unwrap(), QuantRecipe::SvdSplit);
+        assert!("bogus".parse::<QuantRecipe>().is_err());
+    }
+
+    #[test]
+    fn flags() {
+        assert!(!QuantRecipe::Bf16.is_quantized());
+        assert!(QuantRecipe::Averis.uses_mean_split());
+        assert!(QuantRecipe::AverisHadamard.uses_hadamard());
+        assert!(QuantRecipe::AverisHadamard.uses_mean_split());
+        assert!(!QuantRecipe::Nvfp4.uses_hadamard());
+    }
+}

@@ -1,0 +1,119 @@
+//! Artifact discovery: the manifest written by `python -m compile.aot` plus
+//! paths to per-recipe HLO files and the initial parameter blob.
+
+use crate::quant::QuantRecipe;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed subset of artifacts/manifest.json (hand-rolled parser — the image
+/// has no serde_json; the manifest format is ours and flat).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub n_params: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub total_steps: u64,
+}
+
+/// Extract `"key": <integer>` from a JSON string (flat numeric fields only).
+fn json_uint(text: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let start = text.find(&pat)? + pat.len();
+    let rest = text[start..].trim_start();
+    let end = rest.find(|c: char| !c.is_ascii_digit())?;
+    rest[..end].parse().ok()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let need = |k: &str| {
+            json_uint(text, k).with_context(|| format!("manifest missing field {k}"))
+        };
+        Ok(Manifest {
+            n_params: need("n_params")? as usize,
+            vocab: need("vocab")? as usize,
+            d_model: need("d_model")? as usize,
+            n_layers: need("n_layers")? as usize,
+            seq: need("seq")? as usize,
+            batch: need("batch")? as usize,
+            total_steps: need("total_steps")?,
+        })
+    }
+}
+
+/// Locates artifacts on disk.
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactStore {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} — run `make artifacts` first", mpath.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        Ok(ArtifactStore { dir, manifest })
+    }
+
+    pub fn train_hlo(&self, recipe: QuantRecipe) -> Result<PathBuf> {
+        let p = self.dir.join(format!("train_{}.hlo.txt", recipe.artifact_stem()));
+        if !p.exists() {
+            bail!("missing artifact {}", p.display());
+        }
+        Ok(p)
+    }
+
+    pub fn eval_hlo(&self, recipe: QuantRecipe) -> Result<PathBuf> {
+        let p = self.dir.join(format!("eval_{}.hlo.txt", recipe.artifact_stem()));
+        if !p.exists() {
+            bail!("missing artifact {}", p.display());
+        }
+        Ok(p)
+    }
+
+    /// Load the shared initial parameter vector (raw little-endian f32).
+    pub fn theta0(&self) -> Result<Vec<f32>> {
+        let p = self.dir.join("theta0.f32");
+        let bytes = std::fs::read(&p).with_context(|| format!("reading {}", p.display()))?;
+        if bytes.len() != self.manifest.n_params * 4 {
+            bail!(
+                "theta0.f32 size {} != 4·n_params {}",
+                bytes.len(),
+                self.manifest.n_params * 4
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_uint_parses_flat_fields() {
+        let t = r#"{"n_params": 123456, "model": {"vocab": 256, "seq": 64}}"#;
+        assert_eq!(json_uint(t, "n_params"), Some(123456));
+        assert_eq!(json_uint(t, "vocab"), Some(256));
+        assert_eq!(json_uint(t, "missing"), None);
+    }
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let t = r#"{"model": {"vocab": 256, "d_model": 128, "n_layers": 4,
+            "n_heads": 8, "n_kv_heads": 4, "d_ff": 352, "seq": 64, "batch": 8},
+            "hyper": {"total_steps": 400}, "n_params": 999}"#;
+        let m = Manifest::parse(t).unwrap();
+        assert_eq!(m.n_params, 999);
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.total_steps, 400);
+    }
+}

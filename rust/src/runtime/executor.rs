@@ -1,0 +1,104 @@
+//! Compiled-executable wrappers: TrainStep and EvalStep hold a PJRT
+//! executable compiled from HLO text and expose typed step functions.
+//!
+//! Signature contract with python/compile/aot.py:
+//!   train: (theta[n] f32, m[n] f32, v[n] f32, tokens[b,s] i32,
+//!           targets[b,s] i32, step i32) -> tuple(theta', m', v', loss)
+//!   eval:  (theta[n], tokens, targets) -> tuple(loss)
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Mutable training state round-tripped through the device each step.
+pub struct TrainState {
+    pub theta: xla::Literal,
+    pub m: xla::Literal,
+    pub v: xla::Literal,
+    pub step: i64,
+}
+
+impl TrainState {
+    /// Fresh state from the initial parameter vector (moments zeroed).
+    pub fn new(theta0: &[f32]) -> Self {
+        let zeros = vec![0.0f32; theta0.len()];
+        TrainState {
+            theta: xla::Literal::vec1(theta0),
+            m: xla::Literal::vec1(&zeros),
+            v: xla::Literal::vec1(&zeros),
+            step: 0,
+        }
+    }
+
+    /// Copy the current parameters back to host.
+    pub fn theta_host(&self) -> Result<Vec<f32>> {
+        Ok(self.theta.to_vec::<f32>()?)
+    }
+}
+
+/// A compiled train-step executable.
+pub struct TrainStep {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Compile an HLO-text file on the given client.
+pub fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+impl TrainStep {
+    pub fn load(client: &xla::PjRtClient, path: &Path, batch: usize, seq: usize) -> Result<Self> {
+        Ok(TrainStep { exe: compile_hlo(client, path)?, batch, seq })
+    }
+
+    /// Run one optimizer step; updates `state` in place and returns the loss.
+    pub fn step(&self, state: &mut TrainState, tokens: &[u32], targets: &[u32]) -> Result<f32> {
+        let (b, s) = (self.batch as i64, self.seq as i64);
+        debug_assert_eq!(tokens.len(), (b * s) as usize);
+        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let tgts: Vec<i32> = targets.iter().map(|&t| t as i32).collect();
+        let tok_lit = xla::Literal::vec1(&toks).reshape(&[b, s])?;
+        let tgt_lit = xla::Literal::vec1(&tgts).reshape(&[b, s])?;
+        let step_lit = xla::Literal::scalar(state.step as i32);
+        let args: [&xla::Literal; 6] =
+            [&state.theta, &state.m, &state.v, &tok_lit, &tgt_lit, &step_lit];
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (theta, m, v, loss) = result.to_tuple4()?;
+        state.theta = theta;
+        state.m = m;
+        state.v = v;
+        state.step += 1;
+        Ok(loss.to_vec::<f32>()?[0])
+    }
+}
+
+/// A compiled eval executable.
+pub struct EvalStep {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl EvalStep {
+    pub fn load(client: &xla::PjRtClient, path: &Path, batch: usize, seq: usize) -> Result<Self> {
+        Ok(EvalStep { exe: compile_hlo(client, path)?, batch, seq })
+    }
+
+    pub fn loss(&self, theta: &xla::Literal, tokens: &[u32], targets: &[u32]) -> Result<f32> {
+        let (b, s) = (self.batch as i64, self.seq as i64);
+        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let tgts: Vec<i32> = targets.iter().map(|&t| t as i32).collect();
+        let tok_lit = xla::Literal::vec1(&toks).reshape(&[b, s])?;
+        let tgt_lit = xla::Literal::vec1(&tgts).reshape(&[b, s])?;
+        let args: [&xla::Literal; 3] = [theta, &tok_lit, &tgt_lit];
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let loss = result.to_tuple1()?;
+        Ok(loss.to_vec::<f32>()?[0])
+    }
+}
+

@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the Rust hot path. Python never runs here — `make artifacts` produced the
+//! HLO once; this module compiles it with the in-process XLA CPU client and
+//! drives training/eval entirely from Rust.
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{ArtifactStore, Manifest};
+pub use executor::{EvalStep, TrainState, TrainStep};

@@ -1,0 +1,365 @@
+//! `Mat`: dense row-major f32 matrix.
+//!
+//! The GeMM here is the performance-critical primitive of the whole Rust
+//! simulator (every quantized forward/backward GeMM in the model lowers to
+//! it), so it is written as a blocked, transpose-aware kernel that the
+//! compiler auto-vectorizes well on a single core. See EXPERIMENTS.md §Perf.
+
+use super::rng::Rng;
+
+/// Dense row-major matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with a constant.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Build from an existing buffer (length must be rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_vec: size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Gaussian-initialized matrix, N(0, std²).
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    /// Uniform-initialized matrix, U[lo, hi).
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_uniform(&mut m.data, lo, hi);
+        m
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness on large mats
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                let imax = (i0 + B).min(self.rows);
+                let jmax = (j0 + B).min(self.cols);
+                for i in i0..imax {
+                    for j in j0..jmax {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// C = A · B (blocked ikj kernel; B is walked row-wise so the inner loop
+    /// is a contiguous fused multiply-add the compiler vectorizes).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul: {}x{} · {}x{}", self.rows, self.cols, b.rows, b.cols);
+        let mut c = Mat::zeros(self.rows, b.cols);
+        matmul_into(self, b, &mut c, false);
+        c
+    }
+
+    /// C = A · Bᵀ without materializing Bᵀ.
+    pub fn matmul_bt(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_bt: inner dims");
+        let mut c = Mat::zeros(self.rows, b.rows);
+        let (m, k, n) = (self.rows, self.cols, b.rows);
+        for i in 0..m {
+            let arow = self.row(i);
+            let crow = c.row_mut(i);
+            for j in 0..n {
+                let brow = b.row(j);
+                let mut acc = 0.0f32;
+                // contiguous dot product — vectorizes
+                for t in 0..k {
+                    acc += arow[t] * brow[t];
+                }
+                crow[j] = acc;
+            }
+        }
+        c
+    }
+
+    /// C = Aᵀ · B without materializing Aᵀ.
+    pub fn matmul_at(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "matmul_at: inner dims");
+        let (k, m, n) = (self.rows, self.cols, b.cols);
+        let mut c = Mat::zeros(m, n);
+        for t in 0..k {
+            let arow = self.row(t);
+            let brow = b.row(t);
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += a * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// Column means: μ[j] = (1/rows) Σ_i A[i,j]  (the Averis primitive).
+    pub fn col_mean(&self) -> Vec<f32> {
+        let mut mu = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (m, &v) in mu.iter_mut().zip(row.iter()) {
+                *m += v;
+            }
+        }
+        let inv = 1.0 / self.rows as f32;
+        for m in mu.iter_mut() {
+            *m *= inv;
+        }
+        mu
+    }
+
+    /// Subtract a row vector from every row: A[i,·] -= v.
+    pub fn sub_row_vec(&mut self, v: &[f32]) {
+        assert_eq!(v.len(), self.cols);
+        for i in 0..self.rows {
+            let row = self.row_mut(i);
+            for (r, &x) in row.iter_mut().zip(v.iter()) {
+                *r -= x;
+            }
+        }
+    }
+
+    /// Add a row vector to every row: A[i,·] += v.
+    pub fn add_row_vec(&mut self, v: &[f32]) {
+        assert_eq!(v.len(), self.cols);
+        for i in 0..self.rows {
+            let row = self.row_mut(i);
+            for (r, &x) in row.iter_mut().zip(v.iter()) {
+                *r += x;
+            }
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Max |x|.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    /// Elementwise map into a new matrix.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// a += s * b (axpy).
+    pub fn axpy(&mut self, s: f32, b: &Mat) {
+        assert_eq!(self.numel(), b.numel());
+        for (x, &y) in self.data.iter_mut().zip(b.data.iter()) {
+            *x += s * y;
+        }
+    }
+
+    /// Elementwise product into a new matrix.
+    pub fn hadamard_prod(&self, b: &Mat) -> Mat {
+        assert_eq!(self.numel(), b.numel());
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(b.data.iter()).map(|(&x, &y)| x * y).collect(),
+        }
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, s: f32) {
+        for x in self.data.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    /// Extract a contiguous row slice as a new Mat.
+    pub fn rows_slice(&self, start: usize, count: usize) -> Mat {
+        assert!(start + count <= self.rows);
+        Mat {
+            rows: count,
+            cols: self.cols,
+            data: self.data[start * self.cols..(start + count) * self.cols].to_vec(),
+        }
+    }
+}
+
+/// Core blocked GeMM: C (+)= A·B. `accumulate=false` assumes C is zeroed.
+///
+/// ikj ordering: for each (i, k) the inner j-loop is `C[i,·] += A[i,k]·B[k,·]`
+/// over contiguous rows of B and C — a pure FMA stream. Blocking over k keeps
+/// the active rows of B in L1/L2.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    if !accumulate {
+        c.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    const KB: usize = 64;
+    for k0 in (0..k).step_by(KB) {
+        let kmax = (k0 + KB).min(k);
+        for i in 0..m {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for t in k0..kmax {
+                let av = arow[t];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[t * n..(t + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: &Mat, b: &Mat, tol: f32) {
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.cols, b.cols);
+        for (x, y) in a.data.iter().zip(b.data.iter()) {
+            assert!((x - y).abs() <= tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_vec(2, 2, vec![1., 1., 1., 1.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_vs_naive_random() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[(3usize, 5usize, 7usize), (17, 33, 9), (64, 64, 64), (1, 100, 1)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let c = a.matmul(&b);
+            // naive reference
+            let mut r = Mat::zeros(m, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0.0f64;
+                    for t in 0..k {
+                        s += a.at(i, t) as f64 * b.at(t, j) as f64;
+                    }
+                    *r.at_mut(i, j) = s as f32;
+                }
+            }
+            approx(&c, &r, 1e-3 * k as f32);
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(9, 13, 1.0, &mut rng);
+        let b = Mat::randn(7, 13, 1.0, &mut rng);
+        approx(&a.matmul_bt(&b), &a.matmul(&b.transpose()), 1e-3);
+    }
+
+    #[test]
+    fn matmul_at_matches_explicit_transpose() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(13, 9, 1.0, &mut rng);
+        let b = Mat::randn(13, 7, 1.0, &mut rng);
+        approx(&a.matmul_at(&b), &a.transpose().matmul(&b), 1e-3);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(37, 53, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn col_mean_and_centering() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 3., 4., 5.]);
+        let mu = a.col_mean();
+        assert_eq!(mu, vec![2., 3., 4.]);
+        let mut r = a.clone();
+        r.sub_row_vec(&mu);
+        let mu2 = r.col_mean();
+        for m in mu2 {
+            assert!(m.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fro_norm_eye() {
+        let e = Mat::eye(16);
+        assert!((e.fro_norm() - 4.0).abs() < 1e-6);
+    }
+}

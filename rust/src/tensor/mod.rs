@@ -1,0 +1,12 @@
+//! Dense row-major f32 matrix/tensor substrate.
+//!
+//! The offline build image has no `ndarray`/`nalgebra`, so the whole numeric
+//! stack (quantizers, the pure-Rust Transformer simulator, the analysis
+//! pipeline) is built on this small, fast, allocation-conscious module.
+
+pub mod mat;
+pub mod ops;
+pub mod rng;
+
+pub use mat::Mat;
+pub use rng::Rng;

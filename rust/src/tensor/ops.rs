@@ -1,0 +1,235 @@
+//! Elementwise / reduction helpers shared across the stack.
+
+use super::Mat;
+
+/// Numerically-stable softmax over the last axis, in place.
+pub fn softmax_rows(m: &mut Mat) {
+    for i in 0..m.rows {
+        let row = m.row_mut(i);
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - mx).exp();
+            sum += *x;
+        }
+        let inv = 1.0 / sum;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// SiLU (swish): x * sigmoid(x).
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// d/dx SiLU.
+#[inline]
+pub fn silu_grad(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// GeLU (tanh approximation).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)) as f32).tanh())
+}
+
+/// Cross-entropy loss + dlogits for a batch of rows of logits against
+/// integer targets. Returns (mean_loss, grad) where grad = softmax - onehot,
+/// scaled by 1/rows.
+pub fn cross_entropy(logits: &Mat, targets: &[u32]) -> (f32, Mat) {
+    assert_eq!(logits.rows, targets.len());
+    let mut grad = logits.clone();
+    softmax_rows(&mut grad);
+    let mut loss = 0.0f64;
+    let inv = 1.0 / logits.rows as f32;
+    for i in 0..logits.rows {
+        let t = targets[i] as usize;
+        let p = grad.at(i, t).max(1e-12);
+        loss -= (p as f64).ln();
+        let row = grad.row_mut(i);
+        row[t] -= 1.0;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+    ((loss / logits.rows as f64) as f32, grad)
+}
+
+/// Relative L2 error ‖a−b‖_F / ‖b‖_F (b is the reference).
+pub fn rel_error(a: &Mat, b: &Mat) -> f32 {
+    assert_eq!(a.numel(), b.numel());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in a.data.iter().zip(b.data.iter()) {
+        num += ((x - y) as f64).powi(2);
+        den += (y as f64).powi(2);
+    }
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f32::INFINITY };
+    }
+    (num / den).sqrt() as f32
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64) as f32
+}
+
+/// Sample standard deviation of a slice.
+pub fn std_dev(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs) as f64;
+    let v = xs.iter().map(|&x| ((x as f64) - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+    v.sqrt() as f32
+}
+
+/// p-th percentile (0..=100) of a slice (copies + sorts).
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Median of a slice.
+pub fn median(xs: &[f32]) -> f32 {
+    percentile(xs, 50.0)
+}
+
+/// Cosine similarity of two vectors.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let (mut ab, mut aa, mut bb) = (0.0f64, 0.0f64, 0.0f64);
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        ab += x as f64 * y as f64;
+        aa += x as f64 * x as f64;
+        bb += y as f64 * y as f64;
+    }
+    if aa == 0.0 || bb == 0.0 {
+        return 0.0;
+    }
+    (ab / (aa.sqrt() * bb.sqrt())) as f32
+}
+
+/// L2 norm of a vector.
+pub fn l2_norm(a: &[f32]) -> f32 {
+    a.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// Histogram of values into `bins` equal-width bins over [lo, hi].
+/// Returns (bin_edges, counts). Values outside clamp to end bins.
+pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> (Vec<f32>, Vec<usize>) {
+    assert!(bins > 0 && hi > lo);
+    let mut counts = vec![0usize; bins];
+    let w = (hi - lo) / bins as f32;
+    for &x in xs {
+        let mut b = ((x - lo) / w) as isize;
+        if b < 0 {
+            b = 0;
+        }
+        if b >= bins as isize {
+            b = bins as isize - 1;
+        }
+        counts[b as usize] += 1;
+    }
+    let edges = (0..=bins).map(|i| lo + w * i as f32).collect();
+    (edges, counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(1);
+        let mut m = Mat::randn(5, 9, 3.0, &mut rng);
+        softmax_rows(&mut m);
+        for i in 0..5 {
+            let s: f32 = m.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(m.row(i).iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn cross_entropy_uniform_logits() {
+        let logits = Mat::zeros(4, 10);
+        let (loss, grad) = cross_entropy(&logits, &[0, 1, 2, 3]);
+        assert!((loss - (10f32).ln()).abs() < 1e-5);
+        // gradient rows sum to zero
+        for i in 0..4 {
+            let s: f32 = grad.row(i).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cross_entropy_grad_matches_finite_diff() {
+        let mut rng = Rng::new(9);
+        let logits = Mat::randn(3, 7, 1.0, &mut rng);
+        let targets = [2u32, 0, 5];
+        let (_, grad) = cross_entropy(&logits, &targets);
+        let eps = 1e-3f32;
+        for idx in [0usize, 5, 10, 20] {
+            let mut lp = logits.clone();
+            lp.data[idx] += eps;
+            let (l1, _) = cross_entropy(&lp, &targets);
+            let mut lm = logits.clone();
+            lm.data[idx] -= eps;
+            let (l2, _) = cross_entropy(&lm, &targets);
+            let fd = (l1 - l2) / (2.0 * eps);
+            assert!((fd - grad.data[idx]).abs() < 1e-2, "fd {fd} vs {}", grad.data[idx]);
+        }
+    }
+
+    #[test]
+    fn silu_grad_finite_diff() {
+        for &x in &[-3.0f32, -0.5, 0.0, 1.2, 4.0] {
+            let eps = 1e-3;
+            let fd = (silu(x + eps) - silu(x - eps)) / (2.0 * eps);
+            assert!((fd - silu_grad(x)).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn percentile_median() {
+        let xs = [5.0f32, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn cosine_orthogonal_and_parallel() {
+        assert!((cosine(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-7);
+        assert!((cosine(&[1.0, 2.0], &[2.0, 4.0]) - 1.0).abs() < 1e-6);
+        assert!((cosine(&[1.0, 2.0], &[-2.0, -4.0]) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [0.1f32, 0.2, 0.9, 0.5, -1.0, 2.0];
+        let (_edges, counts) = histogram(&xs, 0.0, 1.0, 2);
+        assert_eq!(counts.iter().sum::<usize>(), xs.len());
+    }
+
+    #[test]
+    fn rel_error_zero_for_identical() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(4, 4, 1.0, &mut rng);
+        assert_eq!(rel_error(&a, &a), 0.0);
+    }
+}

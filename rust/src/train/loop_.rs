@@ -1,0 +1,217 @@
+//! The simulator training loop: drives the pure-Rust Transformer with a
+//! quantization recipe, AdamW, LR schedule, gradient clipping, periodic
+//! held-out evaluation, and optional activation-capture checkpoints for the
+//! analysis pipeline.
+
+use super::optimizer::{clip_global_norm, AdamW, AdamWConfig};
+use super::schedule::LrSchedule;
+use crate::data::Batcher;
+use crate::model::{ModelConfig, Params, Taps, Transformer};
+use crate::quant::QuantRecipe;
+use crate::tensor::Rng;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub steps: u64,
+    pub batch: usize,
+    pub seq: usize,
+    pub peak_lr: f32,
+    pub grad_clip: f32,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub seed: u64,
+    /// capture activation taps at these steps (fractions of total, e.g. the
+    /// paper's "early/late checkpoint" instrumentation)
+    pub tap_steps: [bool; 2], // [early(5%), late(95%)]
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 200,
+            batch: 8,
+            seq: 64,
+            peak_lr: 3e-3,
+            grad_clip: 1.0,
+            eval_every: 25,
+            eval_batches: 4,
+            seed: 1234,
+            tap_steps: [false, false],
+        }
+    }
+}
+
+/// Everything a training run produces.
+pub struct TrainResult {
+    pub recipe: QuantRecipe,
+    /// (step, train loss)
+    pub loss_curve: Vec<(u64, f32)>,
+    /// (step, held-out loss)
+    pub eval_curve: Vec<(u64, f32)>,
+    pub final_train_loss: f32,
+    pub final_eval_loss: f32,
+    pub params: Params,
+    /// captured taps: (label, taps) — "early" at 5% of steps, "late" at 95%
+    pub taps: Vec<(String, Taps)>,
+    pub wall_seconds: f64,
+    /// mean seconds per optimizer step (for the Table-3-style comparison)
+    pub sec_per_step: f64,
+}
+
+/// Train a model from scratch with the given recipe.
+pub fn train(
+    model_cfg: ModelConfig,
+    recipe: QuantRecipe,
+    cfg: TrainConfig,
+    train_tokens: Vec<u32>,
+    heldout_tokens: Vec<u32>,
+) -> TrainResult {
+    let mut init_rng = Rng::new(cfg.seed); // same init across recipes
+    let mut params = Params::init(&model_cfg, &mut init_rng);
+    let mut model = Transformer::new(model_cfg, recipe, cfg.seed ^ 0xA5A5);
+    let mut opt = AdamW::new(&params, AdamWConfig::default());
+    let sched = LrSchedule::new(cfg.peak_lr, cfg.steps);
+    let mut batcher = Batcher::new(train_tokens, cfg.batch, cfg.seq, cfg.seed ^ 0x77);
+    let eval_batcher = Batcher::new(heldout_tokens, cfg.batch, cfg.seq, 0);
+    let eval_set = eval_batcher.eval_batches(cfg.eval_batches);
+
+    let early_step = (cfg.steps / 20).max(1);
+    let late_step = cfg.steps.saturating_sub(cfg.steps / 20).max(early_step + 1);
+
+    let mut loss_curve = Vec::new();
+    let mut eval_curve = Vec::new();
+    let mut captured: Vec<(String, Taps)> = Vec::new();
+    let t0 = Instant::now();
+    let mut ema: Option<f32> = None;
+
+    for step in 0..cfg.steps {
+        let (inputs, targets) = batcher.next_batch();
+        let capture = (cfg.tap_steps[0] && step == early_step)
+            || (cfg.tap_steps[1] && step == late_step);
+        let mut taps = if capture { Taps::enabled() } else { Taps::disabled() };
+        let (logits, cache) = model.forward(&params, &inputs, cfg.batch, cfg.seq, &mut taps);
+        let (loss, mut grads) = model.loss_and_backward(
+            &params, &cache, &logits, &targets, cfg.batch, cfg.seq, &mut taps,
+        );
+        if capture {
+            let label = if step == early_step { "early" } else { "late" };
+            captured.push((label.to_string(), taps));
+        }
+        clip_global_norm(&mut grads, cfg.grad_clip);
+        opt.update(&mut params, &mut grads, sched.lr_at(step));
+        ema = Some(match ema {
+            None => loss,
+            Some(e) => 0.95 * e + 0.05 * loss,
+        });
+        loss_curve.push((step, loss));
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            let ev = evaluate(&mut model, &params, &eval_set, cfg.batch, cfg.seq);
+            eval_curve.push((step, ev));
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let final_eval = evaluate(&mut model, &params, &eval_set, cfg.batch, cfg.seq);
+    eval_curve.push((cfg.steps, final_eval));
+    TrainResult {
+        recipe,
+        final_train_loss: ema.unwrap_or(f32::NAN),
+        final_eval_loss: final_eval,
+        loss_curve,
+        eval_curve,
+        params,
+        taps: captured,
+        wall_seconds: wall,
+        sec_per_step: wall / cfg.steps.max(1) as f64,
+    }
+}
+
+/// Mean held-out loss over a fixed eval set.
+pub fn evaluate(
+    model: &mut Transformer,
+    params: &Params,
+    eval_set: &[(Vec<u32>, Vec<u32>)],
+    batch: usize,
+    seq: usize,
+) -> f32 {
+    if eval_set.is_empty() {
+        return f32::NAN;
+    }
+    let mut acc = 0.0f64;
+    for (x, y) in eval_set {
+        acc += model.eval_loss(params, x, y, batch, seq) as f64;
+    }
+    (acc / eval_set.len() as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Corpus, CorpusConfig};
+
+    fn mini_corpus() -> Corpus {
+        Corpus::generate(CorpusConfig { tokens: 1 << 14, vocab: 64, ..Default::default() }, 5)
+    }
+
+    #[test]
+    fn short_bf16_run_reduces_loss() {
+        let c = mini_corpus();
+        let cfg = TrainConfig { steps: 30, batch: 4, seq: 16, eval_every: 0, ..Default::default() };
+        let r = train(
+            ModelConfig::test_tiny(64),
+            QuantRecipe::Bf16,
+            cfg,
+            c.train.clone(),
+            c.heldout.clone(),
+        );
+        let first = r.loss_curve.first().unwrap().1;
+        let last = r.final_train_loss;
+        assert!(last < first, "loss should drop: {first} → {last}");
+        assert!(r.final_eval_loss.is_finite());
+    }
+
+    #[test]
+    fn taps_captured_at_requested_checkpoints() {
+        let c = mini_corpus();
+        let cfg = TrainConfig {
+            steps: 24,
+            batch: 2,
+            seq: 16,
+            eval_every: 0,
+            tap_steps: [true, true],
+            ..Default::default()
+        };
+        let r = train(
+            ModelConfig::test_tiny(64),
+            QuantRecipe::Bf16,
+            cfg,
+            c.train.clone(),
+            c.heldout.clone(),
+        );
+        assert_eq!(r.taps.len(), 2);
+        assert_eq!(r.taps[0].0, "early");
+        assert_eq!(r.taps[1].0, "late");
+        assert!(!r.taps[0].1.is_empty());
+    }
+
+    #[test]
+    fn same_seed_same_curve() {
+        let c = mini_corpus();
+        let cfg = TrainConfig { steps: 10, batch: 2, seq: 16, eval_every: 0, ..Default::default() };
+        let r1 = train(
+            ModelConfig::test_tiny(64),
+            QuantRecipe::Nvfp4,
+            cfg,
+            c.train.clone(),
+            c.heldout.clone(),
+        );
+        let r2 = train(
+            ModelConfig::test_tiny(64),
+            QuantRecipe::Nvfp4,
+            cfg,
+            c.train.clone(),
+            c.heldout.clone(),
+        );
+        assert_eq!(r1.loss_curve, r2.loss_curve);
+    }
+}

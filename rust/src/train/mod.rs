@@ -1,0 +1,11 @@
+//! Training substrate: AdamW optimizer, LR schedule, gradient clipping, and
+//! the single-process training loop over the pure-Rust simulator.
+//! (The PJRT-artifact training loop lives in `coordinator`.)
+
+pub mod loop_;
+pub mod optimizer;
+pub mod schedule;
+
+pub use loop_::{train, TrainConfig, TrainResult};
+pub use optimizer::{AdamW, AdamWConfig};
+pub use schedule::LrSchedule;

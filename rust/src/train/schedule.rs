@@ -1,0 +1,65 @@
+//! Learning-rate schedule: linear warmup → cosine decay to a floor
+//! (the standard LLM-pretraining schedule the paper's runs use).
+
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub peak_lr: f32,
+    pub min_lr: f32,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+}
+
+impl LrSchedule {
+    pub fn new(peak_lr: f32, total_steps: u64) -> Self {
+        LrSchedule {
+            peak_lr,
+            min_lr: peak_lr * 0.1,
+            warmup_steps: (total_steps / 20).max(1),
+            total_steps,
+        }
+    }
+
+    /// LR at a given (0-indexed) step.
+    pub fn lr_at(&self, step: u64) -> f32 {
+        if step < self.warmup_steps {
+            return self.peak_lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        if step >= self.total_steps {
+            return self.min_lr;
+        }
+        let progress =
+            (step - self.warmup_steps) as f32 / (self.total_steps - self.warmup_steps) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        self.min_lr + (self.peak_lr - self.min_lr) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_to_peak() {
+        let s = LrSchedule::new(1e-3, 100);
+        assert!(s.lr_at(0) < 1e-3);
+        assert!((s.lr_at(s.warmup_steps) - 1e-3).abs() / 1e-3 < 0.02);
+    }
+
+    #[test]
+    fn decays_to_min() {
+        let s = LrSchedule::new(1e-3, 100);
+        assert!((s.lr_at(99) - s.min_lr) / s.min_lr < 0.1);
+        assert_eq!(s.lr_at(1000), s.min_lr);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = LrSchedule::new(3e-4, 200);
+        let mut prev = s.lr_at(s.warmup_steps);
+        for step in (s.warmup_steps + 1)..200 {
+            let lr = s.lr_at(step);
+            assert!(lr <= prev + 1e-9);
+            prev = lr;
+        }
+    }
+}

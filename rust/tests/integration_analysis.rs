@@ -1,0 +1,122 @@
+//! Analysis-pipeline integration: run an instrumented training run and check
+//! that the paper's qualitative §2 phenomenology emerges in OUR model — the
+//! strongest end-to-end claim of the analysis reproduction.
+
+use averis::analysis::attribution::outlier_attribution;
+use averis::analysis::gaussian_fit::raw_vs_residual;
+use averis::analysis::meanbias::{mean_bias_report, mean_bias_ratio};
+use averis::analysis::operator_trace::operator_trace;
+use averis::analysis::tails::raw_vs_residual_tails;
+use averis::analysis::variance::diagonal_variance_check;
+use averis::data::{Corpus, CorpusConfig};
+use averis::model::{ModelConfig, TapStage};
+use averis::quant::QuantRecipe;
+use averis::tensor::Rng;
+use averis::train::{train, TrainConfig};
+
+/// One shared instrumented run for all checks (train once, assert many).
+fn instrumented() -> (averis::train::TrainResult, ModelConfig) {
+    let corpus = Corpus::generate(
+        CorpusConfig { tokens: 1 << 15, vocab: 128, ..Default::default() },
+        0xAB,
+    );
+    let cfg = ModelConfig::test_tiny(128);
+    let tc = TrainConfig {
+        steps: 60,
+        batch: 4,
+        seq: 32,
+        eval_every: 0,
+        tap_steps: [true, true],
+        ..Default::default()
+    };
+    (train(cfg, QuantRecipe::Bf16, tc, corpus.train, corpus.heldout), cfg)
+}
+
+#[test]
+fn mean_bias_phenomenology_emerges_in_training() {
+    let (result, cfg) = instrumented();
+    let early = &result.taps[0].1;
+    let late = &result.taps[1].1;
+
+    // (Fig. 2) mean-bias ratio R grows from early to late somewhere in depth
+    let mut grew = false;
+    for layer in 0..cfg.n_layers {
+        let re = mean_bias_ratio(early.get(layer, TapStage::FfnInput).unwrap());
+        let rl = mean_bias_ratio(late.get(layer, TapStage::FfnInput).unwrap());
+        if rl > re {
+            grew = true;
+        }
+    }
+    assert!(grew, "R should grow during training in at least one layer");
+
+    // (Fig. 1C) the mean direction couples to the top singular direction
+    let x = late.get(cfg.n_layers - 1, TapStage::FfnInput).unwrap();
+    let mut rng = Rng::new(1);
+    let rep = mean_bias_report(x, 3, &mut rng);
+    assert!(
+        rep.mu_vk_cos[0] > rep.mu_vk_cos[1],
+        "mu should align with v1 more than v2: {:?}",
+        rep.mu_vk_cos
+    );
+
+    // (Fig. 5) Gaussianity stats are well-defined on real activations; the
+    // raw-vs-residual *ordering* needs the strong late-stage bias regime the
+    // paper instruments (hundreds of thousands of steps) — at this miniature
+    // scale we assert the diagnostics themselves, and the regime-conditional
+    // ordering is covered by analysis::gaussian_fit unit tests.
+    let (raw, res) = raw_vs_residual(x);
+    assert!(raw.excess_kurtosis.is_finite() && res.excess_kurtosis.is_finite());
+    assert!(raw.std > 0.0 && res.std > 0.0);
+
+    // (App. C) mean removal does not inflate the tail
+    let (traw, tres) = raw_vs_residual_tails(x);
+    assert!(tres.amax <= traw.amax * 1.05);
+
+    // (Fig. 4) attribution is well-defined on real activations
+    let a = outlier_attribution(x, 0.001);
+    assert!(a.median_mean_share >= 0.0 && a.median_mean_share <= 4.0);
+    assert!(!a.mean_shares.is_empty());
+}
+
+#[test]
+fn operator_trace_covers_chain_on_real_model() {
+    let (result, cfg) = instrumented();
+    let late = &result.taps[1].1;
+    let trace = operator_trace(late, cfg.n_layers);
+    assert_eq!(trace.len(), cfg.n_layers * TapStage::FORWARD_CHAIN.len());
+    // adjacent-stage mean cosines are proper cosines
+    for p in &trace {
+        assert!(p.mean_cos_prev <= 1.0 + 1e-5 && p.mean_cos_prev >= -1.0 - 1e-5);
+    }
+}
+
+#[test]
+fn diagonal_variance_approximation_on_real_activations() {
+    let (result, cfg) = instrumented();
+    let late = &result.taps[1].1;
+    let x = late.get(cfg.n_layers - 1, TapStage::FfnInput).unwrap();
+    let x = x.rows_slice(0, x.rows.min(96));
+    let c = diagonal_variance_check(&x);
+    // App. B: cross-terms small (paper: median 0.006, p95 0.036 — we allow a
+    // looser bound at miniature scale)
+    assert!(c.median_cross < 0.4, "median cross {}", c.median_cross);
+}
+
+#[test]
+fn gradient_taps_support_app_d() {
+    let (result, cfg) = instrumented();
+    let late = &result.taps[1].1;
+    let quant = averis::quant::Nvfp4Quantizer::nvfp4();
+    let mut any = false;
+    for layer in 0..cfg.n_layers {
+        if let Some(d) = late.get(layer, TapStage::FfnOutputGrad) {
+            let (plain, centered) = averis::quant::averis::split_vs_plain_error(d, &quant);
+            assert!(plain.is_finite() && centered.is_finite());
+            // paper: centering helps only slightly for gradients; assert it
+            // does not catastrophically hurt
+            assert!(centered < plain * 1.5, "layer {layer}: {centered} vs {plain}");
+            any = true;
+        }
+    }
+    assert!(any, "no gradient taps captured");
+}

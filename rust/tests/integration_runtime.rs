@@ -1,0 +1,86 @@
+//! PJRT runtime integration: compile-and-run the AOT artifacts end to end.
+//! These tests are gated on `artifacts/manifest.json` existing (run
+//! `make artifacts` first); they are skipped gracefully otherwise so that
+//! `cargo test` works on a fresh checkout. The BF16 artifact is used —
+//! the quantized HLOs take minutes to XLA-compile on one core and are
+//! exercised by examples/train_e2e.rs instead.
+
+use averis::data::{Batcher, Corpus, CorpusConfig};
+use averis::quant::QuantRecipe;
+use averis::runtime::{ArtifactStore, EvalStep, TrainState, TrainStep};
+
+fn store() -> Option<ArtifactStore> {
+    ArtifactStore::open("artifacts").ok()
+}
+
+#[test]
+fn manifest_parses_and_lists_artifacts() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let m = &store.manifest;
+    assert!(m.n_params > 0);
+    assert_eq!(m.vocab, 256);
+    assert!(store.train_hlo(QuantRecipe::Bf16).is_ok());
+    assert!(store.eval_hlo(QuantRecipe::Averis).is_ok());
+    let theta = store.theta0().unwrap();
+    assert_eq!(theta.len(), m.n_params);
+    // init params look like random init, not zeros
+    let norm: f32 = theta.iter().map(|v| v * v).sum::<f32>().sqrt();
+    assert!(norm > 1.0, "theta0 norm {norm}");
+}
+
+#[test]
+fn bf16_train_step_descends_via_pjrt() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let m = &store.manifest;
+    let train =
+        TrainStep::load(&client, &store.train_hlo(QuantRecipe::Bf16).unwrap(), m.batch, m.seq)
+            .unwrap();
+    let corpus = Corpus::generate(
+        CorpusConfig { vocab: m.vocab, tokens: 1 << 15, ..Default::default() },
+        7,
+    );
+    let mut batcher = Batcher::new(corpus.train, m.batch, m.seq, 3);
+    let mut state = TrainState::new(&store.theta0().unwrap());
+    // overfit a single repeated batch: loss must drop monotonically-ish
+    let (x, y) = batcher.next_batch();
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        losses.push(train.step(&mut state, &x, &y).unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+    assert!(
+        losses.last().unwrap() < &(losses[0] - 0.05),
+        "PJRT loss did not descend: {losses:?}"
+    );
+    assert_eq!(state.step, 6);
+}
+
+#[test]
+fn bf16_eval_step_matches_training_loss_scale() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let m = &store.manifest;
+    let eval =
+        EvalStep::load(&client, &store.eval_hlo(QuantRecipe::Bf16).unwrap(), m.batch, m.seq)
+            .unwrap();
+    let state = TrainState::new(&store.theta0().unwrap());
+    let corpus = Corpus::generate(
+        CorpusConfig { vocab: m.vocab, tokens: 1 << 15, ..Default::default() },
+        9,
+    );
+    let batcher = Batcher::new(corpus.heldout, m.batch, m.seq, 0);
+    let (x, y) = &batcher.eval_batches(1)[0];
+    let loss = eval.loss(&state.theta, x, y).unwrap();
+    // untrained model on 256-vocab ≈ ln(256) = 5.55
+    assert!((loss - 5.545).abs() < 0.6, "initial eval loss {loss}");
+}
