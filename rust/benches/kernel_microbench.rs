@@ -1,35 +1,43 @@
 //! Hot-path microbenchmarks used by the §Perf optimization loop
 //! (EXPERIMENTS.md §Perf records before/after numbers from this bench):
 //! GeMM GFLOP/s, fused NVFP4 quantizer throughput, FWHT throughput,
-//! mean-split throughput, and the quantized-GeMM composite.
+//! mean-split throughput, the quantized-GeMM composite, and the
+//! fake-quant-f32 vs packed-code GEMM comparison (single-thread and
+//! threaded) that tracks the packed engine's speedup across sizes.
 //!
-//! Run: cargo bench --bench kernel_microbench
+//! Run: cargo bench --bench kernel_microbench [-- --threads N]
 
-use averis::bench_harness::{bench, BenchOpts, TablePrinter};
+use averis::bench_harness::{bench, threads_from_args, BenchOpts, TablePrinter};
 use averis::quant::averis::mean_residual_split_inplace;
-use averis::quant::hadamard::tiled_hadamard_inplace;
-use averis::quant::{Nvfp4Quantizer, QuantRecipe};
 use averis::quant::gemm::QuantGemm;
-use averis::tensor::{Mat, Rng};
+use averis::quant::hadamard::tiled_hadamard_inplace;
+use averis::quant::packed::packed_matmul;
+use averis::quant::{Nvfp4Quantizer, QuantRecipe};
+use averis::tensor::{parallel, Mat, Rng};
 
 fn main() {
+    let threads = threads_from_args();
     let mut rng = Rng::new(21);
     let opts = BenchOpts { warmup_iters: 2, iters: 8 };
-    let t = TablePrinter::new(&["kernel", "shape", "mean ms", "throughput"], &[24, 18, 10, 16]);
+    let t = TablePrinter::new(&["kernel", "shape", "mean ms", "throughput"], &[26, 18, 10, 16]);
 
-    // GeMM
+    // GeMM (f32), single-thread then threaded
     for &n in &[256usize, 512] {
         let a = Mat::randn(n, n, 1.0, &mut rng);
         let b = Mat::randn(n, n, 1.0, &mut rng);
-        let stats = bench(opts, || std::hint::black_box(a.matmul(&b)));
-        let gflops = 2.0 * (n as f64).powi(3) / (stats.mean() / 1e3) / 1e9;
-        t.row(&[
-            "matmul".into(),
-            format!("{n}x{n}x{n}"),
-            format!("{:.2}", stats.mean()),
-            format!("{gflops:.2} GFLOP/s"),
-        ]);
+        for (label, nt) in [("matmul@1", 1usize), ("matmul@auto", threads)] {
+            parallel::set_threads(nt);
+            let stats = bench(opts, || std::hint::black_box(a.matmul(&b)));
+            let gflops = 2.0 * (n as f64).powi(3) / (stats.mean() / 1e3) / 1e9;
+            t.row(&[
+                label.into(),
+                format!("{n}x{n}x{n}"),
+                format!("{:.2}", stats.mean()),
+                format!("{gflops:.2} GFLOP/s"),
+            ]);
+        }
     }
+    parallel::set_threads(0);
 
     // fused NVFP4 quantizer
     let x = Mat::randn(4096, 1024, 1.0, &mut rng);
@@ -42,6 +50,16 @@ fn main() {
     let gels = x.numel() as f64 / (stats.mean() / 1e3) / 1e9;
     t.row(&[
         "nvfp4 quant (fused)".into(),
+        "4096x1024".into(),
+        format!("{:.2}", stats.mean()),
+        format!("{gels:.2} Gelem/s"),
+    ]);
+
+    // packed quantize (store form: codes + scales, no f32 materialization)
+    let stats = bench(opts, || std::hint::black_box(quant.quantize_store(&x)));
+    let gels = x.numel() as f64 / (stats.mean() / 1e3) / 1e9;
+    t.row(&[
+        "nvfp4 quant (packed)".into(),
         "4096x1024".into(),
         format!("{:.2}", stats.mean()),
         format!("{gels:.2} Gelem/s"),
@@ -75,13 +93,73 @@ fn main() {
         format!("{gels:.2} Gelem/s"),
     ]);
 
-    // composite quantized GeMM per recipe
+    // fake-quant f32 GeMM vs packed-code GEMM across sizes: the seed
+    // baseline is the single-thread fake-quant path (quantize both
+    // operands, dequantize to f32, dense matmul); the packed engine packs
+    // both operands and multiplies codes directly. Both timings include
+    // their quantize passes.
+    println!();
+    let t2 = TablePrinter::new(
+        &["quantized GeMM", "shape", "mean ms", "vs fake@1"],
+        &[26, 18, 10, 16],
+    );
+    for &n in &[256usize, 512, 768] {
+        let xg = Mat::randn(n, n, 1.0, &mut rng);
+        let wg = Mat::randn(n, n, 0.1, &mut rng);
+
+        parallel::set_threads(1);
+        let fake1 = bench(opts, || {
+            let xq = quant.quantize_dequant_rows(&xg, None);
+            let wq = quant.quantize_dequant_cols(&wg, None);
+            std::hint::black_box(xq.matmul(&wq))
+        });
+        t2.row(&[
+            "fake-quant f32 @1".into(),
+            format!("{n}x{n}x{n}"),
+            format!("{:.2}", fake1.mean()),
+            "1.00x".into(),
+        ]);
+
+        // the W transpose stays inside the timing: the pipeline's Quantize
+        // stage pays it on every forward GeMM, so the packed numbers must too
+        let packed1 = bench(opts, || {
+            let xq = quant.quantize_store(&xg);
+            let wq = quant.quantize_store(&wg.transpose());
+            std::hint::black_box(packed_matmul(&xq, &wq))
+        });
+        t2.row(&[
+            "packed-code @1".into(),
+            format!("{n}x{n}x{n}"),
+            format!("{:.2}", packed1.mean()),
+            format!("{:.2}x", fake1.mean() / packed1.mean()),
+        ]);
+
+        parallel::set_threads(threads);
+        let packed_n = bench(opts, || {
+            let xq = quant.quantize_store(&xg);
+            let wq = quant.quantize_store(&wg.transpose());
+            std::hint::black_box(packed_matmul(&xq, &wq))
+        });
+        t2.row(&[
+            format!("packed-code @{threads}"),
+            format!("{n}x{n}x{n}"),
+            format!("{:.2}", packed_n.mean()),
+            format!("{:.2}x", fake1.mean() / packed_n.mean()),
+        ]);
+    }
+    parallel::set_threads(0);
+
+    // composite quantized GeMM per recipe (pipeline dispatch)
+    println!();
+    let t3 = TablePrinter::new(&["kernel", "shape", "mean ms", "throughput"], &[26, 18, 10, 16]);
     let xg = Mat::randn(512, 256, 1.0, &mut rng);
     let wg = Mat::randn(256, 128, 0.1, &mut rng);
-    for recipe in [QuantRecipe::Bf16, QuantRecipe::Nvfp4, QuantRecipe::Averis, QuantRecipe::Nvfp4Hadamard] {
+    for recipe in
+        [QuantRecipe::Bf16, QuantRecipe::Nvfp4, QuantRecipe::Averis, QuantRecipe::Nvfp4Hadamard]
+    {
         let mut g = QuantGemm::new(recipe, 1);
         let stats = bench(opts, || std::hint::black_box(g.forward(&xg, &wg)));
-        t.row(&[
+        t3.row(&[
             format!("qgemm fwd [{recipe}]"),
             "512x256x128".into(),
             format!("{:.2}", stats.mean()),

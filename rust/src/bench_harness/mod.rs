@@ -65,6 +65,23 @@ pub fn fmt_ms(v: f64) -> String {
     format!("{v:.4}")
 }
 
+/// Apply a `--threads N` flag from the bench binary's argv to the kernel
+/// thread knob (0 = auto) and return the resolved worker count. Bench
+/// binaries call this once at startup:
+/// `cargo bench --bench kernel_microbench -- --threads 4`.
+pub fn threads_from_args() -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--threads" {
+            if let Some(v) = it.next().and_then(|s| s.parse::<usize>().ok()) {
+                crate::tensor::parallel::set_threads(v);
+            }
+        }
+    }
+    crate::tensor::parallel::threads()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -53,6 +53,9 @@ COMMANDS:
               --recipe bf16|nvfp4|nvfp4-hadamard|averis|averis-hadamard|mxfp4|svd-split
               --model dense|moe|tiny      --steps N  --batch N  --seq N
               --engine sim|pjrt           --artifacts DIR  --out DIR
+              --threads N                 (kernel worker threads; 0 = auto.
+                                           deterministic: same seed, same
+                                           curve at any thread count)
               --config FILE               (key = value overrides)
   analyze     regenerate Figs. 1-5, App. B/C/D, Theorem-1 validation
               --steps N (instrumented training length)  --out DIR

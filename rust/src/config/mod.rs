@@ -100,6 +100,7 @@ pub fn apply_overrides(exp: &mut ExperimentConfig, file: &ConfigFile) -> Result<
             "grad_clip" => exp.train.grad_clip = v.parse().map_err(|e| format!("grad_clip: {e}"))?,
             "eval_every" => exp.train.eval_every = v.parse().map_err(|e| format!("eval_every: {e}"))?,
             "seed" => exp.train.seed = v.parse().map_err(|e| format!("seed: {e}"))?,
+            "threads" => exp.train.threads = v.parse().map_err(|e| format!("threads: {e}"))?,
             "vocab" => exp.corpus.vocab = v.parse().map_err(|e| format!("vocab: {e}"))?,
             "corpus_tokens" => exp.corpus.tokens = v.parse().map_err(|e| format!("corpus_tokens: {e}"))?,
             "recipe" => exp.recipe = v.parse()?,

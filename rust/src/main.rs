@@ -52,6 +52,9 @@ fn experiment_from_args(args: &CliArgs) -> Result<ExperimentConfig> {
     if let Some(v) = args.get_parse::<u64>("seed").map_err(anyhow::Error::msg)? {
         exp.train.seed = v;
     }
+    if let Some(v) = args.get_parse::<usize>("threads").map_err(anyhow::Error::msg)? {
+        exp.train.threads = v;
+    }
     if let Some(v) = args.get("out") {
         exp.out_dir = v.to_string();
     }

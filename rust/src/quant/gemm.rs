@@ -6,23 +6,37 @@
 //! layer, so a recipe change re-routes *all* GeMMs in fwd+bwd, exactly like
 //! the paper's W4A4G4 setting. The JAX/L2 implementation mirrors this module
 //! one-to-one (python/compile/model.py::quantized_gemm).
+//!
+//! Each recipe × GeMM kind lowers to a declarative [`QuantPipeline`] stage
+//! stack (Transform → Split → Quantize → Multiply → Correct) built once at
+//! construction; the engine here just owns the quantizer configs, the
+//! counter-based stochastic-rounding stream, and the auxiliary RNG, and
+//! feeds them to the stacks. The Multiply stage executes in the packed
+//! E2M1 domain (`quant::packed`) — bit-identical to the legacy fake-quant
+//! reference for RTNE operands, without materializing dequantized f32
+//! matrices.
 
-use super::averis::{averis_dgrad, averis_forward, averis_wgrad, mean_residual_split};
-use super::hadamard::{tiled_hadamard, tiled_hadamard_inplace};
+use super::hadamard::tiled_hadamard;
 use super::nvfp4::{Nvfp4Config, Nvfp4Quantizer};
+use super::pipeline::{GemmKind, QuantPipeline, StageCtx};
 use super::recipe::QuantRecipe;
-use super::svd_split::svd_split_forward;
+use super::sr::SrStream;
 use crate::tensor::{Mat, Rng};
 
 /// Hadamard tile size used by the NVIDIA-style baseline (paper Table 2).
 pub const HADAMARD_TILE: usize = 16;
 
-/// Quantized-GeMM engine: owns the quantizer configs and the SR stream.
+/// Quantized-GeMM engine: per-kind pipelines + quantizer configs + the SR
+/// ticket mint.
 pub struct QuantGemm {
     pub recipe: QuantRecipe,
+    fwd: QuantPipeline,
+    dgrad: QuantPipeline,
+    wgrad: QuantPipeline,
     fwd_quant: Nvfp4Quantizer,
     bwd_quant: Nvfp4Quantizer,
-    rng: Rng,
+    sr: SrStream,
+    aux_rng: Rng,
 }
 
 impl QuantGemm {
@@ -33,117 +47,65 @@ impl QuantGemm {
         };
         QuantGemm {
             recipe,
+            fwd: QuantPipeline::for_recipe(recipe, GemmKind::Forward),
+            dgrad: QuantPipeline::for_recipe(recipe, GemmKind::Dgrad),
+            wgrad: QuantPipeline::for_recipe(recipe, GemmKind::Wgrad),
             fwd_quant: Nvfp4Quantizer::new(fwd_cfg),
             bwd_quant: Nvfp4Quantizer::new(bwd_cfg),
-            rng: Rng::new(seed),
+            sr: SrStream::new(seed),
+            aux_rng: Rng::new(seed ^ 0x5D50_F27A),
+        }
+    }
+
+    /// The stage stack of one GeMM kind, e.g.
+    /// `"mean_split→quantize→multiply_packed→mean_correct"`.
+    pub fn describe(&self, kind: GemmKind) -> String {
+        match kind {
+            GemmKind::Forward => self.fwd.describe(),
+            GemmKind::Dgrad => self.dgrad.describe(),
+            GemmKind::Wgrad => self.wgrad.describe(),
         }
     }
 
     /// Forward GeMM: Y = X·W with X (l×m), W (m×n).
     pub fn forward(&mut self, x: &Mat, w: &Mat) -> Mat {
-        match self.recipe {
-            QuantRecipe::Bf16 => x.matmul(w),
-            QuantRecipe::Nvfp4 | QuantRecipe::Mxfp4 => {
-                let xq = self.fwd_quant.quantize_dequant_rows(x, None);
-                let wq = self.fwd_quant.quantize_dequant_cols(w, None);
-                xq.matmul(&wq)
-            }
-            QuantRecipe::Nvfp4Hadamard => {
-                // rotate both operands along K, quantize, multiply — the
-                // rotation cancels in the product but smooths outliers first.
-                // K not tileable (e.g. an 8-wide MoE router): skip BOTH
-                // rotations (they must be paired or the product changes).
-                if x.cols % HADAMARD_TILE != 0 {
-                    let xq = self.fwd_quant.quantize_dequant_rows(x, None);
-                    let wq = self.fwd_quant.quantize_dequant_cols(w, None);
-                    return xq.matmul(&wq);
-                }
-                let xh = tiled_hadamard(x, HADAMARD_TILE);
-                let wh = tiled_hadamard(&w.transpose(), HADAMARD_TILE).transpose();
-                let xq = self.fwd_quant.quantize_dequant_rows(&xh, None);
-                let wq = self.fwd_quant.quantize_dequant_cols(&wh, None);
-                xq.matmul(&wq)
-            }
-            QuantRecipe::Averis => averis_forward(x, w, &self.fwd_quant, None),
-            QuantRecipe::AverisHadamard => {
-                if x.cols % HADAMARD_TILE != 0 {
-                    return averis_forward(x, w, &self.fwd_quant, None);
-                }
-                // Averis split first, then Hadamard smoothing on the residual
-                let (mu, mut xr) = mean_residual_split(x);
-                tiled_hadamard_inplace(&mut xr, HADAMARD_TILE);
-                let wh = tiled_hadamard(&w.transpose(), HADAMARD_TILE).transpose();
-                let mu_q = self.fwd_quant.quantize_dequant_vec(&mu);
-                self.fwd_quant.quantize_dequant_rows_inplace(&mut xr, None);
-                let wq = self.fwd_quant.quantize_dequant_cols(&wh, None);
-                let mut y = xr.matmul(&wq);
-                // rank-one term uses the *unrotated* quantized weight
-                let wq_plain = self.fwd_quant.quantize_dequant_cols(w, None);
-                let mu_mat = Mat::from_vec(1, mu_q.len(), mu_q);
-                let mu_w = mu_mat.matmul(&wq_plain);
-                y.add_row_vec(&mu_w.data);
-                y
-            }
-            QuantRecipe::SvdSplit => svd_split_forward(x, w, &self.fwd_quant, &mut self.rng),
-        }
+        let mut cx = StageCtx {
+            kind: GemmKind::Forward,
+            quant_a: self.fwd_quant,
+            quant_b: self.fwd_quant,
+            sr: &mut self.sr,
+            aux_rng: &mut self.aux_rng,
+            tile: HADAMARD_TILE,
+        };
+        self.fwd.run(x, w, &mut cx)
     }
 
     /// Input-gradient GeMM: ∂X = D·Wᵀ with D (l×n), W (m×n) *pre-transposed
     /// convention*: here `w` is the forward weight (m×n), reduction over n.
+    /// The gradient operand rounds stochastically (unbiased), the weight RTNE.
     pub fn dgrad(&mut self, d: &Mat, w: &Mat) -> Mat {
-        match self.recipe {
-            QuantRecipe::Bf16 => d.matmul_bt(w),
-            QuantRecipe::Nvfp4 | QuantRecipe::Mxfp4 => {
-                let dq = self.bwd_quant.quantize_dequant_rows(d, Some(&mut self.rng));
-                let wq = self.fwd_quant.quantize_dequant_rows(w, None); // blocks along n
-                dq.matmul_bt(&wq)
-            }
-            QuantRecipe::Nvfp4Hadamard => {
-                // K of the dgrad GeMM is n (cols of d and w); skip paired
-                // rotations when not tileable
-                if d.cols % HADAMARD_TILE != 0 {
-                    let dq = self.bwd_quant.quantize_dequant_rows(d, Some(&mut self.rng));
-                    let wq = self.fwd_quant.quantize_dequant_rows(w, None);
-                    return dq.matmul_bt(&wq);
-                }
-                let dh = tiled_hadamard(d, HADAMARD_TILE);
-                let wh = tiled_hadamard(w, HADAMARD_TILE); // along n (K of this GeMM)
-                let dq = self.bwd_quant.quantize_dequant_rows(&dh, Some(&mut self.rng));
-                let wq = self.fwd_quant.quantize_dequant_rows(&wh, None);
-                dq.matmul_bt(&wq)
-            }
-            QuantRecipe::Averis | QuantRecipe::AverisHadamard => {
-                averis_dgrad(d, w, &self.bwd_quant, &self.fwd_quant, &mut self.rng)
-            }
-            QuantRecipe::SvdSplit => {
-                let dq = self.bwd_quant.quantize_dequant_rows(d, Some(&mut self.rng));
-                let wq = self.fwd_quant.quantize_dequant_rows(w, None);
-                dq.matmul_bt(&wq)
-            }
-        }
+        let mut cx = StageCtx {
+            kind: GemmKind::Dgrad,
+            quant_a: self.bwd_quant,
+            quant_b: self.fwd_quant,
+            sr: &mut self.sr,
+            aux_rng: &mut self.aux_rng,
+            tile: HADAMARD_TILE,
+        };
+        self.dgrad.run(d, w, &mut cx)
     }
 
     /// Weight-gradient GeMM: ∂W = Xᵀ·D with X (l×m), D (l×n), reduction over l.
     pub fn wgrad(&mut self, x: &Mat, d: &Mat) -> Mat {
-        match self.recipe {
-            QuantRecipe::Bf16 => x.matmul_at(d),
-            QuantRecipe::Nvfp4 | QuantRecipe::Mxfp4 | QuantRecipe::SvdSplit => {
-                let xq = self.fwd_quant.quantize_dequant_cols(x, None);
-                let dq = self.bwd_quant.quantize_dequant_cols(d, Some(&mut self.rng));
-                xq.matmul_at(&dq)
-            }
-            QuantRecipe::Nvfp4Hadamard => {
-                // rotate along K = l: transform columns ⇒ rows of the transpose
-                let xh = tiled_hadamard_cols(x);
-                let dh = tiled_hadamard_cols(d);
-                let xq = self.fwd_quant.quantize_dequant_cols(&xh, None);
-                let dq = self.bwd_quant.quantize_dequant_cols(&dh, Some(&mut self.rng));
-                xq.matmul_at(&dq)
-            }
-            QuantRecipe::Averis | QuantRecipe::AverisHadamard => {
-                averis_wgrad(x, d, &self.fwd_quant, &self.bwd_quant, &mut self.rng)
-            }
-        }
+        let mut cx = StageCtx {
+            kind: GemmKind::Wgrad,
+            quant_a: self.fwd_quant,
+            quant_b: self.bwd_quant,
+            sr: &mut self.sr,
+            aux_rng: &mut self.aux_rng,
+            tile: HADAMARD_TILE,
+        };
+        self.wgrad.run(x, d, &mut cx)
     }
 }
 
@@ -258,5 +220,40 @@ mod tests {
         let x = Mat::randn(17, 32, 1.0, &mut rng); // 17 not divisible by 16
         let y = tiled_hadamard_cols(&x);
         assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn packed_engine_matches_fake_quant_reference_bitwise() {
+        // the refactor's core invariant, at the dispatch level: the packed
+        // pipeline forward of an RTNE recipe equals the legacy fake-quant
+        // path bit for bit
+        let mut rng = Rng::new(65);
+        let x = mean_biased(48, 64, 2.0, 0.5, &mut rng);
+        let w = Mat::randn(64, 24, 0.2, &mut rng);
+        for (recipe, quant) in [
+            (QuantRecipe::Nvfp4, Nvfp4Quantizer::nvfp4()),
+            (QuantRecipe::Mxfp4, Nvfp4Quantizer::mxfp4()),
+        ] {
+            let mut g = QuantGemm::new(recipe, 11);
+            let y = g.forward(&x, &w);
+            let reference = {
+                let xq = quant.quantize_dequant_rows(&x, None);
+                let wq = quant.quantize_dequant_cols(&w, None);
+                xq.matmul(&wq)
+            };
+            for (a, b) in y.data.iter().zip(reference.data.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{recipe}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn stage_stacks_report_packed_execution() {
+        let g = QuantGemm::new(QuantRecipe::Averis, 0);
+        assert_eq!(
+            g.describe(GemmKind::Forward),
+            "mean_split→quantize→multiply_packed→mean_correct"
+        );
+        assert_eq!(g.describe(GemmKind::Wgrad), "mean_split→quantize→multiply_packed→outer_correct");
     }
 }

@@ -3,10 +3,14 @@
 //! (NVIDIA-style baseline), the Metis-style SVD split (ablation), and the
 //! paper's contribution: Averis mean–residual splitting (`averis`).
 //!
-//! All quantizers are *bit-exact simulations*: values are quantized to the
-//! real E2M1 grid with real E4M3/E8M0 block scales, then dequantized to f32
-//! ("fake quant"), which is the standard methodology the paper itself uses
-//! for its Hopper training runs.
+//! Two numerically identical execution forms are provided. The *fake-quant*
+//! reference quantizes to the real E2M1 grid with real E4M3/E8M0 block
+//! scales and dequantizes back to f32 (the methodology the paper itself uses
+//! for its Hopper runs). The *packed* engine (`packed`, `pipeline`) keeps
+//! operands as 4-bit codes + block scales and multiplies them directly —
+//! bit-identical to the reference for RTNE operands, parallel across row
+//! blocks, and deterministic at any thread count thanks to counter-seeded
+//! stochastic-rounding streams (`sr`).
 
 pub mod averis;
 pub mod fp4;
@@ -14,12 +18,18 @@ pub mod fp8;
 pub mod gemm;
 pub mod hadamard;
 pub mod nvfp4;
+pub mod packed;
+pub mod pipeline;
 pub mod recipe;
+pub mod sr;
 pub mod svd_split;
 
 pub use averis::{averis_dgrad, averis_forward, averis_wgrad, mean_residual_split};
 pub use fp4::{e2m1_decode, e2m1_encode, e2m1_quantize, e2m1_quantize_sr, E2M1_MAX, E2M1_VALUES};
 pub use fp8::{e4m3_quantize, e5m2_quantize, e8m0_quantize, E4M3_MAX};
 pub use hadamard::{hadamard_matrix, tiled_hadamard, tiled_hadamard_inverse};
-pub use nvfp4::{Nvfp4Config, Nvfp4Quantizer, Rounding, ScaleFormat};
+pub use nvfp4::{Nvfp4Config, Nvfp4Quantizer, QuantizedMat, Rounding, ScaleFormat};
+pub use packed::{packed_matmul, packed_matmul_bt};
+pub use pipeline::{GemmKind, QuantPipeline};
 pub use recipe::QuantRecipe;
+pub use sr::{SrStream, SrTicket};

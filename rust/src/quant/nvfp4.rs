@@ -12,14 +12,29 @@
 //! (power-of-two) scale, no tensor scale.
 //!
 //! Both are exposed through one `Nvfp4Quantizer` configured by
-//! `Nvfp4Config { block, scale_format, rounding }`. The training hot path
-//! uses the fused `quantize_dequant_rows/cols` ("fake quant"): one pass that
-//! computes block amax, derives the scale, rounds, and writes the dequantized
-//! f32 — this is also the function whose cost Table 2/3 measure.
+//! `Nvfp4Config { block, scale_format, rounding }`. Two execution forms
+//! share the same arithmetic bit for bit:
+//!
+//! * the fused `quantize_dequant_rows/cols` ("fake quant") — one pass that
+//!   computes block amax, derives the scale, rounds, and writes the
+//!   dequantized f32 (the reference path, and the cost Table 2/3 measure);
+//! * the packed storage form `quantize_store[_sr]` → [`QuantizedMat`] —
+//!   4-bit codes + per-block scales, which the packed-code GEMM kernels in
+//!   `quant::packed` consume without ever materializing a dequantized f32
+//!   matrix. `quantize_store(x).dequantize()` is bit-identical to
+//!   `quantize_dequant_rows(x)`; the packed-kernel equivalence tests rely
+//!   on exactly that.
+//!
+//! Stochastic rounding takes an [`SrTicket`](super::sr::SrTicket) and
+//! derives one counter-seeded RNG per row, so quantize/pack passes shard
+//! across threads (row blocks, `tensor::parallel`) with results that do not
+//! depend on the thread count. The legacy `Option<&mut Rng>` fused entry
+//! points remain for reference/diagnostic callers and stay sequential.
 
-use super::fp4::{e2m1_encode, e2m1_quantize, e2m1_quantize_sr, E2M1_MAX};
+use super::fp4::{e2m1_decode, e2m1_encode, e2m1_quantize, e2m1_quantize_sr, E2M1_MAX};
 use super::fp8::{e4m3_quantize, e8m0_quantize, E4M3_MAX};
-use crate::tensor::{Mat, Rng};
+use super::sr::SrTicket;
+use crate::tensor::{parallel, Mat, Rng};
 
 /// Element rounding mode.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -64,14 +79,23 @@ impl Nvfp4Config {
     }
 }
 
-/// A quantized tensor in storage form: packed 4-bit codes + per-block scales
-/// + the tensor scale. Row-major blocks along rows.
+/// Rows each worker must amortize in a quantize/pack pass (memory-bound:
+/// target ~64k elements per spawned task).
+fn quant_min_rows(cols: usize) -> usize {
+    ((1usize << 16) / cols.max(1)).max(1)
+}
+
+/// A quantized tensor in its execution form: packed 4-bit codes + per-block
+/// scales + the tensor scale. Blocks run along rows (the K axis when K is
+/// the column axis). The code buffer is **row-aligned** — each row occupies
+/// `cols.div_ceil(2)` bytes — so rows never share a byte and row blocks can
+/// be packed and decoded in parallel.
 #[derive(Clone, Debug)]
 pub struct QuantizedMat {
     pub rows: usize,
     pub cols: usize,
     pub block: usize,
-    /// two E2M1 codes per byte, row-major, rows padded to even block count
+    /// two E2M1 codes per byte (lo nibble = even column), row-aligned
     pub codes: Vec<u8>,
     /// one decoded f32 scale per block (already E4M3/E8M0-rounded)
     pub scales: Vec<f32>,
@@ -79,28 +103,53 @@ pub struct QuantizedMat {
 }
 
 impl QuantizedMat {
+    /// Bytes one row of codes occupies.
+    #[inline]
+    pub fn bytes_per_row(&self) -> usize {
+        self.cols.div_ceil(2)
+    }
+
+    /// Scale blocks per row.
+    #[inline]
+    pub fn blocks_per_row(&self) -> usize {
+        self.cols.div_ceil(self.block)
+    }
+
     /// Bytes of storage used (codes + 1 byte per scale) — for the memory
     /// accounting in EXPERIMENTS.md.
     pub fn storage_bytes(&self) -> usize {
         self.codes.len() + self.scales.len() + 4
     }
 
-    /// Dequantize back to f32.
+    /// Decode columns `[j0, j1)` of row `i` into `out` (length `j1 - j0`),
+    /// with exactly the arithmetic of the fused fake-quant path:
+    /// `value = e2m1_decode(code) * (block_scale * tensor_scale)`.
+    pub fn decode_row_range(&self, i: usize, j0: usize, j1: usize, out: &mut [f32]) {
+        debug_assert!(i < self.rows && j0 <= j1 && j1 <= self.cols);
+        debug_assert_eq!(out.len(), j1 - j0);
+        let bpr = self.blocks_per_row();
+        let row_codes = &self.codes[i * self.bytes_per_row()..(i + 1) * self.bytes_per_row()];
+        let mut j = j0;
+        while j < j1 {
+            let blk = j / self.block;
+            let jend = ((blk + 1) * self.block).min(j1);
+            let s = self.scales[i * bpr + blk] * self.tensor_scale;
+            for jj in j..jend {
+                let byte = row_codes[jj / 2];
+                let code = if jj % 2 == 0 { byte & 0xF } else { byte >> 4 };
+                out[jj - j0] = e2m1_decode(code) * s;
+            }
+            j = jend;
+        }
+    }
+
+    /// Dequantize back to f32 (bit-identical to the fused fake-quant of the
+    /// source matrix).
     pub fn dequantize(&self) -> Mat {
         let mut out = Mat::zeros(self.rows, self.cols);
-        let bpr = self.cols.div_ceil(self.block); // blocks per row
+        let cols = self.cols;
         for i in 0..self.rows {
-            for b in 0..bpr {
-                let s = self.scales[i * bpr + b] * self.tensor_scale;
-                let j0 = b * self.block;
-                let j1 = (j0 + self.block).min(self.cols);
-                for j in j0..j1 {
-                    let flat = i * self.cols + j;
-                    let byte = self.codes[flat / 2];
-                    let code = if flat % 2 == 0 { byte & 0xF } else { byte >> 4 };
-                    out.data[flat] = super::fp4::e2m1_decode(code) * s;
-                }
-            }
+            self.decode_row_range(i, 0, cols, &mut out.data[i * cols..(i + 1) * cols]);
         }
         out
     }
@@ -155,59 +204,109 @@ impl Nvfp4Quantizer {
         }
     }
 
+    /// Quantize one row's blocks in place (fake-quant). `rng` must be Some
+    /// exactly when the config rounds stochastically.
+    fn fake_quant_row(&self, row: &mut [f32], tscale: f32, mut rng: Option<&mut Rng>) {
+        let block = self.cfg.block;
+        let cols = row.len();
+        let mut j0 = 0;
+        while j0 < cols {
+            let j1 = (j0 + block).min(cols);
+            let blk = &mut row[j0..j1];
+            let mut amax = 0.0f32;
+            for &v in blk.iter() {
+                amax = amax.max(v.abs());
+            }
+            let s = self.block_scale(amax, tscale) * tscale;
+            if s == 0.0 {
+                for v in blk.iter_mut() {
+                    *v = 0.0;
+                }
+            } else {
+                let inv = 1.0 / s;
+                match self.cfg.rounding {
+                    Rounding::Rtne => {
+                        for v in blk.iter_mut() {
+                            *v = e2m1_quantize(*v * inv) * s;
+                        }
+                    }
+                    Rounding::Stochastic => {
+                        let r = rng.as_deref_mut().expect("SR needs an Rng");
+                        for v in blk.iter_mut() {
+                            *v = e2m1_quantize_sr(*v * inv, r) * s;
+                        }
+                    }
+                }
+            }
+            j0 = j1;
+        }
+    }
+
     /// Fused fake-quant along **rows** (blocks over consecutive columns —
     /// the layout when the matrix's K axis is its column axis, e.g. X (l×m)
-    /// in Y = X·W with K = m). This is THE hot function of the simulator.
+    /// in Y = X·W with K = m).
     pub fn quantize_dequant_rows(&self, x: &Mat, rng: Option<&mut Rng>) -> Mat {
         let mut out = x.clone();
         self.quantize_dequant_rows_inplace(&mut out, rng);
         out
     }
 
-    /// In-place variant used by the perf-optimized training hot path.
+    /// In-place fused fake-quant along rows. RTNE configs shard rows across
+    /// scoped threads (each row's arithmetic is independent, so the result
+    /// is bit-identical at any thread count); the legacy sequential-`Rng`
+    /// SR form stays single-threaded — the deterministic-parallel SR path
+    /// is [`Self::quantize_dequant_rows_sr`].
     pub fn quantize_dequant_rows_inplace(&self, x: &mut Mat, mut rng: Option<&mut Rng>) {
         let tscale = self.tensor_scale(x.abs_max());
-        let block = self.cfg.block;
         let cols = x.cols;
-        for i in 0..x.rows {
-            let row = &mut x.data[i * cols..(i + 1) * cols];
-            let mut j0 = 0;
-            while j0 < cols {
-                let j1 = (j0 + block).min(cols);
-                let blk = &mut row[j0..j1];
-                let mut amax = 0.0f32;
-                for &v in blk.iter() {
-                    amax = amax.max(v.abs());
-                }
-                let s = self.block_scale(amax, tscale) * tscale;
-                if s == 0.0 {
-                    for v in blk.iter_mut() {
-                        *v = 0.0;
-                    }
-                } else {
-                    let inv = 1.0 / s;
-                    match self.cfg.rounding {
-                        Rounding::Rtne => {
-                            for v in blk.iter_mut() {
-                                *v = e2m1_quantize(*v * inv) * s;
-                            }
+        match self.cfg.rounding {
+            Rounding::Rtne => {
+                let rows = x.rows;
+                parallel::par_row_chunks(
+                    &mut x.data,
+                    rows,
+                    cols,
+                    quant_min_rows(cols),
+                    |_, chunk| {
+                        for row in chunk.chunks_mut(cols.max(1)) {
+                            self.fake_quant_row(row, tscale, None);
                         }
-                        Rounding::Stochastic => {
-                            let r = rng.as_deref_mut().expect("SR needs an Rng");
-                            for v in blk.iter_mut() {
-                                *v = e2m1_quantize_sr(*v * inv, r) * s;
-                            }
-                        }
-                    }
+                    },
+                );
+            }
+            Rounding::Stochastic => {
+                for i in 0..x.rows {
+                    let row = &mut x.data[i * cols..(i + 1) * cols];
+                    self.fake_quant_row(row, tscale, rng.as_deref_mut());
                 }
-                j0 = j1;
             }
         }
     }
 
+    /// Deterministic-SR fused fake-quant along rows: row `i` consumes the
+    /// ticket's lane-`i` stream, so the result is a pure function of
+    /// `(ticket, x)` and bit-identical to
+    /// `quantize_store_sr(x, sr).dequantize()`.
+    pub fn quantize_dequant_rows_sr(&self, x: &Mat, sr: SrTicket) -> Mat {
+        assert_eq!(self.cfg.rounding, Rounding::Stochastic, "ticketed path is SR");
+        let mut out = x.clone();
+        let tscale = self.tensor_scale(out.abs_max());
+        let cols = out.cols;
+        let rows = out.rows;
+        parallel::par_row_chunks(&mut out.data, rows, cols, quant_min_rows(cols), |row0, chunk| {
+            for (li, row) in chunk.chunks_mut(cols.max(1)).enumerate() {
+                let mut rng = sr.lane_rng((row0 + li) as u64);
+                self.fake_quant_row(row, tscale, Some(&mut rng));
+            }
+        });
+        out
+    }
+
     /// Fused fake-quant along **columns** (blocks over consecutive rows —
     /// the layout when K is the row axis, e.g. W (m×n) in Y = X·W with
-    /// K = m, or X (l×m) in the wgrad GeMM XᵀD with K = l).
+    /// K = m, or X (l×m) in the wgrad GeMM XᵀD with K = l). Reference path;
+    /// the packed engine stores the transpose instead (bit-identical — see
+    /// `cols_quantization_matches_rows_of_transpose`).
     pub fn quantize_dequant_cols(&self, x: &Mat, mut rng: Option<&mut Rng>) -> Mat {
         let tscale = self.tensor_scale(x.abs_max());
         let block = self.cfg.block;
@@ -250,44 +349,86 @@ impl Nvfp4Quantizer {
         out
     }
 
-    /// Quantize a row-major matrix to storage form (packed codes + scales).
-    /// Blocks along rows. Used for the memory-footprint accounting and the
-    /// codec round-trip tests; the training path uses the fused fake-quant.
+    /// Quantize to the packed execution form (codes + scales), RTNE.
+    /// Blocks along rows. `quantize_store(x).dequantize()` is bit-identical
+    /// to `quantize_dequant_rows(x, None)` — the contract the packed GEMM
+    /// kernels build on.
     pub fn quantize_store(&self, x: &Mat) -> QuantizedMat {
-        assert_eq!(self.cfg.rounding, Rounding::Rtne, "storage path is RTNE");
+        assert_eq!(self.cfg.rounding, Rounding::Rtne, "unticketed storage path is RTNE");
+        self.store_impl(x, None)
+    }
+
+    /// Packed storage form with deterministic stochastic rounding: row `i`
+    /// consumes the ticket's lane-`i` stream (bit-identical to
+    /// [`Self::quantize_dequant_rows_sr`] with the same ticket).
+    pub fn quantize_store_sr(&self, x: &Mat, sr: SrTicket) -> QuantizedMat {
+        self.store_impl(x, Some(sr))
+    }
+
+    fn store_impl(&self, x: &Mat, sr: Option<SrTicket>) -> QuantizedMat {
+        if self.cfg.rounding == Rounding::Stochastic {
+            assert!(sr.is_some(), "SR storage path needs an SrTicket");
+        }
         let tscale = self.tensor_scale(x.abs_max());
         let block = self.cfg.block;
         let (rows, cols) = (x.rows, x.cols);
         let bpr = cols.div_ceil(block);
-        let mut codes = vec![0u8; (rows * cols).div_ceil(2)];
+        let bytes_per_row = cols.div_ceil(2);
+        let mut codes = vec![0u8; rows * bytes_per_row];
         let mut scales = vec![0.0f32; rows * bpr];
-        for i in 0..rows {
-            for b in 0..bpr {
-                let j0 = b * block;
-                let j1 = (j0 + block).min(cols);
-                let mut amax = 0.0f32;
-                for j in j0..j1 {
-                    amax = amax.max(x.data[i * cols + j].abs());
-                }
-                let s = self.block_scale(amax, tscale);
-                scales[i * bpr + b] = s;
-                let denom = s * tscale;
-                for j in j0..j1 {
-                    let flat = i * cols + j;
-                    let q = if denom == 0.0 {
-                        0.0
-                    } else {
-                        e2m1_quantize(x.data[flat] / denom)
-                    };
-                    let code = e2m1_encode(q);
-                    if flat % 2 == 0 {
-                        codes[flat / 2] |= code;
-                    } else {
-                        codes[flat / 2] |= code << 4;
+        parallel::par_row_chunks2(
+            &mut codes,
+            &mut scales,
+            rows,
+            bytes_per_row,
+            bpr,
+            quant_min_rows(cols),
+            |row0, code_chunk, scale_chunk| {
+                let nrows = if bytes_per_row == 0 {
+                    scale_chunk.len() / bpr.max(1)
+                } else {
+                    code_chunk.len() / bytes_per_row
+                };
+                for li in 0..nrows {
+                    let i = row0 + li;
+                    let xrow = &x.data[i * cols..(i + 1) * cols];
+                    let row_codes = &mut code_chunk[li * bytes_per_row..(li + 1) * bytes_per_row];
+                    let row_scales = &mut scale_chunk[li * bpr..(li + 1) * bpr];
+                    let mut rng = sr.map(|t| t.lane_rng(i as u64));
+                    for (b, sc) in row_scales.iter_mut().enumerate() {
+                        let j0 = b * block;
+                        let j1 = (j0 + block).min(cols);
+                        let mut amax = 0.0f32;
+                        for &v in &xrow[j0..j1] {
+                            amax = amax.max(v.abs());
+                        }
+                        let s = self.block_scale(amax, tscale);
+                        *sc = s;
+                        let full = s * tscale;
+                        if full == 0.0 {
+                            continue; // codes stay 0 == +0.0, matching fake quant
+                        }
+                        // multiply by the reciprocal, exactly like the fused
+                        // path, so codes round identically bit for bit
+                        let inv = 1.0 / full;
+                        for j in j0..j1 {
+                            let q = match (&mut rng, self.cfg.rounding) {
+                                (Some(r), Rounding::Stochastic) => {
+                                    e2m1_quantize_sr(xrow[j] * inv, r)
+                                }
+                                _ => e2m1_quantize(xrow[j] * inv),
+                            };
+                            let code = e2m1_encode(q);
+                            if j % 2 == 0 {
+                                row_codes[j / 2] |= code;
+                            } else {
+                                row_codes[j / 2] |= code << 4;
+                            }
+                        }
                     }
                 }
-            }
-        }
+            },
+        );
         QuantizedMat { rows, cols, block, codes, scales, tensor_scale: tscale }
     }
 
@@ -334,13 +475,33 @@ mod tests {
     }
 
     #[test]
-    fn storage_roundtrip_matches_fused() {
+    fn storage_roundtrip_is_bit_identical_to_fused() {
         let mut rng = Rng::new(43);
-        let x = Mat::randn(8, 48, 2.0, &mut rng);
-        let quant = Nvfp4Quantizer::nvfp4();
-        let fused = quant.quantize_dequant_rows(&x, None);
-        let stored = quant.quantize_store(&x).dequantize();
-        assert!(rel_error(&stored, &fused) < 1e-6);
+        for quant in [Nvfp4Quantizer::nvfp4(), Nvfp4Quantizer::mxfp4()] {
+            // odd column count: exercises the ragged tail block and the
+            // row-aligned half-byte at the end of each code row
+            for &(l, m) in &[(8usize, 48usize), (5, 21), (1, 1), (16, 64)] {
+                let x = Mat::randn(l, m, 2.0, &mut rng);
+                let fused = quant.quantize_dequant_rows(&x, None);
+                let stored = quant.quantize_store(&x).dequantize();
+                for (a, b) in fused.data.iter().zip(stored.data.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "({l},{m}) {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sr_storage_matches_sr_fused_bitwise() {
+        let mut rng = Rng::new(44);
+        let x = Mat::randn(9, 37, 1.5, &mut rng);
+        let quant = Nvfp4Quantizer::new(Nvfp4Config::nvfp4_sr());
+        let t = SrTicket::new(0xFEED, 3);
+        let fused = quant.quantize_dequant_rows_sr(&x, t);
+        let stored = quant.quantize_store_sr(&x, t).dequantize();
+        for (a, b) in fused.data.iter().zip(stored.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
     }
 
     #[test]
@@ -361,7 +522,9 @@ mod tests {
         let quant = Nvfp4Quantizer::nvfp4();
         let a = quant.quantize_dequant_cols(&x, None);
         let b = quant.quantize_dequant_rows(&x.transpose(), None).transpose();
-        assert!(rel_error(&a, &b) < 1e-6);
+        for (u, v) in a.data.iter().zip(b.data.iter()) {
+            assert_eq!(u.to_bits(), v.to_bits(), "{u} vs {v}");
+        }
     }
 
     #[test]
@@ -414,6 +577,24 @@ mod tests {
     }
 
     #[test]
+    fn ticketed_sr_unbiased_and_deterministic() {
+        let x = Mat::full(4, 16, 0.37);
+        let quant = Nvfp4Quantizer::new(Nvfp4Config::nvfp4_sr());
+        let n = 1500;
+        let mut acc = 0.0f64;
+        for c in 0..n {
+            let q = quant.quantize_dequant_rows_sr(&x, SrTicket::new(7, c));
+            acc += q.data.iter().map(|&v| v as f64).sum::<f64>() / q.numel() as f64;
+        }
+        let mean = acc / n as f64;
+        assert!((mean - 0.37).abs() < 0.01, "ticketed SR mean {mean}");
+        // same ticket → same bits
+        let a = quant.quantize_dequant_rows_sr(&x, SrTicket::new(7, 0));
+        let b = quant.quantize_dequant_rows_sr(&x, SrTicket::new(7, 0));
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
     fn ragged_tail_block() {
         // cols not divisible by block
         let mut rng = Rng::new(48);
@@ -421,5 +602,18 @@ mod tests {
         let q = Nvfp4Quantizer::nvfp4().quantize_dequant_rows(&x, None);
         assert_eq!(q.cols, 21);
         assert!(rel_error(&q, &x) < 0.25);
+    }
+
+    #[test]
+    fn decode_row_range_matches_dequantize() {
+        let mut rng = Rng::new(49);
+        let x = Mat::randn(6, 39, 1.0, &mut rng);
+        let s = Nvfp4Quantizer::nvfp4().quantize_store(&x);
+        let full = s.dequantize();
+        let mut buf = vec![0.0f32; 17];
+        s.decode_row_range(3, 5, 22, &mut buf);
+        for (t, &v) in buf.iter().enumerate() {
+            assert_eq!(v.to_bits(), full.at(3, 5 + t).to_bits());
+        }
     }
 }

@@ -1,0 +1,210 @@
+//! Packed-code GEMM kernels: multiply two E2M1-quantized operands directly
+//! in their packed storage form.
+//!
+//! This is the execution engine the recipe pipelines lower their Multiply
+//! stage to. Both operands arrive as [`QuantizedMat`] packed along the
+//! GeMM's reduction axis (blocks over their *columns*); the kernels decode
+//! codes through the E2M1 LUT — two codes per byte — apply the per-block
+//! scale product as each K block streams through, and accumulate in f32.
+//! Only bounded per-worker scratch (one K-slab or row tile) is ever decoded;
+//! the full dequantized f32 matrices of the fake-quant path are never
+//! materialized.
+//!
+//! **Bit-exactness contract:** for each output element the multiply/add
+//! sequence (including the zero-operand skip) walks k in ascending order
+//! with exactly the arithmetic of `Mat::matmul` / `Mat::matmul_bt` /
+//! `Mat::matmul_at` applied to the dequantized operands, and row sharding
+//! never changes an output row's accumulation order. So
+//! `packed_matmul(Q(x), Q(wᵀ))` is bit-identical to
+//! `Q(x).dequantize().matmul(&Q(wᵀ).dequantize().transpose())`, at any
+//! thread count. The property tests in `tests/packed_gemm.rs` pin this.
+
+use super::nvfp4::QuantizedMat;
+use crate::tensor::parallel::{self, min_rows_for as par_min_rows};
+use crate::tensor::Mat;
+
+/// K-slab width: a multiple of both the NVFP4 (16) and MXFP4 (32) block
+/// sizes, matching `Mat::matmul`'s k-blocking.
+const KB: usize = 64;
+
+/// Row tile of the dot-form kernel's second operand.
+const JT: usize = 32;
+
+/// C = X · W with X packed along its columns (K) and W supplied as a packed
+/// **transpose** `wt` (n×k, also packed along its columns). Returns l×n f32.
+///
+/// ikj kernel: per K-slab, the slab of ŵ is decoded once into k-major order,
+/// then every output row streams `C[i,·] += x̂[i,k] · ŵ[k,·]` exactly like
+/// the f32 `matmul`.
+pub fn packed_matmul(x: &QuantizedMat, wt: &QuantizedMat) -> Mat {
+    assert_eq!(
+        x.cols, wt.cols,
+        "packed_matmul: K mismatch ({}x{} · ({}x{})ᵀ) — both operands must be packed along K",
+        x.rows, x.cols, wt.rows, wt.cols
+    );
+    let (l, k, n) = (x.rows, x.cols, wt.rows);
+    let mut c = Mat::zeros(l, n);
+    parallel::par_row_chunks(&mut c.data, l, n, par_min_rows(k * n), |row0, crows| {
+        let nrows = crows.len() / n.max(1);
+        let mut wslab = vec![0.0f32; KB * n];
+        let mut xbuf = [0.0f32; KB];
+        let mut wrow = [0.0f32; KB];
+        for k0 in (0..k).step_by(KB) {
+            let k1 = (k0 + KB).min(k);
+            let kw = k1 - k0;
+            // decode this K-slab of ŵ once per chunk, transposed to k-major
+            for j in 0..n {
+                wt.decode_row_range(j, k0, k1, &mut wrow[..kw]);
+                for (t, &v) in wrow[..kw].iter().enumerate() {
+                    wslab[t * n + j] = v;
+                }
+            }
+            for li in 0..nrows {
+                x.decode_row_range(row0 + li, k0, k1, &mut xbuf[..kw]);
+                let crow = &mut crows[li * n..(li + 1) * n];
+                for (t, &av) in xbuf[..kw].iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let wrow_t = &wslab[t * n..(t + 1) * n];
+                    for j in 0..n {
+                        crow[j] += av * wrow_t[j];
+                    }
+                }
+            }
+        }
+    });
+    c
+}
+
+/// C = A · Bᵀ with both operands packed along their columns (the reduction
+/// axis). Covers dgrad (∂X = D·Wᵀ, both packed along n) and — fed packed
+/// transposes — wgrad (∂W = Xᵀ·D as `packed_matmul_bt(Q(xᵀ), Q(dᵀ))`, both
+/// packed along l). Returns a.rows × b.rows f32.
+///
+/// Dot-form kernel mirroring `Mat::matmul_bt`: ascending-k dot products over
+/// row buffers, with ŵ decoded in row tiles of [`JT`].
+pub fn packed_matmul_bt(a: &QuantizedMat, b: &QuantizedMat) -> Mat {
+    assert_eq!(
+        a.cols, b.cols,
+        "packed_matmul_bt: K mismatch ({}x{} · ({}x{})ᵀ) — both operands must be packed along K",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    parallel::par_row_chunks(&mut c.data, m, n, par_min_rows(k * n), |row0, crows| {
+        let nrows = crows.len() / n.max(1);
+        let mut btile = vec![0.0f32; JT * k];
+        let mut abuf = vec![0.0f32; k];
+        for j0 in (0..n).step_by(JT) {
+            let j1 = (j0 + JT).min(n);
+            for j in j0..j1 {
+                b.decode_row_range(j, 0, k, &mut btile[(j - j0) * k..(j - j0 + 1) * k]);
+            }
+            for li in 0..nrows {
+                a.decode_row_range(row0 + li, 0, k, &mut abuf);
+                let crow = &mut crows[li * n..(li + 1) * n];
+                for j in j0..j1 {
+                    let brow = &btile[(j - j0) * k..(j - j0 + 1) * k];
+                    let mut acc = 0.0f32;
+                    for t in 0..k {
+                        acc += abuf[t] * brow[t];
+                    }
+                    crow[j] = acc;
+                }
+            }
+        }
+    });
+    c
+}
+
+/// term[r] = Σ_k mu[k] · q̂[r, k]: a quantized row vector times the packed
+/// rows of `q` — the rank-one Correct term of the Averis pipelines
+/// (`1·(μ̄_X W̄)` forward, `1·(μ̄_D W̄ᵀ)` dgrad), never materializing q̂.
+/// Matches `Mat::matmul`'s zero-skip accumulation bit for bit.
+pub fn mu_times_packed_rows(mu: &[f32], q: &QuantizedMat) -> Vec<f32> {
+    assert_eq!(mu.len(), q.cols, "mu_times_packed_rows: K mismatch");
+    let mut out = vec![0.0f32; q.rows];
+    let mut buf = vec![0.0f32; q.cols];
+    for (r, o) in out.iter_mut().enumerate() {
+        q.decode_row_range(r, 0, q.cols, &mut buf);
+        let mut acc = 0.0f32;
+        for (t, &m) in mu.iter().enumerate() {
+            if m == 0.0 {
+                continue;
+            }
+            acc += m * buf[t];
+        }
+        *o = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::nvfp4::Nvfp4Quantizer;
+    use crate::tensor::Rng;
+
+    fn assert_bits_eq(a: &Mat, b: &Mat, what: &str) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+        for (i, (x, y)) in a.data.iter().zip(b.data.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn packed_matmul_matches_fake_quant_bitwise() {
+        let mut rng = Rng::new(90);
+        for quant in [Nvfp4Quantizer::nvfp4(), Nvfp4Quantizer::mxfp4()] {
+            for &(l, k, n) in &[(8usize, 32usize, 8usize), (5, 21, 3), (16, 8, 16)] {
+                let x = Mat::randn(l, k, 1.0, &mut rng);
+                let w = Mat::randn(k, n, 0.3, &mut rng);
+                let fake = {
+                    let xq = quant.quantize_dequant_rows(&x, None);
+                    let wq = quant.quantize_dequant_cols(&w, None);
+                    xq.matmul(&wq)
+                };
+                let packed = packed_matmul(
+                    &quant.quantize_store(&x),
+                    &quant.quantize_store(&w.transpose()),
+                );
+                assert_bits_eq(&packed, &fake, "fwd");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matmul_bt_matches_fake_quant_bitwise() {
+        let mut rng = Rng::new(91);
+        let quant = Nvfp4Quantizer::nvfp4();
+        let d = Mat::randn(12, 24, 0.5, &mut rng);
+        let w = Mat::randn(9, 24, 0.2, &mut rng);
+        let fake = {
+            let dq = quant.quantize_dequant_rows(&d, None);
+            let wq = quant.quantize_dequant_rows(&w, None);
+            dq.matmul_bt(&wq)
+        };
+        let packed = packed_matmul_bt(&quant.quantize_store(&d), &quant.quantize_store(&w));
+        assert_bits_eq(&packed, &fake, "bt");
+    }
+
+    #[test]
+    fn mu_product_matches_row_matmul_bitwise() {
+        let mut rng = Rng::new(92);
+        let quant = Nvfp4Quantizer::nvfp4();
+        let w = Mat::randn(20, 13, 0.2, &mut rng);
+        let mut mu: Vec<f32> = (0..20).map(|_| rng.normal()).collect();
+        mu[3] = 0.0; // exercise the zero skip
+        let wq_t = quant.quantize_store(&w.transpose());
+        let term = mu_times_packed_rows(&mu, &wq_t);
+        let fake = {
+            let wq = quant.quantize_dequant_cols(&w, None);
+            Mat::from_vec(1, 20, mu.clone()).matmul(&wq)
+        };
+        assert_eq!(term.len(), fake.data.len());
+        for (a, b) in term.iter().zip(fake.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+}

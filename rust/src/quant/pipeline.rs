@@ -1,0 +1,468 @@
+//! Composable quantized-GeMM pipelines.
+//!
+//! Every recipe × GeMM-kind pair lowers to an ordered stack of [`Stage`]s:
+//!
+//! ```text
+//! Transform (paired Hadamard) → Split (mean / spectral) →
+//! Quantize (pack to E2M1 codes) → Multiply (packed-code GEMM) →
+//! Correct (rank-one / low-rank term)
+//! ```
+//!
+//! The stacks are declared in [`QuantPipeline::for_recipe`]; a new recipe is
+//! a new stage list (and at most one new stage implementation) instead of
+//! another arm in a forward/dgrad/wgrad match triplicating the
+//! Hadamard-pairing and ragged-K fallback logic. The Multiply stage runs on
+//! the packed execution format (`quant::packed`), which is bit-identical to
+//! the fake-quant reference path for RTNE operands — so swapping the engine
+//! under the recipes changed no numerics.
+//!
+//! Kind-specific layout is centralized here: each GeMM kind knows which
+//! operand axes carry the reduction (K), therefore how operands are rotated,
+//! split, and packed:
+//!
+//! | kind    | product   | K axis             | packing                    |
+//! |---------|-----------|--------------------|----------------------------|
+//! | Forward | Y = X·W   | cols(X) = rows(W)  | `Q(X)`, `Q(Wᵀ)` → matmul   |
+//! | Dgrad   | ∂X = D·Wᵀ | cols(D) = cols(W)  | `Q(D)`, `Q(W)`  → matmul_bt|
+//! | Wgrad   | ∂W = Xᵀ·D | rows(X) = rows(D)  | `Q(Xᵀ)`, `Q(Dᵀ)`→ matmul_bt|
+
+use super::gemm::tiled_hadamard_cols;
+use super::hadamard::{tiled_hadamard, tiled_hadamard_inplace};
+use super::nvfp4::{Nvfp4Quantizer, QuantizedMat, Rounding};
+use super::packed::{mu_times_packed_rows, packed_matmul, packed_matmul_bt};
+use super::recipe::QuantRecipe;
+use super::sr::SrStream;
+use super::svd_split::{spectral_split, SVD_SPLIT_RANK};
+use crate::quant::averis::mean_residual_split_inplace;
+use crate::tensor::{Mat, Rng};
+use std::borrow::Cow;
+
+/// Which of the three training GeMMs a pipeline computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKind {
+    /// Y = X·W
+    Forward,
+    /// ∂X = D·Wᵀ
+    Dgrad,
+    /// ∂W = Xᵀ·D
+    Wgrad,
+}
+
+/// Mutable per-call state threaded through the stages. `a` is the
+/// activation-side operand (X or D), `b` the other one (W, or D in wgrad).
+/// Operands start as borrows of the caller's matrices and are only cloned
+/// by the first stage that actually mutates them (`Cow::to_mut`), so
+/// pass-through pipelines (BF16, plain quantize) never copy.
+pub struct GemmState<'x> {
+    pub a: Cow<'x, Mat>,
+    pub b: Cow<'x, Mat>,
+    /// the untransformed `b`, kept by a Transform stage when a later
+    /// Correct stage must use the unrotated operand (Averis-Hadamard fwd);
+    /// a cheap borrow copy when `b` had not been modified yet
+    pub b_plain: Option<Cow<'x, Mat>>,
+    /// column mean split off `a` (Averis)
+    pub mean_a: Option<Vec<f32>>,
+    /// column mean split off `b` (Averis wgrad)
+    pub mean_b: Option<Vec<f32>>,
+    /// full-precision low-rank component split off `a` (SVD split)
+    pub low_rank: Option<Mat>,
+    /// packed operands, produced by the Quantize stage
+    pub qa: Option<QuantizedMat>,
+    pub qb: Option<QuantizedMat>,
+    /// the accumulating product
+    pub y: Option<Mat>,
+}
+
+/// Per-call context: quantizer configs for each operand, the SR ticket mint,
+/// and the auxiliary RNG (SVD power iteration).
+pub struct StageCtx<'a> {
+    pub kind: GemmKind,
+    pub quant_a: Nvfp4Quantizer,
+    pub quant_b: Nvfp4Quantizer,
+    pub sr: &'a mut SrStream,
+    pub aux_rng: &'a mut Rng,
+    pub tile: usize,
+}
+
+impl StageCtx<'_> {
+    /// Is the reduction axis tileable by the Hadamard tile? The ragged-K
+    /// fallback lives here, once, instead of in every recipe arm: paired
+    /// rotations must both happen or neither (they cancel in the product).
+    fn k_tileable(&self, st: &GemmState<'_>) -> bool {
+        match self.kind {
+            GemmKind::Forward | GemmKind::Dgrad => st.a.cols % self.tile == 0,
+            GemmKind::Wgrad => st.a.rows % self.tile == 0,
+        }
+    }
+}
+
+/// One step of a quantized-GeMM pipeline.
+pub trait Stage: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn run(&self, st: &mut GemmState<'_>, cx: &mut StageCtx<'_>);
+}
+
+/// Pack one operand, stochastically rounded iff its quantizer says so.
+fn store_operand(quant: &Nvfp4Quantizer, x: &Mat, sr: &mut SrStream) -> QuantizedMat {
+    if quant.cfg.rounding == Rounding::Stochastic {
+        quant.quantize_store_sr(x, sr.ticket())
+    } else {
+        quant.quantize_store(x)
+    }
+}
+
+// ---------------------------------------------------------------- stages --
+
+/// Full-precision multiply (the BF16 reference recipe).
+struct ExactMultiply;
+
+impl Stage for ExactMultiply {
+    fn name(&self) -> &'static str {
+        "multiply_exact"
+    }
+
+    fn run(&self, st: &mut GemmState<'_>, cx: &mut StageCtx<'_>) {
+        st.y = Some(match cx.kind {
+            GemmKind::Forward => st.a.matmul(&st.b),
+            GemmKind::Dgrad => st.a.matmul_bt(&st.b),
+            GemmKind::Wgrad => st.a.matmul_at(&st.b),
+        });
+    }
+}
+
+/// Paired orthonormal Hadamard rotation of both operands along K. A no-op
+/// when K is not tileable (e.g. an 8-wide MoE router) — skipping only one
+/// side would change the product.
+struct PairedHadamard {
+    /// keep the untransformed `b` for a Correct stage that needs it
+    preserve_plain_b: bool,
+}
+
+impl Stage for PairedHadamard {
+    fn name(&self) -> &'static str {
+        "hadamard"
+    }
+
+    fn run(&self, st: &mut GemmState<'_>, cx: &mut StageCtx<'_>) {
+        if !cx.k_tileable(st) {
+            return;
+        }
+        if self.preserve_plain_b {
+            // b is still the caller's borrow here, so this is a pointer copy
+            st.b_plain = Some(st.b.clone());
+        }
+        match cx.kind {
+            GemmKind::Forward => {
+                // K = cols of a, rows of b
+                tiled_hadamard_inplace(st.a.to_mut(), cx.tile);
+                st.b = Cow::Owned(tiled_hadamard(&st.b.transpose(), cx.tile).transpose());
+            }
+            GemmKind::Dgrad => {
+                // K = cols of both
+                tiled_hadamard_inplace(st.a.to_mut(), cx.tile);
+                tiled_hadamard_inplace(st.b.to_mut(), cx.tile);
+            }
+            GemmKind::Wgrad => {
+                // K = rows (token axis) of both
+                st.a = Cow::Owned(tiled_hadamard_cols(&st.a));
+                st.b = Cow::Owned(tiled_hadamard_cols(&st.b));
+            }
+        }
+    }
+}
+
+/// Averis mean–residual split (paper Eqs. 8–10): peel the column mean off
+/// `a` (and off `b` too in wgrad, where both operands are activations).
+struct MeanSplit {
+    both: bool,
+}
+
+impl Stage for MeanSplit {
+    fn name(&self) -> &'static str {
+        "mean_split"
+    }
+
+    fn run(&self, st: &mut GemmState<'_>, _cx: &mut StageCtx<'_>) {
+        st.mean_a = Some(mean_residual_split_inplace(st.a.to_mut()));
+        if self.both {
+            st.mean_b = Some(mean_residual_split_inplace(st.b.to_mut()));
+        }
+    }
+}
+
+/// Metis-style spectral split (ablation): peel the top-k singular component
+/// off `a`, kept in full precision.
+struct SpectralSplit {
+    rank: usize,
+}
+
+impl Stage for SpectralSplit {
+    fn name(&self) -> &'static str {
+        "spectral_split"
+    }
+
+    fn run(&self, st: &mut GemmState<'_>, cx: &mut StageCtx<'_>) {
+        let (low_rank, residual) = spectral_split(&st.a, self.rank, cx.aux_rng);
+        st.low_rank = Some(low_rank);
+        st.a = Cow::Owned(residual);
+    }
+}
+
+/// Pack both operands to the E2M1 execution format, blocked along K.
+struct Quantize;
+
+impl Stage for Quantize {
+    fn name(&self) -> &'static str {
+        "quantize"
+    }
+
+    fn run(&self, st: &mut GemmState<'_>, cx: &mut StageCtx<'_>) {
+        let (qa, qb) = match cx.kind {
+            // K is already the column axis of a; b packs via its transpose
+            GemmKind::Forward => (
+                store_operand(&cx.quant_a, &st.a, cx.sr),
+                store_operand(&cx.quant_b, &st.b.transpose(), cx.sr),
+            ),
+            // K = cols of both operands: pack directly
+            GemmKind::Dgrad => (
+                store_operand(&cx.quant_a, &st.a, cx.sr),
+                store_operand(&cx.quant_b, &st.b, cx.sr),
+            ),
+            // K = rows of both operands: pack the transposes
+            GemmKind::Wgrad => (
+                store_operand(&cx.quant_a, &st.a.transpose(), cx.sr),
+                store_operand(&cx.quant_b, &st.b.transpose(), cx.sr),
+            ),
+        };
+        st.qa = Some(qa);
+        st.qb = Some(qb);
+    }
+}
+
+/// Packed-code multiply: the quantized-domain execution step.
+struct Multiply;
+
+impl Stage for Multiply {
+    fn name(&self) -> &'static str {
+        "multiply_packed"
+    }
+
+    fn run(&self, st: &mut GemmState<'_>, cx: &mut StageCtx<'_>) {
+        let qa = st.qa.as_ref().expect("Multiply needs a Quantize stage before it");
+        let qb = st.qb.as_ref().expect("Multiply needs a Quantize stage before it");
+        st.y = Some(match cx.kind {
+            GemmKind::Forward => packed_matmul(qa, qb),
+            GemmKind::Dgrad | GemmKind::Wgrad => packed_matmul_bt(qa, qb),
+        });
+    }
+}
+
+/// Add the rank-one mean term back: `1·(μ̄_X W̄)` (forward, Eq. 8) or
+/// `1·(μ̄_D W̄ᵀ)` (dgrad, Eq. 9). Uses the unrotated quantized weight when a
+/// Transform stage rotated `b` (the rank-one term is not Hadamard-paired).
+struct MeanCorrect;
+
+impl Stage for MeanCorrect {
+    fn name(&self) -> &'static str {
+        "mean_correct"
+    }
+
+    fn run(&self, st: &mut GemmState<'_>, cx: &mut StageCtx<'_>) {
+        let mu = st.mean_a.take().expect("MeanCorrect needs a MeanSplit stage before it");
+        let mu_q = cx.quant_a.quantize_dequant_vec(&mu);
+        let term = match (&st.b_plain, cx.kind) {
+            (Some(plain), GemmKind::Forward) => {
+                let qb_plain = store_operand(&cx.quant_b, &plain.transpose(), cx.sr);
+                mu_times_packed_rows(&mu_q, &qb_plain)
+            }
+            _ => {
+                let qb = st.qb.as_ref().expect("MeanCorrect needs a Quantize stage before it");
+                mu_times_packed_rows(&mu_q, qb)
+            }
+        };
+        st.y
+            .as_mut()
+            .expect("MeanCorrect needs a Multiply stage before it")
+            .add_row_vec(&term);
+    }
+}
+
+/// Add the wgrad rank-one term `l · μ̄_Xᵀ μ̄_D` (Eq. 10). The cross terms
+/// vanish exactly because both residuals are column-centered.
+struct OuterCorrect;
+
+impl Stage for OuterCorrect {
+    fn name(&self) -> &'static str {
+        "outer_correct"
+    }
+
+    fn run(&self, st: &mut GemmState<'_>, cx: &mut StageCtx<'_>) {
+        let mu_x = st.mean_a.take().expect("OuterCorrect needs MeanSplit{both}");
+        let mu_d = st.mean_b.take().expect("OuterCorrect needs MeanSplit{both}");
+        let mu_x_q = cx.quant_a.quantize_dequant_vec(&mu_x);
+        let mu_d_q = cx.quant_b.quantize_dequant_vec(&mu_d);
+        let l = st.a.rows as f32;
+        let y = st.y.as_mut().expect("OuterCorrect needs a Multiply stage before it");
+        let n = mu_d_q.len();
+        for (i, &mx) in mu_x_q.iter().enumerate() {
+            if mx == 0.0 {
+                continue;
+            }
+            let row = &mut y.data[i * n..(i + 1) * n];
+            let c = l * mx;
+            for (r, &md) in row.iter_mut().zip(mu_d_q.iter()) {
+                *r += c * md;
+            }
+        }
+    }
+}
+
+/// Add the full-precision low-rank product back (SVD-split forward):
+/// `Ŷ += L·W̄`, with W̄ dequantized once for this ablation-only term.
+struct LowRankCorrect;
+
+impl Stage for LowRankCorrect {
+    fn name(&self) -> &'static str {
+        "low_rank_correct"
+    }
+
+    fn run(&self, st: &mut GemmState<'_>, _cx: &mut StageCtx<'_>) {
+        let low_rank = st.low_rank.take().expect("LowRankCorrect needs a SpectralSplit stage");
+        let qb = st.qb.as_ref().expect("LowRankCorrect needs a Quantize stage before it");
+        // qb holds Ŵᵀ (forward packing); L·W̄ = L·(W̄ᵀ)ᵀ
+        let wt = qb.dequantize();
+        let y_lr = low_rank.matmul_bt(&wt);
+        st.y
+            .as_mut()
+            .expect("LowRankCorrect needs a Multiply stage before it")
+            .axpy(1.0, &y_lr);
+    }
+}
+
+// -------------------------------------------------------------- pipeline --
+
+/// The Correct stage an Averis stack ends in: rank-one row term for
+/// forward/dgrad, the `l·μ̄ᵀμ̄` outer product for wgrad.
+fn mean_correct_stage(kind: GemmKind) -> Box<dyn Stage> {
+    match kind {
+        GemmKind::Forward | GemmKind::Dgrad => Box::new(MeanCorrect),
+        GemmKind::Wgrad => Box::new(OuterCorrect),
+    }
+}
+
+/// An ordered stage stack for one recipe × GeMM kind.
+pub struct QuantPipeline {
+    kind: GemmKind,
+    stages: Vec<Box<dyn Stage>>,
+}
+
+impl QuantPipeline {
+    /// Declarative recipe → stage-stack lowering. This table *is* the recipe
+    /// semantics; everything below it is recipe-agnostic machinery.
+    pub fn for_recipe(recipe: QuantRecipe, kind: GemmKind) -> QuantPipeline {
+        use GemmKind::*;
+        let mut stages: Vec<Box<dyn Stage>> = Vec::new();
+        match recipe {
+            QuantRecipe::Bf16 => stages.push(Box::new(ExactMultiply)),
+            QuantRecipe::Nvfp4 | QuantRecipe::Mxfp4 => {
+                stages.push(Box::new(Quantize));
+                stages.push(Box::new(Multiply));
+            }
+            QuantRecipe::Nvfp4Hadamard => {
+                stages.push(Box::new(PairedHadamard { preserve_plain_b: false }));
+                stages.push(Box::new(Quantize));
+                stages.push(Box::new(Multiply));
+            }
+            QuantRecipe::Averis => {
+                stages.push(Box::new(MeanSplit { both: kind == Wgrad }));
+                stages.push(Box::new(Quantize));
+                stages.push(Box::new(Multiply));
+                stages.push(mean_correct_stage(kind));
+            }
+            QuantRecipe::AverisHadamard => {
+                // split first, then smooth the residual; backward GeMMs use
+                // the plain Averis stacks (the paper's combination row)
+                stages.push(Box::new(MeanSplit { both: kind == Wgrad }));
+                if kind == Forward {
+                    stages.push(Box::new(PairedHadamard { preserve_plain_b: true }));
+                }
+                stages.push(Box::new(Quantize));
+                stages.push(Box::new(Multiply));
+                stages.push(mean_correct_stage(kind));
+            }
+            QuantRecipe::SvdSplit => {
+                if kind == Forward {
+                    stages.push(Box::new(SpectralSplit { rank: SVD_SPLIT_RANK }));
+                }
+                stages.push(Box::new(Quantize));
+                stages.push(Box::new(Multiply));
+                if kind == Forward {
+                    stages.push(Box::new(LowRankCorrect));
+                }
+            }
+        }
+        QuantPipeline { kind, stages }
+    }
+
+    /// Run the stack over one operand pair. Operands are borrowed; a stage
+    /// that transforms one clones it lazily (`GemmState` is Cow-backed).
+    pub fn run(&self, a: &Mat, b: &Mat, cx: &mut StageCtx<'_>) -> Mat {
+        debug_assert_eq!(cx.kind, self.kind, "pipeline/context kind mismatch");
+        match self.kind {
+            GemmKind::Forward => assert_eq!(
+                a.cols, b.rows,
+                "forward: {}x{} · {}x{}",
+                a.rows, a.cols, b.rows, b.cols
+            ),
+            GemmKind::Dgrad => assert_eq!(a.cols, b.cols, "dgrad: inner dims"),
+            GemmKind::Wgrad => assert_eq!(a.rows, b.rows, "wgrad: token dims must match"),
+        }
+        let mut st = GemmState {
+            a: Cow::Borrowed(a),
+            b: Cow::Borrowed(b),
+            b_plain: None,
+            mean_a: None,
+            mean_b: None,
+            low_rank: None,
+            qa: None,
+            qb: None,
+            y: None,
+        };
+        for stage in &self.stages {
+            stage.run(&mut st, cx);
+        }
+        st.y.expect("every pipeline ends in a Multiply stage")
+    }
+
+    /// `"mean_split→quantize→multiply_packed→mean_correct"` — for logs/docs.
+    pub fn describe(&self) -> String {
+        self.stages.iter().map(|s| s.name()).collect::<Vec<_>>().join("→")
+    }
+
+    pub fn kind(&self) -> GemmKind {
+        self.kind
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stacks_are_declarative_and_ordered() {
+        let p = QuantPipeline::for_recipe(QuantRecipe::AverisHadamard, GemmKind::Forward);
+        assert_eq!(p.describe(), "mean_split→hadamard→quantize→multiply_packed→mean_correct");
+        let p = QuantPipeline::for_recipe(QuantRecipe::Averis, GemmKind::Wgrad);
+        assert_eq!(p.describe(), "mean_split→quantize→multiply_packed→outer_correct");
+        let p = QuantPipeline::for_recipe(QuantRecipe::Bf16, GemmKind::Dgrad);
+        assert_eq!(p.describe(), "multiply_exact");
+        let p = QuantPipeline::for_recipe(QuantRecipe::SvdSplit, GemmKind::Forward);
+        assert_eq!(
+            p.describe(),
+            "spectral_split→quantize→multiply_packed→low_rank_correct"
+        );
+        // backward GeMMs of Averis-Hadamard drop the rotation (paper setup)
+        let p = QuantPipeline::for_recipe(QuantRecipe::AverisHadamard, GemmKind::Dgrad);
+        assert_eq!(p.describe(), "mean_split→quantize→multiply_packed→mean_correct");
+    }
+}

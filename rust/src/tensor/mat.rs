@@ -3,8 +3,14 @@
 //! The GeMM here is the performance-critical primitive of the whole Rust
 //! simulator (every quantized forward/backward GeMM in the model lowers to
 //! it), so it is written as a blocked, transpose-aware kernel that the
-//! compiler auto-vectorizes well on a single core. See EXPERIMENTS.md §Perf.
+//! compiler auto-vectorizes well on one core and that shards output rows
+//! across scoped threads on large shapes (see `tensor::parallel`). Row
+//! partitioning never changes any row's accumulation order, so results are
+//! bit-identical at every thread count. See EXPERIMENTS.md §Perf for
+//! measured numbers.
 
+use super::parallel;
+use super::parallel::min_rows_for as par_min_rows;
 use super::rng::Rng;
 
 /// Dense row-major matrix of f32.
@@ -110,46 +116,57 @@ impl Mat {
         c
     }
 
-    /// C = A · Bᵀ without materializing Bᵀ.
+    /// C = A · Bᵀ without materializing Bᵀ. Output rows are sharded across
+    /// threads; each (i,j) dot product runs in ascending-k order regardless
+    /// of the partitioning.
     pub fn matmul_bt(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.cols, "matmul_bt: inner dims");
-        let mut c = Mat::zeros(self.rows, b.rows);
         let (m, k, n) = (self.rows, self.cols, b.rows);
-        for i in 0..m {
-            let arow = self.row(i);
-            let crow = c.row_mut(i);
-            for j in 0..n {
-                let brow = b.row(j);
-                let mut acc = 0.0f32;
-                // contiguous dot product — vectorizes
-                for t in 0..k {
-                    acc += arow[t] * brow[t];
+        let mut c = Mat::zeros(m, n);
+        parallel::par_row_chunks(&mut c.data, m, n, par_min_rows(k * n), |row0, crows| {
+            let nrows = crows.len() / n.max(1);
+            for li in 0..nrows {
+                let arow = &self.data[(row0 + li) * k..(row0 + li + 1) * k];
+                let crow = &mut crows[li * n..(li + 1) * n];
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    let brow = b.row(j);
+                    let mut acc = 0.0f32;
+                    // contiguous dot product — vectorizes
+                    for t in 0..k {
+                        acc += arow[t] * brow[t];
+                    }
+                    *cv = acc;
                 }
-                crow[j] = acc;
             }
-        }
+        });
         c
     }
 
-    /// C = Aᵀ · B without materializing Aᵀ.
+    /// C = Aᵀ · B without materializing Aᵀ. Output rows (columns of A) are
+    /// sharded across threads; per (i,j) the reduction walks k ascending
+    /// with the same zero-skip as the single-thread kernel, so the result
+    /// is bit-identical at every thread count.
     pub fn matmul_at(&self, b: &Mat) -> Mat {
         assert_eq!(self.rows, b.rows, "matmul_at: inner dims");
         let (k, m, n) = (self.rows, self.cols, b.cols);
         let mut c = Mat::zeros(m, n);
-        for t in 0..k {
-            let arow = self.row(t);
-            let brow = b.row(t);
-            for i in 0..m {
-                let a = arow[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    crow[j] += a * brow[j];
+        parallel::par_row_chunks(&mut c.data, m, n, par_min_rows(k * n), |row0, crows| {
+            let nrows = crows.len() / n.max(1);
+            for li in 0..nrows {
+                let i = row0 + li;
+                let crow = &mut crows[li * n..(li + 1) * n];
+                for t in 0..k {
+                    let a = self.data[t * m + i];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[t * n..(t + 1) * n];
+                    for j in 0..n {
+                        crow[j] += a * brow[j];
+                    }
                 }
             }
-        }
+        });
         c
     }
 
@@ -250,7 +267,10 @@ impl Mat {
 ///
 /// ikj ordering: for each (i, k) the inner j-loop is `C[i,·] += A[i,k]·B[k,·]`
 /// over contiguous rows of B and C — a pure FMA stream. Blocking over k keeps
-/// the active rows of B in L1/L2.
+/// the active rows of B in L1/L2. Output rows are sharded across scoped
+/// threads on large shapes; every C row accumulates k in ascending order no
+/// matter how the rows are partitioned, so the result is bit-identical at
+/// any thread count.
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
     assert_eq!(a.cols, b.rows);
     assert_eq!(c.rows, a.rows);
@@ -260,23 +280,26 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
     }
     let (m, k, n) = (a.rows, a.cols, b.cols);
     const KB: usize = 64;
-    for k0 in (0..k).step_by(KB) {
-        let kmax = (k0 + KB).min(k);
-        for i in 0..m {
-            let arow = &a.data[i * k..(i + 1) * k];
-            let crow = &mut c.data[i * n..(i + 1) * n];
-            for t in k0..kmax {
-                let av = arow[t];
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b.data[t * n..(t + 1) * n];
-                for j in 0..n {
-                    crow[j] += av * brow[j];
+    parallel::par_row_chunks(&mut c.data, m, n, par_min_rows(k * n), |row0, crows| {
+        let nrows = crows.len() / n.max(1);
+        for k0 in (0..k).step_by(KB) {
+            let kmax = (k0 + KB).min(k);
+            for li in 0..nrows {
+                let arow = &a.data[(row0 + li) * k..(row0 + li + 1) * k];
+                let crow = &mut crows[li * n..(li + 1) * n];
+                for t in k0..kmax {
+                    let av = arow[t];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[t * n..(t + 1) * n];
+                    for j in 0..n {
+                        crow[j] += av * brow[j];
+                    }
                 }
             }
         }
-    }
+    });
 }
 
 #[cfg(test)]
@@ -361,5 +384,30 @@ mod tests {
     fn fro_norm_eye() {
         let e = Mat::eye(16);
         assert!((e.fro_norm() - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gemms_bit_identical_across_thread_counts() {
+        use super::super::parallel;
+        let mut rng = Rng::new(17);
+        // large enough that the row sharding actually kicks in
+        let a = Mat::randn(96, 160, 1.0, &mut rng);
+        let b = Mat::randn(160, 80, 1.0, &mut rng);
+        let bt = b.transpose();
+        let run = |threads: usize| {
+            parallel::set_threads(threads);
+            let r = (a.matmul(&b), a.matmul_bt(&bt), a.transpose().matmul_at(&b));
+            parallel::set_threads(0);
+            r
+        };
+        let (c1, d1, e1) = run(1);
+        let (c2, d2, e2) = run(2);
+        let (c4, d4, e4) = run(4);
+        assert_eq!(c1.data, c2.data);
+        assert_eq!(c1.data, c4.data);
+        assert_eq!(d1.data, d2.data);
+        assert_eq!(d1.data, d4.data);
+        assert_eq!(e1.data, e2.data);
+        assert_eq!(e1.data, e4.data);
     }
 }

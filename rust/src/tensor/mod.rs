@@ -6,6 +6,7 @@
 
 pub mod mat;
 pub mod ops;
+pub mod parallel;
 pub mod rng;
 
 pub use mat::Mat;

@@ -1,0 +1,164 @@
+//! Offline stand-in for the `anyhow` crate: the subset of its API this
+//! workspace uses (`Result`, `Error`, `Context`, `bail!`, `anyhow!`),
+//! implemented without any dependencies so the build works in the
+//! network-isolated image. Behaviorally compatible for error construction,
+//! `?`-conversion from `std::error::Error` types, and context chaining;
+//! it does not capture backtraces or support downcasting.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A string-backed error with a stack of context messages
+/// (outermost context last, like `anyhow::Error`'s chain).
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message (`anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), context: Vec::new() }
+    }
+
+    /// Attach an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.context.push(c.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.context
+            .iter()
+            .rev()
+            .map(String::as_str)
+            .chain(std::iter::once(self.msg.as_str()))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, outermost first
+            let mut first = true;
+            for part in self.chain() {
+                if !first {
+                    f.write_str(": ")?;
+                }
+                f.write_str(part)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.chain().next().unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Debug prints the whole chain, like anyhow's report format.
+        write!(f, "{self:#}")
+    }
+}
+
+/// `anyhow::Result`: a `Result` defaulting to this crate's `Error`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+// Mirrors anyhow's blanket conversion: any std error can be `?`-converted.
+// (Sound because `Error` itself does not implement `std::error::Error`.)
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Context-attachment extension trait for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Construct an `Error` from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().unwrap_err().to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e: Result<()> = Err(io_err());
+        let e = e.with_context(|| "reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading manifest"));
+        assert!(full.contains("gone"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn inner(x: u32) -> Result<()> {
+            if x > 2 {
+                bail!("too big: {x}");
+            }
+            Ok(())
+        }
+        assert!(inner(1).is_ok());
+        assert_eq!(inner(9).unwrap_err().to_string(), "too big: 9");
+    }
+}
