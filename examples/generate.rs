@@ -1,0 +1,44 @@
+//! Serving quickstart: train a tiny model for a few steps, save an f32
+//! checkpoint with frozen calibration means, reload it, pack every weight
+//! to E2M1 once, and generate a continuation through the KV-cached
+//! continuous-batching engine.
+//!
+//! Run: cargo run --release --example generate
+
+use averis::data::{Corpus, CorpusConfig};
+use averis::model::ModelConfig;
+use averis::quant::QuantRecipe;
+use averis::runtime::{load_params_checkpoint, save_params_checkpoint};
+use averis::serve::{measure_calib_means, Engine, QuantizedCheckpoint, SampleCfg};
+use averis::train::{train, TrainConfig};
+
+fn main() {
+    // 1) a tiny training run (Averis W4A4G4 recipe)
+    let cfg = ModelConfig::test_tiny(64);
+    let corpus =
+        Corpus::generate(CorpusConfig { tokens: 1 << 14, vocab: 64, ..Default::default() }, 7);
+    let tc = TrainConfig { steps: 40, batch: 4, seq: 16, eval_every: 0, ..Default::default() };
+    println!("training {} steps ({} recipe)...", tc.steps, QuantRecipe::Averis);
+    let r = train(cfg, QuantRecipe::Averis, tc, corpus.train.clone(), corpus.heldout.clone());
+    println!("final train loss (ema) {:.3}   heldout {:.3}", r.final_train_loss, r.final_eval_loss);
+
+    // 2) capture frozen calibration means and save the checkpoint
+    let calib_tokens: Vec<u32> = corpus.train[..4 * 16].to_vec();
+    let calib = measure_calib_means(&cfg, &r.params, &calib_tokens, 4, 16);
+    let path = std::env::temp_dir().join("averis_generate_example.bin");
+    save_params_checkpoint(&path, &cfg, &r.params, &calib).expect("save checkpoint");
+
+    // 3) reload, pack once, and serve
+    let (cfg2, params2, calib2) = load_params_checkpoint(&path).expect("load checkpoint");
+    let ckpt = QuantizedCheckpoint::build(&cfg2, &params2, &calib2);
+    println!(
+        "packed serving checkpoint: {} KiB (E2M1 codes + block scales + frozen mu)",
+        ckpt.storage_bytes() / 1024
+    );
+    let prompt: Vec<u32> = corpus.heldout[..8].to_vec();
+    let tokens = Engine::generate(ckpt, &prompt, 16, SampleCfg::Greedy, 0).expect("generate");
+    println!("prompt    : {prompt:?}");
+    println!("generated : {tokens:?}");
+    assert_eq!(tokens.len(), 16);
+    let _ = std::fs::remove_file(&path);
+}

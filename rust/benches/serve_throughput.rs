@@ -1,0 +1,52 @@
+//! Serving throughput: continuous-batching tokens/sec vs sequential
+//! single-prompt decode, over the packed KV-cached serve path
+//! (EXPERIMENTS.md §Serving).
+//!
+//! Run: cargo bench --bench serve_throughput [-- --threads N]
+//! To write the measured table into EXPERIMENTS.md use the CLI twin:
+//!   cargo run --release -- serve-bench --record EXPERIMENTS.md
+
+use averis::bench_harness::{threads_from_args, TablePrinter};
+use averis::model::{ModelConfig, Params};
+use averis::serve::{bench_continuous_decode, CalibMeans};
+use averis::tensor::Rng;
+
+fn main() {
+    let threads = threads_from_args();
+    let (n_prompts, prompt_len, max_new, seed) = (32usize, 16usize, 32usize, 42u64);
+    for (name, cfg) in [
+        ("dense (qwen3-0.6b-sim)", ModelConfig::dense_small(256)),
+        ("moe (qwen3-7b-a1.5b-sim)", ModelConfig::moe_small(256)),
+    ] {
+        let params = Params::init(&cfg, &mut Rng::new(seed));
+        let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+        println!(
+            "\n{name} — {n_prompts} prompts × (prefill {prompt_len} + decode {max_new}), {threads} threads"
+        );
+        let rows = bench_continuous_decode(
+            &cfg,
+            &params,
+            &calib,
+            &[1, 8, 32],
+            n_prompts,
+            prompt_len,
+            max_new,
+            seed,
+        );
+        let t = TablePrinter::new(
+            &["max_active", "sessions", "tokens", "wall_s", "tok/s", "vs seq"],
+            &[10, 8, 8, 9, 9, 7],
+        );
+        let base = rows[0].tok_per_s;
+        for r in &rows {
+            t.row(&[
+                r.max_active.to_string(),
+                r.sessions.to_string(),
+                r.generated.to_string(),
+                format!("{:.3}", r.wall_s),
+                format!("{:.1}", r.tok_per_s),
+                format!("{:.2}x", r.tok_per_s / base),
+            ]);
+        }
+    }
+}

@@ -1,9 +1,11 @@
 //! Benchmark harness (criterion is unavailable offline): warmup + timed
-//! iterations with mean/std/min reporting, and the table printers that
-//! render paper-style rows for the bench binaries.
+//! iterations with mean/std/min reporting, the table printers that render
+//! paper-style rows for the bench binaries, and the marked-block recorder
+//! that writes measured tables back into EXPERIMENTS.md.
 
 use crate::metrics::TimingStats;
 use std::hint::black_box;
+use std::path::Path;
 use std::time::Instant;
 
 /// Benchmark settings.
@@ -65,6 +67,39 @@ pub fn fmt_ms(v: f64) -> String {
     format!("{v:.4}")
 }
 
+/// Replace the contents of the `<!-- tag:begin -->` … `<!-- tag:end -->`
+/// block in a markdown file with `body` (appending the block if the file
+/// has no markers yet). This is how `averis serve-bench --record` writes
+/// measured throughput tables into EXPERIMENTS.md instead of leaving them
+/// to manual copy-paste.
+pub fn record_markdown_block(
+    path: impl AsRef<Path>,
+    tag: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let path = path.as_ref();
+    let begin = format!("<!-- {tag}:begin -->");
+    let end = format!("<!-- {tag}:end -->");
+    // only a missing file counts as empty; any other read failure must not
+    // end with the target being overwritten by a bare marker block
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+        Err(e) => return Err(e),
+    };
+    let block = format!("{begin}\n{body}\n{end}");
+    let out = match (text.find(&begin), text.find(&end)) {
+        (Some(b), Some(e)) if e >= b => {
+            format!("{}{}{}", &text[..b], block, &text[e + end.len()..])
+        }
+        _ => {
+            let sep = if text.is_empty() || text.ends_with('\n') { "" } else { "\n" };
+            format!("{text}{sep}\n{block}\n")
+        }
+    };
+    std::fs::write(path, out)
+}
+
 /// Apply a `--threads N` flag from the bench binary's argv to the kernel
 /// thread knob (0 = auto) and return the resolved worker count. Bench
 /// binaries call this once at startup:
@@ -85,6 +120,25 @@ pub fn threads_from_args() -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn markdown_block_replace_and_append() {
+        let path = std::env::temp_dir().join("averis_md_block_test.md");
+        let _ = std::fs::remove_file(&path);
+        // no file / no markers → append
+        record_markdown_block(&path, "tb", "| a |").unwrap();
+        let t1 = std::fs::read_to_string(&path).unwrap();
+        assert!(t1.contains("<!-- tb:begin -->\n| a |\n<!-- tb:end -->"));
+        // existing markers → replace in place, preserving surroundings
+        std::fs::write(&path, format!("# head\n{t1}tail\n")).unwrap();
+        record_markdown_block(&path, "tb", "| b |").unwrap();
+        let t2 = std::fs::read_to_string(&path).unwrap();
+        assert!(t2.starts_with("# head\n"));
+        assert!(t2.contains("| b |"));
+        assert!(!t2.contains("| a |"));
+        assert!(t2.contains("tail"));
+        let _ = std::fs::remove_file(&path);
+    }
 
     #[test]
     fn bench_returns_requested_iters() {

@@ -22,6 +22,10 @@ pub enum Command {
     Fig6,
     /// Quantization-error demo on synthetic data.
     QuantDemo,
+    /// Autoregressive generation from a saved checkpoint (serve path).
+    Generate,
+    /// Continuous-batching serving throughput bench.
+    ServeBench,
     /// Print artifact/manifest info.
     Info,
     Help,
@@ -35,6 +39,8 @@ impl Command {
             "table1" => Ok(Command::Table1),
             "fig6" => Ok(Command::Fig6),
             "quant-demo" => Ok(Command::QuantDemo),
+            "generate" => Ok(Command::Generate),
+            "serve-bench" => Ok(Command::ServeBench),
             "info" => Ok(Command::Info),
             "help" | "--help" | "-h" => Ok(Command::Help),
             other => Err(format!("unknown command '{other}' — try `averis help`")),
@@ -56,7 +62,24 @@ COMMANDS:
               --threads N                 (kernel worker threads; 0 = auto.
                                            deterministic: same seed, same
                                            curve at any thread count)
+              --corpus-seed N             (synthetic-corpus generator seed)
+              --save FILE                 (write an f32 checkpoint + frozen
+                                           calibration means after training)
+              --save-quant FILE           (write the packed-E2M1 serving
+                                           checkpoint)
               --config FILE               (key = value overrides)
+  generate    autoregressive generation from a saved checkpoint (either
+              flavor: f32 training checkpoint or packed serving checkpoint)
+              --ckpt FILE                 (required)
+              --prompt \"1,2,3\"          (token ids; default: random)
+              --prompt-len N  --max-new N --seed N  --threads N
+              --top-k K  --temperature T  (omit --top-k for greedy)
+  serve-bench continuous-batching throughput (EXPERIMENTS.md §Serving)
+              --model dense|moe|tiny  --batches 1,8,32  --prompts N
+              --prompt-len N  --max-new N  --seed N  --threads N
+              --record FILE               (rewrite the serve-bench block of
+                                           EXPERIMENTS.md with the results)
+              --out DIR                   (CSV output)
   analyze     regenerate Figs. 1-5, App. B/C/D, Theorem-1 validation
               --steps N (instrumented training length)  --out DIR
   table1      Table 1: loss gap + downstream probes across recipes

@@ -62,8 +62,16 @@ pub struct ExperimentConfig {
     pub recipe: QuantRecipe,
     pub train: TrainConfig,
     pub corpus: CorpusConfig,
+    /// Seed of the synthetic-corpus generator (`--corpus-seed`). Distinct
+    /// from `train.seed`: the same data can be replayed under different
+    /// init/SR seeds and vice versa.
+    pub corpus_seed: u64,
     pub out_dir: String,
 }
+
+/// Historical default corpus seed (the value previously hardcoded in the
+/// coordinator), kept as the default so existing runs reproduce.
+pub const DEFAULT_CORPUS_SEED: u64 = 0xC0FFEE;
 
 impl ExperimentConfig {
     pub fn defaults(preset: ModelPreset, recipe: QuantRecipe) -> Self {
@@ -75,7 +83,14 @@ impl ExperimentConfig {
             eval_every: 25,
             ..Default::default()
         };
-        ExperimentConfig { preset, recipe, train, corpus, out_dir: "runs".to_string() }
+        ExperimentConfig {
+            preset,
+            recipe,
+            train,
+            corpus,
+            corpus_seed: DEFAULT_CORPUS_SEED,
+            out_dir: "runs".to_string(),
+        }
     }
 
     pub fn model_config(&self) -> ModelConfig {
@@ -103,6 +118,7 @@ pub fn apply_overrides(exp: &mut ExperimentConfig, file: &ConfigFile) -> Result<
             "threads" => exp.train.threads = v.parse().map_err(|e| format!("threads: {e}"))?,
             "vocab" => exp.corpus.vocab = v.parse().map_err(|e| format!("vocab: {e}"))?,
             "corpus_tokens" => exp.corpus.tokens = v.parse().map_err(|e| format!("corpus_tokens: {e}"))?,
+            "corpus_seed" => exp.corpus_seed = v.parse().map_err(|e| format!("corpus_seed: {e}"))?,
             "recipe" => exp.recipe = v.parse()?,
             "model" => exp.preset = ModelPreset::parse(v)?,
             "out_dir" => exp.out_dir = v.clone(),
@@ -141,11 +157,21 @@ mod tests {
     #[test]
     fn overrides_apply() {
         let mut e = ExperimentConfig::defaults(ModelPreset::Tiny, QuantRecipe::Bf16);
-        let f = ConfigFile::parse_str("steps = 7\nrecipe = averis\n# comment\nseq=32").unwrap();
+        let f = ConfigFile::parse_str(
+            "steps = 7\nrecipe = averis\n# comment\nseq=32\ncorpus_seed = 99",
+        )
+        .unwrap();
         apply_overrides(&mut e, &f).unwrap();
         assert_eq!(e.train.steps, 7);
         assert_eq!(e.recipe, QuantRecipe::Averis);
         assert_eq!(e.train.seq, 32);
+        assert_eq!(e.corpus_seed, 99);
+    }
+
+    #[test]
+    fn corpus_seed_defaults_to_historical_value() {
+        let e = ExperimentConfig::defaults(ModelPreset::Tiny, QuantRecipe::Bf16);
+        assert_eq!(e.corpus_seed, DEFAULT_CORPUS_SEED);
     }
 
     #[test]

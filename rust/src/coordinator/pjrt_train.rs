@@ -26,6 +26,7 @@ pub fn pjrt_train_run(
     recipe: QuantRecipe,
     steps: u64,
     seed: u64,
+    corpus_seed: u64,
     out_dir: &Path,
 ) -> Result<PjrtRunResult> {
     let m = &store.manifest;
@@ -35,7 +36,7 @@ pub fn pjrt_train_run(
     // data: synthetic corpus (identical across recipes for comparability)
     let corpus = Corpus::generate(
         CorpusConfig { vocab: m.vocab, tokens: 1 << 18, ..Default::default() },
-        0xC0FFEE,
+        corpus_seed,
     );
     let mut batcher = Batcher::new(corpus.train.clone(), m.batch, m.seq, seed);
     let eval_batcher = Batcher::new(corpus.heldout.clone(), m.batch, m.seq, 0);

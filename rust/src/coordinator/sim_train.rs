@@ -12,7 +12,7 @@ use super::runs::RunDir;
 /// Run one simulator experiment and persist outputs. Set `capture_taps` to
 /// instrument the early/late checkpoints for the analysis pipeline.
 pub fn sim_train_run(exp: &ExperimentConfig, capture_taps: bool) -> Result<TrainResult> {
-    let corpus = Corpus::generate(exp.corpus, 0xC0FFEE);
+    let corpus = Corpus::generate(exp.corpus, exp.corpus_seed);
     let mut tc = exp.train;
     tc.tap_steps = [capture_taps, capture_taps];
     let result = train(

@@ -5,8 +5,10 @@
 //! the tiled-Hadamard baseline, the Averis method (quantized forward/dgrad/
 //! wgrad GeMMs with mean–residual splitting), a pure-Rust quantized-training
 //! Transformer simulator, the mean-bias analysis pipeline (paper §2,
-//! Figs. 1–5, Theorem 1), and a PJRT runtime + coordinator that trains
-//! JAX/Pallas-AOT-compiled models with Python off the step path.
+//! Figs. 1–5, Theorem 1), a PJRT runtime + coordinator that trains
+//! JAX/Pallas-AOT-compiled models with Python off the step path, and an
+//! FP4 serving engine (`serve`) — quantized checkpoints, KV-cached decode,
+//! and a continuous-batching scheduler.
 //!
 //! See DESIGN.md for the architecture and the per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
@@ -26,5 +28,6 @@ pub mod metrics;
 pub mod model;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod train;

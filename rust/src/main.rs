@@ -3,17 +3,23 @@
 //! See `averis help` (config::cli::USAGE) for commands; DESIGN.md §5 maps
 //! each paper table/figure to its driver.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
+use averis::bench_harness::record_markdown_block;
 use averis::config::cli::{CliArgs, Command, USAGE};
 use averis::config::{apply_overrides, ConfigFile, ExperimentConfig, ModelPreset};
 use averis::coordinator::{evaluate_probes, figures, pjrt_train_run, sim_train_run, RunDir};
 use averis::coordinator::probe_eval::mean_accuracy;
 use averis::data::{Corpus, CorpusConfig};
 use averis::metrics::CsvSink;
+use averis::model::Params;
 use averis::quant::averis::split_vs_plain_error;
 use averis::quant::{Nvfp4Quantizer, QuantRecipe};
-use averis::runtime::ArtifactStore;
-use averis::tensor::{Mat, Rng};
+use averis::runtime::{save_params_checkpoint, ArtifactStore};
+use averis::serve::{
+    bench_continuous_decode, measure_calib_means, CalibMeans, Engine, QuantizedCheckpoint,
+    SampleCfg,
+};
+use averis::tensor::{parallel, Mat, Rng};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -55,6 +61,9 @@ fn experiment_from_args(args: &CliArgs) -> Result<ExperimentConfig> {
     if let Some(v) = args.get_parse::<usize>("threads").map_err(anyhow::Error::msg)? {
         exp.train.threads = v;
     }
+    if let Some(v) = args.get_parse::<u64>("corpus-seed").map_err(anyhow::Error::msg)? {
+        exp.corpus_seed = v;
+    }
     if let Some(v) = args.get("out") {
         exp.out_dir = v.to_string();
     }
@@ -73,6 +82,8 @@ fn run(args: &CliArgs) -> Result<()> {
         Command::Analyze => analyze_cmd(args),
         Command::Fig6 => fig6_cmd(args),
         Command::Table1 => table1_cmd(args),
+        Command::Generate => generate_cmd(args),
+        Command::ServeBench => serve_bench_cmd(args),
     }
 }
 
@@ -140,10 +151,29 @@ fn train_cmd(args: &CliArgs) -> Result<()> {
                 "final train loss (ema) {:.4}   heldout {:.4}   {:.2} s/step",
                 r.final_train_loss, r.final_eval_loss, r.sec_per_step
             );
+            if args.get("save").is_some() || args.get("save-quant").is_some() {
+                let (calib, cfg) = calibrate_from_corpus(&exp, &r.params);
+                if let Some(path) = args.get("save") {
+                    save_params_checkpoint(path, &cfg, &r.params, &calib)?;
+                    println!("saved f32 checkpoint + calibration means to {path}");
+                }
+                if let Some(path) = args.get("save-quant") {
+                    let ckpt = QuantizedCheckpoint::build(&cfg, &r.params, &calib);
+                    ckpt.save(path)?;
+                    println!(
+                        "saved packed serving checkpoint to {path} ({} KiB packed)",
+                        ckpt.storage_bytes() / 1024
+                    );
+                }
+            }
         }
         "pjrt" => {
             if exp.preset.is_moe() {
                 bail!("PJRT artifacts cover the dense model; use --engine sim for MoE");
+            }
+            if args.get("save").is_some() || args.get("save-quant").is_some() {
+                bail!("--save/--save-quant need the structured Params of the sim engine; \
+                       rerun with --engine sim");
             }
             let store = ArtifactStore::open(args.get_or("artifacts", "artifacts"))?;
             let client = xla::PjRtClient::cpu()?;
@@ -155,7 +185,15 @@ fn train_cmd(args: &CliArgs) -> Result<()> {
                 exp.train.steps
             );
             let run = RunDir::create(&exp.out_dir, &format!("pjrt_{}", exp.run_name()))?;
-            let r = pjrt_train_run(&client, &store, exp.recipe, exp.train.steps, exp.train.seed, &run.path)?;
+            let r = pjrt_train_run(
+                &client,
+                &store,
+                exp.recipe,
+                exp.train.steps,
+                exp.train.seed,
+                exp.corpus_seed,
+                &run.path,
+            )?;
             println!(
                 "final loss {:.4}   heldout(eval-quantized) {:.4}   {:.3} s/step",
                 r.loss_curve.last().map(|&(_, l)| l).unwrap_or(f32::NAN),
@@ -164,6 +202,175 @@ fn train_cmd(args: &CliArgs) -> Result<()> {
             );
         }
         other => bail!("unknown engine '{other}' (sim|pjrt)"),
+    }
+    Ok(())
+}
+
+/// Capture frozen calibration means for serving: one full-precision forward
+/// over a deterministic batch of the training corpus (the serve path
+/// conditions its Averis split on these where the token-mean degenerates).
+fn calibrate_from_corpus(
+    exp: &ExperimentConfig,
+    params: &Params,
+) -> (CalibMeans, averis::model::ModelConfig) {
+    let cfg = exp.model_config();
+    // deterministic regeneration of exactly the corpus sim_train_run trained
+    // on (same (exp.corpus, exp.corpus_seed) inputs) — a few ms of redundant
+    // work, accepted to keep sim_train_run's signature corpus-free
+    let corpus = Corpus::generate(exp.corpus, exp.corpus_seed);
+    let (batch, seq) = (exp.train.batch, exp.train.seq);
+    let need = batch * seq;
+    let tokens: Vec<u32> = corpus.train.iter().copied().cycle().take(need).collect();
+    (measure_calib_means(&cfg, params, &tokens, batch, seq), cfg)
+}
+
+fn generate_cmd(args: &CliArgs) -> Result<()> {
+    let path = args.get("ckpt").context("generate needs --ckpt FILE")?;
+    if let Some(t) = args.get_parse::<usize>("threads").map_err(anyhow::Error::msg)? {
+        parallel::set_threads(t);
+    }
+    let ckpt = QuantizedCheckpoint::load_any(path)?;
+    let vocab = ckpt.cfg.vocab;
+    let seed = args.get_parse::<u64>("seed").map_err(anyhow::Error::msg)?.unwrap_or(0);
+    let max_new = args.get_parse::<usize>("max-new").map_err(anyhow::Error::msg)?.unwrap_or(32);
+    let sampler = match args.get_parse::<usize>("top-k").map_err(anyhow::Error::msg)? {
+        None | Some(0) => SampleCfg::Greedy,
+        Some(k) => SampleCfg::TopK {
+            k,
+            temperature: args
+                .get_parse::<f32>("temperature")
+                .map_err(anyhow::Error::msg)?
+                .unwrap_or(1.0),
+        },
+    };
+    let prompt: Vec<u32> = match args.get("prompt") {
+        Some(s) => {
+            let toks: Vec<u32> = s
+                .split(|c: char| c == ',' || c.is_whitespace())
+                .filter(|t| !t.is_empty())
+                .map(|t| t.parse::<u32>().map_err(|e| anyhow::anyhow!("--prompt: {e}")))
+                .collect::<Result<_>>()?;
+            toks
+        }
+        None => {
+            let len = args
+                .get_parse::<usize>("prompt-len")
+                .map_err(anyhow::Error::msg)?
+                .unwrap_or(16);
+            let mut rng = Rng::new(seed ^ 0x9E37);
+            (0..len.max(1)).map(|_| rng.below(vocab) as u32).collect()
+        }
+    };
+    println!(
+        "model: d={} layers={} vocab={}   packed weights: {} KiB",
+        ckpt.cfg.d_model,
+        ckpt.cfg.n_layers,
+        vocab,
+        ckpt.storage_bytes() / 1024
+    );
+    let mut engine = Engine::new(ckpt, 1, seed);
+    engine.submit(prompt.clone(), max_new, sampler, None)?;
+    let t0 = std::time::Instant::now();
+    let done = engine.run();
+    let wall = t0.elapsed().as_secs_f64();
+    let toks = &done[0].tokens;
+    println!("prompt    : {prompt:?}");
+    println!("generated : {toks:?}");
+    println!(
+        "{} tokens in {:.3} s  ({:.1} tok/s, KV-cached packed decode)",
+        toks.len(),
+        wall,
+        toks.len() as f64 / wall.max(1e-9)
+    );
+    Ok(())
+}
+
+fn serve_bench_cmd(args: &CliArgs) -> Result<()> {
+    let preset = ModelPreset::parse(&args.get_or("model", "dense")).map_err(anyhow::Error::msg)?;
+    if let Some(t) = args.get_parse::<usize>("threads").map_err(anyhow::Error::msg)? {
+        parallel::set_threads(t);
+    }
+    let batches: Vec<usize> = args
+        .get_or("batches", "1,8,32")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow::anyhow!("--batches: {e}")))
+        .collect::<Result<_>>()?;
+    let seed = args.get_parse::<u64>("seed").map_err(anyhow::Error::msg)?.unwrap_or(42);
+    let n_prompts = args.get_parse::<usize>("prompts").map_err(anyhow::Error::msg)?.unwrap_or(32);
+    let prompt_len =
+        args.get_parse::<usize>("prompt-len").map_err(anyhow::Error::msg)?.unwrap_or(16);
+    let max_new = args.get_parse::<usize>("max-new").map_err(anyhow::Error::msg)?.unwrap_or(32);
+    let cfg = preset.model_config(256);
+    if prompt_len + max_new > cfg.max_seq {
+        bail!(
+            "--prompt-len {prompt_len} + --max-new {max_new} exceeds the {} preset's max_seq {}",
+            preset.name(),
+            cfg.max_seq
+        );
+    }
+    let params = Params::init(&cfg, &mut Rng::new(seed));
+    let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+    println!(
+        "serve-bench: {} — {} prompts × (prefill {prompt_len} + decode {max_new}), batches {:?}, {} threads",
+        preset.name(),
+        n_prompts,
+        batches,
+        parallel::threads()
+    );
+    let rows = bench_continuous_decode(
+        &cfg, &params, &calib, &batches, n_prompts, prompt_len, max_new, seed,
+    );
+    println!(
+        "{:>10} {:>10} {:>10} {:>10} {:>12}",
+        "max_active", "sessions", "tokens", "wall_s", "tok/s"
+    );
+    let mut md = String::from(
+        "| max_active | sessions | decode tokens | wall (s) | tokens/sec | vs sequential |\n\
+         |-----------:|---------:|--------------:|---------:|-----------:|--------------:|\n",
+    );
+    // "vs sequential" only means something against the max_active = 1 row
+    let base_tps = rows.iter().find(|r| r.max_active == 1).map(|r| r.tok_per_s);
+    for r in &rows {
+        println!(
+            "{:>10} {:>10} {:>10} {:>10.3} {:>12.1}",
+            r.max_active, r.sessions, r.generated, r.wall_s, r.tok_per_s
+        );
+        let vs_seq = match base_tps {
+            Some(b) => format!("{:.2}x", r.tok_per_s / b),
+            None => "n/a".to_string(),
+        };
+        md.push_str(&format!(
+            "| {} | {} | {} | {:.3} | {:.1} | {vs_seq} |\n",
+            r.max_active, r.sessions, r.generated, r.wall_s, r.tok_per_s
+        ));
+    }
+    md.push_str(&format!(
+        "\nProtocol: `averis serve-bench --model {} --batches {} --prompts {n_prompts} \
+         --prompt-len {prompt_len} --max-new {max_new} --seed {seed} --threads {}` \
+         (greedy decoding; identical token streams at every batch size).",
+        args.get_or("model", "dense"),
+        args.get_or("batches", "1,8,32"),
+        parallel::threads()
+    ));
+    let run = RunDir::create(&args.get_or("out", "runs"), "serve_bench")?;
+    let mut csv = CsvSink::create(
+        run.file("serve_bench.csv"),
+        &["max_active", "sessions", "tokens", "wall_s", "tok_per_s"],
+    )?;
+    for r in &rows {
+        csv.row(&[
+            r.max_active as f64,
+            r.sessions as f64,
+            r.generated as f64,
+            r.wall_s,
+            r.tok_per_s,
+        ])?;
+    }
+    println!("csv written to {}", run.file("serve_bench.csv").display());
+    if let Some(record) = args.get("record") {
+        record_markdown_block(record, "serve-bench", &md)?;
+        println!("recorded throughput table into {record}");
     }
     Ok(())
 }
@@ -189,7 +396,15 @@ fn fig6_cmd(args: &CliArgs) -> Result<()> {
         for recipe in QuantRecipe::PAPER_SET {
             println!("== {recipe} ==");
             let rdir = RunDir::create(&run.path, recipe.artifact_stem())?;
-            let r = pjrt_train_run(&client, &store, recipe, base.train.steps, base.train.seed, &rdir.path)?;
+            let r = pjrt_train_run(
+                &client,
+                &store,
+                recipe,
+                base.train.steps,
+                base.train.seed,
+                base.corpus_seed,
+                &rdir.path,
+            )?;
             let fl = r.loss_curve.last().map(|&(_, l)| l).unwrap_or(f32::NAN);
             summary.push((recipe, fl, r.final_eval_loss));
         }
@@ -225,7 +440,7 @@ fn table1_cmd(args: &CliArgs) -> Result<()> {
     let run = RunDir::create(&base.out_dir, "table1")?;
     let corpus = Corpus::generate(
         CorpusConfig { vocab: base.corpus.vocab, tokens: base.corpus.tokens, ..base.corpus },
-        0xC0FFEE,
+        base.corpus_seed,
     );
     let n_probes = 60;
     let ctx = 32;

@@ -123,6 +123,124 @@ pub fn attn_forward(
     (y, cache)
 }
 
+/// Per-layer KV cache for incremental decode: rotated K and V rows appended
+/// once per generated (or prefilled) token, attended over by every later
+/// step. Rows are (n_kv_heads · head_dim) wide, matching the projection
+/// layout of [`attn_forward`].
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    kv_cols: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(n_kv_heads: usize, head_dim: usize) -> KvCache {
+        KvCache { kv_cols: n_kv_heads * head_dim, k: Vec::new(), v: Vec::new(), len: 0 }
+    }
+
+    /// Cached sequence length.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn push(&mut self, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), self.kv_cols);
+        debug_assert_eq!(v_row.len(), self.kv_cols);
+        self.k.extend_from_slice(k_row);
+        self.v.extend_from_slice(v_row);
+        self.len += 1;
+    }
+
+    #[inline]
+    fn k_row(&self, i: usize) -> &[f32] {
+        &self.k[i * self.kv_cols..(i + 1) * self.kv_cols]
+    }
+
+    #[inline]
+    fn v_row(&self, i: usize) -> &[f32] {
+        &self.v[i * self.kv_cols..(i + 1) * self.kv_cols]
+    }
+}
+
+/// Causal attention of `r` new token rows over a KV cache. `q_new`
+/// (r × h·dh) and `k_new`/`v_new` (r × kv·dh) must already be RoPE-rotated;
+/// the new K/V rows are appended to the cache first, then new row `i`
+/// attends over cache positions `0..=base+i` (causal within the chunk).
+/// Returns the concatenated head outputs (r × h·dh) — the input of Wo.
+///
+/// Per row the score/softmax/value arithmetic matches [`attn_forward`]'s
+/// core (ascending-j accumulation, `softmax_rows`-style normalization, zero
+/// probability skip), and a row's output depends only on the cache prefix
+/// and its own q — so chunked prefill and one-token-at-a-time decode produce
+/// bit-identical outputs.
+pub fn attn_core_cached(
+    cache: &mut KvCache,
+    q_new: &Mat,
+    k_new: &Mat,
+    v_new: &Mat,
+    n_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+) -> Mat {
+    let r = q_new.rows;
+    assert_eq!(k_new.rows, r);
+    assert_eq!(v_new.rows, r);
+    assert_eq!(q_new.cols, n_heads * head_dim);
+    assert_eq!(k_new.cols, n_kv_heads * head_dim);
+    let groups = n_heads / n_kv_heads;
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let base = cache.len();
+    for i in 0..r {
+        cache.push(k_new.row(i), v_new.row(i));
+    }
+    let mut out = Mat::zeros(r, n_heads * head_dim);
+    let mut scores = vec![0.0f32; base + r];
+    for i in 0..r {
+        let p = base + i; // this row's cache position; attends 0..=p
+        for h in 0..n_heads {
+            let kvh = h / groups;
+            let qi = &q_new.row(i)[h * head_dim..(h + 1) * head_dim];
+            for (j, s) in scores[..=p].iter_mut().enumerate() {
+                let kj = &cache.k_row(j)[kvh * head_dim..(kvh + 1) * head_dim];
+                let mut dot = 0.0f32;
+                for t in 0..head_dim {
+                    dot += qi[t] * kj[t];
+                }
+                *s = dot * scale;
+            }
+            // softmax over the causal prefix (same arithmetic as softmax_rows)
+            let row = &mut scores[..=p];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let mut sum = 0.0f32;
+            for x in row.iter_mut() {
+                *x = (*x - mx).exp();
+                sum += *x;
+            }
+            let inv = 1.0 / sum;
+            for x in row.iter_mut() {
+                *x *= inv;
+            }
+            let orow = &mut out.row_mut(i)[h * head_dim..(h + 1) * head_dim];
+            for (j, &pj) in row.iter().enumerate() {
+                if pj == 0.0 {
+                    continue;
+                }
+                let vj = &cache.v_row(j)[kvh * head_dim..(kvh + 1) * head_dim];
+                for t in 0..head_dim {
+                    orow[t] += pj * vj[t];
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Gradients of one attention block's parameters.
 pub struct AttnGrads {
     pub wq: Mat,
@@ -363,6 +481,56 @@ mod tests {
         check("wk", &grads.wk, &|p| p.wk.clone(), 11);
         check("wv", &grads.wv, &|p| p.wv.clone(), 23);
         check("wo", &grads.wo, &|p| p.wo.clone(), 31);
+    }
+
+    #[test]
+    fn cached_core_matches_full_attention_bitwise() {
+        // feed the rotated q/k/v of a full forward through the cached core
+        // in one chunk: the concatenated head outputs must agree bit for bit
+        let (x, p, rope, shape, _) = setup(1, 8);
+        let mut g = QuantGemm::new(QuantRecipe::Bf16, 0);
+        let (_, cache) = attn_forward(&x, &p, &rope, shape, &mut g);
+        let mut kv = KvCache::new(shape.n_kv_heads, shape.head_dim);
+        let out = attn_core_cached(
+            &mut kv,
+            &cache.q,
+            &cache.k,
+            &cache.v,
+            shape.n_heads,
+            shape.n_kv_heads,
+            shape.head_dim,
+        );
+        assert_eq!(kv.len(), 8);
+        for (a, b) in out.data.iter().zip(cache.attn_out.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cached_core_chunked_equals_stepwise() {
+        let (x, p, rope, shape, _) = setup(1, 8);
+        let mut g = QuantGemm::new(QuantRecipe::Bf16, 0);
+        let (_, cache) = attn_forward(&x, &p, &rope, shape, &mut g);
+        let (h, kv, dh) = (shape.n_heads, shape.n_kv_heads, shape.head_dim);
+        // one chunk of 8
+        let mut c1 = KvCache::new(kv, dh);
+        let full = attn_core_cached(&mut c1, &cache.q, &cache.k, &cache.v, h, kv, dh);
+        // 8 chunks of 1
+        let mut c2 = KvCache::new(kv, dh);
+        for i in 0..8 {
+            let step = attn_core_cached(
+                &mut c2,
+                &cache.q.rows_slice(i, 1),
+                &cache.k.rows_slice(i, 1),
+                &cache.v.rows_slice(i, 1),
+                h,
+                kv,
+                dh,
+            );
+            for (a, b) in step.row(0).iter().zip(full.row(i).iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {i}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

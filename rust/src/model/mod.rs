@@ -8,6 +8,11 @@
 //! The model doubles as the *measurement substrate* for the analysis
 //! pipeline: `taps` capture the named activation matrices of paper §2
 //! (FFN inputs, attention inputs, block outputs) at any training step.
+//!
+//! For serving, `transformer::DecodeState` + `Transformer::prefill` /
+//! `decode_step` / `forward_incremental` run KV-cached autoregressive
+//! inference through a packed checkpoint (`serve::checkpoint`), quantizing
+//! only the new token rows (see DESIGN.md §6).
 
 pub mod attention;
 pub mod config;
@@ -19,7 +24,8 @@ pub mod rope;
 pub mod taps;
 pub mod transformer;
 
+pub use attention::KvCache;
 pub use config::ModelConfig;
 pub use params::Params;
 pub use taps::{TapStage, Taps};
-pub use transformer::Transformer;
+pub use transformer::{DecodeState, Transformer};

@@ -28,8 +28,9 @@ pub struct MoeCache {
     pub expert_caches: Vec<Option<(Vec<usize>, FfnCache, Mat)>>,
 }
 
-/// Top-k indices of a slice (k small).
-fn top_k_idx(row: &[f32], k: usize) -> Vec<usize> {
+/// Top-k indices of a slice (k small). Shared with the packed serving path
+/// (`serve::checkpoint`), which must route bit-identically to training.
+pub(crate) fn top_k_idx(row: &[f32], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..row.len()).collect();
     idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
     idx.truncate(k);
@@ -37,7 +38,7 @@ fn top_k_idx(row: &[f32], k: usize) -> Vec<usize> {
 }
 
 /// Softmax over a small selected set of logits.
-fn softmax_small(vals: &[f32]) -> Vec<f32> {
+pub(crate) fn softmax_small(vals: &[f32]) -> Vec<f32> {
     let mx = vals.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
     let exps: Vec<f32> = vals.iter().map(|&v| (v - mx).exp()).collect();
     let s: f32 = exps.iter().sum();

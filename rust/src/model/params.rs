@@ -148,6 +148,41 @@ impl Params {
         }
     }
 
+    /// Read-only tensor walk in the same fixed order as [`Self::for_each_mut`]
+    /// (the checkpoint writer serializes through this, the loader fills
+    /// through `for_each_mut` — identical ordering makes the round trip
+    /// bit-exact).
+    pub fn for_each(&self, mut f: impl FnMut(&[f32])) {
+        f(&self.embed.data);
+        for b in self.blocks.iter() {
+            f(&b.attn_norm);
+            f(&b.attn.wq.data);
+            f(&b.attn.wk.data);
+            f(&b.attn.wv.data);
+            f(&b.attn.wo.data);
+            f(&b.ffn_norm);
+            match &b.ffn {
+                BlockFfn::Dense(ffn) => {
+                    f(&ffn.w_gate.data);
+                    f(&ffn.w_up.data);
+                    f(&ffn.w_down.data);
+                }
+                BlockFfn::Moe(moe) => {
+                    f(&moe.router.data);
+                    for e in moe.experts.iter() {
+                        f(&e.w_gate.data);
+                        f(&e.w_up.data);
+                        f(&e.w_down.data);
+                    }
+                }
+            }
+        }
+        f(&self.final_norm);
+        if let Some(h) = self.lm_head.as_ref() {
+            f(&h.data);
+        }
+    }
+
     /// Visit tensors of `self` and `other` pairwise (same ordering); used by
     /// the optimizer to walk (param, grad) pairs without flattening copies.
     pub fn zip_for_each_mut(&mut self, other: &mut Self, mut f: impl FnMut(&mut [f32], &mut [f32])) {
@@ -207,6 +242,17 @@ mod tests {
         z.for_each_mut(|s| total += s.iter().map(|x| x.abs()).sum::<f32>());
         assert_eq!(total, 0.0);
         assert_eq!(z.count(), p.clone().count());
+    }
+
+    #[test]
+    fn for_each_matches_for_each_mut_ordering() {
+        let cfg = ModelConfig::moe_small(64);
+        let mut p = Params::init(&cfg, &mut Rng::new(5));
+        let mut ro: Vec<f32> = Vec::new();
+        p.for_each(|s| ro.extend_from_slice(s));
+        let mut rw: Vec<f32> = Vec::new();
+        p.for_each_mut(|s| rw.extend_from_slice(s));
+        assert_eq!(ro, rw);
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //! Manual forward/backward; every linear GeMM is quantized per the active
 //! `QuantRecipe` (W4A4G4).
 
-use super::attention::{attn_backward, attn_forward, AttnCache, AttnShape};
+use super::attention::{
+    attn_backward, attn_core_cached, attn_forward, AttnCache, AttnShape, KvCache,
+};
 use super::config::{FfnKind, ModelConfig};
 use super::ffn::{ffn_backward, ffn_forward, FfnCache};
 use super::moe::{moe_backward, moe_forward, MoeCache};
@@ -13,8 +15,27 @@ use super::rope::RopeTables;
 use super::taps::{TapStage, Taps};
 use crate::quant::gemm::QuantGemm;
 use crate::quant::recipe::QuantRecipe;
+use crate::serve::checkpoint::QuantizedCheckpoint;
 use crate::tensor::ops::cross_entropy;
 use crate::tensor::Mat;
+
+/// Per-sequence incremental-decode state: one KV cache per layer plus the
+/// absolute position of the next token.
+pub struct DecodeState {
+    pub pos: usize,
+    pub layers: Vec<KvCache>,
+}
+
+impl DecodeState {
+    pub fn new(cfg: &ModelConfig) -> DecodeState {
+        DecodeState {
+            pos: 0,
+            layers: (0..cfg.n_layers)
+                .map(|_| KvCache::new(cfg.n_kv_heads, cfg.head_dim()))
+                .collect(),
+        }
+    }
+}
 
 enum FfnCacheKind {
     Dense(FfnCache),
@@ -265,6 +286,148 @@ impl Transformer {
         let mut taps = Taps::disabled();
         let (logits, _) = self.forward(params, tokens, batch, seq, &mut taps);
         cross_entropy(&logits, targets).0
+    }
+
+    /// Ragged incremental forward through a packed serving checkpoint: each
+    /// chunk is one sequence's `(decode state, new tokens)`; a continuous
+    /// batch mixes prefilling prompts (many-token chunks) with decoding
+    /// sessions (one-token chunks). Returns logits for every new token row,
+    /// in chunk order, and advances each chunk's position.
+    ///
+    /// All linear layers run the row-independent packed path
+    /// (`quant::rowq::FrozenLinear`): only the new token rows quantize, each
+    /// row as its own tensor, with the Averis split conditioned on the
+    /// checkpoint's frozen μ̂ (the batch column-mean split degenerates at
+    /// decode, where l = 1). A row's logits therefore depend only on its own
+    /// sequence prefix — never on batch composition or thread count — which
+    /// makes KV-cached decode bit-identical to full-context recomputation.
+    pub fn forward_incremental(
+        &self,
+        ckpt: &QuantizedCheckpoint,
+        chunks: &mut [(&mut DecodeState, &[u32])],
+    ) -> Mat {
+        let cfg = &self.cfg;
+        assert_eq!(cfg.d_model, ckpt.cfg.d_model, "checkpoint/model width mismatch");
+        assert_eq!(cfg.n_layers, ckpt.cfg.n_layers, "checkpoint/model depth mismatch");
+        assert_eq!(cfg.vocab, ckpt.cfg.vocab, "checkpoint/model vocab mismatch");
+        // same-width configs can still split heads differently, which would
+        // silently corrupt RoPE rotation and GQA grouping — reject them
+        assert_eq!(cfg.n_heads, ckpt.cfg.n_heads, "checkpoint/model head-count mismatch");
+        assert_eq!(cfg.n_kv_heads, ckpt.cfg.n_kv_heads, "checkpoint/model KV-head mismatch");
+        assert_eq!(cfg.rope_base, ckpt.cfg.rope_base, "checkpoint/model RoPE base mismatch");
+        let d = cfg.d_model;
+        let dh = cfg.head_dim();
+        let (n_heads, n_kv) = (cfg.n_heads, cfg.n_kv_heads);
+        let total: usize = chunks.iter().map(|(_, t)| t.len()).sum();
+        assert!(total > 0, "forward_incremental: empty step batch");
+        for (state, toks) in chunks.iter() {
+            assert!(
+                state.pos + toks.len() <= cfg.max_seq,
+                "sequence length {} exceeds max_seq {}",
+                state.pos + toks.len(),
+                cfg.max_seq
+            );
+        }
+
+        // embed the new tokens of every chunk into one stacked matrix, so
+        // the packed GEMMs amortize their weight decode across sessions
+        let mut x = Mat::zeros(total, d);
+        {
+            let mut off = 0;
+            for (_, toks) in chunks.iter() {
+                for &t in toks.iter() {
+                    assert!((t as usize) < cfg.vocab, "token {t} out of vocab {}", cfg.vocab);
+                    x.row_mut(off).copy_from_slice(ckpt.embed.row(t as usize));
+                    off += 1;
+                }
+            }
+        }
+
+        for (li, blk) in ckpt.blocks.iter().enumerate() {
+            // attention sub-block (pre-norm, residual)
+            let (xn, _) = rmsnorm_forward(&x, &blk.attn_norm);
+            let mut q = blk.wq.forward(&xn);
+            let mut k = blk.wk.forward(&xn);
+            let v = blk.wv.forward(&xn);
+            // RoPE at each row's absolute position
+            {
+                let mut off = 0;
+                for (state, toks) in chunks.iter() {
+                    for i in 0..toks.len() {
+                        let pos = state.pos + i;
+                        let qrow = q.row_mut(off + i);
+                        for h in 0..n_heads {
+                            self.rope.apply(&mut qrow[h * dh..(h + 1) * dh], pos);
+                        }
+                        let krow = k.row_mut(off + i);
+                        for h in 0..n_kv {
+                            self.rope.apply(&mut krow[h * dh..(h + 1) * dh], pos);
+                        }
+                    }
+                    off += toks.len();
+                }
+            }
+            // per-sequence cached attention core
+            let mut attn_out = Mat::zeros(total, n_heads * dh);
+            {
+                let mut off = 0;
+                for (state, toks) in chunks.iter_mut() {
+                    let r = toks.len();
+                    let out = attn_core_cached(
+                        &mut state.layers[li],
+                        &q.rows_slice(off, r),
+                        &k.rows_slice(off, r),
+                        &v.rows_slice(off, r),
+                        n_heads,
+                        n_kv,
+                        dh,
+                    );
+                    for i in 0..r {
+                        attn_out.row_mut(off + i).copy_from_slice(out.row(i));
+                    }
+                    off += r;
+                }
+            }
+            x.axpy(1.0, &blk.wo.forward(&attn_out));
+            // FFN sub-block (pre-norm, residual)
+            let (fin, _) = rmsnorm_forward(&x, &blk.ffn_norm);
+            x.axpy(1.0, &blk.ffn.forward(&fin));
+        }
+
+        let (xf, _) = rmsnorm_forward(&x, &ckpt.final_norm);
+        let logits = match &ckpt.lm_head {
+            Some(h) => xf.matmul(h),
+            None => xf.matmul_bt(&ckpt.embed),
+        };
+        for (state, toks) in chunks.iter_mut() {
+            state.pos += toks.len();
+        }
+        logits
+    }
+
+    /// Prefill one prompt through the packed path, returning logits for
+    /// every prompt position (sample the first new token from the last row).
+    pub fn prefill(
+        &self,
+        ckpt: &QuantizedCheckpoint,
+        state: &mut DecodeState,
+        tokens: &[u32],
+    ) -> Mat {
+        let mut chunks = [(state, tokens)];
+        self.forward_incremental(ckpt, &mut chunks)
+    }
+
+    /// Decode one token for one sequence: quantize only the new token row,
+    /// attend over the KV cache, return the next-token logits.
+    pub fn decode_step(
+        &self,
+        ckpt: &QuantizedCheckpoint,
+        state: &mut DecodeState,
+        token: u32,
+    ) -> Vec<f32> {
+        let toks = [token];
+        let mut chunks = [(state, &toks[..])];
+        self.forward_incremental(ckpt, &mut chunks).data
     }
 }
 

@@ -11,6 +11,12 @@
 //! bit-identical to the reference for RTNE operands, parallel across row
 //! blocks, and deterministic at any thread count thanks to counter-seeded
 //! stochastic-rounding streams (`sr`).
+//!
+//! A third, serving-only form (`rowq`) quantizes activations row by row —
+//! each row is its own tensor — so KV-cached incremental decode is
+//! bit-identical to full-context recomputation, and conditions the Averis
+//! split with a frozen calibration mean where the token-mean degenerates
+//! at decode (see DESIGN.md §6).
 
 pub mod averis;
 pub mod fp4;
@@ -21,6 +27,7 @@ pub mod nvfp4;
 pub mod packed;
 pub mod pipeline;
 pub mod recipe;
+pub mod rowq;
 pub mod sr;
 pub mod svd_split;
 
@@ -32,4 +39,5 @@ pub use nvfp4::{Nvfp4Config, Nvfp4Quantizer, QuantizedMat, Rounding, ScaleFormat
 pub use packed::{packed_matmul, packed_matmul_bt};
 pub use pipeline::{GemmKind, QuantPipeline};
 pub use recipe::QuantRecipe;
+pub use rowq::{rowq_matmul, FrozenLinear, RowQuantMat};
 pub use sr::{SrStream, SrTicket};

@@ -1,0 +1,337 @@
+//! Row-independent quantized execution — the serving-side counterpart of
+//! the training engine in `quant::packed`.
+//!
+//! Training quantization derives one per-tensor scale from the *whole*
+//! operand matrix, so a row's codes depend on every other row in the batch.
+//! That is fine for training (the batch is the unit of work) but breaks the
+//! serving contract: a KV-cached decode step sees only the new token rows,
+//! and its logits must be bit-identical to a full-context recomputation no
+//! matter how the rows were batched. [`RowQuantMat`] therefore quantizes
+//! **each row as its own tensor** (per-row tensor scale + per-row block
+//! scales along K), making every row's quantized value a pure function of
+//! that row alone. Prefill-vs-incremental parity and continuous-batching
+//! determinism both reduce to this property.
+//!
+//! [`FrozenLinear`] is the serving linear layer built on top: the weight is
+//! packed to E2M1 codes **once** (never re-quantized per call), and the
+//! Averis mean–residual split (paper Eqs. 8–10) is conditioned with a
+//! *frozen* calibration mean μ̂ instead of the batch column mean — at decode
+//! time the token dimension is l = 1, where the batch-mean split degenerates
+//! (the residual would vanish into the mean operand). This is the static
+//! bias-vector treatment of *Massive Spikes in LLMs are Bias Vectors*
+//! (Chen et al.): Ŷ = Q(X − 1·μ̂ᵀ)·Ŵ + 1·(μ̂_q·Ŵ), with the rank-one term
+//! precomputed at pack time.
+//!
+//! Bit-exactness contract (mirrors `quant::packed`): every output element
+//! accumulates k in ascending order with `Mat::matmul`'s zero-skip, and row
+//! sharding never reorders a row's accumulation, so results are
+//! bit-identical at any thread count.
+
+use super::nvfp4::{Nvfp4Quantizer, QuantizedMat};
+use super::packed::mu_times_packed_rows;
+use crate::tensor::parallel::{self, min_rows_for as par_min_rows};
+use crate::tensor::Mat;
+
+/// K-slab width of the serving GEMM (multiple of both FP4 block sizes,
+/// matching `quant::packed::KB`).
+const KB: usize = 64;
+
+/// A matrix quantized row by row: each row carries its own tensor scale and
+/// block scales, so its codes are independent of every other row.
+#[derive(Clone, Debug)]
+pub struct RowQuantMat {
+    pub rows: usize,
+    pub cols: usize,
+    /// one single-row [`QuantizedMat`] per logical row
+    rowmats: Vec<QuantizedMat>,
+}
+
+impl RowQuantMat {
+    /// Quantize each row of `x` as its own tensor (RTNE). Row `i` of the
+    /// result is bit-identical to `quant.quantize_store` of the 1×cols
+    /// matrix holding row `i` — the property the decode-parity tests pin.
+    pub fn quantize(quant: &Nvfp4Quantizer, x: &Mat) -> RowQuantMat {
+        let rowmats = (0..x.rows)
+            .map(|i| quant.quantize_store(&Mat::from_vec(1, x.cols, x.row(i).to_vec())))
+            .collect();
+        RowQuantMat { rows: x.rows, cols: x.cols, rowmats }
+    }
+
+    /// Quantize each row of `x − 1·μᵀ` without materializing the centered
+    /// matrix: the subtraction happens in the per-row copy that quantization
+    /// needs anyway. Bit-identical to `quantize(quant, &centered)` — the
+    /// decode hot path (`FrozenLinear::forward`) runs this once per call.
+    pub fn quantize_centered(quant: &Nvfp4Quantizer, x: &Mat, mu: &[f32]) -> RowQuantMat {
+        assert_eq!(mu.len(), x.cols, "quantize_centered: μ length must match cols");
+        let rowmats = (0..x.rows)
+            .map(|i| {
+                let mut row = x.row(i).to_vec();
+                for (r, &m) in row.iter_mut().zip(mu.iter()) {
+                    *r -= m;
+                }
+                quant.quantize_store(&Mat::from_vec(1, x.cols, row))
+            })
+            .collect();
+        RowQuantMat { rows: x.rows, cols: x.cols, rowmats }
+    }
+
+    /// Decode columns `[j0, j1)` of row `i` (same arithmetic as
+    /// `QuantizedMat::decode_row_range`).
+    #[inline]
+    pub fn decode_row_range(&self, i: usize, j0: usize, j1: usize, out: &mut [f32]) {
+        self.rowmats[i].decode_row_range(0, j0, j1, out)
+    }
+
+    /// Dequantize back to f32 (diagnostics).
+    pub fn dequantize(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        let cols = self.cols;
+        for i in 0..self.rows {
+            self.decode_row_range(i, 0, cols, &mut out.data[i * cols..(i + 1) * cols]);
+        }
+        out
+    }
+}
+
+/// C = X · W with X row-quantized and W supplied as a packed transpose
+/// `wt` (n×k, packed along its columns = K). Returns l×n f32.
+///
+/// Same ikj structure as `quant::packed::packed_matmul`: the ŵ K-slab is
+/// decoded once per worker chunk (this is the batching win — stacking the
+/// new-token rows of many sessions amortizes the weight decode), then each
+/// output row streams `C[i,·] += x̂[i,k] · ŵ[k,·]` in ascending-k order.
+pub fn rowq_matmul(x: &RowQuantMat, wt: &QuantizedMat) -> Mat {
+    assert_eq!(
+        x.cols, wt.cols,
+        "rowq_matmul: K mismatch ({}x{} · ({}x{})ᵀ) — both operands must be packed along K",
+        x.rows, x.cols, wt.rows, wt.cols
+    );
+    let (l, k, n) = (x.rows, x.cols, wt.rows);
+    let mut c = Mat::zeros(l, n);
+    parallel::par_row_chunks(&mut c.data, l, n, par_min_rows(k * n), |row0, crows| {
+        let nrows = crows.len() / n.max(1);
+        let mut wslab = vec![0.0f32; KB * n];
+        let mut xbuf = [0.0f32; KB];
+        let mut wrow = [0.0f32; KB];
+        for k0 in (0..k).step_by(KB) {
+            let k1 = (k0 + KB).min(k);
+            let kw = k1 - k0;
+            for j in 0..n {
+                wt.decode_row_range(j, k0, k1, &mut wrow[..kw]);
+                for (t, &v) in wrow[..kw].iter().enumerate() {
+                    wslab[t * n + j] = v;
+                }
+            }
+            for li in 0..nrows {
+                x.decode_row_range(row0 + li, k0, k1, &mut xbuf[..kw]);
+                let crow = &mut crows[li * n..(li + 1) * n];
+                for (t, &av) in xbuf[..kw].iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let wrow_t = &wslab[t * n..(t + 1) * n];
+                    for j in 0..n {
+                        crow[j] += av * wrow_t[j];
+                    }
+                }
+            }
+        }
+    });
+    c
+}
+
+/// A serving linear layer: weight packed once, activations row-quantized per
+/// call, mean bias handled by a frozen calibration mean.
+///
+///   Y = Q(X − 1·μ̂ᵀ) · Ŵ + 1·(μ̂_q·Ŵ)
+///
+/// With μ̂ = 0 this degenerates to plain row-quantized NVFP4 (used for
+/// operands whose calibration mean is not captured, e.g. attention outputs).
+#[derive(Clone, Debug)]
+pub struct FrozenLinear {
+    quant: Nvfp4Quantizer,
+    /// packed Wᵀ: out_dim × in_dim, blocks along in_dim (the GEMM's K axis)
+    pub wt: QuantizedMat,
+    /// frozen calibration mean, RTNE-quantized (len in_dim)
+    pub mu_q: Vec<f32>,
+    /// precomputed rank-one term μ̂_q·Ŵ (len out_dim)
+    pub mu_term: Vec<f32>,
+}
+
+impl FrozenLinear {
+    /// Pack `w` (in_dim × out_dim, the model's weight convention) with a
+    /// frozen calibration mean `mu` over the input features.
+    pub fn new(w: &Mat, mu: &[f32], quant: Nvfp4Quantizer) -> FrozenLinear {
+        assert_eq!(mu.len(), w.rows, "FrozenLinear: μ̂ length must match in_dim");
+        let wt = quant.quantize_store(&w.transpose());
+        let mu_q = quant.quantize_dequant_vec(mu);
+        let mu_term = mu_times_packed_rows(&mu_q, &wt);
+        FrozenLinear { quant, wt, mu_q, mu_term }
+    }
+
+    /// Rebuild from serialized parts (the rank-one term is recomputed — it
+    /// is a pure function of the stored codes and μ̂).
+    pub fn from_parts(wt: QuantizedMat, mu_q: Vec<f32>, quant: Nvfp4Quantizer) -> FrozenLinear {
+        assert_eq!(mu_q.len(), wt.cols, "FrozenLinear: μ̂ length must match packed K");
+        let mu_term = mu_times_packed_rows(&mu_q, &wt);
+        FrozenLinear { quant, wt, mu_q, mu_term }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.wt.cols
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.wt.rows
+    }
+
+    /// Packed storage footprint (codes + scales + μ̂), for checkpoint stats.
+    pub fn storage_bytes(&self) -> usize {
+        self.wt.storage_bytes() + 4 * self.mu_q.len()
+    }
+
+    /// Row-independent quantized forward: each row of `x` quantizes as its
+    /// own tensor, so Y's row i depends only on x's row i (and the packed
+    /// weight). Bit-identical at any thread count and any row batching.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.in_dim(), "FrozenLinear: input width mismatch");
+        let q = RowQuantMat::quantize_centered(&self.quant, x, &self.mu_q);
+        let mut y = rowq_matmul(&q, &self.wt);
+        y.add_row_vec(&self.mu_term);
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::rel_error;
+    use crate::tensor::Rng;
+
+    fn mean_biased(l: usize, m: usize, bias: f32, noise: f32, rng: &mut Rng) -> Mat {
+        let mut x = Mat::randn(l, m, noise, rng);
+        let mut mu = vec![0.0f32; m];
+        for (j, v) in mu.iter_mut().enumerate() {
+            if j % 16 == 3 {
+                *v = bias * (1.0 + 0.3 * rng.normal());
+            }
+        }
+        x.add_row_vec(&mu);
+        x
+    }
+
+    #[test]
+    fn row_quantization_is_row_independent() {
+        // quantizing a row inside a batch == quantizing it alone
+        let mut rng = Rng::new(200);
+        let quant = Nvfp4Quantizer::nvfp4();
+        let x = mean_biased(8, 48, 3.0, 0.5, &mut rng);
+        let full = RowQuantMat::quantize(&quant, &x).dequantize();
+        for i in 0..x.rows {
+            let solo = RowQuantMat::quantize(&quant, &x.rows_slice(i, 1)).dequantize();
+            for (a, b) in full.row(i).iter().zip(solo.row(0).iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn rowq_matmul_matches_dequantized_reference_bitwise() {
+        let mut rng = Rng::new(201);
+        let quant = Nvfp4Quantizer::nvfp4();
+        for &(l, k, n) in &[(5usize, 21usize, 3usize), (8, 64, 16), (1, 33, 7)] {
+            let x = Mat::randn(l, k, 1.0, &mut rng);
+            let w = Mat::randn(k, n, 0.3, &mut rng);
+            let q = RowQuantMat::quantize(&quant, &x);
+            let wt = quant.quantize_store(&w.transpose());
+            let packed = rowq_matmul(&q, &wt);
+            let reference = q.dequantize().matmul(&wt.dequantize().transpose());
+            for (i, (a, b)) in packed.data.iter().zip(reference.data.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "({l},{k},{n}) elem {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn rowq_matmul_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(202);
+        let quant = Nvfp4Quantizer::nvfp4();
+        let x = Mat::randn(96, 160, 1.0, &mut rng);
+        let w = Mat::randn(160, 80, 0.2, &mut rng);
+        let q = RowQuantMat::quantize(&quant, &x);
+        let wt = quant.quantize_store(&w.transpose());
+        let run = |threads: usize| {
+            parallel::set_threads(threads);
+            let r = rowq_matmul(&q, &wt);
+            parallel::set_threads(0);
+            r
+        };
+        let c1 = run(1);
+        assert_eq!(c1.data, run(2).data);
+        assert_eq!(c1.data, run(4).data);
+    }
+
+    #[test]
+    fn quantize_centered_matches_explicit_centering_bitwise() {
+        let mut rng = Rng::new(206);
+        let quant = Nvfp4Quantizer::nvfp4();
+        let x = mean_biased(7, 33, 2.0, 0.5, &mut rng);
+        let mu: Vec<f32> = (0..33).map(|_| rng.normal()).collect();
+        let mut centered = x.clone();
+        centered.sub_row_vec(&mu);
+        let a = RowQuantMat::quantize_centered(&quant, &x, &mu).dequantize();
+        let b = RowQuantMat::quantize(&quant, &centered).dequantize();
+        for (u, v) in a.data.iter().zip(b.data.iter()) {
+            assert_eq!(u.to_bits(), v.to_bits(), "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn frozen_mean_beats_plain_on_mean_biased_rows() {
+        // the serving analogue of the Averis headline: conditioning with a
+        // frozen calibration μ̂ recovers the split's accuracy at decode time
+        let mut rng = Rng::new(203);
+        let x = mean_biased(64, 96, 4.0, 0.3, &mut rng);
+        let w = Mat::randn(96, 32, 0.1, &mut rng);
+        let exact = x.matmul(&w);
+        let quant = Nvfp4Quantizer::nvfp4();
+        // calibration mean from an independent sample of the same regime
+        let calib = mean_biased(64, 96, 4.0, 0.3, &mut rng).col_mean();
+        let frozen = FrozenLinear::new(&w, &calib, quant);
+        let plain = FrozenLinear::new(&w, &[0.0; 96], quant);
+        let e_frozen = rel_error(&frozen.forward(&x), &exact);
+        let e_plain = rel_error(&plain.forward(&x), &exact);
+        assert!(
+            e_frozen < e_plain,
+            "frozen-μ̂ split should beat plain row quantization: {e_frozen} vs {e_plain}"
+        );
+    }
+
+    #[test]
+    fn frozen_linear_rows_are_independent() {
+        let mut rng = Rng::new(204);
+        let x = mean_biased(6, 48, 2.0, 0.5, &mut rng);
+        let w = Mat::randn(48, 16, 0.2, &mut rng);
+        let mu = x.col_mean();
+        let lin = FrozenLinear::new(&w, &mu, Nvfp4Quantizer::nvfp4());
+        let batched = lin.forward(&x);
+        for i in 0..x.rows {
+            let solo = lin.forward(&x.rows_slice(i, 1));
+            for (a, b) in batched.row(i).iter().zip(solo.row(0).iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_parts_roundtrip_matches() {
+        let mut rng = Rng::new(205);
+        let x = Mat::randn(4, 32, 1.0, &mut rng);
+        let w = Mat::randn(32, 8, 0.2, &mut rng);
+        let mu: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+        let quant = Nvfp4Quantizer::nvfp4();
+        let a = FrozenLinear::new(&w, &mu, quant);
+        let b = FrozenLinear::from_parts(a.wt.clone(), a.mu_q.clone(), quant);
+        assert_eq!(a.forward(&x).data, b.forward(&x).data);
+    }
+}

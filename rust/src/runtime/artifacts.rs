@@ -1,9 +1,115 @@
-//! Artifact discovery: the manifest written by `python -m compile.aot` plus
-//! paths to per-recipe HLO files and the initial parameter blob.
+//! Artifact discovery — the manifest written by `python -m compile.aot` plus
+//! paths to per-recipe HLO files and the initial parameter blob — and the
+//! f32 training checkpoint: `Params` save/load with the frozen calibration
+//! means (`serve::CalibMeans`) the serving engine conditions on. The f32
+//! round trip is bit-exact (`load(save(p)) == p` on every tensor), which is
+//! what makes "eval after reload matches in-memory eval exactly" testable.
 
+use super::wire::{put_f32s, put_u32, Reader};
+use crate::model::config::ModelConfig;
+use crate::model::Params;
 use crate::quant::QuantRecipe;
+use crate::serve::checkpoint::{put_config, read_config, CalibMeans};
+use crate::tensor::Rng;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
+
+/// Magic prefix of the f32 training checkpoint ("AVC1").
+pub const PARAMS_MAGIC: u32 = 0x4156_4331;
+const PARAMS_VERSION: u32 = 1;
+
+/// Serialize model config + calibration means + every parameter tensor
+/// (little-endian f32, `Params::for_each` order) to one file.
+pub fn save_params_checkpoint(
+    path: impl AsRef<Path>,
+    cfg: &ModelConfig,
+    params: &Params,
+    calib: &CalibMeans,
+) -> Result<()> {
+    let mut out = Vec::new();
+    put_u32(&mut out, PARAMS_MAGIC);
+    put_u32(&mut out, PARAMS_VERSION);
+    put_config(&mut out, cfg);
+    put_u32(&mut out, calib.attn_in.len() as u32);
+    for mu in calib.attn_in.iter().chain(calib.ffn_in.iter()) {
+        put_f32s(&mut out, mu);
+    }
+    let mut n_tensors = 0u32;
+    params.for_each(|_| n_tensors += 1);
+    put_u32(&mut out, n_tensors);
+    params.for_each(|s| put_f32s(&mut out, s));
+    std::fs::write(path.as_ref(), out)
+        .with_context(|| format!("writing {}", path.as_ref().display()))
+}
+
+/// Parse an f32 training checkpoint from its encoded bytes.
+pub fn params_checkpoint_from_bytes(bytes: &[u8]) -> Result<(ModelConfig, Params, CalibMeans)> {
+    let mut r = Reader::new(bytes);
+    let magic = r.u32()?;
+    if magic != PARAMS_MAGIC {
+        bail!("not an f32 training checkpoint (magic {magic:#x})");
+    }
+    let version = r.u32()?;
+    if version != PARAMS_VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let cfg = read_config(&mut r)?;
+    let n_layers = r.u32()? as usize;
+    if n_layers != cfg.n_layers {
+        bail!("calibration layer count {n_layers} != config n_layers {}", cfg.n_layers);
+    }
+    let read_means = |r: &mut Reader<'_>| -> Result<Vec<Vec<f32>>> {
+        (0..n_layers)
+            .map(|_| {
+                let mu = r.f32s()?;
+                if mu.len() != cfg.d_model {
+                    bail!("calibration mean width {} != d_model {}", mu.len(), cfg.d_model);
+                }
+                Ok(mu)
+            })
+            .collect()
+    };
+    let attn_in = read_means(&mut r)?;
+    let ffn_in = read_means(&mut r)?;
+    let calib = CalibMeans { attn_in, ffn_in };
+    let n_tensors = r.u32()? as usize;
+    // materialize the parameter structure from the config, then overwrite
+    // every tensor in the shared fixed visiting order (the RNG values are
+    // discarded — init is just the cheapest shape-correct constructor)
+    let mut params = Params::init(&cfg, &mut Rng::new(0));
+    let mut expect = 0usize;
+    params.for_each(|_| expect += 1);
+    if n_tensors != expect {
+        bail!("checkpoint has {n_tensors} tensors, config implies {expect}");
+    }
+    let mut err: Option<anyhow::Error> = None;
+    params.for_each_mut(|s| {
+        if err.is_some() {
+            return;
+        }
+        match r.f32s() {
+            Ok(v) if v.len() == s.len() => s.copy_from_slice(&v),
+            Ok(v) => {
+                err = Some(anyhow::anyhow!("tensor length {} != expected {}", v.len(), s.len()))
+            }
+            Err(e) => err = Some(e),
+        }
+    });
+    if let Some(e) = err {
+        return Err(e);
+    }
+    r.done()?;
+    Ok((cfg, params, calib))
+}
+
+/// Load an f32 training checkpoint written by [`save_params_checkpoint`].
+pub fn load_params_checkpoint(
+    path: impl AsRef<Path>,
+) -> Result<(ModelConfig, Params, CalibMeans)> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    params_checkpoint_from_bytes(&bytes)
+}
 
 /// Parsed subset of artifacts/manifest.json (hand-rolled parser — the image
 /// has no serde_json; the manifest format is ours and flat).
@@ -104,6 +210,36 @@ mod tests {
         assert_eq!(json_uint(t, "n_params"), Some(123456));
         assert_eq!(json_uint(t, "vocab"), Some(256));
         assert_eq!(json_uint(t, "missing"), None);
+    }
+
+    #[test]
+    fn params_checkpoint_roundtrip_is_bit_exact() {
+        for cfg in [ModelConfig::test_tiny(64), ModelConfig::moe_small(64)] {
+            let params = Params::init(&cfg, &mut Rng::new(21));
+            let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+            let path = std::env::temp_dir()
+                .join(format!("averis_params_ckpt_{}.bin", cfg.n_heads + cfg.d_ff));
+            save_params_checkpoint(&path, &cfg, &params, &calib).unwrap();
+            let (cfg2, params2, calib2) = load_params_checkpoint(&path).unwrap();
+            assert_eq!(cfg2.d_model, cfg.d_model);
+            assert_eq!(cfg2.ffn, cfg.ffn);
+            assert_eq!(calib2.attn_in.len(), cfg.n_layers);
+            let mut a: Vec<u32> = Vec::new();
+            params.for_each(|s| a.extend(s.iter().map(|x| x.to_bits())));
+            let mut b: Vec<u32> = Vec::new();
+            params2.for_each(|s| b.extend(s.iter().map(|x| x.to_bits())));
+            assert_eq!(a, b, "f32 round trip must be bit-exact");
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn corrupt_checkpoint_is_rejected() {
+        assert!(params_checkpoint_from_bytes(&[1, 2, 3]).is_err());
+        let mut buf = Vec::new();
+        put_u32(&mut buf, PARAMS_MAGIC);
+        put_u32(&mut buf, 99); // bad version
+        assert!(params_checkpoint_from_bytes(&buf).is_err());
     }
 
     #[test]

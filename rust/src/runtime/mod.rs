@@ -2,9 +2,15 @@
 //! the Rust hot path. Python never runs here — `make artifacts` produced the
 //! HLO once; this module compiles it with the in-process XLA CPU client and
 //! drives training/eval entirely from Rust.
+//!
+//! Also home to on-disk persistence: `artifacts` adds f32 training
+//! checkpoints (`save_params_checkpoint`/`load_params_checkpoint`, exact
+//! bit round-trip) and `wire` the little-endian encoding shared with the
+//! packed serving checkpoints of `serve::checkpoint`.
 
 pub mod artifacts;
 pub mod executor;
+pub mod wire;
 
-pub use artifacts::{ArtifactStore, Manifest};
+pub use artifacts::{load_params_checkpoint, save_params_checkpoint, ArtifactStore, Manifest};
 pub use executor::{EvalStep, TrainState, TrainStep};

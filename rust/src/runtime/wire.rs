@@ -1,0 +1,155 @@
+//! Little-endian binary encoding helpers for the checkpoint formats
+//! (`runtime::artifacts` f32 training checkpoints, `serve::checkpoint`
+//! packed serving checkpoints). No serde in the offline image, so the
+//! formats are hand-rolled: fixed-width scalars plus u64-length-prefixed
+//! slices, always little-endian.
+
+use anyhow::{bail, Context, Result};
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// u64 length prefix + raw bytes.
+pub fn put_bytes(out: &mut Vec<u8>, v: &[u8]) {
+    put_u64(out, v.len() as u64);
+    out.extend_from_slice(v);
+}
+
+/// u64 length prefix + little-endian f32s.
+pub fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Sequential reader over an encoded buffer.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // overflow-safe: a corrupt length prefix must Err, never wrap/panic
+        if n > self.buf.len() - self.off {
+            bail!(
+                "checkpoint truncated: need {} bytes at offset {}, have {}",
+                n,
+                self.off,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn len_prefix(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        usize::try_from(n).ok().filter(|&n| n <= self.buf.len()).with_context(|| {
+            format!("checkpoint corrupt: length prefix {n} exceeds buffer {}", self.buf.len())
+        })
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.len_prefix()?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_prefix()?;
+        let nbytes = n.checked_mul(4).context("checkpoint corrupt: f32 count overflows")?;
+        let b = self.take(nbytes)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// Assert the buffer was consumed exactly.
+    pub fn done(&self) -> Result<()> {
+        if self.off != self.buf.len() {
+            bail!("checkpoint has {} trailing bytes", self.buf.len() - self.off);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_kinds() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 7);
+        put_u32(&mut buf, 0xDEADBEEF);
+        put_u64(&mut buf, 1 << 40);
+        put_f32(&mut buf, -1.5);
+        put_bytes(&mut buf, &[1, 2, 3]);
+        put_f32s(&mut buf, &[0.25, -8.0]);
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.bytes().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.f32s().unwrap(), vec![0.25, -8.0]);
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 100); // length prefix promising 100 f32s
+        let mut r = Reader::new(&buf);
+        assert!(r.f32s().is_err());
+    }
+
+    #[test]
+    fn huge_length_prefix_is_an_error_not_a_panic() {
+        // corrupt prefixes must never wrap the bounds arithmetic
+        for prefix in [u64::MAX, 1 << 62, (usize::MAX as u64) / 2] {
+            let mut buf = Vec::new();
+            put_u64(&mut buf, prefix);
+            assert!(Reader::new(&buf).f32s().is_err(), "prefix {prefix}");
+            let mut buf2 = Vec::new();
+            put_u64(&mut buf2, prefix);
+            assert!(Reader::new(&buf2).bytes().is_err(), "prefix {prefix}");
+        }
+    }
+}

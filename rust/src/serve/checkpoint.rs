@@ -1,0 +1,562 @@
+//! Quantized serving checkpoints: every weight matrix packed to E2M1 codes
+//! **once**, paired with the frozen per-operand calibration mean μ̂ that
+//! conditions the Averis split at decode time (where the batch column-mean
+//! split of Eqs. 8–10 degenerates at l = 1 — see `quant::rowq`).
+//!
+//! Calibration means are captured from the model's own activation taps
+//! (`model::taps`): the tapped `AttnInput` feeds Wq/Wk/Wv and the tapped
+//! `FfnInput` feeds the FFN gate/up projections and the MoE router. The
+//! untapped inner operands (attention output → Wo, SwiGLU hidden → W_down)
+//! serve with μ̂ = 0, i.e. plain row-quantization — the paper's mean bias
+//! lives in the residual-stream inputs, which are exactly the tapped ones.
+//!
+//! The on-disk format (`save`/`load`) stores the packed codes, block
+//! scales, tensor scales and μ̂ vectors directly, so a serving process never
+//! touches f32 weights; `load_any` also accepts the f32 training checkpoint
+//! written by `runtime::artifacts::save_params_checkpoint` and packs it on
+//! load.
+
+use crate::model::config::{FfnKind, ModelConfig};
+use crate::model::moe::{softmax_small, top_k_idx};
+use crate::model::params::{BlockFfn, FfnParams, Params};
+use crate::model::taps::{TapStage, Taps};
+use crate::model::Transformer;
+use crate::quant::nvfp4::{Nvfp4Quantizer, QuantizedMat};
+use crate::quant::recipe::QuantRecipe;
+use crate::quant::rowq::FrozenLinear;
+use crate::runtime::wire::{put_bytes, put_f32, put_f32s, put_u32, put_u8, Reader};
+use crate::tensor::ops::silu;
+use crate::tensor::Mat;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Magic prefix of the packed serving checkpoint ("AQC1").
+pub const QCKPT_MAGIC: u32 = 0x4151_4331;
+const QCKPT_VERSION: u32 = 1;
+
+/// Frozen per-operand calibration means, one pair per layer: the column
+/// mean of the tapped attention input (operand of Wq/Wk/Wv) and of the
+/// tapped FFN input (operand of gate/up and the MoE router).
+#[derive(Clone, Debug)]
+pub struct CalibMeans {
+    pub attn_in: Vec<Vec<f32>>,
+    pub ffn_in: Vec<Vec<f32>>,
+}
+
+impl CalibMeans {
+    /// All-zero means (plain row quantization everywhere).
+    pub fn zeros(n_layers: usize, d: usize) -> CalibMeans {
+        CalibMeans {
+            attn_in: vec![vec![0.0; d]; n_layers],
+            ffn_in: vec![vec![0.0; d]; n_layers],
+        }
+    }
+
+    /// Column means of the tapped calibration activations; layers without a
+    /// captured tap fall back to zero (plain quantization).
+    pub fn from_taps(taps: &Taps, n_layers: usize, d: usize) -> CalibMeans {
+        let grab = |stage: TapStage| -> Vec<Vec<f32>> {
+            (0..n_layers)
+                .map(|li| taps.get(li, stage).map(|m| m.col_mean()).unwrap_or_else(|| vec![0.0; d]))
+                .collect()
+        };
+        CalibMeans { attn_in: grab(TapStage::AttnInput), ffn_in: grab(TapStage::FfnInput) }
+    }
+}
+
+/// Run one full-precision calibration forward over `tokens` (batch·seq) and
+/// return the tapped per-operand column means.
+pub fn measure_calib_means(
+    cfg: &ModelConfig,
+    params: &Params,
+    tokens: &[u32],
+    batch: usize,
+    seq: usize,
+) -> CalibMeans {
+    assert_eq!(tokens.len(), batch * seq, "calibration tokens must be batch·seq");
+    let mut model = Transformer::new(*cfg, QuantRecipe::Bf16, 0);
+    let mut taps = Taps::enabled();
+    let _ = model.forward(params, tokens, batch, seq, &mut taps);
+    CalibMeans::from_taps(&taps, cfg.n_layers, cfg.d_model)
+}
+
+/// One packed SwiGLU FFN (dense block or MoE expert).
+#[derive(Clone, Debug)]
+pub struct PackedFfn {
+    pub w_gate: FrozenLinear,
+    pub w_up: FrozenLinear,
+    pub w_down: FrozenLinear,
+}
+
+impl PackedFfn {
+    /// Row-independent packed SwiGLU forward.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let g = self.w_gate.forward(x);
+        let u = self.w_up.forward(x);
+        let mut h = Mat::zeros(g.rows, g.cols);
+        for i in 0..h.numel() {
+            h.data[i] = silu(g.data[i]) * u.data[i];
+        }
+        self.w_down.forward(&h)
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.w_gate.storage_bytes() + self.w_up.storage_bytes() + self.w_down.storage_bytes()
+    }
+}
+
+/// Packed FFN variant of one block.
+#[derive(Clone, Debug)]
+pub enum PackedBlockFfn {
+    Dense(PackedFfn),
+    Moe { router: FrozenLinear, experts: Vec<PackedFfn>, top_k: usize },
+}
+
+impl PackedBlockFfn {
+    /// Row-independent packed FFN forward. MoE routing (top-k + softmax
+    /// over the selected logits) is per row and experts accumulate in
+    /// ascending expert id, so a row's output never depends on which other
+    /// rows share the step batch.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        match self {
+            PackedBlockFfn::Dense(f) => f.forward(x),
+            PackedBlockFfn::Moe { router, experts, top_k } => {
+                let logits = router.forward(x);
+                let l = x.rows;
+                let mut assignment: Vec<Vec<(usize, f32)>> = vec![Vec::new(); experts.len()];
+                for i in 0..l {
+                    let idx = top_k_idx(logits.row(i), *top_k);
+                    let sel: Vec<f32> = idx.iter().map(|&e| logits.at(i, e)).collect();
+                    let w = softmax_small(&sel);
+                    for (slot, &e) in idx.iter().enumerate() {
+                        assignment[e].push((i, w[slot]));
+                    }
+                }
+                let mut y = Mat::zeros(l, x.cols);
+                for (e, assigned) in assignment.iter().enumerate() {
+                    if assigned.is_empty() {
+                        continue;
+                    }
+                    let mut sub = Mat::zeros(assigned.len(), x.cols);
+                    for (r, &(t, _)) in assigned.iter().enumerate() {
+                        sub.row_mut(r).copy_from_slice(x.row(t));
+                    }
+                    let out = experts[e].forward(&sub);
+                    for (r, &(t, w)) in assigned.iter().enumerate() {
+                        let orow = out.row(r);
+                        let yrow = y.row_mut(t);
+                        for j in 0..x.cols {
+                            yrow[j] += w * orow[j];
+                        }
+                    }
+                }
+                y
+            }
+        }
+    }
+}
+
+/// One packed transformer block.
+#[derive(Clone, Debug)]
+pub struct PackedBlock {
+    pub attn_norm: Vec<f32>,
+    pub wq: FrozenLinear,
+    pub wk: FrozenLinear,
+    pub wv: FrozenLinear,
+    pub wo: FrozenLinear,
+    pub ffn_norm: Vec<f32>,
+    pub ffn: PackedBlockFfn,
+}
+
+/// A fully packed serving checkpoint: E2M1 weights + frozen μ̂, plus the
+/// f32 tensors the serve path keeps unquantized (embedding / tied LM head,
+/// norm gains — matching training, where the vocab GeMM stays full
+/// precision).
+#[derive(Clone, Debug)]
+pub struct QuantizedCheckpoint {
+    pub cfg: ModelConfig,
+    pub embed: Mat,
+    pub blocks: Vec<PackedBlock>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Option<Mat>,
+}
+
+fn pack_ffn(f: &FfnParams, mu_in: &[f32], quant: Nvfp4Quantizer) -> PackedFfn {
+    let hidden_zeros = vec![0.0f32; f.w_down.rows];
+    PackedFfn {
+        w_gate: FrozenLinear::new(&f.w_gate, mu_in, quant),
+        w_up: FrozenLinear::new(&f.w_up, mu_in, quant),
+        w_down: FrozenLinear::new(&f.w_down, &hidden_zeros, quant),
+    }
+}
+
+impl QuantizedCheckpoint {
+    /// Pack every weight matrix once. `calib` supplies the frozen μ̂ per
+    /// tapped operand; `CalibMeans::zeros` gives plain row quantization.
+    pub fn build(cfg: &ModelConfig, params: &Params, calib: &CalibMeans) -> QuantizedCheckpoint {
+        cfg.validate().expect("invalid model config");
+        assert_eq!(calib.attn_in.len(), cfg.n_layers, "calibration layer count");
+        assert_eq!(calib.ffn_in.len(), cfg.n_layers, "calibration layer count");
+        let quant = Nvfp4Quantizer::nvfp4();
+        let attn_out_zeros = vec![0.0f32; cfg.n_heads * cfg.head_dim()];
+        let blocks = params
+            .blocks
+            .iter()
+            .enumerate()
+            .map(|(li, bp)| {
+                let mu_attn = &calib.attn_in[li];
+                let mu_ffn = &calib.ffn_in[li];
+                let ffn = match &bp.ffn {
+                    BlockFfn::Dense(f) => PackedBlockFfn::Dense(pack_ffn(f, mu_ffn, quant)),
+                    BlockFfn::Moe(m) => {
+                        let top_k = match cfg.ffn {
+                            FfnKind::Moe { top_k, .. } => top_k,
+                            _ => unreachable!("param/config FFN kind mismatch"),
+                        };
+                        PackedBlockFfn::Moe {
+                            router: FrozenLinear::new(&m.router, mu_ffn, quant),
+                            experts: m.experts.iter().map(|e| pack_ffn(e, mu_ffn, quant)).collect(),
+                            top_k,
+                        }
+                    }
+                };
+                PackedBlock {
+                    attn_norm: bp.attn_norm.clone(),
+                    wq: FrozenLinear::new(&bp.attn.wq, mu_attn, quant),
+                    wk: FrozenLinear::new(&bp.attn.wk, mu_attn, quant),
+                    wv: FrozenLinear::new(&bp.attn.wv, mu_attn, quant),
+                    wo: FrozenLinear::new(&bp.attn.wo, &attn_out_zeros, quant),
+                    ffn_norm: bp.ffn_norm.clone(),
+                    ffn,
+                }
+            })
+            .collect();
+        QuantizedCheckpoint {
+            cfg: *cfg,
+            embed: params.embed.clone(),
+            blocks,
+            final_norm: params.final_norm.clone(),
+            lm_head: params.lm_head.clone(),
+        }
+    }
+
+    /// Packed storage footprint in bytes (codes + scales + μ̂ + the f32
+    /// tensors kept unquantized).
+    pub fn storage_bytes(&self) -> usize {
+        let mut n = 4 * (self.embed.numel() + self.final_norm.len());
+        if let Some(h) = &self.lm_head {
+            n += 4 * h.numel();
+        }
+        for b in &self.blocks {
+            n += 4 * (b.attn_norm.len() + b.ffn_norm.len());
+            n += b.wq.storage_bytes() + b.wk.storage_bytes();
+            n += b.wv.storage_bytes() + b.wo.storage_bytes();
+            n += match &b.ffn {
+                PackedBlockFfn::Dense(f) => f.storage_bytes(),
+                PackedBlockFfn::Moe { router, experts, .. } => {
+                    let experts_bytes: usize = experts.iter().map(|e| e.storage_bytes()).sum();
+                    router.storage_bytes() + experts_bytes
+                }
+            };
+        }
+        n
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut out = Vec::new();
+        put_u32(&mut out, QCKPT_MAGIC);
+        put_u32(&mut out, QCKPT_VERSION);
+        put_config(&mut out, &self.cfg);
+        put_mat(&mut out, &self.embed);
+        for b in &self.blocks {
+            put_f32s(&mut out, &b.attn_norm);
+            for lin in [&b.wq, &b.wk, &b.wv, &b.wo] {
+                put_linear(&mut out, lin);
+            }
+            put_f32s(&mut out, &b.ffn_norm);
+            match &b.ffn {
+                PackedBlockFfn::Dense(f) => {
+                    put_u8(&mut out, 0);
+                    put_packed_ffn(&mut out, f);
+                }
+                PackedBlockFfn::Moe { router, experts, top_k } => {
+                    put_u8(&mut out, 1);
+                    put_u32(&mut out, experts.len() as u32);
+                    put_u32(&mut out, *top_k as u32);
+                    put_linear(&mut out, router);
+                    for e in experts {
+                        put_packed_ffn(&mut out, e);
+                    }
+                }
+            }
+        }
+        put_f32s(&mut out, &self.final_norm);
+        match &self.lm_head {
+            Some(h) => {
+                put_u8(&mut out, 1);
+                put_mat(&mut out, h);
+            }
+            None => put_u8(&mut out, 0),
+        }
+        std::fs::write(path.as_ref(), out)
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
+    /// Parse a packed checkpoint from its encoded bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<QuantizedCheckpoint> {
+        let mut r = Reader::new(bytes);
+        let magic = r.u32()?;
+        if magic != QCKPT_MAGIC {
+            bail!("not a packed serving checkpoint (magic {magic:#x})");
+        }
+        let version = r.u32()?;
+        if version != QCKPT_VERSION {
+            bail!("unsupported packed-checkpoint version {version}");
+        }
+        let cfg = read_config(&mut r)?;
+        let embed = read_mat(&mut r)?;
+        let quant = Nvfp4Quantizer::nvfp4();
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            let attn_norm = r.f32s()?;
+            let wq = read_linear(&mut r, quant)?;
+            let wk = read_linear(&mut r, quant)?;
+            let wv = read_linear(&mut r, quant)?;
+            let wo = read_linear(&mut r, quant)?;
+            let ffn_norm = r.f32s()?;
+            let ffn = match r.u8()? {
+                0 => PackedBlockFfn::Dense(read_packed_ffn(&mut r, quant)?),
+                1 => {
+                    let n_exp = r.u32()? as usize;
+                    let top_k = r.u32()? as usize;
+                    let router = read_linear(&mut r, quant)?;
+                    let experts = (0..n_exp)
+                        .map(|_| read_packed_ffn(&mut r, quant))
+                        .collect::<Result<Vec<_>>>()?;
+                    PackedBlockFfn::Moe { router, experts, top_k }
+                }
+                t => bail!("unknown FFN tag {t}"),
+            };
+            blocks.push(PackedBlock { attn_norm, wq, wk, wv, wo, ffn_norm, ffn });
+        }
+        let final_norm = r.f32s()?;
+        let lm_head = match r.u8()? {
+            0 => None,
+            _ => Some(read_mat(&mut r)?),
+        };
+        r.done()?;
+        Ok(QuantizedCheckpoint { cfg, embed, blocks, final_norm, lm_head })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<QuantizedCheckpoint> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    /// Load either checkpoint flavor: a packed serving checkpoint is used
+    /// as-is; an f32 training checkpoint (with its calibration means) is
+    /// packed on load.
+    pub fn load_any(path: impl AsRef<Path>) -> Result<QuantizedCheckpoint> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        if bytes.len() >= 4 {
+            let magic = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+            if magic == QCKPT_MAGIC {
+                return Self::from_bytes(&bytes);
+            }
+        }
+        let (cfg, params, calib) =
+            crate::runtime::artifacts::params_checkpoint_from_bytes(&bytes)?;
+        Ok(Self::build(&cfg, &params, &calib))
+    }
+}
+
+// ----------------------------------------------------------- wire helpers --
+
+pub(crate) fn put_config(out: &mut Vec<u8>, cfg: &ModelConfig) {
+    put_u32(out, cfg.vocab as u32);
+    put_u32(out, cfg.d_model as u32);
+    put_u32(out, cfg.n_layers as u32);
+    put_u32(out, cfg.n_heads as u32);
+    put_u32(out, cfg.n_kv_heads as u32);
+    put_u32(out, cfg.d_ff as u32);
+    put_u32(out, cfg.max_seq as u32);
+    match cfg.ffn {
+        FfnKind::Dense => put_u8(out, 0),
+        FfnKind::Moe { experts, top_k } => {
+            put_u8(out, 1);
+            put_u32(out, experts as u32);
+            put_u32(out, top_k as u32);
+        }
+    }
+    put_f32(out, cfg.rope_base);
+    put_u8(out, u8::from(cfg.tie_embeddings));
+}
+
+pub(crate) fn read_config(r: &mut Reader<'_>) -> Result<ModelConfig> {
+    let vocab = r.u32()? as usize;
+    let d_model = r.u32()? as usize;
+    let n_layers = r.u32()? as usize;
+    let n_heads = r.u32()? as usize;
+    let n_kv_heads = r.u32()? as usize;
+    let d_ff = r.u32()? as usize;
+    let max_seq = r.u32()? as usize;
+    let ffn = match r.u8()? {
+        0 => FfnKind::Dense,
+        1 => {
+            let experts = r.u32()? as usize;
+            let top_k = r.u32()? as usize;
+            FfnKind::Moe { experts, top_k }
+        }
+        t => bail!("unknown FFN kind tag {t}"),
+    };
+    let rope_base = r.f32()?;
+    let tie_embeddings = r.u8()? != 0;
+    let cfg = ModelConfig {
+        vocab,
+        d_model,
+        n_layers,
+        n_heads,
+        n_kv_heads,
+        d_ff,
+        max_seq,
+        ffn,
+        rope_base,
+        tie_embeddings,
+    };
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    Ok(cfg)
+}
+
+pub(crate) fn put_mat(out: &mut Vec<u8>, m: &Mat) {
+    put_u32(out, m.rows as u32);
+    put_u32(out, m.cols as u32);
+    put_f32s(out, &m.data);
+}
+
+pub(crate) fn read_mat(r: &mut Reader<'_>) -> Result<Mat> {
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let data = r.f32s()?;
+    if data.len() != rows * cols {
+        bail!("matrix payload {} != {rows}x{cols}", data.len());
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+fn put_linear(out: &mut Vec<u8>, lin: &FrozenLinear) {
+    let wt = &lin.wt;
+    put_u32(out, wt.rows as u32);
+    put_u32(out, wt.cols as u32);
+    put_u32(out, wt.block as u32);
+    put_f32(out, wt.tensor_scale);
+    put_bytes(out, &wt.codes);
+    put_f32s(out, &wt.scales);
+    put_f32s(out, &lin.mu_q);
+}
+
+fn read_linear(r: &mut Reader<'_>, quant: Nvfp4Quantizer) -> Result<FrozenLinear> {
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let block = r.u32()? as usize;
+    let tensor_scale = r.f32()?;
+    let codes = r.bytes()?;
+    let scales = r.f32s()?;
+    let mu_q = r.f32s()?;
+    if block == 0 {
+        bail!("packed linear has zero block size");
+    }
+    if codes.len() != rows * cols.div_ceil(2) {
+        bail!("packed code payload {} != {rows}x{cols}", codes.len());
+    }
+    if scales.len() != rows * cols.div_ceil(block) {
+        bail!("block scale payload {} mismatch for {rows}x{cols}/b{block}", scales.len());
+    }
+    if mu_q.len() != cols {
+        bail!("calibration mean payload {} != packed K {cols}", mu_q.len());
+    }
+    let wt = QuantizedMat { rows, cols, block, codes, scales, tensor_scale };
+    Ok(FrozenLinear::from_parts(wt, mu_q, quant))
+}
+
+fn put_packed_ffn(out: &mut Vec<u8>, f: &PackedFfn) {
+    put_linear(out, &f.w_gate);
+    put_linear(out, &f.w_up);
+    put_linear(out, &f.w_down);
+}
+
+fn read_packed_ffn(r: &mut Reader<'_>, quant: Nvfp4Quantizer) -> Result<PackedFfn> {
+    Ok(PackedFfn {
+        w_gate: read_linear(r, quant)?,
+        w_up: read_linear(r, quant)?,
+        w_down: read_linear(r, quant)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn build_packs_every_block() {
+        let cfg = ModelConfig::test_tiny(64);
+        let params = Params::init(&cfg, &mut Rng::new(1));
+        let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+        let ckpt = QuantizedCheckpoint::build(&cfg, &params, &calib);
+        assert_eq!(ckpt.blocks.len(), cfg.n_layers);
+        assert_eq!(ckpt.blocks[0].wq.in_dim(), cfg.d_model);
+        assert_eq!(ckpt.blocks[0].wq.out_dim(), cfg.n_heads * cfg.head_dim());
+        // packed weights are much smaller than the f32 params
+        let f32_bytes = 4 * Params::init(&cfg, &mut Rng::new(1)).count();
+        assert!(ckpt.storage_bytes() < f32_bytes, "{} vs {f32_bytes}", ckpt.storage_bytes());
+    }
+
+    #[test]
+    fn calib_means_from_taps_match_column_means() {
+        let cfg = ModelConfig::test_tiny(64);
+        let params = Params::init(&cfg, &mut Rng::new(2));
+        let mut rng = Rng::new(3);
+        let tokens: Vec<u32> = (0..32).map(|_| rng.below(64) as u32).collect();
+        let calib = measure_calib_means(&cfg, &params, &tokens, 2, 16);
+        assert_eq!(calib.attn_in.len(), cfg.n_layers);
+        assert_eq!(calib.ffn_in[0].len(), cfg.d_model);
+        // means of real activations are not all zero
+        assert!(calib.ffn_in.iter().flatten().any(|&m| m != 0.0));
+    }
+
+    #[test]
+    fn config_wire_roundtrip() {
+        for cfg in [ModelConfig::test_tiny(64), ModelConfig::moe_small(256)] {
+            let mut buf = Vec::new();
+            put_config(&mut buf, &cfg);
+            let mut r = Reader::new(&buf);
+            let back = read_config(&mut r).unwrap();
+            r.done().unwrap();
+            assert_eq!(back.vocab, cfg.vocab);
+            assert_eq!(back.d_ff, cfg.d_ff);
+            assert_eq!(back.ffn, cfg.ffn);
+            assert_eq!(back.rope_base, cfg.rope_base);
+        }
+    }
+
+    #[test]
+    fn packed_checkpoint_save_load_is_lossless() {
+        let cfg = ModelConfig::test_tiny(64);
+        let params = Params::init(&cfg, &mut Rng::new(4));
+        let mut rng = Rng::new(5);
+        let tokens: Vec<u32> = (0..32).map(|_| rng.below(64) as u32).collect();
+        let calib = measure_calib_means(&cfg, &params, &tokens, 2, 16);
+        let ckpt = QuantizedCheckpoint::build(&cfg, &params, &calib);
+        let path = std::env::temp_dir().join("averis_qckpt_test.bin");
+        ckpt.save(&path).unwrap();
+        let back = QuantizedCheckpoint::load(&path).unwrap();
+        assert_eq!(back.embed.data, ckpt.embed.data);
+        assert_eq!(back.blocks[0].wq.wt.codes, ckpt.blocks[0].wq.wt.codes);
+        assert_eq!(back.blocks[0].wq.wt.scales, ckpt.blocks[0].wq.wt.scales);
+        assert_eq!(back.blocks[0].wq.mu_q, ckpt.blocks[0].wq.mu_q);
+        assert_eq!(back.blocks[1].ffn_norm, ckpt.blocks[1].ffn_norm);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,279 @@
+//! The serving engine: drives continuous-batching inference over a packed
+//! checkpoint.
+//!
+//! Each [`Engine::step`] is one iteration of the continuous-batching loop:
+//! admit pending prompts into the in-flight set, assemble one ragged step
+//! batch (newly admitted sessions contribute their whole prompt — prefill —
+//! while decoding sessions contribute exactly one token), run a single
+//! stacked [`Transformer::forward_incremental`] so every packed GEMM
+//! amortizes its weight decode across sessions, sample one token per
+//! session, and evict finished sequences.
+//!
+//! Output is bit-deterministic: logits are row-independent (see
+//! `quant::rowq`) and sampling randomness is counter-seeded per
+//! `(engine seed, session id, token index)`, so completions do not depend
+//! on batch composition, admission order, or thread count — continuous
+//! batching at any `max_active` reproduces sequential decoding exactly.
+
+use super::checkpoint::QuantizedCheckpoint;
+use super::scheduler::Scheduler;
+use super::session::{sample_token, SampleCfg, Session};
+use crate::model::{DecodeState, Params, Transformer};
+use crate::quant::QuantRecipe;
+use crate::serve::checkpoint::CalibMeans;
+use crate::tensor::Rng;
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+/// Aggregate serving counters (the serve-bench inputs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// continuous-batching iterations run
+    pub steps: usize,
+    /// prompt tokens pushed through prefill
+    pub prefill_tokens: usize,
+    /// tokens sampled across all sessions
+    pub generated_tokens: usize,
+}
+
+/// A finished generation.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub tokens: Vec<u32>,
+}
+
+pub struct Engine {
+    model: Transformer,
+    pub ckpt: QuantizedCheckpoint,
+    pub sched: Scheduler,
+    pub stats: EngineStats,
+    seed: u64,
+    next_id: u64,
+    done: Vec<Completion>,
+}
+
+impl Engine {
+    /// Build an engine over a packed checkpoint. `max_active` caps the
+    /// in-flight continuous batch; `seed` keys the sampling streams.
+    pub fn new(ckpt: QuantizedCheckpoint, max_active: usize, seed: u64) -> Engine {
+        // the Transformer here only carries cfg + RoPE tables: every serve
+        // GEMM runs the packed FrozenLinear path inside the checkpoint
+        let model = Transformer::new(ckpt.cfg, QuantRecipe::Bf16, 0);
+        Engine {
+            model,
+            ckpt,
+            sched: Scheduler::new(max_active),
+            stats: EngineStats::default(),
+            seed,
+            next_id: 0,
+            done: Vec::new(),
+        }
+    }
+
+    /// Queue one prompt. Fails if prompt + budget cannot fit the model's
+    /// positional range.
+    pub fn submit(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        sampler: SampleCfg,
+        eos: Option<u32>,
+    ) -> Result<u64> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if max_new == 0 {
+            bail!("max_new must be at least 1 (every step batch samples one token per session)");
+        }
+        if let Some(&t) = prompt.iter().find(|&&t| t as usize >= self.ckpt.cfg.vocab) {
+            bail!("prompt token {t} out of vocab {}", self.ckpt.cfg.vocab);
+        }
+        if prompt.len() + max_new > self.ckpt.cfg.max_seq {
+            bail!(
+                "prompt ({}) + max_new ({}) exceeds max_seq {}",
+                prompt.len(),
+                max_new,
+                self.ckpt.cfg.max_seq
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.sched.submit(Session::new(id, prompt, max_new, sampler, eos, &self.ckpt.cfg));
+        Ok(id)
+    }
+
+    /// One continuous-batching iteration. Returns false once all work is
+    /// drained.
+    pub fn step(&mut self) -> bool {
+        self.sched.admit();
+        if self.sched.active.is_empty() {
+            return false;
+        }
+        // assemble the ragged step batch: whole prompt for fresh sessions
+        // (prefill), one token for decoding ones
+        let mut row_counts: Vec<usize> = Vec::with_capacity(self.sched.active.len());
+        let mut chunks: Vec<(&mut DecodeState, &[u32])> =
+            Vec::with_capacity(self.sched.active.len());
+        for s in self.sched.active.iter_mut() {
+            let Session { state, prompt, generated, prefilled, .. } = s;
+            let toks: &[u32] = if *prefilled {
+                std::slice::from_ref(generated.last().expect("decoding session has a token"))
+            } else {
+                &prompt[..]
+            };
+            row_counts.push(toks.len());
+            chunks.push((state, toks));
+        }
+        let logits = self.model.forward_incremental(&self.ckpt, &mut chunks);
+        drop(chunks);
+        // sample one token per session from its last logit row
+        let mut off = 0usize;
+        for (si, s) in self.sched.active.iter_mut().enumerate() {
+            let r = row_counts[si];
+            let last_row = logits.row(off + r - 1);
+            let mut rng = Rng::counter_seeded(self.seed, s.id, s.generated.len() as u64);
+            let tok = sample_token(last_row, s.sampler, &mut rng);
+            if !s.prefilled {
+                s.prefilled = true;
+                self.stats.prefill_tokens += r;
+            }
+            s.generated.push(tok);
+            self.stats.generated_tokens += 1;
+            off += r;
+        }
+        self.stats.steps += 1;
+        for s in self.sched.evict_finished() {
+            self.done.push(Completion { id: s.id, prompt: s.prompt, tokens: s.generated });
+        }
+        true
+    }
+
+    /// Drive the loop until every submitted session finishes; returns the
+    /// completions sorted by session id.
+    pub fn run(&mut self) -> Vec<Completion> {
+        while self.step() {}
+        let mut out = std::mem::take(&mut self.done);
+        out.sort_by_key(|c| c.id);
+        out
+    }
+
+    /// Single-prompt convenience: generate a continuation synchronously.
+    pub fn generate(
+        ckpt: QuantizedCheckpoint,
+        prompt: &[u32],
+        max_new: usize,
+        sampler: SampleCfg,
+        seed: u64,
+    ) -> Result<Vec<u32>> {
+        let mut engine = Engine::new(ckpt, 1, seed);
+        let id = engine.submit(prompt.to_vec(), max_new, sampler, None)?;
+        let done = engine.run();
+        Ok(done.into_iter().find(|c| c.id == id).expect("submitted session completes").tokens)
+    }
+}
+
+/// One serve-bench measurement row.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeBenchRow {
+    pub max_active: usize,
+    pub sessions: usize,
+    pub generated: usize,
+    pub wall_s: f64,
+    pub tok_per_s: f64,
+}
+
+/// Throughput protocol of EXPERIMENTS.md §Serving: the same prompt set runs
+/// once per `max_active` setting (1 = sequential single-prompt decode, the
+/// baseline continuous batching must beat). Prompts are deterministic in
+/// `seed`, so every setting decodes bit-identical token streams and the
+/// comparison is pure scheduling.
+pub fn bench_continuous_decode(
+    cfg: &crate::model::ModelConfig,
+    params: &Params,
+    calib: &CalibMeans,
+    batches: &[usize],
+    n_prompts: usize,
+    prompt_len: usize,
+    max_new: usize,
+    seed: u64,
+) -> Vec<ServeBenchRow> {
+    assert!(prompt_len + max_new <= cfg.max_seq, "bench shape exceeds max_seq");
+    let ckpt = QuantizedCheckpoint::build(cfg, params, calib);
+    batches
+        .iter()
+        .map(|&b| {
+            let mut engine = Engine::new(ckpt.clone(), b, seed);
+            let mut rng = Rng::new(seed ^ 0x5E57);
+            for _ in 0..n_prompts {
+                let prompt: Vec<u32> =
+                    (0..prompt_len).map(|_| rng.below(cfg.vocab) as u32).collect();
+                engine
+                    .submit(prompt, max_new, SampleCfg::Greedy, None)
+                    .expect("bench prompt fits max_seq");
+            }
+            let t0 = Instant::now();
+            let done = engine.run();
+            let wall = t0.elapsed().as_secs_f64();
+            let generated: usize = done.iter().map(|c| c.tokens.len()).sum();
+            ServeBenchRow {
+                max_active: b,
+                sessions: done.len(),
+                generated,
+                wall_s: wall,
+                tok_per_s: generated as f64 / wall.max(1e-9),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn tiny_engine(max_active: usize) -> Engine {
+        let cfg = ModelConfig::test_tiny(64);
+        let params = Params::init(&cfg, &mut Rng::new(30));
+        let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+        Engine::new(QuantizedCheckpoint::build(&cfg, &params, &calib), max_active, 7)
+    }
+
+    #[test]
+    fn engine_drains_all_sessions() {
+        let mut e = tiny_engine(2);
+        for i in 0..5u64 {
+            e.submit(vec![1 + i as u32, 2, 3], 4, SampleCfg::Greedy, None).unwrap();
+        }
+        let done = e.run();
+        assert_eq!(done.len(), 5);
+        assert!(done.iter().all(|c| c.tokens.len() == 4));
+        // ids come back sorted
+        assert_eq!(done.iter().map(|c| c.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(e.stats.generated_tokens, 20);
+        assert!(e.stats.prefill_tokens >= 15);
+    }
+
+    #[test]
+    fn submit_rejects_overlong_and_out_of_vocab() {
+        let mut e = tiny_engine(1);
+        let max_seq = e.ckpt.cfg.max_seq;
+        assert!(e.submit(vec![0; max_seq], 1, SampleCfg::Greedy, None).is_err());
+        assert!(e.submit(vec![9999], 1, SampleCfg::Greedy, None).is_err());
+        assert!(e.submit(vec![], 1, SampleCfg::Greedy, None).is_err());
+        assert!(e.submit(vec![1], 0, SampleCfg::Greedy, None).is_err());
+    }
+
+    #[test]
+    fn eos_stops_generation_early() {
+        // sample greedily once to learn the first token, then use it as EOS
+        let mut e1 = tiny_engine(1);
+        e1.submit(vec![5, 6, 7], 4, SampleCfg::Greedy, None).unwrap();
+        let first = e1.run()[0].tokens[0];
+        let mut e2 = tiny_engine(1);
+        e2.submit(vec![5, 6, 7], 4, SampleCfg::Greedy, Some(first)).unwrap();
+        let done = e2.run();
+        assert_eq!(done[0].tokens, vec![first]);
+    }
+}

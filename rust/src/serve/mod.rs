@@ -1,0 +1,29 @@
+//! FP4 serving engine (DESIGN.md §6): autoregressive inference entirely in
+//! the packed-E2M1 domain.
+//!
+//! Layers, bottom-up:
+//!  * `checkpoint` — [`QuantizedCheckpoint`]: every weight packed to E2M1
+//!    codes once + the frozen per-operand calibration mean μ̂ captured from
+//!    training taps; serving never re-quantizes a weight. Binary save/load.
+//!  * `session` — one in-flight request (prompt, sampled continuation,
+//!    per-layer KV caches, counter-seeded sampling).
+//!  * `scheduler` — continuous-batching admission/eviction bookkeeping.
+//!  * `engine` — the step loop: ragged batches mixing prefill and decode
+//!    through one stacked `Transformer::forward_incremental` call, plus the
+//!    tokens/sec bench protocol of EXPERIMENTS.md §Serving.
+//!
+//! The numeric contract throughout: logits are a pure function of a
+//! sequence's own prefix (row-independent quantization, `quant::rowq`), and
+//! sampling is a pure function of `(seed, session id, token index)` — so
+//! output is bit-identical across thread counts, batch sizes, and admission
+//! orders, and KV-cached decode matches full-context recomputation exactly.
+
+pub mod checkpoint;
+pub mod engine;
+pub mod scheduler;
+pub mod session;
+
+pub use checkpoint::{measure_calib_means, CalibMeans, QuantizedCheckpoint};
+pub use engine::{bench_continuous_decode, Completion, Engine, EngineStats, ServeBenchRow};
+pub use scheduler::Scheduler;
+pub use session::{sample_token, SampleCfg, Session};

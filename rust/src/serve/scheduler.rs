@@ -1,0 +1,128 @@
+//! Continuous-batching admission control: a FIFO of waiting sessions and
+//! the in-flight set the engine steps together.
+//!
+//! The policy is the standard continuous-batching loop: whenever an active
+//! slot frees up (a sequence finishes), the next pending prompt is admitted
+//! *into the running batch* — it prefills alongside the decoding sessions
+//! in the same ragged step batch rather than waiting for the whole batch to
+//! drain. Pure bookkeeping: the scheduler never touches the model, which
+//! keeps the policy unit-testable and the engine loop thin.
+
+use super::session::Session;
+use std::collections::VecDeque;
+
+pub struct Scheduler {
+    pending: VecDeque<Session>,
+    pub active: Vec<Session>,
+    max_active: usize,
+}
+
+impl Scheduler {
+    /// `max_active` is the in-flight batch cap (≥ 1).
+    pub fn new(max_active: usize) -> Scheduler {
+        Scheduler { pending: VecDeque::new(), active: Vec::new(), max_active: max_active.max(1) }
+    }
+
+    /// Queue a session for admission (FIFO).
+    pub fn submit(&mut self, s: Session) {
+        self.pending.push_back(s);
+    }
+
+    /// Move pending sessions into the in-flight set while capacity allows.
+    /// Returns how many were admitted this call.
+    pub fn admit(&mut self) -> usize {
+        let mut n = 0;
+        while self.active.len() < self.max_active {
+            match self.pending.pop_front() {
+                Some(s) => {
+                    self.active.push(s);
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        n
+    }
+
+    /// Remove finished sessions from the in-flight set and return them.
+    pub fn evict_finished(&mut self) -> Vec<Session> {
+        let (done, keep): (Vec<Session>, Vec<Session>) =
+            self.active.drain(..).partition(|s| s.finished());
+        self.active = keep;
+        done
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// No work left anywhere.
+    pub fn is_drained(&self) -> bool {
+        self.pending.is_empty() && self.active.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::serve::session::SampleCfg;
+
+    fn session(id: u64, max_new: usize) -> Session {
+        let cfg = ModelConfig::test_tiny(64);
+        Session::new(id, vec![1, 2, 3], max_new, SampleCfg::Greedy, None, &cfg)
+    }
+
+    #[test]
+    fn admission_respects_the_cap() {
+        let mut s = Scheduler::new(2);
+        for id in 0..5 {
+            s.submit(session(id, 4));
+        }
+        assert_eq!(s.admit(), 2);
+        assert_eq!(s.active_len(), 2);
+        assert_eq!(s.pending_len(), 3);
+        // no free slots → nothing admitted
+        assert_eq!(s.admit(), 0);
+    }
+
+    #[test]
+    fn eviction_frees_slots_for_fifo_refill() {
+        let mut s = Scheduler::new(2);
+        for id in 0..4 {
+            s.submit(session(id, 1));
+        }
+        s.admit();
+        // finish session 0 only
+        s.active[0].generated.push(7);
+        let done = s.evict_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 0);
+        assert_eq!(s.active_len(), 1);
+        // next admit pulls the next FIFO prompt (id 2)
+        assert_eq!(s.admit(), 1);
+        assert!(s.active.iter().any(|x| x.id == 2));
+        assert!(!s.is_drained());
+    }
+
+    #[test]
+    fn drained_when_everything_finished() {
+        let mut s = Scheduler::new(4);
+        s.submit(session(0, 1));
+        s.admit();
+        s.active[0].generated.push(1);
+        let _ = s.evict_finished();
+        assert!(s.is_drained());
+    }
+
+    #[test]
+    fn zero_cap_is_clamped_to_one() {
+        let mut s = Scheduler::new(0);
+        s.submit(session(0, 1));
+        assert_eq!(s.admit(), 1);
+    }
+}

@@ -1,0 +1,169 @@
+//! One in-flight generation request: prompt, sampled continuation, per-layer
+//! KV caches, and the sampling configuration.
+//!
+//! Sampling randomness is counter-seeded per `(engine seed, session id,
+//! token index)`, so a session's output is a pure function of its own
+//! coordinates — bit-identical at any thread count and under any continuous
+//! batch composition. Greedy decoding breaks logit ties toward the lowest
+//! token id for the same reason.
+
+use crate::model::{DecodeState, ModelConfig};
+use crate::tensor::Rng;
+
+/// Token sampling configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SampleCfg {
+    /// argmax (ties → lowest token id)
+    Greedy,
+    /// sample from the softmax of the k largest logits at `temperature`
+    TopK { k: usize, temperature: f32 },
+}
+
+/// Sample one token from a logit row. Deterministic given `(logits, cfg,
+/// rng state)`; `TopK { k: 1, .. }` and temperatures ≤ 0 reduce to greedy.
+pub fn sample_token(logits: &[f32], cfg: SampleCfg, rng: &mut Rng) -> u32 {
+    let greedy = |logits: &[f32]| -> u32 {
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (j, &v) in logits.iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best = j;
+            }
+        }
+        best as u32
+    };
+    match cfg {
+        SampleCfg::Greedy => greedy(logits),
+        SampleCfg::TopK { k, temperature } => {
+            let k = k.max(1).min(logits.len());
+            if k == 1 || temperature <= 0.0 {
+                return greedy(logits);
+            }
+            // top-k indices: logit descending, index ascending on ties —
+            // a total order, so the selection is deterministic
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            idx.sort_by(|&a, &b| {
+                let ord = logits[b].partial_cmp(&logits[a]);
+                ord.unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+            });
+            idx.truncate(k);
+            let mx = logits[idx[0]];
+            let inv_t = 1.0 / temperature;
+            let weights: Vec<f32> = idx.iter().map(|&j| ((logits[j] - mx) * inv_t).exp()).collect();
+            let total: f32 = weights.iter().sum();
+            let u = rng.uniform() * total;
+            let mut acc = 0.0f32;
+            for (slot, &w) in weights.iter().enumerate() {
+                acc += w;
+                if u < acc {
+                    return idx[slot] as u32;
+                }
+            }
+            idx[k - 1] as u32
+        }
+    }
+}
+
+/// One generation request moving through the scheduler.
+pub struct Session {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub generated: Vec<u32>,
+    pub max_new: usize,
+    pub sampler: SampleCfg,
+    /// stop early when this token is sampled
+    pub eos: Option<u32>,
+    /// prompt rows already pushed through the model (the first sampled
+    /// token comes from the prefill logits)
+    pub prefilled: bool,
+    pub state: DecodeState,
+}
+
+impl Session {
+    pub fn new(
+        id: u64,
+        prompt: Vec<u32>,
+        max_new: usize,
+        sampler: SampleCfg,
+        eos: Option<u32>,
+        cfg: &ModelConfig,
+    ) -> Session {
+        assert!(!prompt.is_empty(), "empty prompt");
+        Session {
+            id,
+            prompt,
+            generated: Vec::with_capacity(max_new),
+            max_new,
+            sampler,
+            eos,
+            prefilled: false,
+            state: DecodeState::new(cfg),
+        }
+    }
+
+    /// Tokens seen + generated so far (the KV footprint after prefill).
+    pub fn total_len(&self) -> usize {
+        self.prompt.len() + self.generated.len()
+    }
+
+    pub fn finished(&self) -> bool {
+        self.generated.len() >= self.max_new
+            || (self.eos.is_some() && self.generated.last() == self.eos.as_ref())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_takes_argmax_with_low_index_ties() {
+        let mut rng = Rng::new(1);
+        let logits = [0.1f32, 2.0, 2.0, -1.0];
+        assert_eq!(sample_token(&logits, SampleCfg::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn top1_equals_greedy() {
+        let mut rng = Rng::new(2);
+        let logits = [0.3f32, -0.2, 1.7, 0.9];
+        let g = sample_token(&logits, SampleCfg::Greedy, &mut rng);
+        let t = sample_token(&logits, SampleCfg::TopK { k: 1, temperature: 1.0 }, &mut rng);
+        assert_eq!(g, t);
+    }
+
+    #[test]
+    fn top_k_only_samples_the_top_k() {
+        let logits = [5.0f32, 4.0, -100.0, -100.0];
+        for seed in 0..200 {
+            let mut rng = Rng::counter_seeded(9, seed, 0);
+            let t = sample_token(&logits, SampleCfg::TopK { k: 2, temperature: 1.0 }, &mut rng);
+            assert!(t < 2, "sampled outside top-2: {t}");
+        }
+    }
+
+    #[test]
+    fn counter_seeded_sampling_replays() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let cfg = SampleCfg::TopK { k: 4, temperature: 0.8 };
+        let a = sample_token(&logits, cfg, &mut Rng::counter_seeded(7, 3, 0));
+        let b = sample_token(&logits, cfg, &mut Rng::counter_seeded(7, 3, 0));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn session_finishes_on_budget_or_eos() {
+        let cfg = ModelConfig::test_tiny(64);
+        let mut s = Session::new(0, vec![1, 2], 2, SampleCfg::Greedy, Some(9), &cfg);
+        assert!(!s.finished());
+        s.generated.push(3);
+        assert!(!s.finished());
+        s.generated.push(9);
+        assert!(s.finished());
+        let mut s2 = Session::new(1, vec![1], 1, SampleCfg::Greedy, None, &cfg);
+        s2.generated.push(5);
+        assert!(s2.finished());
+        assert_eq!(s2.total_len(), 2);
+    }
+}

@@ -2,7 +2,7 @@
 //! no proptest crate): each property is checked over many randomized cases
 //! with shrink-free but seed-reported failures.
 
-use averis::quant::averis::mean_residual_split;
+use averis::quant::averis::{mean_residual_split, split_vs_plain_error};
 use averis::quant::fp4::{e2m1_decode, e2m1_encode, e2m1_quantize, E2M1_MAX, E2M1_VALUES};
 use averis::quant::fp8::e4m3_quantize;
 use averis::quant::hadamard::tiled_hadamard;
@@ -127,6 +127,47 @@ fn prop_mean_split_reconstruction_and_centering() {
         // reconstruction exact
         xr.add_row_vec(&mu);
         rel_error(&xr, &x) < 1e-5
+    });
+}
+
+#[test]
+fn prop_mean_split_residual_column_means_exactly_zero() {
+    // The invariant that makes the Eq. 10 cross terms vanish: the residual
+    // is column-centered. On dyadic inputs (multiples of 2⁻⁸, |x| ≤ 1) with
+    // a power-of-two row count, every intermediate of `col_mean` and the
+    // subtraction is exact in f32 — sums stay far below 2²⁴ ulps and the
+    // division is a pure exponent shift — so the residual's column means
+    // are EXACTLY zero, not merely small.
+    forall("exact-zero residual means", |rng| {
+        let l = 1usize << (1 + rng.below(6)); // 2..64 rows, power of two
+        let m = 1 + rng.below(24);
+        let mut x = Mat::zeros(l, m);
+        for v in x.data.iter_mut() {
+            *v = (rng.below(513) as f32 - 256.0) / 256.0;
+        }
+        let (_, xr) = mean_residual_split(&x);
+        xr.col_mean().iter().all(|&mu| mu == 0.0)
+    });
+}
+
+#[test]
+fn prop_split_then_quantize_beats_plain_quantize_on_mean_shifted_inputs() {
+    // the paper's headline inequality, as a property over random outlier
+    // magnitudes: quantizing (μ, residual) separately reconstructs
+    // mean-shifted inputs better than quantizing the raw matrix
+    let quant = Nvfp4Quantizer::nvfp4();
+    forall("split beats plain", |rng| {
+        let (l, m) = (64usize, 64usize);
+        let mut x = Mat::randn(l, m, 0.3, rng);
+        let mut mu = vec![0.0f32; m];
+        for (j, v) in mu.iter_mut().enumerate() {
+            if j % 16 == 3 {
+                *v = rng.uniform_range(3.0, 8.0);
+            }
+        }
+        x.add_row_vec(&mu);
+        let (plain, split) = split_vs_plain_error(&x, &quant);
+        split < plain
     });
 }
 

@@ -1,0 +1,208 @@
+//! Integration tests of the FP4 serving subsystem (ISSUE 2 acceptance
+//! criteria): KV-cached decode is logit-identical to full-context
+//! recomputation for dense and MoE presets, greedy generation from a saved
+//! checkpoint is bit-identical across 1/2/4 threads, checkpoint round trips
+//! preserve eval loss exactly, and continuous batched decode reproduces
+//! sequential single-prompt decode token for token.
+
+use averis::data::{Corpus, CorpusConfig};
+use averis::model::config::FfnKind;
+use averis::model::{DecodeState, ModelConfig, Params, Transformer};
+use averis::quant::QuantRecipe;
+use averis::runtime::{load_params_checkpoint, save_params_checkpoint};
+use averis::serve::{measure_calib_means, Engine, QuantizedCheckpoint, SampleCfg};
+use averis::tensor::{parallel, Rng};
+use averis::train::{train, TrainConfig};
+
+fn tiny_moe(vocab: usize) -> ModelConfig {
+    ModelConfig {
+        ffn: FfnKind::Moe { experts: 4, top_k: 2 },
+        d_ff: 32,
+        ..ModelConfig::test_tiny(vocab)
+    }
+}
+
+/// Random-init params packed with measured calibration means.
+fn calibrated_ckpt(cfg: &ModelConfig, seed: u64) -> QuantizedCheckpoint {
+    let params = Params::init(cfg, &mut Rng::new(seed));
+    let (batch, seq) = (2usize, 16usize);
+    let mut rng = Rng::new(seed ^ 1);
+    let tokens: Vec<u32> = (0..batch * seq).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let calib = measure_calib_means(cfg, &params, &tokens, batch, seq);
+    QuantizedCheckpoint::build(cfg, &params, &calib)
+}
+
+#[test]
+fn kv_cached_decode_is_logit_identical_to_full_context_dense_and_moe() {
+    for cfg in [ModelConfig::test_tiny(64), tiny_moe(64)] {
+        let ckpt = calibrated_ckpt(&cfg, 77);
+        let model = Transformer::new(cfg, QuantRecipe::Bf16, 0);
+        for trial in 0..3u64 {
+            let mut rng = Rng::new(100 + trial);
+            let n = 4 + rng.below(10);
+            let prompt: Vec<u32> = (0..n).map(|_| rng.below(cfg.vocab) as u32).collect();
+            // full-context recomputation: the whole prompt in one chunk
+            let mut full_state = DecodeState::new(&cfg);
+            let full = model.prefill(&ckpt, &mut full_state, &prompt);
+            // incremental: one KV-cached step per token
+            let mut state = DecodeState::new(&cfg);
+            for (i, &t) in prompt.iter().enumerate() {
+                let row = model.decode_step(&ckpt, &mut state, t);
+                assert_eq!(row.len(), cfg.vocab);
+                for (j, (a, b)) in row.iter().zip(full.row(i).iter()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "trial {trial} pos {i} logit {j}: {a} vs {b}"
+                    );
+                }
+            }
+            assert_eq!(state.pos, n);
+            assert_eq!(state.layers[0].len(), n);
+        }
+    }
+}
+
+#[test]
+fn ragged_mixed_prefill_decode_batches_keep_per_sequence_logits() {
+    // a decoding session and a prefilling prompt share one step batch; the
+    // decoding session's logits must equal those from running it alone
+    let cfg = ModelConfig::test_tiny(64);
+    let ckpt = calibrated_ckpt(&cfg, 5);
+    let model = Transformer::new(cfg, QuantRecipe::Bf16, 0);
+    let prompt_a: Vec<u32> = vec![3, 14, 15, 9, 2];
+    let prompt_b: Vec<u32> = vec![27, 18, 28];
+    // alone: prefill a, then one decode step
+    let mut sa = DecodeState::new(&cfg);
+    let _ = model.prefill(&ckpt, &mut sa, &prompt_a);
+    let alone = model.decode_step(&ckpt, &mut sa, 42);
+    // mixed: a decodes token 42 while b prefills its whole prompt
+    let mut sa2 = DecodeState::new(&cfg);
+    let _ = model.prefill(&ckpt, &mut sa2, &prompt_a);
+    let mut sb = DecodeState::new(&cfg);
+    let a_tok = [42u32];
+    let mut chunks = [(&mut sa2, &a_tok[..]), (&mut sb, &prompt_b[..])];
+    let logits = model.forward_incremental(&ckpt, &mut chunks);
+    for (j, (a, b)) in logits.row(0).iter().zip(alone.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "logit {j}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn greedy_generation_bit_identical_across_1_2_4_threads() {
+    let cfg = ModelConfig::test_tiny(64);
+    let run = |threads: usize| {
+        parallel::set_threads(threads);
+        let ckpt = calibrated_ckpt(&cfg, 13);
+        let mut engine = Engine::new(ckpt, 2, 9);
+        for i in 0..3u32 {
+            engine.submit(vec![1 + i, 7, 9, 20], 8, SampleCfg::Greedy, None).unwrap();
+        }
+        let done = engine.run();
+        parallel::set_threads(0);
+        done.into_iter().map(|c| c.tokens).collect::<Vec<_>>()
+    };
+    let t1 = run(1);
+    assert_eq!(t1, run(2), "1 vs 2 threads");
+    assert_eq!(t1, run(4), "1 vs 4 threads");
+}
+
+#[test]
+fn train_save_load_eval_loss_matches_in_memory_exactly() {
+    let corpus =
+        Corpus::generate(CorpusConfig { tokens: 1 << 14, vocab: 64, ..Default::default() }, 3);
+    let cfg = ModelConfig::test_tiny(64);
+    let tc = TrainConfig { steps: 6, batch: 2, seq: 16, eval_every: 0, ..Default::default() };
+    let r = train(cfg, QuantRecipe::Averis, tc, corpus.train.clone(), corpus.heldout.clone());
+    let calib_tokens: Vec<u32> = corpus.train[..32].to_vec();
+    let calib = measure_calib_means(&cfg, &r.params, &calib_tokens, 2, 16);
+    let path = std::env::temp_dir().join("averis_serving_roundtrip.bin");
+    save_params_checkpoint(&path, &cfg, &r.params, &calib).unwrap();
+    let (cfg2, params2, calib2) = load_params_checkpoint(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    // eval on the same held-out batch through fresh engines: bit-exact f32
+    // round trip ⇒ bit-exact loss
+    let tokens: Vec<u32> = corpus.heldout[..32].to_vec();
+    let targets: Vec<u32> = corpus.heldout[1..33].to_vec();
+    let mut m1 = Transformer::new(cfg, QuantRecipe::Averis, 0);
+    let mut m2 = Transformer::new(cfg2, QuantRecipe::Averis, 0);
+    let l1 = m1.eval_loss(&r.params, &tokens, &targets, 2, 16);
+    let l2 = m2.eval_loss(&params2, &tokens, &targets, 2, 16);
+    assert_eq!(l1.to_bits(), l2.to_bits(), "reloaded eval loss {l2} != in-memory {l1}");
+    // and the calibration means round-trip bit-exactly too
+    for (a, b) in calib.ffn_in.iter().flatten().zip(calib2.ffn_in.iter().flatten()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn packed_and_f32_checkpoints_generate_identically_via_load_any() {
+    let cfg = ModelConfig::test_tiny(64);
+    let params = Params::init(&cfg, &mut Rng::new(8));
+    let calib_tokens: Vec<u32> = (0..32).map(|i| (i * 5 % 64) as u32).collect();
+    let calib = measure_calib_means(&cfg, &params, &calib_tokens, 2, 16);
+    let dir = std::env::temp_dir();
+    let f32_path = dir.join("averis_serving_f32.bin");
+    let packed_path = dir.join("averis_serving_packed.bin");
+    save_params_checkpoint(&f32_path, &cfg, &params, &calib).unwrap();
+    let built = QuantizedCheckpoint::build(&cfg, &params, &calib);
+    built.save(&packed_path).unwrap();
+    let prompt = vec![11u32, 4, 60, 31];
+    let from_f32 = Engine::generate(
+        QuantizedCheckpoint::load_any(&f32_path).unwrap(),
+        &prompt,
+        6,
+        SampleCfg::Greedy,
+        0,
+    )
+    .unwrap();
+    let from_packed = Engine::generate(
+        QuantizedCheckpoint::load_any(&packed_path).unwrap(),
+        &prompt,
+        6,
+        SampleCfg::Greedy,
+        0,
+    )
+    .unwrap();
+    let from_mem = Engine::generate(built, &prompt, 6, SampleCfg::Greedy, 0).unwrap();
+    assert_eq!(from_mem, from_f32, "f32-checkpoint flavor diverged");
+    assert_eq!(from_mem, from_packed, "packed-checkpoint flavor diverged");
+    let _ = std::fs::remove_file(&f32_path);
+    let _ = std::fs::remove_file(&packed_path);
+}
+
+#[test]
+fn continuous_batched_decode_matches_sequential_single_prompt_decode() {
+    let cfg = ModelConfig::test_tiny(64);
+    let mut rng = Rng::new(21);
+    let prompts: Vec<Vec<u32>> = (0..6)
+        .map(|_| (0..4 + rng.below(6)).map(|_| rng.below(64) as u32).collect())
+        .collect();
+    let run = |max_active: usize| {
+        let ckpt = calibrated_ckpt(&cfg, 11);
+        let mut engine = Engine::new(ckpt, max_active, 123);
+        for p in &prompts {
+            engine
+                .submit(p.clone(), 6, SampleCfg::TopK { k: 4, temperature: 0.9 }, None)
+                .unwrap();
+        }
+        engine.run().into_iter().map(|c| (c.id, c.tokens)).collect::<Vec<_>>()
+    };
+    let sequential = run(1);
+    assert_eq!(sequential, run(3), "max_active 3 diverged from sequential");
+    assert_eq!(sequential, run(6), "max_active 6 diverged from sequential");
+}
+
+#[test]
+fn moe_engine_generates_through_the_packed_path() {
+    let cfg = tiny_moe(64);
+    let ckpt = calibrated_ckpt(&cfg, 31);
+    let mut engine = Engine::new(ckpt, 3, 1);
+    for i in 0..4u32 {
+        engine.submit(vec![2 + i, 30, 17], 5, SampleCfg::Greedy, None).unwrap();
+    }
+    let done = engine.run();
+    assert_eq!(done.len(), 4);
+    assert!(done.iter().all(|c| c.tokens.len() == 5));
+    assert!(done.iter().all(|c| c.tokens.iter().all(|&t| (t as usize) < 64)));
+}
