@@ -1,28 +1,43 @@
 //! Hot-path microbenchmarks used by the §Perf optimization loop
 //! (EXPERIMENTS.md §Perf records before/after numbers from this bench):
 //! GeMM GFLOP/s, fused NVFP4 quantizer throughput, FWHT throughput,
-//! mean-split throughput, the quantized-GeMM composite, and the
-//! fake-quant-f32 vs packed-code GEMM comparison (single-thread and
-//! threaded) that tracks the packed engine's speedup across sizes.
+//! mean-split throughput, the quantized-GeMM composite, the fake-quant-f32
+//! vs packed-code comparison, and the **v1-vs-v2 packed-kernel table** —
+//! per-nibble/per-chunk v1 decode against the byte-pair-LUT, register-
+//! blocked, shared-slab, column-sharded v2 suite — over both square
+//! training shapes and the skinny serving-decode shapes (l ∈ {1, 4, 16}).
 //!
 //! Run: cargo bench --bench kernel_microbench [-- --threads N]
+//!        [--record EXPERIMENTS.md]   write the v1-vs-v2 table into the
+//!                                    `kernel-v1v2` marked block
+//!        [--smoke]                   single iteration on tiny shapes (CI
+//!                                    drift check, not a measurement)
 
-use averis::bench_harness::{bench, threads_from_args, BenchOpts, TablePrinter};
+use averis::bench_harness::{
+    arg_value, bench, has_flag, record_markdown_block, threads_from_args, BenchOpts, TablePrinter,
+};
 use averis::quant::averis::mean_residual_split_inplace;
 use averis::quant::gemm::QuantGemm;
 use averis::quant::hadamard::tiled_hadamard_inplace;
-use averis::quant::packed::packed_matmul;
-use averis::quant::{Nvfp4Quantizer, QuantRecipe};
+use averis::quant::packed::{packed_matmul, packed_matmul_v1};
+use averis::quant::{rowq_matmul, Nvfp4Quantizer, QuantRecipe, RowQuantMat};
 use averis::tensor::{parallel, Mat, Rng};
 
 fn main() {
     let threads = threads_from_args();
+    let smoke = has_flag("smoke");
+    let record = arg_value("record");
     let mut rng = Rng::new(21);
-    let opts = BenchOpts { warmup_iters: 2, iters: 8 };
+    let opts = if smoke {
+        BenchOpts { warmup_iters: 0, iters: 1 }
+    } else {
+        BenchOpts { warmup_iters: 2, iters: 8 }
+    };
     let t = TablePrinter::new(&["kernel", "shape", "mean ms", "throughput"], &[26, 18, 10, 16]);
 
     // GeMM (f32), single-thread then threaded
-    for &n in &[256usize, 512] {
+    let gemm_sizes: &[usize] = if smoke { &[64] } else { &[256, 512] };
+    for &n in gemm_sizes {
         let a = Mat::randn(n, n, 1.0, &mut rng);
         let b = Mat::randn(n, n, 1.0, &mut rng);
         for (label, nt) in [("matmul@1", 1usize), ("matmul@auto", threads)] {
@@ -40,7 +55,12 @@ fn main() {
     parallel::set_threads(0);
 
     // fused NVFP4 quantizer
-    let x = Mat::randn(4096, 1024, 1.0, &mut rng);
+    let (ql, qm) = if smoke {
+        (256usize, 128usize)
+    } else {
+        (4096usize, 1024usize)
+    };
+    let x = Mat::randn(ql, qm, 1.0, &mut rng);
     let quant = Nvfp4Quantizer::nvfp4();
     let mut scratch = x.clone();
     let stats = bench(opts, || {
@@ -50,7 +70,7 @@ fn main() {
     let gels = x.numel() as f64 / (stats.mean() / 1e3) / 1e9;
     t.row(&[
         "nvfp4 quant (fused)".into(),
-        "4096x1024".into(),
+        format!("{ql}x{qm}"),
         format!("{:.2}", stats.mean()),
         format!("{gels:.2} Gelem/s"),
     ]);
@@ -60,7 +80,7 @@ fn main() {
     let gels = x.numel() as f64 / (stats.mean() / 1e3) / 1e9;
     t.row(&[
         "nvfp4 quant (packed)".into(),
-        "4096x1024".into(),
+        format!("{ql}x{qm}"),
         format!("{:.2}", stats.mean()),
         format!("{gels:.2} Gelem/s"),
     ]);
@@ -74,7 +94,7 @@ fn main() {
     let gels = x.numel() as f64 / (stats.mean() / 1e3) / 1e9;
     t.row(&[
         "tiled hadamard".into(),
-        "4096x1024".into(),
+        format!("{ql}x{qm}"),
         format!("{:.2}", stats.mean()),
         format!("{gels:.2} Gelem/s"),
     ]);
@@ -88,7 +108,7 @@ fn main() {
     let gels = x.numel() as f64 / (stats.mean() / 1e3) / 1e9;
     t.row(&[
         "averis mean split".into(),
-        "4096x1024".into(),
+        format!("{ql}x{qm}"),
         format!("{:.2}", stats.mean()),
         format!("{gels:.2} Gelem/s"),
     ]);
@@ -103,7 +123,8 @@ fn main() {
         &["quantized GeMM", "shape", "mean ms", "vs fake@1"],
         &[26, 18, 10, 16],
     );
-    for &n in &[256usize, 512, 768] {
+    let fake_sizes: &[usize] = if smoke { &[128] } else { &[256, 512, 768] };
+    for &n in fake_sizes {
         let xg = Mat::randn(n, n, 1.0, &mut rng);
         let wg = Mat::randn(n, n, 0.1, &mut rng);
 
@@ -149,11 +170,110 @@ fn main() {
     }
     parallel::set_threads(0);
 
+    // v1 vs v2 packed kernels, kernel-only timing (operands packed once
+    // outside the loop, like serving reuses a packed weight): attributes
+    // the byte-pair LUT + register blocking + shared-slab/column-sharding
+    // gains without the quantize pass in the way. Square training shapes
+    // plus the skinny serving-decode shapes (l = batched decode rows; the
+    // l=1 row is the single-session decode step that v1 ran on one thread).
+    println!();
+    let t4 = TablePrinter::new(
+        &["packed GEMM v1 vs v2", "shape (lxkxn)", "thr", "v1 ms", "v2 ms", "v1/v2"],
+        &[22, 16, 4, 9, 9, 7],
+    );
+    let mut md = String::from(
+        "| kernel | shape (l×k×n) | threads | v1 ms | v2 ms | speedup (v1/v2) |\n\
+         |--------|---------------|--------:|------:|------:|----------------:|\n",
+    );
+    let v1v2_shapes: &[(usize, usize, usize)] = if smoke {
+        &[(64, 64, 64), (1, 128, 256)]
+    } else {
+        &[
+            (256, 256, 256),
+            (512, 512, 512),
+            (1, 1024, 1024),
+            (1, 2048, 4096),
+            (4, 1024, 2048),
+            (16, 1024, 4096),
+        ]
+    };
+    let mut thread_settings = vec![1usize];
+    if threads > 1 {
+        thread_settings.push(threads);
+    }
+    for &(l, k, n) in v1v2_shapes {
+        let xg = Mat::randn(l, k, 1.0, &mut rng);
+        let wg = Mat::randn(k, n, 0.1, &mut rng);
+        let xq = quant.quantize_store(&xg);
+        let wq = quant.quantize_store(&wg.transpose());
+        for &nt in &thread_settings {
+            parallel::set_threads(nt);
+            let v1 = bench(opts, || std::hint::black_box(packed_matmul_v1(&xq, &wq)));
+            let v2 = bench(opts, || std::hint::black_box(packed_matmul(&xq, &wq)));
+            let shape = format!("{l}x{k}x{n}");
+            t4.row(&[
+                "packed fwd".into(),
+                shape.clone(),
+                nt.to_string(),
+                format!("{:.3}", v1.mean()),
+                format!("{:.3}", v2.mean()),
+                format!("{:.2}x", v1.mean() / v2.mean()),
+            ]);
+            md.push_str(&format!(
+                "| packed fwd | {l}×{k}×{n} | {nt} | {:.3} | {:.3} | {:.2}x |\n",
+                v1.mean(),
+                v2.mean(),
+                v1.mean() / v2.mean()
+            ));
+        }
+        // serving decode twin: row-quantize the step batch (what
+        // FrozenLinear::forward pays per call) + the rowq GEMM on the same
+        // v2 driver; no v1 twin exists for this entry point, so only v2 is
+        // reported (tracked for regressions, not speedup)
+        if l <= 16 {
+            let q = RowQuantMat::quantize(&quant, &xg);
+            for &nt in &thread_settings {
+                parallel::set_threads(nt);
+                let v2 = bench(opts, || std::hint::black_box(rowq_matmul(&q, &wq)));
+                let shape = format!("{l}x{k}x{n}");
+                t4.row(&[
+                    "rowq fwd (serving)".into(),
+                    shape,
+                    nt.to_string(),
+                    "-".into(),
+                    format!("{:.3}", v2.mean()),
+                    "-".into(),
+                ]);
+                md.push_str(&format!(
+                    "| rowq fwd (serving) | {l}×{k}×{n} | {nt} | n/a | {:.3} | n/a |\n",
+                    v2.mean()
+                ));
+            }
+        }
+    }
+    parallel::set_threads(0);
+    md.push_str(&format!(
+        "\nProtocol: `cargo bench --bench kernel_microbench -- --threads {threads} --record \
+         EXPERIMENTS.md` (kernel-only timing, operands packed outside the loop; \
+         v1 = per-nibble decode, per-chunk slab decode, no register blocking)."
+    ));
+    if let Some(path) = record {
+        match record_markdown_block(&path, "kernel-v1v2", &md) {
+            Ok(()) => println!("\nrecorded v1-vs-v2 table into {path}"),
+            Err(e) => eprintln!("\nfailed to record v1-vs-v2 table into {path}: {e}"),
+        }
+    }
+
     // composite quantized GeMM per recipe (pipeline dispatch)
     println!();
     let t3 = TablePrinter::new(&["kernel", "shape", "mean ms", "throughput"], &[26, 18, 10, 16]);
-    let xg = Mat::randn(512, 256, 1.0, &mut rng);
-    let wg = Mat::randn(256, 128, 0.1, &mut rng);
+    let (cl, cm, cn) = if smoke {
+        (64usize, 64usize, 32usize)
+    } else {
+        (512, 256, 128)
+    };
+    let xg = Mat::randn(cl, cm, 1.0, &mut rng);
+    let wg = Mat::randn(cm, cn, 0.1, &mut rng);
     for recipe in
         [QuantRecipe::Bf16, QuantRecipe::Nvfp4, QuantRecipe::Averis, QuantRecipe::Nvfp4Hadamard]
     {
@@ -161,7 +281,7 @@ fn main() {
         let stats = bench(opts, || std::hint::black_box(g.forward(&xg, &wg)));
         t3.row(&[
             format!("qgemm fwd [{recipe}]"),
-            "512x256x128".into(),
+            format!("{cl}x{cm}x{cn}"),
             format!("{:.2}", stats.mean()),
             "-".into(),
         ]);

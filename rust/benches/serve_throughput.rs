@@ -2,18 +2,29 @@
 //! single-prompt decode, over the packed KV-cached serve path
 //! (EXPERIMENTS.md §Serving).
 //!
-//! Run: cargo bench --bench serve_throughput [-- --threads N]
+//! Run: cargo bench --bench serve_throughput [-- --threads N] [--smoke]
 //! To write the measured table into EXPERIMENTS.md use the CLI twin:
 //!   cargo run --release -- serve-bench --record EXPERIMENTS.md
+//!
+//! The checksum column is the deterministic fingerprint of the decoded
+//! tokens (`ServeBenchRow::token_checksum`): identical down the column by
+//! the engine's batching-invariance contract, so a kernel change that
+//! altered served output is visible right in the bench table.
 
-use averis::bench_harness::{threads_from_args, TablePrinter};
+use averis::bench_harness::{has_flag, threads_from_args, TablePrinter};
 use averis::model::{ModelConfig, Params};
 use averis::serve::{bench_continuous_decode, CalibMeans};
 use averis::tensor::Rng;
 
 fn main() {
     let threads = threads_from_args();
-    let (n_prompts, prompt_len, max_new, seed) = (32usize, 16usize, 32usize, 42u64);
+    let smoke = has_flag("smoke");
+    let (n_prompts, prompt_len, max_new, seed) = if smoke {
+        (4usize, 8usize, 4usize, 42u64)
+    } else {
+        (32usize, 16usize, 32usize, 42u64)
+    };
+    let batches: &[usize] = if smoke { &[1, 4] } else { &[1, 8, 32] };
     for (name, cfg) in [
         ("dense (qwen3-0.6b-sim)", ModelConfig::dense_small(256)),
         ("moe (qwen3-7b-a1.5b-sim)", ModelConfig::moe_small(256)),
@@ -27,15 +38,15 @@ fn main() {
             &cfg,
             &params,
             &calib,
-            &[1, 8, 32],
+            batches,
             n_prompts,
             prompt_len,
             max_new,
             seed,
         );
         let t = TablePrinter::new(
-            &["max_active", "sessions", "tokens", "wall_s", "tok/s", "vs seq"],
-            &[10, 8, 8, 9, 9, 7],
+            &["max_active", "sessions", "tokens", "wall_s", "tok/s", "vs seq", "checksum"],
+            &[10, 8, 8, 9, 9, 7, 16],
         );
         let base = rows[0].tok_per_s;
         for r in &rows {
@@ -46,7 +57,12 @@ fn main() {
                 format!("{:.3}", r.wall_s),
                 format!("{:.1}", r.tok_per_s),
                 format!("{:.2}x", r.tok_per_s / base),
+                format!("{:016x}", r.token_checksum),
             ]);
         }
+        assert!(
+            rows.iter().all(|r| r.token_checksum == rows[0].token_checksum),
+            "{name}: decoded tokens diverged across batch settings"
+        );
     }
 }

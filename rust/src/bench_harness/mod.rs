@@ -105,16 +105,31 @@ pub fn record_markdown_block(
 /// binaries call this once at startup:
 /// `cargo bench --bench kernel_microbench -- --threads 4`.
 pub fn threads_from_args() -> usize {
-    let args: Vec<String> = std::env::args().collect();
-    let mut it = args.iter();
-    while let Some(a) = it.next() {
-        if a == "--threads" {
-            if let Some(v) = it.next().and_then(|s| s.parse::<usize>().ok()) {
-                crate::tensor::parallel::set_threads(v);
-            }
-        }
+    if let Some(v) = arg_value("threads").and_then(|s| s.parse::<usize>().ok()) {
+        crate::tensor::parallel::set_threads(v);
     }
     crate::tensor::parallel::threads()
+}
+
+/// Value of a `--name value` flag in the bench binary's argv, if present.
+/// The one flag-scanning loop of this module — `threads_from_args` and
+/// `has_flag` are thin wrappers over the same argv walk.
+pub fn arg_value(name: &str) -> Option<String> {
+    let flag = format!("--{name}");
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == flag {
+            return args.next();
+        }
+    }
+    None
+}
+
+/// Is a bare `--name` flag present in the bench binary's argv? Used for
+/// `--smoke` (single-iteration CI runs of the bench binaries).
+pub fn has_flag(name: &str) -> bool {
+    let flag = format!("--{name}");
+    std::env::args().any(|a| a == flag)
 }
 
 #[cfg(test)]

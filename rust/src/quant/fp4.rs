@@ -12,6 +12,32 @@ use crate::tensor::Rng;
 /// The non-negative E2M1 grid in code order (code 0..=7).
 pub const E2M1_VALUES: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
 
+/// The full signed grid by 4-bit code (bit3 = sign). Code 8 is **-0.0**:
+/// the fused fake-quant path produces -0.0 for negative values that round
+/// to zero magnitude, the packed store keeps its sign bit, and decode must
+/// reproduce the sign bit for bit.
+pub const E2M1_SIGNED_VALUES: [f32; 16] = [
+    0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, -0.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0,
+];
+
+/// Byte-pair decode LUT: `E2M1_BYTE_PAIR_LUT[byte] = [lo, hi]`, the decoded
+/// values of the byte's lo nibble (even column) and hi nibble (odd column).
+/// One table lookup emits two elements, replacing the per-nibble
+/// shift/mask/match of the v1 decode loop (`decode_row_range_nibble` in
+/// `quant::nvfp4` keeps the old form as the differential baseline). The
+/// table is 2 KiB — resident in L1 for the whole GEMM.
+pub const E2M1_BYTE_PAIR_LUT: [[f32; 2]; 256] = build_byte_pair_lut();
+
+const fn build_byte_pair_lut() -> [[f32; 2]; 256] {
+    let mut lut = [[0.0f32; 2]; 256];
+    let mut byte = 0usize;
+    while byte < 256 {
+        lut[byte] = [E2M1_SIGNED_VALUES[byte & 0xF], E2M1_SIGNED_VALUES[byte >> 4]];
+        byte += 1;
+    }
+    lut
+}
+
 /// Largest representable magnitude.
 pub const E2M1_MAX: f32 = 6.0;
 
@@ -233,6 +259,27 @@ mod tests {
             );
             x += 0.015625; // 1/64 steps hit every midpoint exactly
         }
+    }
+
+    #[test]
+    fn byte_pair_lut_matches_scalar_decode_bitwise() {
+        // every byte, both nibbles, including the -0.0 codes (sign bit must
+        // survive: -0.0 and +0.0 compare equal but differ in bits)
+        for byte in 0usize..256 {
+            let [lo, hi] = E2M1_BYTE_PAIR_LUT[byte];
+            assert_eq!(
+                lo.to_bits(),
+                e2m1_decode((byte & 0xF) as u8).to_bits(),
+                "lo nibble of byte {byte:#04x}"
+            );
+            assert_eq!(
+                hi.to_bits(),
+                e2m1_decode((byte >> 4) as u8).to_bits(),
+                "hi nibble of byte {byte:#04x}"
+            );
+        }
+        // spot-check the negative-zero code explicitly
+        assert_eq!(E2M1_SIGNED_VALUES[8].to_bits(), (-0.0f32).to_bits());
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //! for its Hopper runs). The *packed* engine (`packed`, `pipeline`) keeps
 //! operands as 4-bit codes + block scales and multiplies them directly —
 //! bit-identical to the reference for RTNE operands, parallel across row
-//! blocks, and deterministic at any thread count thanks to counter-seeded
+//! blocks or column stripes (the v2 kernel suite: byte-pair LUT decode,
+//! register-blocked microkernels, shared-slab decode — DESIGN.md §7), and
+//! deterministic at any thread count thanks to counter-seeded
 //! stochastic-rounding streams (`sr`).
 //!
 //! A third, serving-only form (`rowq`) quantizes activations row by row —

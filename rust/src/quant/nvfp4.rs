@@ -31,7 +31,9 @@
 //! depend on the thread count. The legacy `Option<&mut Rng>` fused entry
 //! points remain for reference/diagnostic callers and stay sequential.
 
-use super::fp4::{e2m1_decode, e2m1_encode, e2m1_quantize, e2m1_quantize_sr, E2M1_MAX};
+use super::fp4::{
+    e2m1_decode, e2m1_encode, e2m1_quantize, e2m1_quantize_sr, E2M1_BYTE_PAIR_LUT, E2M1_MAX,
+};
 use super::fp8::{e4m3_quantize, e8m0_quantize, E4M3_MAX};
 use super::sr::SrTicket;
 use crate::tensor::{parallel, Mat, Rng};
@@ -124,7 +126,49 @@ impl QuantizedMat {
     /// Decode columns `[j0, j1)` of row `i` into `out` (length `j1 - j0`),
     /// with exactly the arithmetic of the fused fake-quant path:
     /// `value = e2m1_decode(code) * (block_scale * tensor_scale)`.
+    ///
+    /// v2 hot path: the interior of each scale block walks whole code bytes
+    /// through the 256-entry byte-pair LUT (`fp4::E2M1_BYTE_PAIR_LUT`),
+    /// emitting two elements per lookup; only a ragged head/tail element
+    /// per block touches a single nibble. The decoded values — and hence
+    /// every product built on them — are bit-identical to the v1 per-nibble
+    /// form, which is kept as [`Self::decode_row_range_nibble`] for
+    /// differential tests and the v1-vs-v2 microbenchmark.
     pub fn decode_row_range(&self, i: usize, j0: usize, j1: usize, out: &mut [f32]) {
+        debug_assert!(i < self.rows && j0 <= j1 && j1 <= self.cols);
+        debug_assert_eq!(out.len(), j1 - j0);
+        let bpr = self.blocks_per_row();
+        let row_codes = &self.codes[i * self.bytes_per_row()..(i + 1) * self.bytes_per_row()];
+        let mut j = j0;
+        while j < j1 {
+            let blk = j / self.block;
+            let jend = ((blk + 1) * self.block).min(j1);
+            let s = self.scales[i * bpr + blk] * self.tensor_scale;
+            let mut jj = j;
+            // odd start: the element is its byte's hi nibble
+            if jj % 2 == 1 {
+                out[jj - j0] = E2M1_BYTE_PAIR_LUT[row_codes[jj / 2] as usize][1] * s;
+                jj += 1;
+            }
+            // aligned interior: two elements per byte lookup
+            while jj + 1 < jend {
+                let pair = &E2M1_BYTE_PAIR_LUT[row_codes[jj / 2] as usize];
+                out[jj - j0] = pair[0] * s;
+                out[jj + 1 - j0] = pair[1] * s;
+                jj += 2;
+            }
+            // ragged tail element: the lo nibble of its byte
+            if jj < jend {
+                out[jj - j0] = E2M1_BYTE_PAIR_LUT[row_codes[jj / 2] as usize][0] * s;
+            }
+            j = jend;
+        }
+    }
+
+    /// v1-era per-nibble decode (shift/mask/match per element), kept as the
+    /// differential-testing baseline for the byte-pair LUT path and as the
+    /// decode the `packed_matmul_v1` microbenchmark baseline measures.
+    pub fn decode_row_range_nibble(&self, i: usize, j0: usize, j1: usize, out: &mut [f32]) {
         debug_assert!(i < self.rows && j0 <= j1 && j1 <= self.cols);
         debug_assert_eq!(out.len(), j1 - j0);
         let bpr = self.blocks_per_row();
@@ -602,6 +646,43 @@ mod tests {
         let q = Nvfp4Quantizer::nvfp4().quantize_dequant_rows(&x, None);
         assert_eq!(q.cols, 21);
         assert!(rel_error(&q, &x) < 0.25);
+    }
+
+    #[test]
+    fn lut_decode_matches_nibble_decode_bitwise() {
+        // byte-pair LUT vs per-nibble reference over odd offsets, odd
+        // lengths, ragged tail blocks, both formats — including rows with
+        // sign-flipped zeros (negative values rounding to -0.0)
+        let mut rng = Rng::new(51);
+        for quant in [Nvfp4Quantizer::nvfp4(), Nvfp4Quantizer::mxfp4()] {
+            for &(l, m) in &[(1usize, 1usize), (3, 21), (2, 33), (5, 64), (4, 37)] {
+                let mut x = Mat::randn(l, m, 1.5, &mut rng);
+                // force tiny negatives so some codes land on -0.0
+                for (t, v) in x.data.iter_mut().enumerate() {
+                    if t % 7 == 3 {
+                        *v = -1e-4;
+                    }
+                }
+                let s = quant.quantize_store(&x);
+                for i in 0..l {
+                    for j0 in 0..m.min(5) {
+                        for j1 in [m, j0 + (m - j0) / 2, (j0 + 1).min(m)] {
+                            let mut a = vec![0.0f32; j1 - j0];
+                            let mut b = vec![0.0f32; j1 - j0];
+                            s.decode_row_range(i, j0, j1, &mut a);
+                            s.decode_row_range_nibble(i, j0, j1, &mut b);
+                            for (t, (u, v)) in a.iter().zip(b.iter()).enumerate() {
+                                assert_eq!(
+                                    u.to_bits(),
+                                    v.to_bits(),
+                                    "({l}x{m}) row {i} [{j0},{j1}) elem {t}: {u} vs {v}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

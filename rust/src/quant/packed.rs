@@ -1,27 +1,53 @@
-//! Packed-code GEMM kernels: multiply two E2M1-quantized operands directly
-//! in their packed storage form.
+//! Packed-code GEMM kernels v2: multiply two E2M1-quantized operands
+//! directly in their packed storage form.
 //!
 //! This is the execution engine the recipe pipelines lower their Multiply
-//! stage to. Both operands arrive as [`QuantizedMat`] packed along the
-//! GeMM's reduction axis (blocks over their *columns*); the kernels decode
-//! codes through the E2M1 LUT — two codes per byte — apply the per-block
-//! scale product as each K block streams through, and accumulate in f32.
-//! Only bounded per-worker scratch (one K-slab or row tile) is ever decoded;
-//! the full dequantized f32 matrices of the fake-quant path are never
-//! materialized.
+//! stage to, and (through the shared [`ikj_matmul`] driver) the engine the
+//! serving path's `rowq_matmul` runs on. Both operands arrive packed along
+//! the GeMM's reduction axis (blocks over their *columns*); the kernels
+//! decode codes through the 256-entry byte-pair LUT — two elements per
+//! table lookup — apply the per-block scale product as each K slab streams
+//! through, and accumulate in f32. The kernel architecture (DESIGN.md §7):
+//!
+//! * **Byte-pair LUT decode** (`fp4::E2M1_BYTE_PAIR_LUT` via
+//!   `QuantizedMat::decode_row_range`): one lookup emits a code byte's two
+//!   elements, replacing v1's per-nibble shift/mask/match.
+//! * **Register-blocked ikj microkernel** ([`MR`]-row × width output tile
+//!   per K-slab pass): four output rows stream against each decoded ŵ slab
+//!   row, so every slab load feeds four FMA streams instead of one.
+//! * **Shared-slab decode** (row-sharded path): each weight K-slab is
+//!   decoded *once* into a buffer all workers read, instead of once per
+//!   worker chunk — v1 paid a T-fold redundant decode at T threads.
+//! * **Column sharding** (skinny path, `parallel::par_col_chunks`): when
+//!   the output has too few rows to split — the l=1 continuous-batching
+//!   decode step — workers split the output *columns* instead, each
+//!   decoding only its own stripe of every slab (no redundancy at all).
+//!
+//! Only bounded per-worker scratch is ever decoded: one K-slab stripe plus
+//! an `MR`-row activation tile in the ikj kernels, and an `RB`-row
+//! activation block plus a `JT`-row tile in the dot-form `_bt` kernel
+//! (which now decodes each activation row once per GEMM, where v1
+//! re-decoded it per column tile). The full dequantized f32 matrices of
+//! the fake-quant path are never materialized.
 //!
 //! **Bit-exactness contract:** for each output element the multiply/add
 //! sequence (including the zero-operand skip) walks k in ascending order
 //! with exactly the arithmetic of `Mat::matmul` / `Mat::matmul_bt` /
-//! `Mat::matmul_at` applied to the dequantized operands, and row sharding
-//! never changes an output row's accumulation order. So
-//! `packed_matmul(Q(x), Q(wᵀ))` is bit-identical to
+//! `Mat::matmul_at` applied to the dequantized operands, and neither row
+//! nor column sharding nor the MR-row tiling changes any element's
+//! accumulation order. So `packed_matmul(Q(x), Q(wᵀ))` is bit-identical to
 //! `Q(x).dequantize().matmul(&Q(wᵀ).dequantize().transpose())`, at any
-//! thread count. The property tests in `tests/packed_gemm.rs` pin this.
+//! thread count — and bit-identical to the v1 kernels, kept here as
+//! [`packed_matmul_v1`] for differential tests and the v1-vs-v2
+//! microbenchmark. The property tests in `tests/packed_gemm.rs` pin all of
+//! this.
 
 use super::nvfp4::QuantizedMat;
-use crate::tensor::parallel::{self, min_rows_for as par_min_rows};
+use crate::tensor::parallel::{self, min_cols_for as par_min_cols, min_rows_for as par_min_rows};
 use crate::tensor::Mat;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Barrier, RwLock};
 
 /// K-slab width: a multiple of both the NVFP4 (16) and MXFP4 (32) block
 /// sizes, matching `Mat::matmul`'s k-blocking.
@@ -30,16 +56,292 @@ const KB: usize = 64;
 /// Row tile of the dot-form kernel's second operand.
 const JT: usize = 32;
 
+/// Activation row block of the dot-form kernel: â rows decode once per
+/// block (bounding per-worker scratch at `RB · k` f32 instead of the whole
+/// chunk) and are reused across every [`JT`] column tile of that block.
+const RB: usize = 64;
+
+/// Row register-blocking factor of the ikj microkernel: a 4-row output tile
+/// reuses each decoded ŵ slab row four times from registers/L1.
+const MR: usize = 4;
+
+/// Decode rows `[j0, j1)` of packed ŵᵀ over K range `[k0, k1)` into the
+/// k-major `slab` (`(k1-k0) × (j1-j0)`), the layout the ikj microkernel
+/// streams. `wrow` is KB-wide scratch.
+fn decode_wslab(
+    wt: &QuantizedMat,
+    j0: usize,
+    j1: usize,
+    k0: usize,
+    k1: usize,
+    wrow: &mut [f32; KB],
+    slab: &mut [f32],
+) {
+    let width = j1 - j0;
+    let kw = k1 - k0;
+    debug_assert_eq!(slab.len(), kw * width);
+    for j in j0..j1 {
+        wt.decode_row_range(j, k0, k1, &mut wrow[..kw]);
+        for (t, &v) in wrow[..kw].iter().enumerate() {
+            slab[t * width + (j - j0)] = v;
+        }
+    }
+}
+
+/// Accumulate an `nr ≤ MR` row output tile against one decoded K-slab,
+/// walking k ascending with exactly `Mat::matmul`'s per-row zero skip.
+/// `xb` holds the decoded activation rows at stride [`KB`] (row r's slab
+/// values at `xb[r*KB..r*KB+kw]`), `wslab` is k-major `kw × width`, and
+/// `crows` the `nr × width` output tile. Fusing rows only interleaves
+/// *independent* per-row FMA streams — each output element still sees its
+/// own `c += a·w` sequence in the same k order — so the tiling (and where
+/// tile boundaries fall) cannot change any element's bits.
+fn slab_tile_ikj(xb: &[f32], kw: usize, nr: usize, wslab: &[f32], width: usize, crows: &mut [f32]) {
+    debug_assert!((1..=MR).contains(&nr));
+    debug_assert_eq!(crows.len(), nr * width);
+    if nr == MR {
+        let (c0, rest) = crows.split_at_mut(width);
+        let (c1, rest) = rest.split_at_mut(width);
+        let (c2, c3) = rest.split_at_mut(width);
+        for t in 0..kw {
+            let w = &wslab[t * width..(t + 1) * width];
+            let (a0, a1, a2, a3) = (xb[t], xb[KB + t], xb[2 * KB + t], xb[3 * KB + t]);
+            if a0 != 0.0 && a1 != 0.0 && a2 != 0.0 && a3 != 0.0 {
+                // all four lanes live: one pass, four FMA streams per ŵ load
+                for (j, &wv) in w.iter().enumerate() {
+                    c0[j] += a0 * wv;
+                    c1[j] += a1 * wv;
+                    c2[j] += a2 * wv;
+                    c3[j] += a3 * wv;
+                }
+            } else {
+                // some lane hit matmul's zero skip: update live lanes one by
+                // one (same per-element op sequence as the fused pass)
+                for (av, c) in [(a0, &mut *c0), (a1, &mut *c1), (a2, &mut *c2), (a3, &mut *c3)] {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for (j, &wv) in w.iter().enumerate() {
+                        c[j] += av * wv;
+                    }
+                }
+            }
+        }
+    } else {
+        for r in 0..nr {
+            let crow = &mut crows[r * width..(r + 1) * width];
+            for t in 0..kw {
+                let av = xb[r * KB + t];
+                if av == 0.0 {
+                    continue;
+                }
+                let w = &wslab[t * width..(t + 1) * width];
+                for (cj, &wv) in crow.iter_mut().zip(w.iter()) {
+                    *cj += av * wv;
+                }
+            }
+        }
+    }
+}
+
+/// One column stripe `[col0, col0 + width)` of C = X̂·Ŵᵀ over all `l` output
+/// rows: per K-slab, decode only this stripe's ŵ columns, then stream
+/// MR-row microkernel tiles. Runs the sequential case (full width) and each
+/// column-sharded worker (its own stripe — no decode is shared, so no
+/// decode is redundant).
+fn stripe_ikj<F>(
+    l: usize,
+    k: usize,
+    decode_x: &F,
+    wt: &QuantizedMat,
+    col0: usize,
+    width: usize,
+    stripe: &mut [f32],
+) where
+    F: Fn(usize, usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(stripe.len(), l * width);
+    let mut wslab = vec![0.0f32; KB * width];
+    let mut wrow = [0.0f32; KB];
+    let mut xb = [0.0f32; MR * KB];
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        let kw = k1 - k0;
+        decode_wslab(wt, col0, col0 + width, k0, k1, &mut wrow, &mut wslab[..kw * width]);
+        let mut i0 = 0usize;
+        while i0 < l {
+            let nr = (l - i0).min(MR);
+            for r in 0..nr {
+                decode_x(i0 + r, k0, k1, &mut xb[r * KB..r * KB + kw]);
+            }
+            slab_tile_ikj(
+                &xb,
+                kw,
+                nr,
+                &wslab[..kw * width],
+                width,
+                &mut stripe[i0 * width..(i0 + nr) * width],
+            );
+            i0 += nr;
+        }
+    }
+}
+
+/// One row-sharded worker of the shared-slab path. The worker whose chunk
+/// starts at row 0 is the designated decoder: it write-locks the shared
+/// slab and decodes the current K-slab exactly once; every worker then
+/// joins the first barrier (so no reader can see a half-written or stale
+/// slab) and consumes the slab under a read lock. The second barrier, after
+/// every read guard has been dropped, fences readers-before-next-decode:
+/// without it a descheduled worker could acquire its read lock only after
+/// the decoder had already write-locked and overwritten the buffer with the
+/// next slab (the write lock only blocks on guards already *held*, not
+/// guards not yet acquired). All workers iterate the same `⌈k/KB⌉` slabs
+/// and hit both barriers once per slab, so the barriers always have their
+/// full complement. The decoded values are identical wherever they are
+/// produced, so moving the decode to one worker cannot change any bits.
+///
+/// Panic discipline: a panicking worker must still join its remaining
+/// barriers or every other worker hangs in `Barrier::wait` and the scope
+/// join wedges the process. Both phases therefore run under
+/// `catch_unwind`; a panic raises the shared `panicked` flag *before* the
+/// worker's next barrier, every worker re-checks the flag right *after*
+/// each barrier (so all of them observe the same state at the same
+/// generation and return together), and the caller re-raises the panic
+/// once the scope has joined. The original panic message still reaches
+/// stderr through the normal panic hook at unwind time.
+fn shared_slab_worker<F>(
+    row0: usize,
+    crows: &mut [f32],
+    k: usize,
+    n: usize,
+    decode_x: &F,
+    wt: &QuantizedMat,
+    slab: &RwLock<Vec<f32>>,
+    barrier: &Barrier,
+    panicked: &AtomicBool,
+) where
+    F: Fn(usize, usize, usize, &mut [f32]) + Sync,
+{
+    let nrows = crows.len() / n;
+    let mut wrow = [0.0f32; KB];
+    let mut xb = [0.0f32; MR * KB];
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        let kw = k1 - k0;
+        if row0 == 0 {
+            let decode = panic::catch_unwind(AssertUnwindSafe(|| {
+                let mut s = slab.write().expect("shared slab lock poisoned");
+                decode_wslab(wt, 0, n, k0, k1, &mut wrow, &mut s[..kw * n]);
+            }));
+            if decode.is_err() {
+                panicked.store(true, Ordering::Release);
+            }
+        }
+        barrier.wait();
+        if panicked.load(Ordering::Acquire) {
+            return;
+        }
+        let compute = panic::catch_unwind(AssertUnwindSafe(|| {
+            let s = slab.read().expect("shared slab lock poisoned");
+            let wslab = &s[..kw * n];
+            let mut i0 = 0usize;
+            while i0 < nrows {
+                let nr = (nrows - i0).min(MR);
+                for r in 0..nr {
+                    decode_x(row0 + i0 + r, k0, k1, &mut xb[r * KB..r * KB + kw]);
+                }
+                slab_tile_ikj(&xb, kw, nr, wslab, n, &mut crows[i0 * n..(i0 + nr) * n]);
+                i0 += nr;
+            }
+        }));
+        if compute.is_err() {
+            panicked.store(true, Ordering::Release);
+        }
+        barrier.wait();
+        if panicked.load(Ordering::Acquire) {
+            return;
+        }
+    }
+}
+
+/// Shape-adaptive ikj driver behind [`packed_matmul`] and `rowq_matmul`
+/// (which differ only in how an activation row decodes): row-sharded with a
+/// shared once-decoded ŵ slab, column-sharded when the output is too skinny
+/// to split by row (the l=1 serving decode step) or when columns engage
+/// more workers, sequential otherwise.
+///
+/// Decision rule (DESIGN.md §7): the partition that engages more workers
+/// wins. On a tie, the cheaper redundancy wins: the row path serializes one
+/// KB×n weight decode per slab on the decoder worker (≈ T/l overhead on the
+/// critical path), while the column path re-decodes the activation rows in
+/// every stripe (≈ T/n overhead) — so rows are preferred iff `l ≥ n`. Every
+/// branch computes each output element with the same ascending-k,
+/// zero-skipping accumulation, so the choice never changes the result's
+/// bits.
+pub(crate) fn ikj_matmul<F>(l: usize, k: usize, n: usize, decode_x: &F, wt: &QuantizedMat) -> Mat
+where
+    F: Fn(usize, usize, usize, &mut [f32]) + Sync,
+{
+    let mut c = Mat::zeros(l, n);
+    if l == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let row_workers = parallel::worker_count(l, par_min_rows(k * n));
+    let col_workers = parallel::worker_count(n, par_min_cols(l * k));
+    let prefer_rows = row_workers > col_workers || (row_workers == col_workers && l >= n);
+    if row_workers > 1 && prefer_rows {
+        // same chunk boundaries as par_row_chunks (scoped_row_chunks is its
+        // splitting primitive), with one shared slab decoded once per K-slab
+        let slab = RwLock::new(vec![0.0f32; KB * n]);
+        let barrier = Barrier::new(row_workers);
+        let panicked = AtomicBool::new(false);
+        parallel::scoped_row_chunks(&mut c.data, l, n, row_workers, |row0, chunk| {
+            shared_slab_worker(row0, chunk, k, n, decode_x, wt, &slab, &barrier, &panicked)
+        });
+        assert!(
+            !panicked.load(Ordering::Acquire),
+            "ikj_matmul: a shared-slab worker panicked (see stderr for the original panic)"
+        );
+    } else {
+        parallel::par_col_chunks(&mut c.data, l, n, par_min_cols(l * k), |col0, width, stripe| {
+            stripe_ikj(l, k, decode_x, wt, col0, width, stripe);
+        });
+    }
+    c
+}
+
 /// C = X · W with X packed along its columns (K) and W supplied as a packed
 /// **transpose** `wt` (n×k, also packed along its columns). Returns l×n f32.
 ///
-/// ikj kernel: per K-slab, the slab of ŵ is decoded once into k-major order,
-/// then every output row streams `C[i,·] += x̂[i,k] · ŵ[k,·]` exactly like
-/// the f32 `matmul`.
+/// v2 ikj kernel via [`ikj_matmul`]: byte-pair LUT decode, MR-row
+/// register-blocked microkernel, shared-slab decode on the row-sharded
+/// path, column sharding on skinny shapes.
 pub fn packed_matmul(x: &QuantizedMat, wt: &QuantizedMat) -> Mat {
     assert_eq!(
         x.cols, wt.cols,
         "packed_matmul: K mismatch ({}x{} · ({}x{})ᵀ) — both operands must be packed along K",
+        x.rows, x.cols, wt.rows, wt.cols
+    );
+    ikj_matmul(
+        x.rows,
+        x.cols,
+        wt.rows,
+        &|i: usize, k0: usize, k1: usize, out: &mut [f32]| x.decode_row_range(i, k0, k1, out),
+        wt,
+    )
+}
+
+/// The v1 (PR 1) forward kernel, kept verbatim as the differential-testing
+/// and microbenchmark baseline for the v2 suite: per-nibble decode
+/// (`decode_row_range_nibble`), per-worker-chunk slab decode, no register
+/// blocking. `kernel_microbench` reports v1 vs v2 so the LUT / shared-slab
+/// / microkernel gains stay measured, and `tests/packed_gemm.rs` pins
+/// v1 == v2 bitwise. Not on any hot path.
+pub fn packed_matmul_v1(x: &QuantizedMat, wt: &QuantizedMat) -> Mat {
+    assert_eq!(
+        x.cols, wt.cols,
+        "packed_matmul_v1: K mismatch ({}x{} · ({}x{})ᵀ) — both operands must be packed along K",
         x.rows, x.cols, wt.rows, wt.cols
     );
     let (l, k, n) = (x.rows, x.cols, wt.rows);
@@ -52,15 +354,15 @@ pub fn packed_matmul(x: &QuantizedMat, wt: &QuantizedMat) -> Mat {
         for k0 in (0..k).step_by(KB) {
             let k1 = (k0 + KB).min(k);
             let kw = k1 - k0;
-            // decode this K-slab of ŵ once per chunk, transposed to k-major
+            // v1: decode this K-slab of ŵ once per chunk (T-fold redundant)
             for j in 0..n {
-                wt.decode_row_range(j, k0, k1, &mut wrow[..kw]);
+                wt.decode_row_range_nibble(j, k0, k1, &mut wrow[..kw]);
                 for (t, &v) in wrow[..kw].iter().enumerate() {
                     wslab[t * n + j] = v;
                 }
             }
             for li in 0..nrows {
-                x.decode_row_range(row0 + li, k0, k1, &mut xbuf[..kw]);
+                x.decode_row_range_nibble(row0 + li, k0, k1, &mut xbuf[..kw]);
                 let crow = &mut crows[li * n..(li + 1) * n];
                 for (t, &av) in xbuf[..kw].iter().enumerate() {
                     if av == 0.0 {
@@ -82,8 +384,14 @@ pub fn packed_matmul(x: &QuantizedMat, wt: &QuantizedMat) -> Mat {
 /// transposes — wgrad (∂W = Xᵀ·D as `packed_matmul_bt(Q(xᵀ), Q(dᵀ))`, both
 /// packed along l). Returns a.rows × b.rows f32.
 ///
-/// Dot-form kernel mirroring `Mat::matmul_bt`: ascending-k dot products over
-/// row buffers, with ŵ decoded in row tiles of [`JT`].
+/// Dot-form kernel mirroring `Mat::matmul_bt`: ascending-k dot products,
+/// with b̂ decoded in row tiles of [`JT`]. v2 hoists the â decode out of the
+/// column-tile loop — each row decodes exactly once (in [`RB`]-row blocks,
+/// keeping scratch bounded) instead of `⌈n/JT⌉` times — and blocks [`MR`]
+/// dot products per b̂ row stream, so every `brow[t]` load feeds four
+/// accumulators. Total decode work per chunk drops from
+/// `k·n + rows·k·⌈n/JT⌉` to `rows·k + k·n·⌈rows/RB⌉`, with per-worker
+/// scratch capped at `(RB + JT)·k` f32.
 pub fn packed_matmul_bt(a: &QuantizedMat, b: &QuantizedMat) -> Mat {
     assert_eq!(
         a.cols, b.cols,
@@ -94,25 +402,58 @@ pub fn packed_matmul_bt(a: &QuantizedMat, b: &QuantizedMat) -> Mat {
     let mut c = Mat::zeros(m, n);
     parallel::par_row_chunks(&mut c.data, m, n, par_min_rows(k * n), |row0, crows| {
         let nrows = crows.len() / n.max(1);
+        let mut abuf = vec![0.0f32; RB.min(nrows).max(1) * k];
         let mut btile = vec![0.0f32; JT * k];
-        let mut abuf = vec![0.0f32; k];
-        for j0 in (0..n).step_by(JT) {
-            let j1 = (j0 + JT).min(n);
-            for j in j0..j1 {
-                b.decode_row_range(j, 0, k, &mut btile[(j - j0) * k..(j - j0 + 1) * k]);
+        let mut ib0 = 0usize;
+        while ib0 < nrows {
+            let ib1 = (ib0 + RB).min(nrows);
+            let bn = ib1 - ib0;
+            // â rows of this block decode once, reused across every JT tile
+            for li in 0..bn {
+                a.decode_row_range(row0 + ib0 + li, 0, k, &mut abuf[li * k..(li + 1) * k]);
             }
-            for li in 0..nrows {
-                a.decode_row_range(row0 + li, 0, k, &mut abuf);
-                let crow = &mut crows[li * n..(li + 1) * n];
+            for j0 in (0..n).step_by(JT) {
+                let j1 = (j0 + JT).min(n);
                 for j in j0..j1 {
-                    let brow = &btile[(j - j0) * k..(j - j0 + 1) * k];
-                    let mut acc = 0.0f32;
-                    for t in 0..k {
-                        acc += abuf[t] * brow[t];
+                    b.decode_row_range(j, 0, k, &mut btile[(j - j0) * k..(j - j0 + 1) * k]);
+                }
+                let mut i0 = 0usize;
+                while i0 < bn {
+                    let nr = (bn - i0).min(MR);
+                    let arows = &abuf[i0 * k..(i0 + nr) * k];
+                    for j in j0..j1 {
+                        let brow = &btile[(j - j0) * k..(j - j0 + 1) * k];
+                        if nr == MR {
+                            // four dot products share each brow element;
+                            // every accumulator still sums t = 0..k in
+                            // ascending order
+                            let (mut s0, mut s1) = (0.0f32, 0.0f32);
+                            let (mut s2, mut s3) = (0.0f32, 0.0f32);
+                            for (t, &bv) in brow.iter().enumerate() {
+                                s0 += arows[t] * bv;
+                                s1 += arows[k + t] * bv;
+                                s2 += arows[2 * k + t] * bv;
+                                s3 += arows[3 * k + t] * bv;
+                            }
+                            crows[(ib0 + i0) * n + j] = s0;
+                            crows[(ib0 + i0 + 1) * n + j] = s1;
+                            crows[(ib0 + i0 + 2) * n + j] = s2;
+                            crows[(ib0 + i0 + 3) * n + j] = s3;
+                        } else {
+                            for r in 0..nr {
+                                let arow = &arows[r * k..(r + 1) * k];
+                                let mut acc = 0.0f32;
+                                for (t, &bv) in brow.iter().enumerate() {
+                                    acc += arow[t] * bv;
+                                }
+                                crows[(ib0 + i0 + r) * n + j] = acc;
+                            }
+                        }
                     }
-                    crow[j] = acc;
+                    i0 += nr;
                 }
             }
+            ib0 = ib1;
         }
     });
     c
@@ -121,22 +462,28 @@ pub fn packed_matmul_bt(a: &QuantizedMat, b: &QuantizedMat) -> Mat {
 /// term[r] = Σ_k mu[k] · q̂[r, k]: a quantized row vector times the packed
 /// rows of `q` — the rank-one Correct term of the Averis pipelines
 /// (`1·(μ̄_X W̄)` forward, `1·(μ̄_D W̄ᵀ)` dgrad), never materializing q̂.
-/// Matches `Mat::matmul`'s zero-skip accumulation bit for bit.
+/// Matches `Mat::matmul`'s zero-skip accumulation bit for bit. v2 shards
+/// the output rows across the thread pool (each worker decodes its own q̂
+/// rows); v1 ran sequentially in every Averis forward/dgrad Correct stage
+/// regardless of `--threads`.
 pub fn mu_times_packed_rows(mu: &[f32], q: &QuantizedMat) -> Vec<f32> {
     assert_eq!(mu.len(), q.cols, "mu_times_packed_rows: K mismatch");
     let mut out = vec![0.0f32; q.rows];
-    let mut buf = vec![0.0f32; q.cols];
-    for (r, o) in out.iter_mut().enumerate() {
-        q.decode_row_range(r, 0, q.cols, &mut buf);
-        let mut acc = 0.0f32;
-        for (t, &m) in mu.iter().enumerate() {
-            if m == 0.0 {
-                continue;
+    let rows = q.rows;
+    parallel::par_row_chunks(&mut out, rows, 1, par_min_rows(q.cols), |row0, chunk| {
+        let mut buf = vec![0.0f32; q.cols];
+        for (li, o) in chunk.iter_mut().enumerate() {
+            q.decode_row_range(row0 + li, 0, q.cols, &mut buf);
+            let mut acc = 0.0f32;
+            for (t, &m) in mu.iter().enumerate() {
+                if m == 0.0 {
+                    continue;
+                }
+                acc += m * buf[t];
             }
-            acc += m * buf[t];
+            *o = acc;
         }
-        *o = acc;
-    }
+    });
     out
 }
 
@@ -175,6 +522,43 @@ mod tests {
     }
 
     #[test]
+    fn v1_baseline_matches_v2_bitwise() {
+        // the kept v1 kernel is only a valid bench baseline if it still
+        // computes exactly what v2 does
+        let mut rng = Rng::new(93);
+        for quant in [Nvfp4Quantizer::nvfp4(), Nvfp4Quantizer::mxfp4()] {
+            for &(l, k, n) in &[(7usize, 67usize, 9usize), (1, 33, 40), (9, 128, 33)] {
+                let x = Mat::randn(l, k, 1.0, &mut rng);
+                let w = Mat::randn(k, n, 0.3, &mut rng);
+                let xq = quant.quantize_store(&x);
+                let wq = quant.quantize_store(&w.transpose());
+                let v1 = packed_matmul_v1(&xq, &wq);
+                let v2 = packed_matmul(&xq, &wq);
+                assert_bits_eq(&v2, &v1, &format!("v1 vs v2 ({l},{k},{n})"));
+            }
+        }
+    }
+
+    #[test]
+    fn microkernel_tile_remainders_match_fake_quant() {
+        // l chosen so the MR=4 row tiling leaves remainders of 1, 2, and 3
+        let mut rng = Rng::new(94);
+        let quant = Nvfp4Quantizer::nvfp4();
+        for &l in &[1usize, 2, 3, 5, 6, 7] {
+            let x = Mat::randn(l, 70, 1.0, &mut rng);
+            let w = Mat::randn(70, 12, 0.3, &mut rng);
+            let fake = {
+                let xq = quant.quantize_dequant_rows(&x, None);
+                let wq = quant.quantize_dequant_cols(&w, None);
+                xq.matmul(&wq)
+            };
+            let packed =
+                packed_matmul(&quant.quantize_store(&x), &quant.quantize_store(&w.transpose()));
+            assert_bits_eq(&packed, &fake, &format!("tile remainder l={l}"));
+        }
+    }
+
+    #[test]
     fn packed_matmul_bt_matches_fake_quant_bitwise() {
         let mut rng = Rng::new(91);
         let quant = Nvfp4Quantizer::nvfp4();
@@ -205,6 +589,32 @@ mod tests {
         assert_eq!(term.len(), fake.data.len());
         for (a, b) in term.iter().zip(fake.data.iter()) {
             assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn mu_product_bit_identical_across_thread_counts() {
+        // large enough that the new row sharding engages (cols small so
+        // min_rows is small relative to rows)
+        let mut rng = Rng::new(95);
+        let quant = Nvfp4Quantizer::nvfp4();
+        // packed transpose is 4096×256: min_rows = 2^18/256 = 1024, so 2/4
+        // workers actually shard
+        let w = Mat::randn(256, 4096, 0.2, &mut rng);
+        let mu: Vec<f32> = (0..256).map(|_| rng.normal()).collect();
+        let wq_t = quant.quantize_store(&w.transpose());
+        let run = |threads: usize| {
+            crate::tensor::parallel::set_threads(threads);
+            let r = mu_times_packed_rows(&mu, &wq_t);
+            crate::tensor::parallel::set_threads(0);
+            r
+        };
+        let t1 = run(1);
+        for t in [2usize, 4] {
+            let tn = run(t);
+            for (a, b) in t1.iter().zip(tn.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "@{t} threads: {a} vs {b}");
+            }
         }
     }
 }

@@ -12,9 +12,13 @@
 //! a new stage list (and at most one new stage implementation) instead of
 //! another arm in a forward/dgrad/wgrad match triplicating the
 //! Hadamard-pairing and ragged-K fallback logic. The Multiply stage runs on
-//! the packed execution format (`quant::packed`), which is bit-identical to
-//! the fake-quant reference path for RTNE operands — so swapping the engine
-//! under the recipes changed no numerics.
+//! the packed execution format (`quant::packed`, the v2 kernel suite:
+//! byte-pair LUT decode, register-blocked microkernels, shared-slab decode,
+//! row- or column-sharded parallelism picked per shape — DESIGN.md §7),
+//! which is bit-identical to the fake-quant reference path for RTNE
+//! operands — so swapping and re-tuning the engine under the recipes
+//! changed no numerics. The Correct stages run on the same engine via
+//! `mu_times_packed_rows`, which shards its rows across the thread pool.
 //!
 //! Kind-specific layout is centralized here: each GeMM kind knows which
 //! operand axes carry the reduction (K), therefore how operands are rotated,
@@ -239,7 +243,10 @@ impl Stage for Quantize {
     }
 }
 
-/// Packed-code multiply: the quantized-domain execution step.
+/// Packed-code multiply: the quantized-domain execution step. Lowers to
+/// the v2 kernels in `quant::packed` — the ikj driver picks row-sharded
+/// (shared-slab) or column-sharded (skinny-shape) execution from the
+/// operand shapes, so the lowering itself stays shape-oblivious.
 struct Multiply;
 
 impl Stage for Multiply {

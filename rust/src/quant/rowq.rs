@@ -29,12 +29,7 @@
 
 use super::nvfp4::{Nvfp4Quantizer, QuantizedMat};
 use super::packed::mu_times_packed_rows;
-use crate::tensor::parallel::{self, min_rows_for as par_min_rows};
 use crate::tensor::Mat;
-
-/// K-slab width of the serving GEMM (multiple of both FP4 block sizes,
-/// matching `quant::packed::KB`).
-const KB: usize = 64;
 
 /// A matrix quantized row by row: each row carries its own tensor scale and
 /// block scales, so its codes are independent of every other row.
@@ -96,48 +91,26 @@ impl RowQuantMat {
 /// C = X · W with X row-quantized and W supplied as a packed transpose
 /// `wt` (n×k, packed along its columns = K). Returns l×n f32.
 ///
-/// Same ikj structure as `quant::packed::packed_matmul`: the ŵ K-slab is
-/// decoded once per worker chunk (this is the batching win — stacking the
-/// new-token rows of many sessions amortizes the weight decode), then each
-/// output row streams `C[i,·] += x̂[i,k] · ŵ[k,·]` in ascending-k order.
+/// Runs on the same v2 ikj driver as `quant::packed::packed_matmul`
+/// (byte-pair LUT decode, MR-row microkernel, shared-slab decode on the
+/// row-sharded path) — the two kernels differ only in how an activation
+/// row decodes. Crucially for serving, skinny step batches — the l=1
+/// decode of `FrozenLinear::forward` — now shard the output *columns*
+/// across the thread pool instead of falling back to one thread, with each
+/// worker decoding only its own stripe of every weight K-slab.
 pub fn rowq_matmul(x: &RowQuantMat, wt: &QuantizedMat) -> Mat {
     assert_eq!(
         x.cols, wt.cols,
         "rowq_matmul: K mismatch ({}x{} · ({}x{})ᵀ) — both operands must be packed along K",
         x.rows, x.cols, wt.rows, wt.cols
     );
-    let (l, k, n) = (x.rows, x.cols, wt.rows);
-    let mut c = Mat::zeros(l, n);
-    parallel::par_row_chunks(&mut c.data, l, n, par_min_rows(k * n), |row0, crows| {
-        let nrows = crows.len() / n.max(1);
-        let mut wslab = vec![0.0f32; KB * n];
-        let mut xbuf = [0.0f32; KB];
-        let mut wrow = [0.0f32; KB];
-        for k0 in (0..k).step_by(KB) {
-            let k1 = (k0 + KB).min(k);
-            let kw = k1 - k0;
-            for j in 0..n {
-                wt.decode_row_range(j, k0, k1, &mut wrow[..kw]);
-                for (t, &v) in wrow[..kw].iter().enumerate() {
-                    wslab[t * n + j] = v;
-                }
-            }
-            for li in 0..nrows {
-                x.decode_row_range(row0 + li, k0, k1, &mut xbuf[..kw]);
-                let crow = &mut crows[li * n..(li + 1) * n];
-                for (t, &av) in xbuf[..kw].iter().enumerate() {
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let wrow_t = &wslab[t * n..(t + 1) * n];
-                    for j in 0..n {
-                        crow[j] += av * wrow_t[j];
-                    }
-                }
-            }
-        }
-    });
-    c
+    super::packed::ikj_matmul(
+        x.rows,
+        x.cols,
+        wt.rows,
+        &|i: usize, k0: usize, k1: usize, out: &mut [f32]| x.decode_row_range(i, k0, k1, out),
+        wt,
+    )
 }
 
 /// A serving linear layer: weight packed once, activations row-quantized per
@@ -206,7 +179,7 @@ impl FrozenLinear {
 mod tests {
     use super::*;
     use crate::tensor::ops::rel_error;
-    use crate::tensor::Rng;
+    use crate::tensor::{parallel, Rng};
 
     fn mean_biased(l: usize, m: usize, bias: f32, noise: f32, rng: &mut Rng) -> Mat {
         let mut x = Mat::randn(l, m, noise, rng);

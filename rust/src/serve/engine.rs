@@ -182,6 +182,30 @@ pub struct ServeBenchRow {
     pub generated: usize,
     pub wall_s: f64,
     pub tok_per_s: f64,
+    /// FNV-1a over every completion's (id, tokens) in id order: the
+    /// scheduling-independent fingerprint of *what* was decoded. Identical
+    /// across batch settings, thread counts, and kernel rewrites by the
+    /// engine's determinism contract — `tests/serving.rs` pins it, so a
+    /// kernel change that altered served tokens fails in CI instead of
+    /// silently shifting the bench.
+    pub token_checksum: u64,
+}
+
+/// FNV-1a fold step for the completion fingerprint.
+fn fnv1a(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(0x100000001b3)
+}
+
+/// Deterministic fingerprint of a completion set (assumed id-sorted).
+fn completions_checksum(done: &[Completion]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for c in done {
+        h = fnv1a(h, c.id);
+        for &t in &c.tokens {
+            h = fnv1a(h, t as u64);
+        }
+    }
+    h
 }
 
 /// Throughput protocol of EXPERIMENTS.md §Serving: the same prompt set runs
@@ -223,6 +247,7 @@ pub fn bench_continuous_decode(
                 generated,
                 wall_s: wall,
                 tok_per_s: generated as f64 / wall.max(1e-9),
+                token_checksum: completions_checksum(&done),
             }
         })
         .collect()

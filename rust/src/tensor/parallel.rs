@@ -1,14 +1,23 @@
-//! Deterministic scoped-thread row-block parallelism.
+//! Deterministic scoped-thread parallelism over row blocks and column
+//! stripes.
 //!
-//! One global worker-count knob (`--threads` on the CLI; 0 = auto) plus
-//! `par_row_chunks`, which splits a row-major buffer into contiguous
-//! per-worker row ranges and runs them on `std::thread::scope` threads.
+//! One global worker-count knob (`--threads` on the CLI; 0 = auto) plus two
+//! partitioners over a row-major buffer, both running on
+//! `std::thread::scope` threads:
 //!
-//! The invariant every caller relies on: work is partitioned by *logical
-//! row*, and each row's arithmetic never depends on which worker ran it or
-//! on how many workers there are. Results are therefore bit-identical at any
-//! thread count — the property the `same_seed_same_curve` training test
-//! checks at 1, 2, and 4 threads.
+//! * `par_row_chunks` — contiguous per-worker *row* ranges (the training
+//!   GeMMs: many output rows);
+//! * `par_col_chunks` — contiguous per-worker *column* stripes (the
+//!   serving decode GeMMs: the output is skinny — l = 1 at decode — so row
+//!   sharding has nothing to split; see DESIGN.md §7 for the decision
+//!   rule).
+//!
+//! The invariant every caller relies on: work is partitioned by logical row
+//! or column, each output element is computed entirely by one worker, and
+//! no element's arithmetic depends on which worker ran it or on how many
+//! workers there are. Results are therefore bit-identical at any thread
+//! count — the property the `same_seed_same_curve` training test checks at
+//! 1, 2, and 4 threads.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -37,6 +46,24 @@ pub fn min_rows_for(work_per_row: usize) -> usize {
     (TARGET / work_per_row.max(1)).max(1)
 }
 
+/// Column-stripe twin of [`min_rows_for`]: columns each worker must
+/// amortize before a column-sharded kernel shards, with the same ~256k
+/// multiply-add target per spawned task. `work_per_col` is the kernel's
+/// per-column MAC count (l·k for an ikj GEMM).
+pub fn min_cols_for(work_per_col: usize) -> usize {
+    min_rows_for(work_per_col)
+}
+
+/// Resolved worker count for a buffer of `rows` logical rows (or columns)
+/// where each worker must amortize at least `min_rows` of them: the thread
+/// knob capped by the available work. This is the one formula every
+/// partitioner here resolves; it is public because callers that need the
+/// count *up front* — the shared-slab GEMM in `quant::packed` sizes its
+/// `Barrier` with it before launching — must use exactly the same one.
+pub fn worker_count(rows: usize, min_rows: usize) -> usize {
+    threads().min(rows / min_rows.max(1)).max(1)
+}
+
 /// Run `f(first_row, rows_chunk)` over contiguous row chunks of a row-major
 /// `rows × cols` buffer, in parallel when the shape is worth it.
 ///
@@ -54,12 +81,28 @@ where
     if rows == 0 {
         return;
     }
-    let per = min_rows.max(1);
-    let workers = threads().min(rows / per).max(1);
+    let workers = worker_count(rows, min_rows);
     if workers <= 1 {
         f(0, data);
         return;
     }
+    scoped_row_chunks(data, rows, cols, workers, f);
+}
+
+/// Split a row-major buffer into `workers` contiguous row chunks — the
+/// exact boundaries [`par_row_chunks`] resolves — and run `f(first_row,
+/// chunk)` on scoped threads, the last chunk on the calling thread. The
+/// low-level primitive behind [`par_row_chunks`]; also used directly by the
+/// shared-slab GEMM path in `quant::packed`, which must know `workers`
+/// before launching (its per-slab barrier needs the exact participant
+/// count, and every chunk must be non-empty, which `workers ≤ rows`
+/// guarantees).
+pub fn scoped_row_chunks<T, F>(data: &mut [T], rows: usize, cols: usize, workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(workers >= 1 && workers <= rows.max(1), "scoped_row_chunks: bad worker count");
     let base = rows / workers;
     let rem = rows % workers;
     std::thread::scope(|scope| {
@@ -83,6 +126,67 @@ where
     });
 }
 
+/// Run `f(col0, ncols, stripe)` over contiguous **column** stripes of a
+/// row-major `rows × cols` buffer, in parallel when the shape is worth it.
+///
+/// The complement of [`par_row_chunks`] for skinny outputs (few rows, many
+/// columns — the l=1 serving decode step): each worker owns the columns
+/// `[col0, col0 + ncols)` of every row and fills a zero-initialized
+/// `rows × ncols` stripe buffer in that stripe's row-major layout; the
+/// stripes are copied back into `data` after every worker finishes (when
+/// only one worker is warranted, `f` runs inline directly on `data`, no
+/// copy). Each output element is computed entirely by one worker, so no
+/// element's accumulation order depends on the partitioning and the result
+/// is bit-identical at every thread count. `f` must not read `data`'s prior
+/// contents — stripes arrive zeroed, exactly like a freshly `Mat::zeros`'d
+/// output.
+///
+/// `min_cols` is the smallest stripe a worker may receive; shapes narrower
+/// than `2 * min_cols` run inline on the calling thread.
+pub fn par_col_chunks<T, F>(data: &mut [T], rows: usize, cols: usize, min_cols: usize, f: F)
+where
+    T: Send + Copy + Default,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    assert_eq!(data.len(), rows * cols, "par_col_chunks: buffer/shape mismatch");
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let workers = worker_count(cols, min_cols);
+    if workers <= 1 {
+        // the full-width buffer already has a stripe's layout
+        f(0, cols, data);
+        return;
+    }
+    let base = cols / workers;
+    let rem = cols % workers;
+    let mut stripes: Vec<(usize, usize, Vec<T>)> = Vec::with_capacity(workers);
+    let mut col0 = 0usize;
+    for w in 0..workers {
+        let take = base + usize::from(w < rem);
+        stripes.push((col0, take, vec![T::default(); rows * take]));
+        col0 += take;
+    }
+    std::thread::scope(|scope| {
+        let fref = &f;
+        let mut iter = stripes.iter_mut();
+        let last = iter.next_back();
+        for (c0, take, buf) in iter {
+            scope.spawn(move || fref(*c0, *take, buf.as_mut_slice()));
+        }
+        if let Some((c0, take, buf)) = last {
+            // run the last stripe on the calling thread
+            fref(*c0, *take, buf.as_mut_slice());
+        }
+    });
+    for (c0, take, buf) in &stripes {
+        for r in 0..rows {
+            let dst = r * cols + c0;
+            data[dst..dst + take].copy_from_slice(&buf[r * take..(r + 1) * take]);
+        }
+    }
+}
+
 /// Two-buffer variant of [`par_row_chunks`]: splits two row-major buffers
 /// that share a row count (e.g. packed codes + per-block scales) into the
 /// same contiguous row ranges and runs `f(first_row, a_chunk, b_chunk)`.
@@ -104,8 +208,7 @@ pub fn par_row_chunks2<T, U, F>(
     if rows == 0 {
         return;
     }
-    let per = min_rows.max(1);
-    let workers = threads().min(rows / per).max(1);
+    let workers = worker_count(rows, min_rows);
     if workers <= 1 {
         f(0, a, b);
         return;
@@ -201,5 +304,70 @@ mod tests {
     fn empty_buffer_is_a_noop() {
         let mut data: Vec<f32> = Vec::new();
         par_row_chunks(&mut data, 0, 7, 1, |_, _| panic!("must not be called"));
+    }
+
+    #[test]
+    fn col_chunks_cover_every_element_exactly_once() {
+        let rows = 3;
+        let cols = 37;
+        let mut data = vec![0u32; rows * cols];
+        par_col_chunks(&mut data, rows, cols, 1, |col0, ncols, stripe| {
+            assert_eq!(stripe.len(), rows * ncols);
+            for r in 0..rows {
+                for c in 0..ncols {
+                    stripe[r * ncols + c] += (r * cols + col0 + c) as u32 + 1;
+                }
+            }
+        });
+        for r in 0..rows {
+            for j in 0..cols {
+                assert_eq!(data[r * cols + j], (r * cols + j) as u32 + 1, "row {r} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn col_chunks_result_independent_of_thread_count() {
+        let rows = 2;
+        let cols = 96;
+        let run = |nthreads: usize| {
+            let prev = THREADS.load(Ordering::Relaxed);
+            set_threads(nthreads);
+            let mut data = vec![0.0f64; rows * cols];
+            par_col_chunks(&mut data, rows, cols, 1, |col0, ncols, stripe| {
+                for r in 0..rows {
+                    for c in 0..ncols {
+                        stripe[r * ncols + c] = ((r * 17 + col0 + c) as f64).sin();
+                    }
+                }
+            });
+            set_threads(prev);
+            data
+        };
+        let a = run(1);
+        let b = run(2);
+        let c = run(4);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn narrow_col_shapes_stay_inline() {
+        // cols < 2*min_cols must not shard: f sees the whole buffer
+        let mut data = vec![1i64; 4 * 3];
+        par_col_chunks(&mut data, 4, 3, 8, |col0, ncols, stripe| {
+            assert_eq!(col0, 0);
+            assert_eq!(ncols, 3);
+            assert_eq!(stripe.len(), 12);
+        });
+        // inline path operates on data directly — prior contents survive
+        // when f leaves them alone (sharded stripes start zeroed instead)
+        assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn empty_col_buffer_is_a_noop() {
+        let mut data: Vec<f32> = Vec::new();
+        par_col_chunks(&mut data, 3, 0, 1, |_, _, _| panic!("must not be called"));
     }
 }

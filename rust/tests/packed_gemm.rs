@@ -11,8 +11,8 @@
 //! 4. parallelism: results are bit-identical at 1, 2, and 4 threads.
 
 use averis::quant::gemm::QuantGemm;
-use averis::quant::packed::{packed_matmul, packed_matmul_bt};
-use averis::quant::{Nvfp4Config, Nvfp4Quantizer, QuantRecipe, SrTicket};
+use averis::quant::packed::{packed_matmul, packed_matmul_bt, packed_matmul_v1};
+use averis::quant::{rowq_matmul, Nvfp4Config, Nvfp4Quantizer, QuantRecipe, RowQuantMat, SrTicket};
 use averis::tensor::parallel;
 use averis::tensor::{Mat, Rng};
 
@@ -102,6 +102,102 @@ fn packed_wgrad_form_matches_matmul_at() {
             &quant.quantize_store(&d.transpose()),
         );
         assert_bits_eq(&packed, &fake, &format!("wgrad seed {seed} ({l}x{m}x{n})"));
+    }
+}
+
+#[test]
+fn v2_kernels_match_fake_quant_at_adversarial_shapes_across_thread_counts() {
+    // The v2 suite's hard cases, each at 1/2/4 threads for NVFP4 and MXFP4
+    // (worker counts below from the DESIGN.md §7 decision rule):
+    //   (1, 65, 40)    l=1 serving decode, K not a multiple of the KB=64 slab
+    //   (1, 100, 5)    l=1 with n below the JT=32 tile
+    //   (3, 21, 3)     everything ragged and tiny
+    //   (1, 700, 1024) l=1 wide enough to engage column sharding
+    //                  (min_cols = 2^18/700 = 374 → 2 stripe workers)
+    //   (2, 700, 512)  column path with only 2 output rows (MR remainder)
+    //   (6, 2048, 48)  path flips with the thread count: col at 2 threads
+    //                  (tie 2v2, l < n), shared-slab rows at 4 (3 row
+    //                  workers beat 2 col workers; 2-row chunks)
+    //   (200, 96, 64)  shared-slab row path, up to 4 workers
+    //                  (min_rows = 2^18/(96·64) = 42, tie broken by l ≥ n)
+    //   (5, 64, 31)    sequential stripe with MR=4 row-tile remainder
+    let shapes = [
+        (1usize, 65usize, 40usize),
+        (1, 100, 5),
+        (3, 21, 3),
+        (1, 700, 1024),
+        (2, 700, 512),
+        (6, 2048, 48),
+        (200, 96, 64),
+        (5, 64, 31),
+    ];
+    for (qi, quant) in [Nvfp4Quantizer::nvfp4(), Nvfp4Quantizer::mxfp4()].into_iter().enumerate() {
+        for &(l, k, n) in &shapes {
+            let mut rng = Rng::new(0xF00D + qi as u64 * 1000 + (l * 31 + k * 7 + n) as u64);
+            let x = Mat::randn(l, k, 1.0, &mut rng);
+            let w = Mat::randn(k, n, 0.3, &mut rng);
+            let fake = {
+                let xq = quant.quantize_dequant_rows(&x, None);
+                let wq = quant.quantize_dequant_cols(&w, None);
+                xq.matmul(&wq)
+            };
+            let xs = quant.quantize_store(&x);
+            let ws = quant.quantize_store(&w.transpose());
+            for threads in [1usize, 2, 4] {
+                parallel::set_threads(threads);
+                let v2 = packed_matmul(&xs, &ws);
+                let v1 = packed_matmul_v1(&xs, &ws);
+                parallel::set_threads(0);
+                assert_bits_eq(&v2, &fake, &format!("v2 q{qi} ({l},{k},{n})@{threads}"));
+                assert_bits_eq(&v1, &fake, &format!("v1 q{qi} ({l},{k},{n})@{threads}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn v2_bt_kernel_matches_fake_quant_at_adversarial_shapes_across_thread_counts() {
+    // dot-form kernel: ragged K, n below the JT tile, MR remainders, and a
+    // tall case that engages row sharding (min_rows = 2^18/(48·40) = 136)
+    let quant = Nvfp4Quantizer::nvfp4();
+    for &(m, k, n) in &[(1usize, 65usize, 5usize), (6, 100, 3), (7, 33, 40), (300, 48, 40)] {
+        let mut rng = Rng::new(0xBEEF + (m * 13 + k * 5 + n) as u64);
+        let d = Mat::randn(m, k, 1.0, &mut rng);
+        let w = Mat::randn(n, k, 0.3, &mut rng);
+        let fake = {
+            let dq = quant.quantize_dequant_rows(&d, None);
+            let wq = quant.quantize_dequant_rows(&w, None);
+            dq.matmul_bt(&wq)
+        };
+        let ds = quant.quantize_store(&d);
+        let ws = quant.quantize_store(&w);
+        for threads in [1usize, 2, 4] {
+            parallel::set_threads(threads);
+            let packed = packed_matmul_bt(&ds, &ws);
+            parallel::set_threads(0);
+            assert_bits_eq(&packed, &fake, &format!("bt ({m},{k},{n})@{threads}"));
+        }
+    }
+}
+
+#[test]
+fn rowq_matmul_skinny_shapes_match_reference_across_thread_counts() {
+    // the serving decode GEMM (FrozenLinear::forward) at l=1 and small
+    // batches, including a shape wide enough to engage column sharding
+    let quant = Nvfp4Quantizer::nvfp4();
+    let mut rng = Rng::new(0xF11D);
+    for &(l, k, n) in &[(1usize, 33usize, 7usize), (1, 700, 1024), (4, 65, 24)] {
+        let x = Mat::randn(l, k, 1.0, &mut rng);
+        let w = Mat::randn(k, n, 0.3, &mut rng);
+        let q = RowQuantMat::quantize(&quant, &x);
+        let wt = quant.quantize_store(&w.transpose());
+        let reference = q.dequantize().matmul(&wt.dequantize().transpose());
+        for threads in [1usize, 2, 4] {
+            parallel::set_threads(threads);
+            let v2 = rowq_matmul(&q, &wt);
+            parallel::set_threads(0);
+            assert_bits_eq(&v2, &reference, &format!("rowq ({l},{k},{n})@{threads}"));
+        }
     }
 }
 

@@ -10,7 +10,10 @@ use averis::model::config::FfnKind;
 use averis::model::{DecodeState, ModelConfig, Params, Transformer};
 use averis::quant::QuantRecipe;
 use averis::runtime::{load_params_checkpoint, save_params_checkpoint};
-use averis::serve::{measure_calib_means, Engine, QuantizedCheckpoint, SampleCfg};
+use averis::serve::{
+    bench_continuous_decode, measure_calib_means, CalibMeans, Engine, QuantizedCheckpoint,
+    SampleCfg,
+};
 use averis::tensor::{parallel, Rng};
 use averis::train::{train, TrainConfig};
 
@@ -191,6 +194,40 @@ fn continuous_batched_decode_matches_sequential_single_prompt_decode() {
     let sequential = run(1);
     assert_eq!(sequential, run(3), "max_active 3 diverged from sequential");
     assert_eq!(sequential, run(6), "max_active 6 diverged from sequential");
+}
+
+#[test]
+fn bench_continuous_decode_output_unchanged_across_batches_and_threads() {
+    // Serving regression for the v2 kernel suite: the bench protocol's
+    // decoded tokens (fingerprinted by ServeBenchRow::token_checksum) must
+    // be identical at every max_active and every thread count. Combined
+    // with the packed-vs-fake-quant bit-identity tests this pins that the
+    // kernel rewrite changed scheduling-independent output not at all —
+    // v1 was bit-identical to the same fake-quant reference.
+    let cfg = ModelConfig::test_tiny(64);
+    let params = Params::init(&cfg, &mut Rng::new(9));
+    let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+    let run = |threads: usize| {
+        parallel::set_threads(threads);
+        let rows = bench_continuous_decode(&cfg, &params, &calib, &[1, 3], 4, 6, 5, 77);
+        parallel::set_threads(0);
+        rows
+    };
+    let t1 = run(1);
+    let t4 = run(4);
+    let fingerprint = t1[0].token_checksum;
+    for (label, rows) in [("1 thread", &t1), ("4 threads", &t4)] {
+        for r in rows.iter() {
+            assert_eq!(r.sessions, 4, "{label}: session count at max_active {}", r.max_active);
+            assert_eq!(r.generated, 4 * 5, "{label}: token count at max_active {}", r.max_active);
+            assert_eq!(
+                r.token_checksum,
+                fingerprint,
+                "{label}: decoded tokens diverged at max_active {}",
+                r.max_active
+            );
+        }
+    }
 }
 
 #[test]
