@@ -7,11 +7,19 @@
 //! blocked, shared-slab, column-sharded v2 suite — over both square
 //! training shapes and the skinny serving-decode shapes (l ∈ {1, 4, 16}).
 //!
+//! …and the **per-call-overhead table**: the same kernel call timed on the
+//! persistent worker pool vs the legacy scoped-spawn vehicle, at the fixed-
+//! overhead-dominated l = 1 serving shapes (n ∈ {1k, 4k}) where spawn/join
+//! latency and allocator churn — not arithmetic — used to set the floor.
+//!
 //! Run: cargo bench --bench kernel_microbench [-- --threads N]
 //!        [--record EXPERIMENTS.md]   write the v1-vs-v2 table into the
-//!                                    `kernel-v1v2` marked block
+//!                                    `kernel-v1v2` marked block and the
+//!                                    pooled-vs-scoped table into the
+//!                                    `kernel-pool` marked block
 //!        [--smoke]                   single iteration on tiny shapes (CI
-//!                                    drift check, not a measurement)
+//!                                    drift check, not a measurement; covers
+//!                                    the pooled path end to end)
 
 use averis::bench_harness::{
     arg_value, bench, has_flag, record_markdown_block, threads_from_args, BenchOpts, TablePrinter,
@@ -21,6 +29,7 @@ use averis::quant::gemm::QuantGemm;
 use averis::quant::hadamard::tiled_hadamard_inplace;
 use averis::quant::packed::{packed_matmul, packed_matmul_v1};
 use averis::quant::{rowq_matmul, Nvfp4Quantizer, QuantRecipe, RowQuantMat};
+use averis::tensor::parallel::Vehicle;
 use averis::tensor::{parallel, Mat, Rng};
 
 fn main() {
@@ -257,10 +266,84 @@ fn main() {
          EXPERIMENTS.md` (kernel-only timing, operands packed outside the loop; \
          v1 = per-nibble decode, per-chunk slab decode, no register blocking)."
     ));
-    if let Some(path) = record {
-        match record_markdown_block(&path, "kernel-v1v2", &md) {
+    if let Some(path) = &record {
+        match record_markdown_block(path, "kernel-v1v2", &md) {
             Ok(()) => println!("\nrecorded v1-vs-v2 table into {path}"),
             Err(e) => eprintln!("\nfailed to record v1-vs-v2 table into {path}: {e}"),
+        }
+    }
+
+    // per-call overhead: pooled vs scoped execution vehicle at the skinny
+    // l=1 serving shapes, where fixed per-call cost (thread spawn/join on
+    // the scoped vehicle; nothing but dispatch on the pooled one) is the
+    // dominant term. Kernel-only timing, operands packed outside the loop;
+    // the worker-local scratch arena is active for both vehicles, so the
+    // delta isolates the spawn tax (the allocator-churn elimination is
+    // pinned by tests/pool.rs rather than timed here).
+    println!();
+    let t5 = TablePrinter::new(
+        &["per-call overhead", "shape (lxkxn)", "thr", "scoped us", "pooled us", "spd"],
+        &[22, 16, 4, 10, 10, 7],
+    );
+    let mut mdp = String::from(
+        "| kernel | shape (l×k×n) | threads | scoped µs/call | pooled µs/call | speedup \
+         (scoped/pooled) |\n\
+         |--------|---------------|--------:|---------------:|---------------:|---------------\
+         ---------:|\n",
+    );
+    // smoke keeps one skinny shape plus a row-shardable one (128 rows /
+    // min_rows 64 → 2 workers at --threads 2) so CI's single-iteration run
+    // actually dispatches pooled batches, not just the inline path
+    let overhead_shapes: &[(usize, usize, usize)] = if smoke {
+        &[(1, 128, 256), (128, 64, 64)]
+    } else {
+        &[(1, 1024, 1024), (1, 1024, 4096)]
+    };
+    for &(l, k, n) in overhead_shapes {
+        let xg = Mat::randn(l, k, 1.0, &mut rng);
+        let wg = Mat::randn(k, n, 0.1, &mut rng);
+        let xq = quant.quantize_store(&xg);
+        let wq = quant.quantize_store(&wg.transpose());
+        let q = RowQuantMat::quantize(&quant, &xg);
+        for &nt in &thread_settings {
+            parallel::set_threads(nt);
+            parallel::set_vehicle(Vehicle::Scoped);
+            let s_packed = bench(opts, || std::hint::black_box(packed_matmul(&xq, &wq)));
+            let s_rowq = bench(opts, || std::hint::black_box(rowq_matmul(&q, &wq)));
+            parallel::set_vehicle(Vehicle::Pooled);
+            let p_packed = bench(opts, || std::hint::black_box(packed_matmul(&xq, &wq)));
+            let p_rowq = bench(opts, || std::hint::black_box(rowq_matmul(&q, &wq)));
+            for (kernel, s, p) in
+                [("packed fwd", &s_packed, &p_packed), ("rowq fwd (serving)", &s_rowq, &p_rowq)]
+            {
+                let (su, pu) = (s.mean() * 1e3, p.mean() * 1e3);
+                t5.row(&[
+                    kernel.to_string(),
+                    format!("{l}x{k}x{n}"),
+                    nt.to_string(),
+                    format!("{su:.1}"),
+                    format!("{pu:.1}"),
+                    format!("{:.2}x", su / pu),
+                ]);
+                mdp.push_str(&format!(
+                    "| {kernel} | {l}×{k}×{n} | {nt} | {su:.1} | {pu:.1} | {:.2}x |\n",
+                    su / pu
+                ));
+            }
+        }
+    }
+    parallel::set_threads(0);
+    mdp.push_str(&format!(
+        "\nProtocol: `cargo bench --bench kernel_microbench -- --threads {threads} --record \
+         EXPERIMENTS.md` (kernel-only timing, operands packed outside the loop; scoped = fresh \
+         `std::thread::scope` spawn/join per call — the pre-pool vehicle; pooled = parked \
+         persistent workers. The scratch arena is active in both columns; zero per-call \
+         allocations is asserted by `cargo test --test pool`, not timed here)."
+    ));
+    if let Some(path) = &record {
+        match record_markdown_block(path, "kernel-pool", &mdp) {
+            Ok(()) => println!("\nrecorded pooled-vs-scoped table into {path}"),
+            Err(e) => eprintln!("\nfailed to record pooled-vs-scoped table into {path}: {e}"),
         }
     }
 

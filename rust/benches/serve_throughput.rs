@@ -3,15 +3,19 @@
 //! (EXPERIMENTS.md §Serving).
 //!
 //! Run: cargo bench --bench serve_throughput [-- --threads N] [--smoke]
-//! To write the measured table into EXPERIMENTS.md use the CLI twin:
-//!   cargo run --release -- serve-bench --record EXPERIMENTS.md
+//!        [--record EXPERIMENTS.md]   write the measured table into the
+//!                                    `serve-throughput` marked block
+//! The CLI twin `averis serve-bench --record EXPERIMENTS.md` records the
+//! `serve-bench` block with its own protocol.
 //!
 //! The checksum column is the deterministic fingerprint of the decoded
 //! tokens (`ServeBenchRow::token_checksum`): identical down the column by
 //! the engine's batching-invariance contract, so a kernel change that
 //! altered served output is visible right in the bench table.
 
-use averis::bench_harness::{has_flag, threads_from_args, TablePrinter};
+use averis::bench_harness::{
+    arg_value, has_flag, record_markdown_block, threads_from_args, TablePrinter,
+};
 use averis::model::{ModelConfig, Params};
 use averis::serve::{bench_continuous_decode, CalibMeans};
 use averis::tensor::Rng;
@@ -19,12 +23,17 @@ use averis::tensor::Rng;
 fn main() {
     let threads = threads_from_args();
     let smoke = has_flag("smoke");
+    let record = arg_value("record");
     let (n_prompts, prompt_len, max_new, seed) = if smoke {
         (4usize, 8usize, 4usize, 42u64)
     } else {
         (32usize, 16usize, 32usize, 42u64)
     };
     let batches: &[usize] = if smoke { &[1, 4] } else { &[1, 8, 32] };
+    let mut md = String::from(
+        "| model | max_active | sessions | tokens | wall (s) | tok/s | vs seq | checksum |\n\
+         |-------|-----------:|---------:|-------:|---------:|------:|-------:|----------|\n",
+    );
     for (name, cfg) in [
         ("dense (qwen3-0.6b-sim)", ModelConfig::dense_small(256)),
         ("moe (qwen3-7b-a1.5b-sim)", ModelConfig::moe_small(256)),
@@ -59,10 +68,32 @@ fn main() {
                 format!("{:.2}x", r.tok_per_s / base),
                 format!("{:016x}", r.token_checksum),
             ]);
+            md.push_str(&format!(
+                "| {name} | {} | {} | {} | {:.3} | {:.1} | {:.2}x | `{:016x}` |\n",
+                r.max_active,
+                r.sessions,
+                r.generated,
+                r.wall_s,
+                r.tok_per_s,
+                r.tok_per_s / base,
+                r.token_checksum
+            ));
         }
         assert!(
             rows.iter().all(|r| r.token_checksum == rows[0].token_checksum),
             "{name}: decoded tokens diverged across batch settings"
         );
+    }
+    md.push_str(&format!(
+        "\nProtocol: `cargo bench --bench serve_throughput -- --threads {threads} --record \
+         EXPERIMENTS.md` ({n_prompts} prompts × (prefill {prompt_len} + decode {max_new}), \
+         persistent worker pool; checksum identical down each model's column by the engine's \
+         batching-invariance contract)."
+    ));
+    if let Some(path) = &record {
+        match record_markdown_block(path, "serve-throughput", &md) {
+            Ok(()) => println!("\nrecorded serve throughput table into {path}"),
+            Err(e) => eprintln!("\nfailed to record serve throughput table into {path}: {e}"),
+        }
     }
 }

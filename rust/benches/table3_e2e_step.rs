@@ -6,15 +6,27 @@
 //! 7B MoE — Averis +2.20%, Hadamard +7.62%. The comparable quantity here is
 //! the overhead ordering and rough magnitude, on the Rust simulator hot path.
 //!
-//! Run: cargo bench --bench table3_e2e_step
+//! Run: cargo bench --bench table3_e2e_step [-- --threads N]
+//!        [--record EXPERIMENTS.md]   write the measured table into the
+//!                                    `table3-e2e` marked block
+//!        [--smoke]                   single iteration on a tiny step (CI
+//!                                    drift check, not a measurement)
 
-use averis::bench_harness::{bench, BenchOpts, TablePrinter};
+use averis::bench_harness::{
+    arg_value, bench, has_flag, record_markdown_block, threads_from_args, BenchOpts, TablePrinter,
+};
 use averis::data::{Corpus, CorpusConfig};
 use averis::model::{ModelConfig, Params, Taps, Transformer};
 use averis::quant::QuantRecipe;
 use averis::tensor::Rng;
 
-fn step_ms(cfg: ModelConfig, recipe: QuantRecipe, batch: usize, seq: usize) -> (f64, f64) {
+fn step_ms(
+    cfg: ModelConfig,
+    recipe: QuantRecipe,
+    batch: usize,
+    seq: usize,
+    opts: BenchOpts,
+) -> (f64, f64) {
     let corpus = Corpus::generate(
         CorpusConfig { vocab: cfg.vocab, tokens: 1 << 15, ..Default::default() },
         1,
@@ -23,7 +35,7 @@ fn step_ms(cfg: ModelConfig, recipe: QuantRecipe, batch: usize, seq: usize) -> (
     let mut model = Transformer::new(cfg, recipe, 4);
     let mut batcher = averis::data::Batcher::new(corpus.train, batch, seq, 5);
     let (x, y) = batcher.next_batch();
-    let stats = bench(BenchOpts { warmup_iters: 1, iters: 5 }, || {
+    let stats = bench(opts, || {
         let mut taps = Taps::disabled();
         let (logits, cache) = model.forward(&params, &x, batch, seq, &mut taps);
         let (_loss, grads) =
@@ -34,37 +46,65 @@ fn step_ms(cfg: ModelConfig, recipe: QuantRecipe, batch: usize, seq: usize) -> (
 }
 
 fn main() {
+    let threads = threads_from_args();
+    let smoke = has_flag("smoke");
+    let record = arg_value("record");
+    let (batch, seq, opts) = if smoke {
+        (1usize, 16usize, BenchOpts { warmup_iters: 0, iters: 1 })
+    } else {
+        (2usize, 48usize, BenchOpts { warmup_iters: 1, iters: 5 })
+    };
     println!("Table 3: end-to-end training-step latency (fwd+bwd, Rust simulator)\n");
     let t = TablePrinter::new(
         &["model", "recipe", "mean ms", "std", "overhead"],
         &[22, 16, 10, 8, 9],
     );
+    let mut md = String::from(
+        "| model | recipe | mean ms | std | overhead vs nvfp4 |\n\
+         |-------|--------|--------:|----:|------------------:|\n",
+    );
     let configs = [
-        ("qwen3-0.6b-sim (dense)", ModelConfig::dense_small(256), 2usize, 48usize),
-        ("qwen3-7b-a1.5b-sim (moe)", ModelConfig::moe_small(256), 2, 48),
+        ("qwen3-0.6b-sim (dense)", ModelConfig::dense_small(256)),
+        ("qwen3-7b-a1.5b-sim (moe)", ModelConfig::moe_small(256)),
     ];
-    for (name, cfg, batch, seq) in configs {
-        let (base, _) = step_ms(cfg, QuantRecipe::Nvfp4, batch, seq);
+    for (name, cfg) in configs {
+        let (base, _) = step_ms(cfg, QuantRecipe::Nvfp4, batch, seq, opts);
         for recipe in [QuantRecipe::Nvfp4, QuantRecipe::Averis, QuantRecipe::Nvfp4Hadamard] {
             let (mean, std) = if recipe == QuantRecipe::Nvfp4 {
                 (base, 0.0)
             } else {
-                step_ms(cfg, recipe, batch, seq)
+                step_ms(cfg, recipe, batch, seq, opts)
             };
             let overhead = 100.0 * (mean - base) / base;
+            let overhead_cell = if recipe == QuantRecipe::Nvfp4 {
+                "-".to_string()
+            } else {
+                format!("{overhead:+.2}%")
+            };
             t.row(&[
                 name.into(),
                 recipe.to_string(),
                 format!("{mean:.1}"),
                 format!("{std:.1}"),
-                if recipe == QuantRecipe::Nvfp4 {
-                    "-".into()
-                } else {
-                    format!("{overhead:+.2}%")
-                },
+                overhead_cell.clone(),
             ]);
+            md.push_str(&format!(
+                "| {name} | {recipe} | {mean:.1} | {std:.1} | {overhead_cell} |\n"
+            ));
         }
     }
     println!("\npaper (Blackwell): 0.6B Averis +2.01% Hadamard +6.80%;");
     println!("                   7B  Averis +2.20% Hadamard +7.62%");
+    md.push_str(&format!(
+        "\nProtocol: `cargo bench --bench table3_e2e_step -- --threads {threads} --record \
+         EXPERIMENTS.md` (batch {batch} × seq {seq}, fwd+bwd per iteration, persistent worker \
+         pool; paper (Blackwell): 0.6B Averis +2.01% / Hadamard +6.80%, 7B MoE Averis +2.20% / \
+         Hadamard +7.62%)."
+    ));
+    if let Some(path) = &record {
+        match record_markdown_block(path, "table3-e2e", &md) {
+            Ok(()) => println!("\nrecorded Table-3 step latencies into {path}"),
+            Err(e) => eprintln!("\nfailed to record Table-3 step latencies into {path}: {e}"),
+        }
+    }
 }

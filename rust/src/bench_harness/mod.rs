@@ -101,12 +101,12 @@ pub fn record_markdown_block(
 }
 
 /// Apply a `--threads N` flag from the bench binary's argv to the kernel
-/// thread knob (0 = auto) and return the resolved worker count. Bench
-/// binaries call this once at startup:
-/// `cargo bench --bench kernel_microbench -- --threads 4`.
+/// thread knob (0 = auto), sizing the persistent worker pool once, and
+/// return the resolved worker count. Bench binaries call this once at
+/// startup: `cargo bench --bench kernel_microbench -- --threads 4`.
 pub fn threads_from_args() -> usize {
     if let Some(v) = arg_value("threads").and_then(|s| s.parse::<usize>().ok()) {
-        crate::tensor::parallel::set_threads(v);
+        crate::tensor::parallel::install(v);
     }
     crate::tensor::parallel::threads()
 }

@@ -59,7 +59,8 @@ COMMANDS:
               --recipe bf16|nvfp4|nvfp4-hadamard|averis|averis-hadamard|mxfp4|svd-split
               --model dense|moe|tiny      --steps N  --batch N  --seq N
               --engine sim|pjrt           --artifacts DIR  --out DIR
-              --threads N                 (kernel worker threads; 0 = auto.
+              --threads N                 (sizes the persistent kernel worker
+                                           pool once per process; 0 = auto.
                                            deterministic: same seed, same
                                            curve at any thread count)
               --corpus-seed N             (synthetic-corpus generator seed)

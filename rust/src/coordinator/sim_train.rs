@@ -12,6 +12,9 @@ use super::runs::RunDir;
 /// Run one simulator experiment and persist outputs. Set `capture_taps` to
 /// instrument the early/late checkpoints for the analysis pipeline.
 pub fn sim_train_run(exp: &ExperimentConfig, capture_taps: bool) -> Result<TrainResult> {
+    // one persistent pool serves the whole experiment — corpus generation,
+    // training, and eval — sized here from the experiment's thread knob
+    crate::tensor::parallel::install(exp.train.threads);
     let corpus = Corpus::generate(exp.corpus, exp.corpus_seed);
     let mut tc = exp.train;
     tc.tap_steps = [capture_taps, capture_taps];

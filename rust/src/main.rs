@@ -227,7 +227,9 @@ fn calibrate_from_corpus(
 fn generate_cmd(args: &CliArgs) -> Result<()> {
     let path = args.get("ckpt").context("generate needs --ckpt FILE")?;
     if let Some(t) = args.get_parse::<usize>("threads").map_err(anyhow::Error::msg)? {
-        parallel::set_threads(t);
+        // sizes the persistent worker pool once; the kernels never spawn
+        // per call after this
+        parallel::install(t);
     }
     let ckpt = QuantizedCheckpoint::load_any(path)?;
     let vocab = ckpt.cfg.vocab;
@@ -288,7 +290,8 @@ fn generate_cmd(args: &CliArgs) -> Result<()> {
 fn serve_bench_cmd(args: &CliArgs) -> Result<()> {
     let preset = ModelPreset::parse(&args.get_or("model", "dense")).map_err(anyhow::Error::msg)?;
     if let Some(t) = args.get_parse::<usize>("threads").map_err(anyhow::Error::msg)? {
-        parallel::set_threads(t);
+        // sizes the persistent worker pool once for the whole bench
+        parallel::install(t);
     }
     let batches: Vec<usize> = args
         .get_or("batches", "1,8,32")

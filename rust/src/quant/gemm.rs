@@ -41,6 +41,11 @@ pub struct QuantGemm {
 
 impl QuantGemm {
     pub fn new(recipe: QuantRecipe, seed: u64) -> Self {
+        // every stage of every stack (quantize/pack, packed Multiply,
+        // Correct) executes on the process-wide persistent worker pool;
+        // warming it here moves the one-time spawn cost to engine
+        // construction instead of the first GeMM
+        crate::tensor::parallel::pool().warm();
         let (fwd_cfg, bwd_cfg) = match recipe {
             QuantRecipe::Mxfp4 => (Nvfp4Config::mxfp4(), Nvfp4Config::mxfp4()),
             _ => (Nvfp4Config::nvfp4(), Nvfp4Config::nvfp4_sr()),

@@ -28,7 +28,14 @@
 //! activation block plus a `JT`-row tile in the dot-form `_bt` kernel
 //! (which now decodes each activation row once per GEMM, where v1
 //! re-decoded it per column tile). The full dequantized f32 matrices of
-//! the fake-quant path are never materialized.
+//! the fake-quant path are never materialized — and since the pool/arena
+//! refactor none of that scratch is heap-allocated per call either: every
+//! decode slab, activation block, and JT tile checks out of the
+//! worker-local `tensor::scratch` arena (allocation-free after warmup),
+//! and every sharded region executes on the persistent worker pool in
+//! `tensor::parallel` (zero per-call thread spawns; v1 keeps its original
+//! per-call `vec![…]` slabs as the measured baseline). `tests/pool.rs`
+//! pins both properties.
 //!
 //! **Bit-exactness contract:** for each output element the multiply/add
 //! sequence (including the zero-operand skip) walks k in ascending order
@@ -44,7 +51,7 @@
 
 use super::nvfp4::QuantizedMat;
 use crate::tensor::parallel::{self, min_cols_for as par_min_cols, min_rows_for as par_min_rows};
-use crate::tensor::Mat;
+use crate::tensor::{scratch, Mat};
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Barrier, RwLock};
@@ -161,7 +168,9 @@ fn stripe_ikj<F>(
     F: Fn(usize, usize, usize, &mut [f32]) + Sync,
 {
     debug_assert_eq!(stripe.len(), l * width);
-    let mut wslab = vec![0.0f32; KB * width];
+    // arena checkout, stale contents fine: decode_wslab fully rewrites the
+    // [..kw*width] prefix before the microkernel reads it
+    let mut wslab = scratch::take(KB * width);
     let mut wrow = [0.0f32; KB];
     let mut xb = [0.0f32; MR * KB];
     for k0 in (0..k).step_by(KB) {
@@ -217,7 +226,7 @@ fn shared_slab_worker<F>(
     n: usize,
     decode_x: &F,
     wt: &QuantizedMat,
-    slab: &RwLock<Vec<f32>>,
+    slab: &RwLock<&mut [f32]>,
     barrier: &Barrier,
     panicked: &AtomicBool,
 ) where
@@ -290,10 +299,21 @@ where
     let row_workers = parallel::worker_count(l, par_min_rows(k * n));
     let col_workers = parallel::worker_count(n, par_min_cols(l * k));
     let prefer_rows = row_workers > col_workers || (row_workers == col_workers && l >= n);
-    if row_workers > 1 && prefer_rows {
+    // The row path's jobs synchronize on a per-slab barrier, so the batch
+    // must run concurrently — which a *nested* parallel region cannot
+    // guarantee (nested jobs run inline on one thread and the first
+    // barrier would wedge). Nested calls take the barrier-free column
+    // path instead; every branch computes identical bits, so the fallback
+    // is invisible in the output.
+    if row_workers > 1 && prefer_rows && !parallel::in_parallel_region() {
         // same chunk boundaries as par_row_chunks (scoped_row_chunks is its
-        // splitting primitive), with one shared slab decoded once per K-slab
-        let slab = RwLock::new(vec![0.0f32; KB * n]);
+        // splitting primitive), with one shared slab decoded once per K-slab.
+        // The slab storage checks out of the caller's scratch arena (stale
+        // contents fine: the decoder fully rewrites [..kw*n] before the
+        // first barrier releases any reader); batches are serialized on the
+        // pool, so no two GEMMs ever share this buffer.
+        let mut slab_buf = scratch::take(KB * n);
+        let slab: RwLock<&mut [f32]> = RwLock::new(&mut slab_buf);
         let barrier = Barrier::new(row_workers);
         let panicked = AtomicBool::new(false);
         parallel::scoped_row_chunks(&mut c.data, l, n, row_workers, |row0, chunk| {
@@ -400,10 +420,19 @@ pub fn packed_matmul_bt(a: &QuantizedMat, b: &QuantizedMat) -> Mat {
     );
     let (m, k, n) = (a.rows, a.cols, b.rows);
     let mut c = Mat::zeros(m, n);
-    parallel::par_row_chunks(&mut c.data, m, n, par_min_rows(k * n), |row0, crows| {
+    if m == 0 || n == 0 {
+        return c;
+    }
+    // worker count resolved through the same shared helpers as the ikj
+    // driver (no local partition heuristics), then dispatched on the
+    // persistent pool via the shared splitting primitive
+    let workers = parallel::worker_count(m, par_min_rows(k * n));
+    parallel::scoped_row_chunks(&mut c.data, m, n, workers, |row0, crows| {
         let nrows = crows.len() / n.max(1);
-        let mut abuf = vec![0.0f32; RB.min(nrows).max(1) * k];
-        let mut btile = vec![0.0f32; JT * k];
+        // arena checkouts, stale contents fine: every abuf row and btile
+        // row is decoded before the dot loops read it
+        let mut abuf = scratch::take(RB.min(nrows).max(1) * k);
+        let mut btile = scratch::take(JT * k);
         let mut ib0 = 0usize;
         while ib0 < nrows {
             let ib1 = (ib0 + RB).min(nrows);
@@ -470,8 +499,14 @@ pub fn mu_times_packed_rows(mu: &[f32], q: &QuantizedMat) -> Vec<f32> {
     assert_eq!(mu.len(), q.cols, "mu_times_packed_rows: K mismatch");
     let mut out = vec![0.0f32; q.rows];
     let rows = q.rows;
-    parallel::par_row_chunks(&mut out, rows, 1, par_min_rows(q.cols), |row0, chunk| {
-        let mut buf = vec![0.0f32; q.cols];
+    if rows == 0 {
+        return out;
+    }
+    // same shared worker-count helpers as every other kernel here, and
+    // arena scratch for the per-worker decode row (fully rewritten per row)
+    let workers = parallel::worker_count(rows, par_min_rows(q.cols));
+    parallel::scoped_row_chunks(&mut out, rows, 1, workers, |row0, chunk| {
+        let mut buf = scratch::take(q.cols);
         for (li, o) in chunk.iter_mut().enumerate() {
             q.decode_row_range(row0 + li, 0, q.cols, &mut buf);
             let mut acc = 0.0f32;

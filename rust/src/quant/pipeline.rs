@@ -19,6 +19,11 @@
 //! operands — so swapping and re-tuning the engine under the recipes
 //! changed no numerics. The Correct stages run on the same engine via
 //! `mu_times_packed_rows`, which shards its rows across the thread pool.
+//! Since the pool/arena refactor (DESIGN.md §8) every sharded stage —
+//! Quantize's pack passes, the packed Multiply, and the Correct term —
+//! executes on the persistent worker pool with arena-backed scratch, so a
+//! stage stack's steady-state cost is purely its arithmetic: no thread
+//! spawns, no slab/tile allocations per GeMM.
 //!
 //! Kind-specific layout is centralized here: each GeMM kind knows which
 //! operand axes carry the reduction (K), therefore how operands are rotated,

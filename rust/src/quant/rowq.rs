@@ -29,7 +29,7 @@
 
 use super::nvfp4::{Nvfp4Quantizer, QuantizedMat};
 use super::packed::mu_times_packed_rows;
-use crate::tensor::Mat;
+use crate::tensor::{scratch, Mat};
 
 /// A matrix quantized row by row: each row carries its own tensor scale and
 /// block scales, so its codes are independent of every other row.
@@ -46,10 +46,7 @@ impl RowQuantMat {
     /// result is bit-identical to `quant.quantize_store` of the 1×cols
     /// matrix holding row `i` — the property the decode-parity tests pin.
     pub fn quantize(quant: &Nvfp4Quantizer, x: &Mat) -> RowQuantMat {
-        let rowmats = (0..x.rows)
-            .map(|i| quant.quantize_store(&Mat::from_vec(1, x.cols, x.row(i).to_vec())))
-            .collect();
-        RowQuantMat { rows: x.rows, cols: x.cols, rowmats }
+        Self::quantize_with(quant, x, None)
     }
 
     /// Quantize each row of `x − 1·μᵀ` without materializing the centered
@@ -58,15 +55,30 @@ impl RowQuantMat {
     /// decode hot path (`FrozenLinear::forward`) runs this once per call.
     pub fn quantize_centered(quant: &Nvfp4Quantizer, x: &Mat, mu: &[f32]) -> RowQuantMat {
         assert_eq!(mu.len(), x.cols, "quantize_centered: μ length must match cols");
+        Self::quantize_with(quant, x, Some(mu))
+    }
+
+    /// Shared row-by-row packing behind [`Self::quantize`] and
+    /// [`Self::quantize_centered`]: every row stages through **one**
+    /// scratch-arena row matrix instead of a fresh `Vec` per row, so the
+    /// per-call decode tax of `FrozenLinear::forward` (which runs this on
+    /// every serving step) is just the packed codes it actually produces.
+    /// The staged copy (and optional μ subtraction) is arithmetic-identical
+    /// to the old per-row materialization, so no bits change.
+    fn quantize_with(quant: &Nvfp4Quantizer, x: &Mat, mu: Option<&[f32]>) -> RowQuantMat {
+        let mut tmp = Mat::from_vec(1, x.cols, scratch::take_vec(x.cols));
         let rowmats = (0..x.rows)
             .map(|i| {
-                let mut row = x.row(i).to_vec();
-                for (r, &m) in row.iter_mut().zip(mu.iter()) {
-                    *r -= m;
+                tmp.data.copy_from_slice(x.row(i));
+                if let Some(mu) = mu {
+                    for (r, &m) in tmp.data.iter_mut().zip(mu.iter()) {
+                        *r -= m;
+                    }
                 }
-                quant.quantize_store(&Mat::from_vec(1, x.cols, row))
+                quant.quantize_store(&tmp)
             })
             .collect();
+        scratch::give(std::mem::take(&mut tmp.data));
         RowQuantMat { rows: x.rows, cols: x.cols, rowmats }
     }
 

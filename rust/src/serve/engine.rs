@@ -21,6 +21,7 @@ use super::session::{sample_token, SampleCfg, Session};
 use crate::model::{DecodeState, Params, Transformer};
 use crate::quant::QuantRecipe;
 use crate::serve::checkpoint::CalibMeans;
+use crate::tensor::parallel::{self, PoolHandle};
 use crate::tensor::Rng;
 use anyhow::{bail, Result};
 use std::time::Instant;
@@ -49,6 +50,11 @@ pub struct Engine {
     pub ckpt: QuantizedCheckpoint,
     pub sched: Scheduler,
     pub stats: EngineStats,
+    /// the persistent worker pool every packed GEMM of every step batch
+    /// runs on — held so the serving lifecycle is explicit: one pool
+    /// serves the whole engine, warmed at construction so the first step
+    /// pays no spawn latency
+    pub pool: PoolHandle,
     seed: u64,
     next_id: u64,
     done: Vec<Completion>,
@@ -61,11 +67,14 @@ impl Engine {
         // the Transformer here only carries cfg + RoPE tables: every serve
         // GEMM runs the packed FrozenLinear path inside the checkpoint
         let model = Transformer::new(ckpt.cfg, QuantRecipe::Bf16, 0);
+        let pool = parallel::pool();
+        pool.warm();
         Engine {
             model,
             ckpt,
             sched: Scheduler::new(max_active),
             stats: EngineStats::default(),
+            pool,
             seed,
             next_id: 0,
             done: Vec::new(),

@@ -8,6 +8,7 @@ pub mod mat;
 pub mod ops;
 pub mod parallel;
 pub mod rng;
+pub mod scratch;
 
 pub use mat::Mat;
 pub use rng::Rng;

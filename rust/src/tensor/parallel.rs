@@ -1,9 +1,8 @@
-//! Deterministic scoped-thread parallelism over row blocks and column
-//! stripes.
+//! Deterministic parallelism over row blocks and column stripes, executed
+//! on a **process-wide persistent worker pool**.
 //!
-//! One global worker-count knob (`--threads` on the CLI; 0 = auto) plus two
-//! partitioners over a row-major buffer, both running on
-//! `std::thread::scope` threads:
+//! One global worker-count knob (`--threads` on the CLI; 0 = auto) plus
+//! two partitioners over a row-major buffer:
 //!
 //! * `par_row_chunks` — contiguous per-worker *row* ranges (the training
 //!   GeMMs: many output rows);
@@ -12,14 +11,33 @@
 //!   sharding has nothing to split; see DESIGN.md §7 for the decision
 //!   rule).
 //!
-//! The invariant every caller relies on: work is partitioned by logical row
-//! or column, each output element is computed entirely by one worker, and
-//! no element's arithmetic depends on which worker ran it or on how many
-//! workers there are. Results are therefore bit-identical at any thread
-//! count — the property the `same_seed_same_curve` training test checks at
-//! 1, 2, and 4 threads.
+//! Through PR 3 every parallel region spawned and joined fresh
+//! `std::thread::scope` OS threads; at the million-call rates of a
+//! training run or a continuous-batching serving session that spawn/join
+//! latency was a fixed per-call tax on the hottest code in the repo. The
+//! regions now execute on a [`WorkerPool`] of parked, long-lived workers
+//! (DESIGN.md §8): a batch of `n` jobs is broadcast once, worker `w` runs
+//! job `w` (steal-free static assignment), the calling thread runs the
+//! last job, and the submitter blocks until the batch drains. Only the
+//! execution vehicle changed — chunk boundaries still come from the same
+//! [`split_bounds`]/[`worker_count`] formulas, so results are bitwise
+//! what the scoped vehicle produced (pinned by `tests/pool.rs`, which
+//! re-runs every kernel family on [`Vehicle::Scoped`] and compares).
+//!
+//! The invariant every caller relies on: work is partitioned by logical
+//! row or column, each output element is computed entirely by one worker,
+//! and no element's arithmetic depends on which worker ran it or on how
+//! many workers there are. Results are therefore bit-identical at any
+//! thread count — the property the `same_seed_same_curve` training test
+//! checks at 1, 2, and 4 threads.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use super::scratch;
+use std::any::Any;
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
 
 /// 0 means "auto" (use `std::thread::available_parallelism`).
 static THREADS: AtomicUsize = AtomicUsize::new(0);
@@ -39,8 +57,8 @@ pub fn threads() -> usize {
 
 /// Shared `min_rows` heuristic for compute-bound kernels: rows each worker
 /// must amortize before sharding, targeting at least ~256k multiply-adds
-/// per spawned task so threading never slows down the small GeMMs of the
-/// tiny test models. `work_per_row` is the kernel's per-row MAC count.
+/// per dispatched task so threading never slows down the small GeMMs of
+/// the tiny test models. `work_per_row` is the kernel's per-row MAC count.
 pub fn min_rows_for(work_per_row: usize) -> usize {
     const TARGET: usize = 1 << 18;
     (TARGET / work_per_row.max(1)).max(1)
@@ -48,8 +66,8 @@ pub fn min_rows_for(work_per_row: usize) -> usize {
 
 /// Column-stripe twin of [`min_rows_for`]: columns each worker must
 /// amortize before a column-sharded kernel shards, with the same ~256k
-/// multiply-add target per spawned task. `work_per_col` is the kernel's
-/// per-column MAC count (l·k for an ikj GEMM).
+/// multiply-add target per dispatched task. `work_per_col` is the
+/// kernel's per-column MAC count (l·k for an ikj GEMM).
 pub fn min_cols_for(work_per_col: usize) -> usize {
     min_rows_for(work_per_col)
 }
@@ -63,6 +81,439 @@ pub fn min_cols_for(work_per_col: usize) -> usize {
 pub fn worker_count(rows: usize, min_rows: usize) -> usize {
     threads().min(rows / min_rows.max(1)).max(1)
 }
+
+/// Contiguous split of `total` items over `workers` chunks: chunk `w` is
+/// `[start, start + take)`, with the remainder spread over the leading
+/// chunks. The one partition formula in the repo — every partitioner here
+/// and every kernel that derives chunk geometry (the shared-slab GEMM, the
+/// stripe copy-back) resolves boundaries through it, so the chunking can
+/// never drift between the dispatch and the consumers.
+pub fn split_bounds(total: usize, workers: usize, w: usize) -> (usize, usize) {
+    debug_assert!(workers >= 1 && w < workers);
+    let base = total / workers;
+    let rem = total % workers;
+    (w * base + w.min(rem), base + usize::from(w < rem))
+}
+
+// ------------------------------------------------------------------ pool --
+
+/// How parallel regions execute their job batches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Vehicle {
+    /// The persistent process-wide [`WorkerPool`] (default): zero per-call
+    /// thread spawns.
+    Pooled,
+    /// Freshly spawned `std::thread::scope` threads per call — the
+    /// pre-pool vehicle, kept for the pooled-vs-scoped microbenchmark and
+    /// the differential bit-identity tests in `tests/pool.rs`.
+    Scoped,
+}
+
+static SCOPED_VEHICLE: AtomicBool = AtomicBool::new(false);
+
+/// Select the execution vehicle (benchmarks/tests only; the default
+/// [`Vehicle::Pooled`] is right everywhere else). Chunk boundaries and
+/// per-chunk arithmetic are vehicle-independent, so this knob can never
+/// change any result's bits.
+pub fn set_vehicle(v: Vehicle) {
+    SCOPED_VEHICLE.store(v == Vehicle::Scoped, Ordering::Relaxed);
+}
+
+/// The currently selected execution vehicle.
+pub fn vehicle() -> Vehicle {
+    if SCOPED_VEHICLE.load(Ordering::Relaxed) {
+        Vehicle::Scoped
+    } else {
+        Vehicle::Pooled
+    }
+}
+
+/// Pool worker threads spawned since process start. Spawns happen only
+/// when a batch demands more workers than the pool's high-water mark —
+/// after warmup this stays flat across kernel calls (the "zero per-call
+/// thread spawns" contract pinned by `tests/pool.rs`).
+pub fn pool_spawns() -> usize {
+    POOL_SPAWNS.load(Ordering::Relaxed)
+}
+
+static POOL_SPAWNS: AtomicUsize = AtomicUsize::new(0);
+
+/// Lifetime-erased batch job: a thin pointer to the submitter's
+/// `&dyn Fn(usize)` slot plus a trampoline that re-materializes it.
+/// [`WorkerPool::run`] guarantees the pointee outlives every use: workers
+/// only dereference it between batch publish and the submitter's
+/// completion wait, and the submitter clears the slot before returning.
+#[derive(Clone, Copy)]
+struct ErasedJob {
+    /// points at the `&(dyn Fn(usize) + Sync)` fat reference living in the
+    /// submitting `run` frame (a thin pointer, so no fat-pointer casts)
+    data: *const (),
+    call: fn(*const (), usize),
+}
+
+// SAFETY: see the type's invariant above — the pointer never escapes the
+// submitting call's stack frame lifetime, and the pointee is Sync.
+unsafe impl Send for ErasedJob {}
+
+fn erased_trampoline(data: *const (), w: usize) {
+    // SAFETY: `data` is the address of the live `job` parameter slot in
+    // the submitting `WorkerPool::run` frame (see ErasedJob's invariant)
+    let job = unsafe { *(data as *const &(dyn Fn(usize) + Sync)) };
+    job(w);
+}
+
+impl ErasedJob {
+    fn erase(job: &&(dyn Fn(usize) + Sync)) -> ErasedJob {
+        ErasedJob {
+            data: job as *const &(dyn Fn(usize) + Sync) as *const (),
+            call: erased_trampoline,
+        }
+    }
+
+    /// SAFETY: caller must ensure the erased borrow is still live.
+    unsafe fn call(self, w: usize) {
+        (self.call)(self.data, w)
+    }
+}
+
+struct PoolState {
+    /// bumped once per published batch; workers track the last epoch they
+    /// inspected so a batch is never picked up twice
+    epoch: u64,
+    job: Option<ErasedJob>,
+    /// jobs handled by pool workers this batch (worker `w` runs job `w`;
+    /// the submitting thread runs job `pool_jobs` itself)
+    pool_jobs: usize,
+    remaining: usize,
+    /// first panic payload raised by a worker job this batch; re-raised on
+    /// the submitting thread after the batch drains
+    panic: Option<Box<dyn Any + Send>>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// the submitter waits here until `remaining` hits zero (workers park
+    /// via `std::thread::park` and are unparked individually, so a narrow
+    /// batch never wakes the whole high-water pool)
+    done_cv: Condvar,
+}
+
+/// Ignore lock poisoning: pool state is only ever mutated under short
+/// well-formed critical sections (user code runs outside the lock), so a
+/// poisoned mutex carries no broken invariant worth propagating.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+thread_local! {
+    /// True while this thread is executing a batch job (pool workers for
+    /// their whole life, the submitting thread while running its own
+    /// chunk). A parallel region opened from inside a job runs its jobs
+    /// inline instead of re-entering the pool — nested regions do not
+    /// occur on the kernel hot paths, but this keeps re-entrancy total
+    /// instead of deadlocking. Inline nesting cannot host barrier-coupled
+    /// batches, so kernels that synchronize their jobs (the shared-slab
+    /// GEMM) must check [`in_parallel_region`] and pick a barrier-free
+    /// sharding when it is set — `ikj_matmul` does exactly that.
+    static IN_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True while the current thread is executing a pool batch job. Kernels
+/// whose jobs synchronize with each other (barriers) must not launch that
+/// sharding from inside a parallel region — nested regions run their jobs
+/// inline on one thread, where a barrier would wedge — and use this to
+/// fall back to a barrier-free partitioning instead.
+pub fn in_parallel_region() -> bool {
+    IN_JOB.with(|f| f.get())
+}
+
+/// A persistent pool of parked worker threads executing deterministic job
+/// batches with steal-free static assignment (DESIGN.md §8).
+///
+/// * **Lifecycle** — workers are spawned on demand up to the high-water
+///   batch width, then parked (`std::thread::park`) between batches for
+///   the life of the pool; each batch unparks exactly its participants,
+///   so narrow batches never wake the whole pool. [`Drop`] flags shutdown
+///   and joins them.
+/// * **Dispatch** — `run(njobs, job)` publishes one erased closure;
+///   worker `w < njobs - 1` calls `job(w)`, the calling thread runs
+///   `job(njobs - 1)`, and the call returns only after every job
+///   finished. All jobs of a batch run concurrently on distinct threads,
+///   which barrier-coupled kernels (the shared-slab GEMM) rely on.
+/// * **Panic discipline** — a panicking job is caught on the worker, the
+///   pool survives, and the payload is re-raised on the submitting thread
+///   once the batch has drained (mirroring `std::thread::scope`).
+///
+/// The process-wide instance behind [`pool`] is the execution engine of
+/// every `par_*_chunks` region; standalone instances exist only in tests.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Serializes whole batches: a batch owns the full worker set from
+    /// publish to drain (two interleaved batches could otherwise share
+    /// workers, which would wedge barrier-coupled jobs).
+    submit: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// An empty pool; workers are spawned on first demand (or by
+    /// [`WorkerPool::warm`]).
+    pub fn new() -> WorkerPool {
+        WorkerPool {
+            shared: Arc::new(PoolShared {
+                state: Mutex::new(PoolState {
+                    epoch: 0,
+                    job: None,
+                    pool_jobs: 0,
+                    remaining: 0,
+                    panic: None,
+                    shutdown: false,
+                }),
+                done_cv: Condvar::new(),
+            }),
+            handles: Mutex::new(Vec::new()),
+            submit: Mutex::new(()),
+        }
+    }
+
+    /// Parked workers currently alive (the high-water mark of past batch
+    /// demands).
+    pub fn workers(&self) -> usize {
+        lock(&self.handles).len()
+    }
+
+    /// Pre-spawn workers for the current [`threads`] knob so the first
+    /// kernel call of a run pays no spawn latency. Idempotent; the pool
+    /// never shrinks.
+    pub fn warm(&self) {
+        self.ensure_workers(threads().saturating_sub(1));
+    }
+
+    /// Grow the pool to at least `n` parked workers.
+    pub fn ensure_workers(&self, n: usize) {
+        let mut hs = lock(&self.handles);
+        while hs.len() < n {
+            let id = hs.len();
+            let shared = Arc::clone(&self.shared);
+            let h = std::thread::Builder::new()
+                .name(format!("averis-pool-{id}"))
+                .spawn(move || worker_loop(shared, id))
+                .expect("spawn pool worker");
+            POOL_SPAWNS.fetch_add(1, Ordering::Relaxed);
+            hs.push(h);
+        }
+    }
+
+    /// Execute a batch of `njobs` jobs — `job(w)` for `w` in `0..njobs` —
+    /// concurrently on `njobs - 1` pool workers plus the calling thread,
+    /// returning when all have finished. Panics in any job are re-raised
+    /// here after the batch drains; the pool itself survives.
+    pub fn run(&self, njobs: usize, job: &(dyn Fn(usize) + Sync)) {
+        if njobs <= 1 {
+            if njobs == 1 {
+                job(0);
+            }
+            return;
+        }
+        if IN_JOB.with(|f| f.get()) {
+            // nested region: run inline (see IN_JOB)
+            for w in 0..njobs {
+                job(w);
+            }
+            return;
+        }
+        let _batch = lock(&self.submit);
+        self.ensure_workers(njobs - 1);
+        let erased = ErasedJob::erase(&job);
+        {
+            let mut st = lock(&self.shared.state);
+            st.epoch += 1;
+            st.job = Some(erased);
+            st.pool_jobs = njobs - 1;
+            st.remaining = njobs - 1;
+            st.panic = None;
+        }
+        // wake exactly the participants — a narrow batch must not stampede
+        // the whole high-water pool (unpark's token makes the publish/park
+        // race benign: an unpark delivered before the worker parks just
+        // makes its next park return immediately)
+        {
+            let hs = lock(&self.handles);
+            for h in hs.iter().take(njobs - 1) {
+                h.thread().unpark();
+            }
+        }
+        // Drains the batch even if the caller's own chunk panics below —
+        // no worker may outlive the borrows erased into `job`.
+        struct DrainGuard<'a>(&'a PoolShared);
+        impl Drop for DrainGuard<'_> {
+            fn drop(&mut self) {
+                let mut st = lock(&self.0.state);
+                while st.remaining > 0 {
+                    st = self.0.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+                st.job = None;
+            }
+        }
+        let drain = DrainGuard(&self.shared);
+        let prev = IN_JOB.with(|f| f.replace(true));
+        let caller_result = catch_unwind(AssertUnwindSafe(|| job(njobs - 1)));
+        IN_JOB.with(|f| f.set(prev));
+        if let Err(p) = caller_result {
+            drop(drain);
+            resume_unwind(p);
+        }
+        drop(drain);
+        let worker_panic = lock(&self.shared.state).panic.take();
+        if let Some(p) = worker_panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.shutdown = true;
+        }
+        let handles = std::mem::take(self.handles.get_mut().unwrap_or_else(|e| e.into_inner()));
+        for h in &handles {
+            h.thread().unpark();
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>, id: usize) {
+    // worker threads only ever run batch jobs, so any region they open is
+    // nested by definition
+    IN_JOB.with(|f| f.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let st = lock(&shared.state);
+            if st.shutdown {
+                return;
+            }
+            if st.epoch != seen {
+                seen = st.epoch;
+                // static assignment: worker w runs job w of a batch wide
+                // enough to include it; narrower batches leave it parked
+                if id < st.pool_jobs {
+                    st.job
+                } else {
+                    None
+                }
+            } else {
+                None
+            }
+        };
+        match job {
+            Some(j) => {
+                // a panicking job must not take the worker down: catch it,
+                // hand the payload to the submitter, keep serving batches
+                let r = catch_unwind(AssertUnwindSafe(|| unsafe { j.call(id) }));
+                let mut st = lock(&shared.state);
+                if let Err(p) = r {
+                    if st.panic.is_none() {
+                        st.panic = Some(p);
+                    }
+                }
+                st.remaining -= 1;
+                if st.remaining == 0 {
+                    shared.done_cv.notify_one();
+                }
+            }
+            // nothing for this worker: park until a submitter (or Drop)
+            // unparks it — a pending unpark token just means one more
+            // loop turn, so the publish/park race cannot lose a wakeup
+            None => std::thread::park(),
+        }
+    }
+}
+
+static POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// Handle to the process-wide persistent pool: the one pool every GEMM,
+/// quantize/pack pass, and Correct stage in the process executes on.
+/// Subsystems that own a run (the trainer, the serving engine) hold one to
+/// make the lifecycle explicit and the pool warm before their first step.
+pub type PoolHandle = &'static WorkerPool;
+
+/// The process-wide pool, created (empty) on first use.
+pub fn pool() -> PoolHandle {
+    POOL.get_or_init(WorkerPool::new)
+}
+
+/// Size the persistent pool once for a run: sets the [`threads`] knob and
+/// pre-spawns the workers it implies. This is what the CLI `--threads`
+/// flag resolves to — after it, steady-state kernel calls neither spawn
+/// threads nor grow the pool.
+pub fn install(threads_knob: usize) -> PoolHandle {
+    set_threads(threads_knob);
+    let p = pool();
+    p.warm();
+    p
+}
+
+/// Execute `njobs` batch jobs on the configured [`Vehicle`]. All jobs of a
+/// batch run concurrently on distinct threads (barrier-coupled kernels
+/// rely on this), the last on the calling thread — identically for both
+/// vehicles, so the vehicle can never change which chunk runs where.
+fn run_jobs(njobs: usize, job: &(dyn Fn(usize) + Sync)) {
+    // the one degenerate-batch path shared by both vehicles, so the
+    // pooled/scoped bit-identity oracle can never diverge on it
+    if njobs <= 1 {
+        if njobs == 1 {
+            job(0);
+        }
+        return;
+    }
+    match vehicle() {
+        Vehicle::Pooled => pool().run(njobs, job),
+        Vehicle::Scoped => run_scoped(njobs, job),
+    }
+}
+
+fn run_scoped(njobs: usize, job: &(dyn Fn(usize) + Sync)) {
+    debug_assert!(njobs >= 2, "run_jobs handles degenerate batches");
+    std::thread::scope(|scope| {
+        for w in 0..njobs - 1 {
+            scope.spawn(move || job(w));
+        }
+        job(njobs - 1);
+    });
+}
+
+/// Raw-pointer wrapper that lets batch jobs derive their disjoint chunk
+/// slices from one shared base pointer. Sound because chunk bounds come
+/// from [`split_bounds`] (no two jobs overlap) and [`run_jobs`] returns
+/// only after every job finished (the underlying `&mut` borrow is held
+/// across the whole batch).
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Rebuild the `[off, off + len)` chunk of the buffer behind `base`.
+///
+/// SAFETY: callers must pass chunks that are disjoint across the batch's
+/// jobs and derived from a `&mut` borrow held for the whole batch.
+unsafe fn chunk_slice<'a, T>(base: *mut T, off: usize, len: usize) -> &'a mut [T] {
+    std::slice::from_raw_parts_mut(base.add(off), len)
+}
+
+// ------------------------------------------------------------ primitives --
 
 /// Run `f(first_row, rows_chunk)` over contiguous row chunks of a row-major
 /// `rows × cols` buffer, in parallel when the shape is worth it.
@@ -90,63 +541,56 @@ where
 }
 
 /// Split a row-major buffer into `workers` contiguous row chunks — the
-/// exact boundaries [`par_row_chunks`] resolves — and run `f(first_row,
-/// chunk)` on scoped threads, the last chunk on the calling thread. The
-/// low-level primitive behind [`par_row_chunks`]; also used directly by the
-/// shared-slab GEMM path in `quant::packed`, which must know `workers`
-/// before launching (its per-slab barrier needs the exact participant
-/// count, and every chunk must be non-empty, which `workers ≤ rows`
-/// guarantees).
+/// exact [`split_bounds`] boundaries [`par_row_chunks`] resolves — and run
+/// `f(first_row, chunk)` as one batch on the execution vehicle, the last
+/// chunk on the calling thread. The low-level primitive behind
+/// [`par_row_chunks`]; also used directly by kernels that must know
+/// `workers` before launching (the shared-slab GEMM sizes its per-slab
+/// `Barrier` with it, and every chunk must be non-empty, which
+/// `workers ≤ rows` guarantees).
 pub fn scoped_row_chunks<T, F>(data: &mut [T], rows: usize, cols: usize, workers: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
     assert!(workers >= 1 && workers <= rows.max(1), "scoped_row_chunks: bad worker count");
-    let base = rows / workers;
-    let rem = rows % workers;
-    std::thread::scope(|scope| {
-        let fref = &f;
-        let mut rest = data;
-        let mut row0 = 0usize;
-        for w in 0..workers {
-            let take = base + usize::from(w < rem);
-            let tmp = std::mem::take(&mut rest);
-            let (chunk, tail) = tmp.split_at_mut(take * cols);
-            rest = tail;
-            let start = row0;
-            row0 += take;
-            if w + 1 == workers {
-                // run the last chunk on the calling thread
-                fref(start, chunk);
-            } else {
-                scope.spawn(move || fref(start, chunk));
-            }
-        }
+    assert_eq!(data.len(), rows * cols, "scoped_row_chunks: buffer/shape mismatch");
+    if workers == 1 {
+        f(0, data);
+        return;
+    }
+    let base = SendPtr(data.as_mut_ptr());
+    run_jobs(workers, &|w| {
+        let (row0, take) = split_bounds(rows, workers, w);
+        // SAFETY: split_bounds chunks are disjoint, and `data`'s `&mut`
+        // borrow is held for the whole batch (see SendPtr)
+        let chunk = unsafe { chunk_slice(base.0, row0 * cols, take * cols) };
+        f(row0, chunk);
     });
 }
 
 /// Run `f(col0, ncols, stripe)` over contiguous **column** stripes of a
-/// row-major `rows × cols` buffer, in parallel when the shape is worth it.
+/// row-major `rows × cols` f32 buffer, in parallel when the shape is worth
+/// it.
 ///
 /// The complement of [`par_row_chunks`] for skinny outputs (few rows, many
 /// columns — the l=1 serving decode step): each worker owns the columns
 /// `[col0, col0 + ncols)` of every row and fills a zero-initialized
-/// `rows × ncols` stripe buffer in that stripe's row-major layout; the
-/// stripes are copied back into `data` after every worker finishes (when
-/// only one worker is warranted, `f` runs inline directly on `data`, no
-/// copy). Each output element is computed entirely by one worker, so no
-/// element's accumulation order depends on the partitioning and the result
-/// is bit-identical at every thread count. `f` must not read `data`'s prior
-/// contents — stripes arrive zeroed, exactly like a freshly `Mat::zeros`'d
-/// output.
+/// `rows × ncols` stripe in that stripe's row-major layout; the stripes
+/// live in one scratch-arena block (reused across calls — no per-call
+/// allocation after warmup) and are copied back into `data` after every
+/// worker finishes (when only one worker is warranted, `f` runs inline
+/// directly on `data`, no copy). Each output element is computed entirely
+/// by one worker, so no element's accumulation order depends on the
+/// partitioning and the result is bit-identical at every thread count.
+/// `f` must not read `data`'s prior contents — stripes arrive zeroed,
+/// exactly like a freshly `Mat::zeros`'d output.
 ///
 /// `min_cols` is the smallest stripe a worker may receive; shapes narrower
 /// than `2 * min_cols` run inline on the calling thread.
-pub fn par_col_chunks<T, F>(data: &mut [T], rows: usize, cols: usize, min_cols: usize, f: F)
+pub fn par_col_chunks<F>(data: &mut [f32], rows: usize, cols: usize, min_cols: usize, f: F)
 where
-    T: Send + Copy + Default,
-    F: Fn(usize, usize, &mut [T]) + Sync,
+    F: Fn(usize, usize, &mut [f32]) + Sync,
 {
     assert_eq!(data.len(), rows * cols, "par_col_chunks: buffer/shape mismatch");
     if rows == 0 || cols == 0 {
@@ -158,30 +602,22 @@ where
         f(0, cols, data);
         return;
     }
-    let base = cols / workers;
-    let rem = cols % workers;
-    let mut stripes: Vec<(usize, usize, Vec<T>)> = Vec::with_capacity(workers);
-    let mut col0 = 0usize;
-    for w in 0..workers {
-        let take = base + usize::from(w < rem);
-        stripes.push((col0, take, vec![T::default(); rows * take]));
-        col0 += take;
-    }
-    std::thread::scope(|scope| {
-        let fref = &f;
-        let mut iter = stripes.iter_mut();
-        let last = iter.next_back();
-        for (c0, take, buf) in iter {
-            scope.spawn(move || fref(*c0, *take, buf.as_mut_slice()));
-        }
-        if let Some((c0, take, buf)) = last {
-            // run the last stripe on the calling thread
-            fref(*c0, *take, buf.as_mut_slice());
-        }
+    // stripe w lives at [rows·col0_w, rows·(col0_w + take_w)): the stripe
+    // blocks tile the scratch buffer exactly, in column order
+    let mut stripes = scratch::take_zeroed(rows * cols);
+    let base = SendPtr(stripes.as_mut_ptr());
+    run_jobs(workers, &|w| {
+        let (col0, take) = split_bounds(cols, workers, w);
+        // SAFETY: stripe blocks are disjoint, and `stripes` is borrowed
+        // for the whole batch (see SendPtr)
+        let stripe = unsafe { chunk_slice(base.0, rows * col0, rows * take) };
+        f(col0, take, stripe);
     });
-    for (c0, take, buf) in &stripes {
+    for w in 0..workers {
+        let (col0, take) = split_bounds(cols, workers, w);
+        let buf = &stripes[rows * col0..rows * (col0 + take)];
         for r in 0..rows {
-            let dst = r * cols + c0;
+            let dst = r * cols + col0;
             data[dst..dst + take].copy_from_slice(&buf[r * take..(r + 1) * take]);
         }
     }
@@ -213,29 +649,15 @@ pub fn par_row_chunks2<T, U, F>(
         f(0, a, b);
         return;
     }
-    let base = rows / workers;
-    let rem = rows % workers;
-    std::thread::scope(|scope| {
-        let fref = &f;
-        let mut rest_a = a;
-        let mut rest_b = b;
-        let mut row0 = 0usize;
-        for w in 0..workers {
-            let take = base + usize::from(w < rem);
-            let tmp_a = std::mem::take(&mut rest_a);
-            let (chunk_a, tail_a) = tmp_a.split_at_mut(take * a_cols);
-            rest_a = tail_a;
-            let tmp_b = std::mem::take(&mut rest_b);
-            let (chunk_b, tail_b) = tmp_b.split_at_mut(take * b_cols);
-            rest_b = tail_b;
-            let start = row0;
-            row0 += take;
-            if w + 1 == workers {
-                fref(start, chunk_a, chunk_b);
-            } else {
-                scope.spawn(move || fref(start, chunk_a, chunk_b));
-            }
-        }
+    let pa = SendPtr(a.as_mut_ptr());
+    let pb = SendPtr(b.as_mut_ptr());
+    run_jobs(workers, &|w| {
+        let (row0, take) = split_bounds(rows, workers, w);
+        // SAFETY: split_bounds chunks are disjoint, and both `&mut`
+        // borrows are held for the whole batch (see SendPtr)
+        let chunk_a = unsafe { chunk_slice(pa.0, row0 * a_cols, take * a_cols) };
+        let chunk_b = unsafe { chunk_slice(pb.0, row0 * b_cols, take * b_cols) };
+        f(row0, chunk_a, chunk_b);
     });
 }
 
@@ -259,6 +681,21 @@ mod tests {
         for i in 0..rows {
             for j in 0..cols {
                 assert_eq!(data[i * cols + j], i as u32 + 1, "row {i} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_bounds_tiles_exactly() {
+        for total in [0usize, 1, 7, 37, 64] {
+            for workers in 1..=8usize.min(total.max(1)) {
+                let mut next = 0usize;
+                for w in 0..workers {
+                    let (start, take) = split_bounds(total, workers, w);
+                    assert_eq!(start, next, "total {total} workers {workers} w {w}");
+                    next += take;
+                }
+                assert_eq!(next, total, "total {total} workers {workers}");
             }
         }
     }
@@ -291,8 +728,33 @@ mod tests {
     }
 
     #[test]
+    fn pooled_equals_scoped_vehicle() {
+        let rows = 48;
+        let cols = 4;
+        let run = |v: Vehicle| {
+            set_vehicle(v);
+            let prev = THREADS.load(Ordering::Relaxed);
+            set_threads(4);
+            let mut data = vec![0.0f64; rows * cols];
+            par_row_chunks(&mut data, rows, cols, 1, |row0, chunk| {
+                let nrows = chunk.len() / cols;
+                for li in 0..nrows {
+                    let i = row0 + li;
+                    for (j, v) in chunk[li * cols..(li + 1) * cols].iter_mut().enumerate() {
+                        *v = ((i * 13 + 7 * j) as f64).cos();
+                    }
+                }
+            });
+            set_threads(prev);
+            set_vehicle(Vehicle::Pooled);
+            data
+        };
+        assert_eq!(run(Vehicle::Pooled), run(Vehicle::Scoped));
+    }
+
+    #[test]
     fn small_shapes_stay_inline() {
-        // rows < 2*min_rows must not spawn (observable only via correctness)
+        // rows < 2*min_rows must not dispatch (observable only via correctness)
         let mut data = vec![1i64; 3 * 4];
         par_row_chunks(&mut data, 3, 4, 8, |row0, chunk| {
             assert_eq!(row0, 0);
@@ -310,18 +772,18 @@ mod tests {
     fn col_chunks_cover_every_element_exactly_once() {
         let rows = 3;
         let cols = 37;
-        let mut data = vec![0u32; rows * cols];
+        let mut data = vec![0.0f32; rows * cols];
         par_col_chunks(&mut data, rows, cols, 1, |col0, ncols, stripe| {
             assert_eq!(stripe.len(), rows * ncols);
             for r in 0..rows {
                 for c in 0..ncols {
-                    stripe[r * ncols + c] += (r * cols + col0 + c) as u32 + 1;
+                    stripe[r * ncols + c] += (r * cols + col0 + c) as f32 + 1.0;
                 }
             }
         });
         for r in 0..rows {
             for j in 0..cols {
-                assert_eq!(data[r * cols + j], (r * cols + j) as u32 + 1, "row {r} col {j}");
+                assert_eq!(data[r * cols + j], (r * cols + j) as f32 + 1.0, "row {r} col {j}");
             }
         }
     }
@@ -333,11 +795,11 @@ mod tests {
         let run = |nthreads: usize| {
             let prev = THREADS.load(Ordering::Relaxed);
             set_threads(nthreads);
-            let mut data = vec![0.0f64; rows * cols];
+            let mut data = vec![0.0f32; rows * cols];
             par_col_chunks(&mut data, rows, cols, 1, |col0, ncols, stripe| {
                 for r in 0..rows {
                     for c in 0..ncols {
-                        stripe[r * ncols + c] = ((r * 17 + col0 + c) as f64).sin();
+                        stripe[r * ncols + c] = ((r * 17 + col0 + c) as f32).sin();
                     }
                 }
             });
@@ -354,7 +816,7 @@ mod tests {
     #[test]
     fn narrow_col_shapes_stay_inline() {
         // cols < 2*min_cols must not shard: f sees the whole buffer
-        let mut data = vec![1i64; 4 * 3];
+        let mut data = vec![1.0f32; 4 * 3];
         par_col_chunks(&mut data, 4, 3, 8, |col0, ncols, stripe| {
             assert_eq!(col0, 0);
             assert_eq!(ncols, 3);
@@ -362,12 +824,43 @@ mod tests {
         });
         // inline path operates on data directly — prior contents survive
         // when f leaves them alone (sharded stripes start zeroed instead)
-        assert!(data.iter().all(|&v| v == 1));
+        assert!(data.iter().all(|&v| v == 1.0));
     }
 
     #[test]
     fn empty_col_buffer_is_a_noop() {
         let mut data: Vec<f32> = Vec::new();
         par_col_chunks(&mut data, 3, 0, 1, |_, _, _| panic!("must not be called"));
+    }
+
+    #[test]
+    fn standalone_pool_runs_batches_and_shuts_down_on_drop() {
+        let pool = WorkerPool::new();
+        let hits = AtomicUsize::new(0);
+        pool.run(4, &|w| {
+            hits.fetch_add(w + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1 + 2 + 3 + 4);
+        assert_eq!(pool.workers(), 3);
+        // running a second, narrower batch reuses the parked workers
+        pool.run(2, &|_| {
+            hits.fetch_add(100, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 210);
+        assert_eq!(pool.workers(), 3);
+        drop(pool); // must join all workers without hanging
+    }
+
+    #[test]
+    fn nested_regions_run_inline() {
+        let pool = WorkerPool::new();
+        let hits = AtomicUsize::new(0);
+        pool.run(3, &|_outer| {
+            // a region opened from inside a job must not re-enter the pool
+            pool.run(2, &|_inner| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 6);
     }
 }

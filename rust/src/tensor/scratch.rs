@@ -1,0 +1,211 @@
+//! Worker-local scratch arena: reusable f32 buffers for the GEMM hot path.
+//!
+//! Every packed kernel used to `vec![0.0f32; …]` its decode slabs, stripe
+//! accumulators, and activation tiles on every call. A training run or a
+//! continuous-batching serving session issues millions of those calls, so
+//! the allocator sat directly on the hot path — worst at the skinny l = 1
+//! decode shapes, where fixed per-call overhead is the largest fraction of
+//! kernel time. The arena replaces those allocations with per-thread
+//! buffer reuse:
+//!
+//! * one free list of `Vec<f32>` buffers **per thread** (no locks, no
+//!   cross-thread traffic); the persistent pool workers in
+//!   `tensor::parallel` live for the process, so their arenas do too;
+//! * checkout picks the best-fitting free buffer (smallest capacity that
+//!   holds the request, else the largest available, grown once) and every
+//!   buffer grows to its high-water mark — after a warmup pass over the
+//!   shapes in flight, checkout never allocates;
+//! * [`ScratchBuf`] returns its storage to the owning thread's free list
+//!   on drop, so scratch lifetime is just scope lifetime at the call site.
+//!
+//! Contents contract: [`take`] returns a buffer with **arbitrary stale
+//! contents** — callers must write every element they read, which every
+//! decode-slab/tile caller in `quant::packed` does; [`take_zeroed`]
+//! returns all-zero contents, the exact semantics `vec![0.0; n]` gave the
+//! stripe accumulators in `tensor::parallel::par_col_chunks`.
+//!
+//! [`grows`] counts every allocation the arena ever performs (all
+//! threads); the pool stress test in `tests/pool.rs` pins it flat across
+//! GEMM calls after warmup — the "zero per-call slab/stripe/tile heap
+//! allocations" contract.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Per-thread free-list cap. Outstanding checkouts per thread are O(1) —
+/// a shared slab, a stripe block, and a couple of decode tiles — so a
+/// handful of slots always suffices; anything beyond is dropped rather
+/// than hoarded.
+const MAX_FREE: usize = 16;
+
+thread_local! {
+    static FREE: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+    static THREAD_GROWS: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Arena allocations (fresh buffers + capacity growths) since process
+/// start, summed over all threads. The perf-test hook: after warmup this
+/// must stay flat across kernel calls.
+static GROWS: AtomicUsize = AtomicUsize::new(0);
+
+/// See [`GROWS`].
+pub fn grows() -> usize {
+    GROWS.load(Ordering::Relaxed)
+}
+
+/// Arena allocations performed by the **current thread** — the
+/// race-free variant of [`grows`] for tests that only drive the arena
+/// from their own thread.
+pub fn thread_grows() -> usize {
+    THREAD_GROWS.with(|c| c.get())
+}
+
+/// A checked-out scratch buffer: derefs to `[f32]` of exactly the
+/// requested length and returns its storage to the owning thread's arena
+/// on drop.
+pub struct ScratchBuf {
+    data: Vec<f32>,
+    len: usize,
+}
+
+impl std::ops::Deref for ScratchBuf {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.data[..self.len]
+    }
+}
+
+impl std::ops::DerefMut for ScratchBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.data[..self.len]
+    }
+}
+
+impl Drop for ScratchBuf {
+    fn drop(&mut self) {
+        give_storage(std::mem::take(&mut self.data));
+    }
+}
+
+/// Check out a scratch buffer of `len` f32 with **arbitrary stale
+/// contents** (callers must fully overwrite what they read).
+pub fn take(len: usize) -> ScratchBuf {
+    ScratchBuf { data: checkout(len), len }
+}
+
+/// Check out a scratch buffer of `len` f32 with all-zero contents — the
+/// drop-in replacement for `vec![0.0f32; len]` accumulators.
+pub fn take_zeroed(len: usize) -> ScratchBuf {
+    let mut b = take(len);
+    b.fill(0.0);
+    b
+}
+
+/// Check out arena storage as a bare `Vec<f32>` of exactly `len` elements
+/// (arbitrary stale contents), for callers that need an owned `Vec` — e.g.
+/// the reusable `Mat` row in `quant::rowq`. Return it with [`give`];
+/// truncation never shrinks capacity, so the round trip stays
+/// allocation-free.
+pub fn take_vec(len: usize) -> Vec<f32> {
+    let mut v = checkout(len);
+    v.truncate(len);
+    v
+}
+
+/// Return a `Vec` obtained from [`take_vec`] (or any `Vec<f32>` worth
+/// recycling) to the current thread's arena.
+pub fn give(v: Vec<f32>) {
+    give_storage(v);
+}
+
+fn checkout(len: usize) -> Vec<f32> {
+    let mut v = FREE
+        .with(|f| {
+            let mut list = f.borrow_mut();
+            if list.is_empty() {
+                return None;
+            }
+            // best fit: the smallest capacity that already holds `len`;
+            // else the largest available, which grows once and then serves
+            // this size class from its new high-water mark
+            let mut best = 0usize;
+            for i in 1..list.len() {
+                let (c, bc) = (list[i].capacity(), list[best].capacity());
+                let better = if c >= len { bc < len || c < bc } else { bc < len && c > bc };
+                if better {
+                    best = i;
+                }
+            }
+            Some(list.swap_remove(best))
+        })
+        .unwrap_or_default();
+    if v.len() < len {
+        if v.capacity() < len {
+            GROWS.fetch_add(1, Ordering::Relaxed);
+            THREAD_GROWS.with(|c| c.set(c.get() + 1));
+        }
+        v.resize(len, 0.0);
+    }
+    v
+}
+
+fn give_storage(v: Vec<f32>) {
+    if v.capacity() == 0 {
+        return;
+    }
+    FREE.with(|f| {
+        let mut list = f.borrow_mut();
+        if list.len() < MAX_FREE {
+            list.push(v);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_is_allocation_free_at_the_high_water_mark() {
+        // warm: one buffer grown to the largest size in play
+        drop(take(4096));
+        let g0 = thread_grows();
+        for _ in 0..16 {
+            let b = take(4096);
+            assert_eq!(b.len(), 4096);
+            drop(b);
+            let small = take(64);
+            assert_eq!(small.len(), 64);
+        }
+        assert_eq!(thread_grows(), g0, "steady-state checkout must not allocate");
+    }
+
+    #[test]
+    fn zeroed_buffers_are_zero_after_dirty_reuse() {
+        {
+            let mut b = take(512);
+            b.fill(7.5);
+        }
+        let b = take_zeroed(512);
+        assert!(b.iter().all(|&v| v == 0.0), "take_zeroed must scrub stale contents");
+    }
+
+    #[test]
+    fn take_vec_round_trip_keeps_exact_len() {
+        let v = take_vec(33);
+        assert_eq!(v.len(), 33);
+        give(v);
+        let v = take_vec(21);
+        assert_eq!(v.len(), 21);
+        give(v);
+    }
+
+    #[test]
+    fn zero_length_checkout_is_fine() {
+        let b = take(0);
+        assert!(b.is_empty());
+        let z = take_zeroed(0);
+        assert!(z.is_empty());
+    }
+}

@@ -72,7 +72,10 @@ pub fn train(
     train_tokens: Vec<u32>,
     heldout_tokens: Vec<u32>,
 ) -> TrainResult {
-    crate::tensor::parallel::set_threads(cfg.threads);
+    // size the persistent worker pool once for the whole run: every GeMM,
+    // quantize/pack pass, and Correct stage of every step executes on it
+    // with zero per-call thread spawns
+    crate::tensor::parallel::install(cfg.threads);
     let mut init_rng = Rng::new(cfg.seed); // same init across recipes
     let mut params = Params::init(&model_cfg, &mut init_rng);
     let mut model = Transformer::new(model_cfg, recipe, cfg.seed ^ 0xA5A5);

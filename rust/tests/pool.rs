@@ -1,0 +1,262 @@
+//! Stress tests for the persistent worker pool + scratch arena (DESIGN.md
+//! §8): the execution-vehicle refactor must be invisible in the numbers
+//! (pooled execution bitwise-equals fresh scoped execution, at every
+//! thread count, across adversarial shape interleavings), visible in the
+//! costs (zero thread spawns and zero slab/stripe/tile scratch
+//! allocations per call after warmup), and robust (a panicking worker job
+//! reaches the submitter and the pool keeps serving).
+//!
+//! These tests assert on process-global counters and toggle process-global
+//! knobs (thread count, execution vehicle), so every test serializes on
+//! one file-local mutex. Other test binaries are separate processes and
+//! cannot interfere.
+
+use averis::quant::gemm::QuantGemm;
+use averis::quant::packed::{mu_times_packed_rows, packed_matmul, packed_matmul_bt};
+use averis::quant::{rowq_matmul, FrozenLinear, Nvfp4Quantizer, QuantRecipe, RowQuantMat};
+use averis::tensor::parallel::{self, Vehicle};
+use averis::tensor::{scratch, Mat, Rng};
+use std::sync::Mutex;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn with_vehicle<T>(v: Vehicle, f: impl FnOnce() -> T) -> T {
+    parallel::set_vehicle(v);
+    let r = f();
+    parallel::set_vehicle(Vehicle::Pooled);
+    r
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: elem {i}: {x} vs {y}");
+    }
+}
+
+/// One pool, driven through interleaved adversarial shapes — l = 1
+/// (column-sharded decode), ragged K, n < JT (= 32), and a row-sharded
+/// shared-slab training shape — for NVFP4 and MXFP4 at 1/2/4 threads:
+/// every kernel family must be bitwise identical to fresh scoped-thread
+/// execution of exactly the same partitioning.
+#[test]
+fn pooled_bitwise_equals_scoped_across_interleaved_adversarial_shapes() {
+    let _g = lock();
+    let mut rng = Rng::new(0x900);
+    // (l, k, n): l=1 skinny decode (inline and column-sharded — min_cols
+    // for k=512 is 512, so n=1024 engages 2 workers), ragged K (33, 67,
+    // 21), n < JT (9, 3, 24), shared-slab row shape (64, 256, 64)
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 33, 40),
+        (7, 67, 9),
+        (64, 256, 64),
+        (1, 512, 1024),
+        (5, 21, 3),
+        (16, 8, 16),
+        (9, 128, 33),
+        (2, 48, 24),
+    ];
+    for quant in [Nvfp4Quantizer::nvfp4(), Nvfp4Quantizer::mxfp4()] {
+        for &(l, k, n) in shapes {
+            let x = Mat::randn(l, k, 1.0, &mut rng);
+            let w = Mat::randn(k, n, 0.3, &mut rng);
+            let xq = quant.quantize_store(&x);
+            let wq = quant.quantize_store(&w.transpose());
+            let rq = RowQuantMat::quantize(&quant, &x);
+            let mu: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+            for &threads in &[1usize, 2, 4] {
+                parallel::set_threads(threads);
+                let tag = format!("({l},{k},{n})@{threads}");
+
+                let pooled = packed_matmul(&xq, &wq);
+                let scoped = with_vehicle(Vehicle::Scoped, || packed_matmul(&xq, &wq));
+                assert_bits_eq(&pooled.data, &scoped.data, &format!("packed_matmul {tag}"));
+
+                let pooled = rowq_matmul(&rq, &wq);
+                let scoped = with_vehicle(Vehicle::Scoped, || rowq_matmul(&rq, &wq));
+                assert_bits_eq(&pooled.data, &scoped.data, &format!("rowq_matmul {tag}"));
+
+                let pooled = packed_matmul_bt(&xq, &wq);
+                let scoped = with_vehicle(Vehicle::Scoped, || packed_matmul_bt(&xq, &wq));
+                assert_bits_eq(&pooled.data, &scoped.data, &format!("packed_matmul_bt {tag}"));
+
+                let pooled = mu_times_packed_rows(&mu, &wq);
+                let scoped = with_vehicle(Vehicle::Scoped, || mu_times_packed_rows(&mu, &wq));
+                assert_bits_eq(&pooled, &scoped, &format!("mu_times_packed_rows {tag}"));
+            }
+        }
+    }
+    // the sharded quantize/pack pass rides the pool too (min_rows for 512
+    // cols is 128, so 384 rows engage 3 workers)
+    let big = Mat::randn(384, 512, 1.0, &mut rng);
+    let quant = Nvfp4Quantizer::nvfp4();
+    for &threads in &[1usize, 2, 4] {
+        parallel::set_threads(threads);
+        let pooled = quant.quantize_store(&big);
+        let scoped = with_vehicle(Vehicle::Scoped, || quant.quantize_store(&big));
+        assert_eq!(pooled.codes, scoped.codes, "quantize_store codes @{threads}");
+        let tag = format!("quantize_store scales @{threads}");
+        assert_bits_eq(&pooled.scales, &scoped.scales, &tag);
+    }
+    parallel::set_threads(0);
+}
+
+/// Arena reuse must preserve zeroed-buffer semantics: a buffer that held
+/// garbage must come back all-zero from the zeroed checkout, and the
+/// column-sharded accumulation path (whose stripes rely on arriving
+/// zeroed, like a fresh `Mat::zeros`) must give identical results on a
+/// dirty, reused arena.
+#[test]
+fn arena_reuse_returns_zeroed_semantics_correct_buffers() {
+    let _g = lock();
+    {
+        let mut b = scratch::take(257);
+        b.fill(7.5);
+        assert_eq!(b.len(), 257);
+    }
+    let z = scratch::take_zeroed(257);
+    assert!(z.iter().all(|&v| v == 0.0), "reused zeroed buffer must be scrubbed");
+    drop(z);
+    // accumulate twice through the sharded column path: stale stripe
+    // contents would double-count the second time
+    parallel::set_threads(4);
+    let run = || {
+        let mut data = vec![0.0f32; 2 * 64];
+        parallel::par_col_chunks(&mut data, 2, 64, 1, |col0, ncols, stripe| {
+            for r in 0..2 {
+                for c in 0..ncols {
+                    stripe[r * ncols + c] += ((r * 64 + col0 + c) as f32).sin();
+                }
+            }
+        });
+        data
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "reused stripes must behave like fresh zeroed buffers");
+    parallel::set_threads(0);
+}
+
+/// A panic inside a pooled job must reach the submitter (with its
+/// payload), must not wedge or kill the pool, and subsequent GEMMs must
+/// still run bit-correctly on the surviving workers.
+#[test]
+fn worker_panic_propagates_and_pool_survives() {
+    let _g = lock();
+    parallel::set_threads(4);
+    // rows 8 / min_rows 1 → 4 chunks of 2 rows; row0 == 0 runs on a pool
+    // worker, row0 == 6 on the submitting thread
+    let r = std::panic::catch_unwind(|| {
+        let mut data = vec![0u8; 8];
+        parallel::par_row_chunks(&mut data, 8, 1, 1, |row0, _chunk| {
+            if row0 == 0 {
+                panic!("injected worker panic");
+            }
+        });
+    });
+    let err = r.expect_err("worker panic must propagate to the submitter");
+    assert!(
+        matches!(err.downcast_ref::<&str>(), Some(s) if s.contains("injected worker panic")),
+        "panic payload must survive the pool crossing"
+    );
+    let r = std::panic::catch_unwind(|| {
+        let mut data = vec![0u8; 8];
+        parallel::par_row_chunks(&mut data, 8, 1, 1, |row0, _chunk| {
+            if row0 == 6 {
+                panic!("injected caller panic");
+            }
+        });
+    });
+    assert!(r.is_err(), "caller-chunk panic must propagate after the batch drains");
+    // the pool survives both and keeps producing correct bits
+    let mut rng = Rng::new(77);
+    let quant = Nvfp4Quantizer::nvfp4();
+    let x = Mat::randn(64, 256, 1.0, &mut rng);
+    let w = Mat::randn(256, 64, 0.2, &mut rng);
+    let xq = quant.quantize_store(&x);
+    let wq = quant.quantize_store(&w.transpose());
+    let pooled = packed_matmul(&xq, &wq);
+    let scoped = with_vehicle(Vehicle::Scoped, || packed_matmul(&xq, &wq));
+    assert_bits_eq(&pooled.data, &scoped.data, "post-panic GEMM");
+    parallel::set_threads(0);
+}
+
+/// The acceptance contract of the pool/arena refactor: after warmup,
+/// every packed/rowq GEMM, quantize/pack pass, serving forward, and the
+/// full Averis pipeline (Multiply + Correct stages) runs with **zero**
+/// thread spawns and **zero** slab/stripe/tile scratch allocations —
+/// pinned through the allocation-counting hooks `parallel::pool_spawns`
+/// and `scratch::grows`.
+#[test]
+fn steady_state_has_zero_spawns_and_zero_scratch_allocations() {
+    let _g = lock();
+    parallel::set_threads(4);
+    let mut rng = Rng::new(0xA11C);
+    let quant = Nvfp4Quantizer::nvfp4();
+    // shapes chosen so every execution family engages at 4 threads:
+    // shared-slab row shard (64×256×64), column-sharded skinny decode
+    // (1×1024×2048), dot-form bt, Correct-stage row shard, sharded packed
+    // quantize (512×512), FrozenLinear serving forward, Averis pipeline
+    let x = Mat::randn(64, 256, 1.0, &mut rng);
+    let w = Mat::randn(256, 64, 0.2, &mut rng);
+    let xs = Mat::randn(1, 1024, 1.0, &mut rng);
+    let ws = Mat::randn(1024, 2048, 0.1, &mut rng);
+    let big = Mat::randn(512, 512, 1.0, &mut rng);
+    let xq = quant.quantize_store(&x);
+    let wq = quant.quantize_store(&w.transpose());
+    let wsq = quant.quantize_store(&ws.transpose());
+    let rq = RowQuantMat::quantize(&quant, &xs);
+    let mu: Vec<f32> = (0..1024).map(|_| rng.normal()).collect();
+    let lin = FrozenLinear::new(&ws, &mu, quant);
+    let mut gemm = QuantGemm::new(QuantRecipe::Averis, 9);
+    let mut run_all = || {
+        std::hint::black_box(packed_matmul(&xq, &wq));
+        std::hint::black_box(rowq_matmul(&rq, &wsq));
+        std::hint::black_box(packed_matmul_bt(&xq, &wq));
+        std::hint::black_box(mu_times_packed_rows(&mu, &wsq));
+        std::hint::black_box(quant.quantize_store(&big));
+        std::hint::black_box(lin.forward(&xs));
+        std::hint::black_box(gemm.forward(&x, &w));
+    };
+    // warmup: grows the pool to its high-water mark and every arena
+    // buffer to the largest size each checkout site demands
+    for _ in 0..3 {
+        run_all();
+    }
+    let spawns0 = parallel::pool_spawns();
+    let grows0 = scratch::grows();
+    for _ in 0..3 {
+        run_all();
+    }
+    assert_eq!(
+        parallel::pool_spawns(),
+        spawns0,
+        "steady-state kernel calls must not spawn worker threads"
+    );
+    assert_eq!(
+        scratch::grows(),
+        grows0,
+        "steady-state kernel calls must not allocate slab/stripe/tile scratch"
+    );
+    parallel::set_threads(0);
+}
+
+/// The pool handle exposed to subsystems reports a warmed pool, and the
+/// interleaved vehicle/thread toggles of this whole suite leave the
+/// process pool functional (shutdown only happens on drop, which the
+/// process-wide pool never does).
+#[test]
+fn pool_handle_reports_warmed_workers() {
+    let _g = lock();
+    parallel::set_threads(3);
+    let pool = parallel::install(3);
+    assert!(pool.workers() >= 2, "install(3) must pre-spawn at least 2 workers");
+    // install never shrinks: a smaller knob keeps the high-water pool
+    let pool = parallel::install(2);
+    assert!(pool.workers() >= 2);
+    parallel::set_threads(0);
+}
