@@ -12,18 +12,27 @@
 //! overhead-dominated l = 1 serving shapes (n ∈ {1k, 4k}) where spawn/join
 //! latency and allocator churn — not arithmetic — used to set the floor.
 //!
-//! Run: cargo bench --bench kernel_microbench [-- --threads N]
+//! …and the **SIMD-level table**: the packed quantize/decode/GEMM kernels
+//! timed at every dispatch level the host supports (scalar, sse2, avx2),
+//! forced per measurement. Every level computes identical bits (pinned by
+//! `tests/simd.rs`); this table only attributes throughput.
+//!
+//! Run: cargo bench --bench kernel_microbench [-- --threads N] [--simd L]
 //!        [--record EXPERIMENTS.md]   write the v1-vs-v2 table into the
-//!                                    `kernel-v1v2` marked block and the
+//!                                    `kernel-v1v2` marked block, the
 //!                                    pooled-vs-scoped table into the
-//!                                    `kernel-pool` marked block
+//!                                    `kernel-pool` marked block, and the
+//!                                    SIMD-level table into `kernel-simd`
 //!        [--smoke]                   single iteration on tiny shapes (CI
 //!                                    drift check, not a measurement; covers
-//!                                    the pooled path end to end)
+//!                                    the pooled path and one SIMD shape per
+//!                                    available level end to end)
 
 use averis::bench_harness::{
-    arg_value, bench, has_flag, record_markdown_block, threads_from_args, BenchOpts, TablePrinter,
+    arg_value, bench, has_flag, record_markdown_block, simd_from_args, threads_from_args,
+    BenchOpts, TablePrinter,
 };
+use averis::quant::simd;
 use averis::quant::averis::mean_residual_split_inplace;
 use averis::quant::gemm::QuantGemm;
 use averis::quant::hadamard::tiled_hadamard_inplace;
@@ -34,8 +43,19 @@ use averis::tensor::{parallel, Mat, Rng};
 
 fn main() {
     let threads = threads_from_args();
+    let simd_level = simd_from_args();
     let smoke = has_flag("smoke");
     let record = arg_value("record");
+    let vehicle = match parallel::vehicle() {
+        Vehicle::Pooled => "pooled",
+        Vehicle::Scoped => "scoped",
+    };
+    println!(
+        "kernel_microbench: threads={threads}, vehicle={vehicle}, simd={simd_level} \
+         (detected {})",
+        simd::detect()
+    );
+    println!();
     let mut rng = Rng::new(21);
     let opts = if smoke {
         BenchOpts { warmup_iters: 0, iters: 1 }
@@ -344,6 +364,99 @@ fn main() {
         match record_markdown_block(path, "kernel-pool", &mdp) {
             Ok(()) => println!("\nrecorded pooled-vs-scoped table into {path}"),
             Err(e) => eprintln!("\nfailed to record pooled-vs-scoped table into {path}: {e}"),
+        }
+    }
+
+    // scalar vs sse2 vs avx2: the same packed kernels timed at every
+    // dispatch level the host supports, forced per measurement. Every level
+    // computes identical bits (tests/simd.rs pins that differentially), so
+    // this table only attributes throughput: quantize_store exercises the
+    // vectorized RTNE quantize+pack, packed fwd the axpy slab microkernels
+    // (whose inner loop also decodes via the byte-pair path), rowq fwd the
+    // 4-lane dot kernels. Single thread so the delta is the kernel, not the
+    // shard schedule.
+    println!();
+    let t6 = TablePrinter::new(
+        &["simd kernels", "shape", "level", "mean ms", "vs scalar"],
+        &[22, 16, 8, 10, 10],
+    );
+    let mut mds = String::from(
+        "| kernel | shape | level | mean ms | speedup (scalar/level) |\n\
+         |--------|-------|------:|--------:|-----------------------:|\n",
+    );
+    let simd_shapes: &[(usize, usize, usize)] = if smoke {
+        &[(32, 64, 32)]
+    } else {
+        &[(256, 512, 512), (1, 1024, 4096)]
+    };
+    let levels: Vec<simd::SimdLevel> =
+        simd::ALL_LEVELS.into_iter().filter(|&l| l <= simd::detect()).collect();
+    parallel::set_threads(1);
+    for &(l, k, n) in simd_shapes {
+        let xg = Mat::randn(l, k, 1.0, &mut rng);
+        let wg = Mat::randn(k, n, 0.1, &mut rng);
+        let xq = quant.quantize_store(&xg);
+        let wq = quant.quantize_store(&wg.transpose());
+        let rq = RowQuantMat::quantize(&quant, &xg);
+        let gemm_shape = format!("{l}x{k}x{n}");
+        let mut kernels: Vec<(&str, String, Box<dyn FnMut() + '_>)> = vec![
+            (
+                "quantize_store",
+                format!("{k}x{n}"),
+                Box::new(|| {
+                    std::hint::black_box(quant.quantize_store(&wg));
+                }),
+            ),
+            (
+                "packed fwd",
+                gemm_shape.clone(),
+                Box::new(|| {
+                    std::hint::black_box(packed_matmul(&xq, &wq));
+                }),
+            ),
+            (
+                "rowq fwd (serving)",
+                gemm_shape.clone(),
+                Box::new(|| {
+                    std::hint::black_box(rowq_matmul(&rq, &wq));
+                }),
+            ),
+        ];
+        for (kernel, shp, f) in kernels.iter_mut() {
+            let mut scalar_ms = f64::NAN;
+            for &lv in &levels {
+                simd::force(lv);
+                let stats = bench(opts, || f());
+                if lv == simd::SimdLevel::Scalar {
+                    scalar_ms = stats.mean();
+                }
+                t6.row(&[
+                    kernel.to_string(),
+                    shp.clone(),
+                    lv.to_string(),
+                    format!("{:.3}", stats.mean()),
+                    format!("{:.2}x", scalar_ms / stats.mean()),
+                ]);
+                mds.push_str(&format!(
+                    "| {kernel} | {shp} | {lv} | {:.3} | {:.2}x |\n",
+                    stats.mean(),
+                    scalar_ms / stats.mean()
+                ));
+            }
+        }
+    }
+    simd::force(simd_level);
+    parallel::set_threads(0);
+    mds.push_str(
+        "\nProtocol: `cargo bench --bench kernel_microbench -- --record EXPERIMENTS.md` \
+         (single thread, dispatch level forced per measurement, levels above the host's \
+         support skipped; every level computes identical bits — `cargo test --test simd` \
+         pins that, this table only measures throughput).",
+    );
+    if let Some(path) = &record {
+        match record_markdown_block(path, "kernel-simd", &mds) {
+            Ok(()) => println!("\nrecorded SIMD-level table into {path}"),
+            Err(e) => eprintln!("\nfailed to record SIMD-level table into {path}: {e}"),
         }
     }
 

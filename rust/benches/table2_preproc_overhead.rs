@@ -7,23 +7,48 @@
 //! the *ratio* (the paper's reported quantity: 4.47× / 4.72×, growing with
 //! size) is the comparable number.
 //!
-//! Run: cargo bench --bench table2_preproc_overhead
+//! Run: cargo bench --bench table2_preproc_overhead [-- --threads N]
+//!        [--simd L]                  force the kernel SIMD level
+//!        [--record EXPERIMENTS.md]   write the ratio table into the
+//!                                    `table2-preproc` marked block
+//!        [--smoke]                   single iteration on a small shape
+//!                                    (CI drift check, not a measurement)
 
-use averis::bench_harness::{bench, fmt_ms, BenchOpts, TablePrinter};
+use averis::bench_harness::{
+    arg_value, bench, fmt_ms, has_flag, record_markdown_block, simd_from_args, threads_from_args,
+    BenchOpts, TablePrinter,
+};
 use averis::quant::averis::mean_residual_split_inplace;
 use averis::quant::hadamard::tiled_hadamard_inplace;
 use averis::tensor::{Mat, Rng};
 
 fn main() {
+    let threads = threads_from_args();
+    let simd_level = simd_from_args();
+    let smoke = has_flag("smoke");
+    let record = arg_value("record");
     let mut rng = Rng::new(2);
-    let shapes: &[(usize, usize)] = &[(8 * 2048, 4096), (8 * 2048, 8192), (16 * 2048, 4096)];
-    let opts = BenchOpts { warmup_iters: 2, iters: 8 };
+    let shapes: &[(usize, usize)] = if smoke {
+        &[(256, 512)]
+    } else {
+        &[(8 * 2048, 4096), (8 * 2048, 8192), (16 * 2048, 4096)]
+    };
+    let opts = if smoke {
+        BenchOpts { warmup_iters: 0, iters: 1 }
+    } else {
+        BenchOpts { warmup_iters: 2, iters: 8 }
+    };
 
     println!("Table 2: preprocessing overhead — tiled Hadamard vs Averis mean extraction");
-    println!("(CPU testbed; paper reports the same comparison on Blackwell: 4.47x / 4.72x)\n");
+    println!("(CPU testbed; paper reports the same comparison on Blackwell: 4.47x / 4.72x)");
+    println!("threads={threads}, simd={simd_level}\n");
     let t = TablePrinter::new(
         &["shape (l, m)", "method", "mean ms", "std ms", "speedup"],
         &[20, 16, 12, 10, 9],
+    );
+    let mut md = String::from(
+        "| shape (l, m) | Hadamard ms | Averis ms | ratio (Hadamard/Averis) |\n\
+         |--------------|------------:|----------:|------------------------:|\n",
     );
 
     for &(l, m) in shapes {
@@ -60,7 +85,24 @@ fn main() {
             fmt_ms(a_stats.std()),
             format!("{speedup:.2}x"),
         ]);
+        md.push_str(&format!(
+            "| ({l}, {m}) | {} | {} | {speedup:.2}x |\n",
+            fmt_ms(h_stats.mean()),
+            fmt_ms(a_stats.mean())
+        ));
     }
     println!("\npaper shape (512*2048, 4096): Hadamard 9.1614 ms / Averis 2.0494 ms -> 4.47x");
     println!("paper shape (512*2048, 8192): Hadamard 18.8421 ms / Averis 3.9927 ms -> 4.72x");
+    md.push_str(&format!(
+        "\nProtocol: `cargo bench --bench table2_preproc_overhead -- --threads {threads} \
+         --record EXPERIMENTS.md` (CPU testbed, token count scaled 64× down from the \
+         paper's Blackwell shapes; the comparable number is the ratio — paper: 4.47x at \
+         (512·2048, 4096), 4.72x at (512·2048, 8192))."
+    ));
+    if let Some(path) = &record {
+        match record_markdown_block(path, "table2-preproc", &md) {
+            Ok(()) => println!("\nrecorded Table-2 ratio table into {path}"),
+            Err(e) => eprintln!("\nfailed to record Table-2 ratio table into {path}: {e}"),
+        }
+    }
 }

@@ -111,6 +111,26 @@ pub fn threads_from_args() -> usize {
     crate::tensor::parallel::threads()
 }
 
+/// Apply a `--simd off|sse2|avx2` flag from the bench binary's argv to the
+/// kernel dispatch table (forced, clamped to hardware support) and return
+/// the resolved level. Bench binaries call this right after
+/// [`threads_from_args`] — `install` resolves the level from
+/// `AVERIS_SIMD`/detection first, then an explicit flag overrides it.
+pub fn simd_from_args() -> crate::quant::simd::SimdLevel {
+    if let Some(v) = arg_value("simd") {
+        match crate::quant::simd::parse_level(&v) {
+            Some(l) => {
+                let got = crate::quant::simd::force(l);
+                if got != l {
+                    eprintln!("--simd {v}: not supported on this CPU, degrading to {got}");
+                }
+            }
+            None => eprintln!("--simd {v}: unknown level (expected off|sse2|avx2), ignoring"),
+        }
+    }
+    crate::quant::simd::level()
+}
+
 /// Value of a `--name value` flag in the bench binary's argv, if present.
 /// The one flag-scanning loop of this module — `threads_from_args` and
 /// `has_flag` are thin wrappers over the same argv walk.

@@ -63,6 +63,10 @@ COMMANDS:
                                            pool once per process; 0 = auto.
                                            deterministic: same seed, same
                                            curve at any thread count)
+              --simd off|sse2|avx2        (force the kernel SIMD level; the
+                                           default autodetects, AVERIS_SIMD
+                                           overrides. every level computes
+                                           identical bits — DESIGN.md §9)
               --corpus-seed N             (synthetic-corpus generator seed)
               --save FILE                 (write an f32 checkpoint + frozen
                                            calibration means after training)
@@ -73,11 +77,11 @@ COMMANDS:
               flavor: f32 training checkpoint or packed serving checkpoint)
               --ckpt FILE                 (required)
               --prompt \"1,2,3\"          (token ids; default: random)
-              --prompt-len N  --max-new N --seed N  --threads N
+              --prompt-len N  --max-new N --seed N  --threads N  --simd L
               --top-k K  --temperature T  (omit --top-k for greedy)
   serve-bench continuous-batching throughput (EXPERIMENTS.md §Serving)
               --model dense|moe|tiny  --batches 1,8,32  --prompts N
-              --prompt-len N  --max-new N  --seed N  --threads N
+              --prompt-len N  --max-new N  --seed N  --threads N  --simd L
               --record FILE               (rewrite the serve-bench block of
                                            EXPERIMENTS.md with the results)
               --out DIR                   (CSV output)

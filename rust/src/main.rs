@@ -70,7 +70,26 @@ fn experiment_from_args(args: &CliArgs) -> Result<ExperimentConfig> {
     Ok(exp)
 }
 
+/// Apply a `--simd off|sse2|avx2` flag: force the kernel dispatch level,
+/// clamped to hardware support. Applied before any command runs (and
+/// before `parallel::install`, which respects a forced level), so every
+/// kernel in the process sees it. Purely a perf/debug knob — every level
+/// computes identical bits (DESIGN.md §9).
+fn apply_simd_flag(args: &CliArgs) -> Result<()> {
+    let Some(v) = args.get("simd") else {
+        return Ok(());
+    };
+    let want = averis::quant::simd::parse_level(v)
+        .with_context(|| format!("--simd: unknown level '{v}' (expected off|sse2|avx2)"))?;
+    let got = averis::quant::simd::force(want);
+    if got != want {
+        eprintln!("--simd {v}: not supported on this CPU, degrading to {got}");
+    }
+    Ok(())
+}
+
 fn run(args: &CliArgs) -> Result<()> {
+    apply_simd_flag(args)?;
     match args.command {
         Command::Help => {
             println!("{USAGE}");

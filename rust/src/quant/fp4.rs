@@ -16,6 +16,14 @@ pub const E2M1_VALUES: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
 /// the fused fake-quant path produces -0.0 for negative values that round
 /// to zero magnitude, the packed store keeps its sign bit, and decode must
 /// reproduce the sign bit for bit.
+///
+/// Structural invariant the AVX2 decode kernel relies on (DESIGN.md §9):
+/// `E2M1_SIGNED_VALUES[code]` is exactly `E2M1_VALUES[code & 7]` with
+/// code bit 3 moved into f32 bit 31 — the magnitude table indexed by the
+/// low bits plus a sign-bit XOR. Pinned by
+/// `signed_grid_is_magnitude_table_plus_sign_bit` below; a change here
+/// that silently broke it would desynchronize the in-register permute
+/// decode from the LUT path.
 pub const E2M1_SIGNED_VALUES: [f32; 16] = [
     0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, -0.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0,
 ];
@@ -280,6 +288,22 @@ mod tests {
         }
         // spot-check the negative-zero code explicitly
         assert_eq!(E2M1_SIGNED_VALUES[8].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn signed_grid_is_magnitude_table_plus_sign_bit() {
+        // the decomposition the AVX2 decode kernel performs in registers
+        // (magnitude permute over E2M1_VALUES, sign from code bit 3):
+        // it must agree with the signed table for all 16 codes, bitwise
+        for code in 0u32..16 {
+            let composed =
+                E2M1_VALUES[(code & 7) as usize].to_bits() ^ ((code & 8) << 28);
+            assert_eq!(
+                E2M1_SIGNED_VALUES[code as usize].to_bits(),
+                composed,
+                "code {code}"
+            );
+        }
     }
 
     #[test]

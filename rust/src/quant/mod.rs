@@ -19,6 +19,11 @@
 //! bit-identical to full-context recomputation, and conditions the Averis
 //! split with a frozen calibration mean where the token-mean degenerates
 //! at decode (see DESIGN.md §6).
+//!
+//! The packed inner loops (decode, FMA streams, RTNE quantize/pack) run
+//! through the runtime-dispatched SIMD microkernels in [`simd`]
+//! (AVX2/SSE2/scalar, DESIGN.md §9); every vector path is pinned bitwise
+//! to the scalar oracle, so the dispatch level is invisible in results.
 
 pub mod averis;
 pub mod fp4;
@@ -30,6 +35,7 @@ pub mod packed;
 pub mod pipeline;
 pub mod recipe;
 pub mod rowq;
+pub mod simd;
 pub mod sr;
 pub mod svd_split;
 
@@ -42,4 +48,5 @@ pub use packed::{packed_matmul, packed_matmul_bt};
 pub use pipeline::{GemmKind, QuantPipeline};
 pub use recipe::QuantRecipe;
 pub use rowq::{rowq_matmul, FrozenLinear, RowQuantMat};
+pub use simd::SimdLevel;
 pub use sr::{SrStream, SrTicket};

@@ -35,6 +35,7 @@ use super::fp4::{
     e2m1_decode, e2m1_encode, e2m1_quantize, e2m1_quantize_sr, E2M1_BYTE_PAIR_LUT, E2M1_MAX,
 };
 use super::fp8::{e4m3_quantize, e8m0_quantize, E4M3_MAX};
+use super::simd;
 use super::sr::SrTicket;
 use crate::tensor::{parallel, Mat, Rng};
 
@@ -150,12 +151,18 @@ impl QuantizedMat {
                 out[jj - j0] = E2M1_BYTE_PAIR_LUT[row_codes[jj / 2] as usize][1] * s;
                 jj += 1;
             }
-            // aligned interior: two elements per byte lookup
-            while jj + 1 < jend {
-                let pair = &E2M1_BYTE_PAIR_LUT[row_codes[jj / 2] as usize];
-                out[jj - j0] = pair[0] * s;
-                out[jj + 1 - j0] = pair[1] * s;
-                jj += 2;
+            // aligned interior: two elements per code byte, through the
+            // dispatched decode kernel (in-register nibble expansion on
+            // AVX2, the byte-pair LUT otherwise — bit-identical either way)
+            let npairs = (jend - jj) / 2;
+            if npairs > 0 {
+                let b0 = jj / 2;
+                simd::decode_byte_pairs(
+                    &row_codes[b0..b0 + npairs],
+                    s,
+                    &mut out[jj - j0..jj - j0 + 2 * npairs],
+                );
+                jj += 2 * npairs;
             }
             // ragged tail element: the lo nibble of its byte
             if jj < jend {
@@ -455,18 +462,32 @@ impl Nvfp4Quantizer {
                         // multiply by the reciprocal, exactly like the fused
                         // path, so codes round identically bit for bit
                         let inv = 1.0 / full;
-                        for j in j0..j1 {
-                            let q = match (&mut rng, self.cfg.rounding) {
-                                (Some(r), Rounding::Stochastic) => {
-                                    e2m1_quantize_sr(xrow[j] * inv, r)
+                        match self.cfg.rounding {
+                            Rounding::Rtne => {
+                                // block starts are even (block sizes are
+                                // multiples of 2), so this block's codes
+                                // start on a byte boundary and own their
+                                // bytes outright — the dispatched kernel
+                                // overwrites them whole
+                                debug_assert_eq!(j0 % 2, 0);
+                                simd::quantize_pack_rtne(
+                                    &xrow[j0..j1],
+                                    inv,
+                                    &mut row_codes[j0 / 2..j1.div_ceil(2)],
+                                );
+                            }
+                            Rounding::Stochastic => {
+                                // SR walks one sequential per-row RNG
+                                // stream: stays scalar at every level
+                                let r = rng.as_mut().expect("SR storage path needs an Rng");
+                                for j in j0..j1 {
+                                    let code = e2m1_encode(e2m1_quantize_sr(xrow[j] * inv, r));
+                                    if j % 2 == 0 {
+                                        row_codes[j / 2] |= code;
+                                    } else {
+                                        row_codes[j / 2] |= code << 4;
+                                    }
                                 }
-                                _ => e2m1_quantize(xrow[j] * inv),
-                            };
-                            let code = e2m1_encode(q);
-                            if j % 2 == 0 {
-                                row_codes[j / 2] |= code;
-                            } else {
-                                row_codes[j / 2] |= code << 4;
                             }
                         }
                     }

@@ -22,6 +22,10 @@
 //!   the output has too few rows to split — the l=1 continuous-batching
 //!   decode step — workers split the output *columns* instead, each
 //!   decoding only its own stripe of every slab (no redundancy at all).
+//! * **SIMD microkernels** (`quant::simd`, DESIGN.md §9): the axpy/dot
+//!   inner loops and the byte-pair decode dispatch at runtime to
+//!   AVX2/SSE2/scalar forms that are pinned bitwise to the scalar oracle
+//!   (`tests/simd.rs`), so the ISA level never shows up in the results.
 //!
 //! Only bounded per-worker scratch is ever decoded: one K-slab stripe plus
 //! an `MR`-row activation tile in the ikj kernels, and an `RB`-row
@@ -50,6 +54,7 @@
 //! this.
 
 use super::nvfp4::QuantizedMat;
+use super::simd;
 use crate::tensor::parallel::{self, min_cols_for as par_min_cols, min_rows_for as par_min_rows};
 use crate::tensor::{scratch, Mat};
 use std::panic::{self, AssertUnwindSafe};
@@ -102,7 +107,11 @@ fn decode_wslab(
 /// `crows` the `nr × width` output tile. Fusing rows only interleaves
 /// *independent* per-row FMA streams — each output element still sees its
 /// own `c += a·w` sequence in the same k order — so the tiling (and where
-/// tile boundaries fall) cannot change any element's bits.
+/// tile boundaries fall) cannot change any element's bits. The streams
+/// themselves run through the dispatched `simd::axpy`/`simd::axpy4`
+/// kernels (bitwise-pinned to this loop's scalar form — DESIGN.md §9);
+/// the zero-skip tests stay scalar per lane, so skip semantics are
+/// untouched at every dispatch level.
 fn slab_tile_ikj(xb: &[f32], kw: usize, nr: usize, wslab: &[f32], width: usize, crows: &mut [f32]) {
     debug_assert!((1..=MR).contains(&nr));
     debug_assert_eq!(crows.len(), nr * width);
@@ -115,12 +124,7 @@ fn slab_tile_ikj(xb: &[f32], kw: usize, nr: usize, wslab: &[f32], width: usize, 
             let (a0, a1, a2, a3) = (xb[t], xb[KB + t], xb[2 * KB + t], xb[3 * KB + t]);
             if a0 != 0.0 && a1 != 0.0 && a2 != 0.0 && a3 != 0.0 {
                 // all four lanes live: one pass, four FMA streams per ŵ load
-                for (j, &wv) in w.iter().enumerate() {
-                    c0[j] += a0 * wv;
-                    c1[j] += a1 * wv;
-                    c2[j] += a2 * wv;
-                    c3[j] += a3 * wv;
-                }
+                simd::axpy4(c0, c1, c2, c3, [a0, a1, a2, a3], w);
             } else {
                 // some lane hit matmul's zero skip: update live lanes one by
                 // one (same per-element op sequence as the fused pass)
@@ -128,9 +132,7 @@ fn slab_tile_ikj(xb: &[f32], kw: usize, nr: usize, wslab: &[f32], width: usize, 
                     if av == 0.0 {
                         continue;
                     }
-                    for (j, &wv) in w.iter().enumerate() {
-                        c[j] += av * wv;
-                    }
+                    simd::axpy(c, av, w);
                 }
             }
         }
@@ -142,10 +144,7 @@ fn slab_tile_ikj(xb: &[f32], kw: usize, nr: usize, wslab: &[f32], width: usize, 
                 if av == 0.0 {
                     continue;
                 }
-                let w = &wslab[t * width..(t + 1) * width];
-                for (cj, &wv) in crow.iter_mut().zip(w.iter()) {
-                    *cj += av * wv;
-                }
+                simd::axpy(crow, av, &wslab[t * width..(t + 1) * width]);
             }
         }
     }
@@ -455,15 +454,15 @@ pub fn packed_matmul_bt(a: &QuantizedMat, b: &QuantizedMat) -> Mat {
                         if nr == MR {
                             // four dot products share each brow element;
                             // every accumulator still sums t = 0..k in
-                            // ascending order
-                            let (mut s0, mut s1) = (0.0f32, 0.0f32);
-                            let (mut s2, mut s3) = (0.0f32, 0.0f32);
-                            for (t, &bv) in brow.iter().enumerate() {
-                                s0 += arows[t] * bv;
-                                s1 += arows[k + t] * bv;
-                                s2 += arows[2 * k + t] * bv;
-                                s3 += arows[3 * k + t] * bv;
-                            }
+                            // ascending order (simd::dot4 keeps the four
+                            // sums in four distinct lanes for that reason)
+                            let [s0, s1, s2, s3] = simd::dot4(
+                                &arows[..k],
+                                &arows[k..2 * k],
+                                &arows[2 * k..3 * k],
+                                &arows[3 * k..],
+                                brow,
+                            );
                             crows[(ib0 + i0) * n + j] = s0;
                             crows[(ib0 + i0 + 1) * n + j] = s1;
                             crows[(ib0 + i0 + 2) * n + j] = s2;

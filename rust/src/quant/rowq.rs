@@ -64,7 +64,10 @@ impl RowQuantMat {
     /// per-call decode tax of `FrozenLinear::forward` (which runs this on
     /// every serving step) is just the packed codes it actually produces.
     /// The staged copy (and optional μ subtraction) is arithmetic-identical
-    /// to the old per-row materialization, so no bits change.
+    /// to the old per-row materialization, so no bits change. The
+    /// `quantize_store` call it stages into rides the dispatched SIMD
+    /// quantize/pack kernel (DESIGN.md §9) — per-row serving quantization
+    /// gets the vector path with no code here.
     fn quantize_with(quant: &Nvfp4Quantizer, x: &Mat, mu: Option<&[f32]>) -> RowQuantMat {
         let mut tmp = Mat::from_vec(1, x.cols, scratch::take_vec(x.cols));
         let rowmats = (0..x.rows)

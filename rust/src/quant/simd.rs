@@ -1,0 +1,729 @@
+//! Runtime-dispatched SIMD microkernels for the packed hot path
+//! (DESIGN.md §9).
+//!
+//! Five operations carry essentially all of the packed engine's inner-loop
+//! time, and all five are exposed here behind one dispatch table:
+//!
+//! * [`axpy`] / [`axpy4`] — the `c[j] += a·w[j]` streams of the ikj
+//!   microkernel (`quant::packed::slab_tile_ikj`);
+//! * [`dot4`] — the four ascending-k dot products of the `packed_matmul_bt`
+//!   MR=4 block;
+//! * [`decode_byte_pairs`] — the aligned interior of
+//!   `QuantizedMat::decode_row_range`: packed E2M1 code bytes → scaled f32,
+//!   two elements per byte;
+//! * [`quantize_pack_rtne`] — the RTNE quantize+pack inner loop of
+//!   `quantize_store` (and therefore of the serving `RowQuantMat` staging
+//!   and the pipeline quantize stage).
+//!
+//! **Dispatch contract.** The level ([`SimdLevel`]) is resolved once —
+//! lazily on first use, or eagerly by `tensor::parallel::install` — from
+//! the `AVERIS_SIMD` env var (`off`/`scalar`, `sse2`, `avx2`) clamped to
+//! what `is_x86_feature_detected!` reports, and can be forced by tests,
+//! benches, and the `--simd` CLI flag through [`force`] (also clamped, so
+//! requesting AVX2 on a CPU without it degrades to the best supported
+//! level instead of faulting). Non-x86_64 targets always resolve to
+//! [`SimdLevel::Scalar`]; the scalar kernels are compiled unconditionally
+//! on every target.
+//!
+//! **Bit-exactness contract.** The scalar kernels are the canonical
+//! oracle — they restate, op for op, the loops the packed kernels ran
+//! before this module existed — and every vector path must match them
+//! *bitwise*, which the SIMD arms earn structurally rather than by
+//! tolerance:
+//!
+//! * vector lanes only ever span **independent output elements** (eight
+//!   `c[j]` columns, four dot accumulators), never the reduction axis, so
+//!   each element keeps exactly its scalar accumulation tree in exactly
+//!   ascending-k order;
+//! * multiplies and adds stay **unfused** (`_mm256_mul_ps` +
+//!   `_mm256_add_ps`, never an FMA intrinsic), matching Rust's strict
+//!   `c + a * w` semantics per IEEE-754 operation;
+//! * decode reproduces `E2M1_BYTE_PAIR_LUT[byte][i] * s` as an in-register
+//!   8-entry magnitude permute plus a sign-bit XOR (so code 8's **-0.0**
+//!   survives) and the same single multiply by `s`;
+//! * RTNE quantize replicates `e2m1_quantize`'s three-segment
+//!   `round_ties_even` form with the exact-integer magic-constant round
+//!   (`(x + 1.5·2²³) - 1.5·2²³`, exact ties-even for `|x| ≤ 12`) and
+//!   derives the 4-bit code arithmetically from the grid value.
+//!
+//! `tests/simd.rs` pins every path against the scalar oracle at every
+//! forced level, across NVFP4/MXFP4 × 1/2/4 threads × the adversarial
+//! shape set of `tests/pool.rs`. Stochastic rounding stays scalar
+//! everywhere (each row walks one sequential counter-seeded RNG stream),
+//! as does the μ-dot of `mu_times_packed_rows` (its zero-skip walks μ, not
+//! the decoded row) — only their decode sides vectorize.
+
+use super::fp4::{e2m1_encode, e2m1_quantize, E2M1_BYTE_PAIR_LUT};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+
+/// An instruction-set level the dispatcher can select. Ordered by
+/// capability: `Scalar < Sse2 < Avx2`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdLevel {
+    /// Portable scalar kernels — the canonical bitwise oracle.
+    Scalar,
+    /// 4-wide f32 (x86_64 baseline): the axpy/dot FMA-stream kernels.
+    Sse2,
+    /// 8-wide f32 + integer AVX2: all five kernels, including the
+    /// in-register E2M1 decode and the vector RTNE quantize/pack.
+    Avx2,
+}
+
+/// All levels, weakest first — benches iterate this and skip what
+/// [`detect`] rules out.
+pub const ALL_LEVELS: [SimdLevel; 3] = [SimdLevel::Scalar, SimdLevel::Sse2, SimdLevel::Avx2];
+
+impl fmt::Display for SimdLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2 => "avx2",
+        })
+    }
+}
+
+const UNRESOLVED: u8 = u8::MAX;
+
+/// The resolved dispatch level (`UNRESOLVED` until first use).
+static LEVEL: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+/// Set once [`force`] has pinned a level, so a later
+/// [`init_from_env`] (e.g. a second `parallel::install`) cannot clobber
+/// an explicit `--simd` choice with the env/auto resolution.
+static FORCED: AtomicBool = AtomicBool::new(false);
+
+fn to_u8(l: SimdLevel) -> u8 {
+    match l {
+        SimdLevel::Scalar => 0,
+        SimdLevel::Sse2 => 1,
+        SimdLevel::Avx2 => 2,
+    }
+}
+
+fn from_u8(v: u8) -> SimdLevel {
+    match v {
+        0 => SimdLevel::Scalar,
+        1 => SimdLevel::Sse2,
+        _ => SimdLevel::Avx2,
+    }
+}
+
+/// The best level this CPU supports. SSE2 is part of the x86_64 baseline,
+/// so detection only has to probe AVX2; every other target is scalar.
+#[cfg(target_arch = "x86_64")]
+pub fn detect() -> SimdLevel {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        SimdLevel::Avx2
+    } else {
+        SimdLevel::Sse2
+    }
+}
+
+/// The best level this CPU supports (non-x86_64: always scalar).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn detect() -> SimdLevel {
+    SimdLevel::Scalar
+}
+
+/// Parse a level name as spelled by `--simd` / `AVERIS_SIMD`.
+pub fn parse_level(s: &str) -> Option<SimdLevel> {
+    match s.to_ascii_lowercase().as_str() {
+        "off" | "scalar" => Some(SimdLevel::Scalar),
+        "sse2" => Some(SimdLevel::Sse2),
+        "avx2" => Some(SimdLevel::Avx2),
+        _ => None,
+    }
+}
+
+fn resolve() -> SimdLevel {
+    match std::env::var("AVERIS_SIMD") {
+        Ok(v) => match parse_level(&v) {
+            Some(l) => l.min(detect()),
+            None => {
+                eprintln!(
+                    "AVERIS_SIMD={v}: unknown level (expected off|sse2|avx2), autodetecting"
+                );
+                detect()
+            }
+        },
+        Err(_) => detect(),
+    }
+}
+
+/// The active dispatch level, resolving it on first use (env override
+/// clamped to detection). Every kernel entry point below loads this once
+/// per call — one relaxed atomic read, invisible next to a GEMM.
+pub fn level() -> SimdLevel {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != UNRESOLVED {
+        return from_u8(v);
+    }
+    let l = resolve();
+    LEVEL.store(to_u8(l), Ordering::Relaxed);
+    l
+}
+
+/// Resolve the level eagerly from env + detection. `parallel::install`
+/// calls this so a run's level is pinned alongside its thread count; a
+/// level already pinned by [`force`] is left alone.
+pub fn init_from_env() -> SimdLevel {
+    if FORCED.load(Ordering::Relaxed) {
+        return level();
+    }
+    let l = resolve();
+    LEVEL.store(to_u8(l), Ordering::Relaxed);
+    l
+}
+
+/// Force a dispatch level (tests, benches, the `--simd` CLI flag),
+/// clamped to what the CPU supports — asking for AVX2 where only SSE2
+/// exists degrades gracefully instead of executing illegal instructions.
+/// Returns the level actually installed.
+pub fn force(l: SimdLevel) -> SimdLevel {
+    let eff = l.min(detect());
+    LEVEL.store(to_u8(eff), Ordering::Relaxed);
+    FORCED.store(true, Ordering::Relaxed);
+    eff
+}
+
+/// Drop any [`force`]/env pin and return to lazy auto-resolution — test
+/// hygiene so one test's forced level cannot leak into the next.
+pub fn reset_to_auto() {
+    FORCED.store(false, Ordering::Relaxed);
+    LEVEL.store(UNRESOLVED, Ordering::Relaxed);
+}
+
+// ------------------------------------------------------------- kernels --
+
+/// `c[j] += a · w[j]` over one slab row — the single-lane FMA stream of
+/// the ikj microkernel (callers have already applied the zero skip to
+/// `a`). Vector lanes are eight independent `j` columns; each element
+/// still receives exactly one unfused multiply-add.
+#[inline]
+pub fn axpy(c: &mut [f32], a: f32, w: &[f32]) {
+    debug_assert_eq!(c.len(), w.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::axpy_avx2(c, a, w) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe { x86::axpy_sse2(c, a, w) },
+        _ => axpy_scalar(c, a, w),
+    }
+}
+
+fn axpy_scalar(c: &mut [f32], a: f32, w: &[f32]) {
+    for (cj, &wv) in c.iter_mut().zip(w.iter()) {
+        *cj += a * wv;
+    }
+}
+
+/// The fused four-lane stream of the MR=4 microkernel: `cr[j] += a[r]·w[j]`
+/// for four independent output rows against one shared ŵ slab row. The
+/// vector form walks the rows one after another instead of interleaving
+/// them per `j` — every element's single multiply-add is unchanged, and
+/// the rows never alias, so the store order is unobservable in the bits.
+#[inline]
+pub fn axpy4(
+    c0: &mut [f32],
+    c1: &mut [f32],
+    c2: &mut [f32],
+    c3: &mut [f32],
+    a: [f32; 4],
+    w: &[f32],
+) {
+    debug_assert!(c0.len() == w.len() && c1.len() == w.len());
+    debug_assert!(c2.len() == w.len() && c3.len() == w.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::axpy4_avx2(c0, c1, c2, c3, a, w) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe { x86::axpy4_sse2(c0, c1, c2, c3, a, w) },
+        _ => axpy4_scalar(c0, c1, c2, c3, a, w),
+    }
+}
+
+fn axpy4_scalar(
+    c0: &mut [f32],
+    c1: &mut [f32],
+    c2: &mut [f32],
+    c3: &mut [f32],
+    a: [f32; 4],
+    w: &[f32],
+) {
+    for (j, &wv) in w.iter().enumerate() {
+        c0[j] += a[0] * wv;
+        c1[j] += a[1] * wv;
+        c2[j] += a[2] * wv;
+        c3[j] += a[3] * wv;
+    }
+}
+
+/// Four ascending-t dot products sharing one `b` stream — the MR=4 block
+/// of `packed_matmul_bt`. The vector form keeps the four accumulators in
+/// four distinct lanes of one register (`[s0 s1 s2 s3]`), broadcasting
+/// `b[t]` across them: each lane's sum is built by exactly the scalar
+/// sequence `s += aᵣ[t]·b[t]` for t = 0, 1, 2, …, so widening further
+/// (which would split each accumulation tree) is deliberately off the
+/// table, and AVX2 reuses the 4-lane body.
+#[inline]
+pub fn dot4(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], b: &[f32]) -> [f32; 4] {
+    debug_assert!(a0.len() == b.len() && a1.len() == b.len());
+    debug_assert!(a2.len() == b.len() && a3.len() == b.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 | SimdLevel::Sse2 => unsafe { x86::dot4_sse2(a0, a1, a2, a3, b) },
+        _ => dot4_scalar(a0, a1, a2, a3, b),
+    }
+}
+
+fn dot4_scalar(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], b: &[f32]) -> [f32; 4] {
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for (t, &bv) in b.iter().enumerate() {
+        s0 += a0[t] * bv;
+        s1 += a1[t] * bv;
+        s2 += a2[t] * bv;
+        s3 += a3[t] * bv;
+    }
+    [s0, s1, s2, s3]
+}
+
+/// Decode packed E2M1 code bytes to scaled f32: `out[2i] = lut[codes[i]].lo
+/// · s`, `out[2i+1] = lut[codes[i]].hi · s` — the aligned interior of
+/// `QuantizedMat::decode_row_range`. The AVX2 arm expands four code bytes
+/// per step entirely in registers (variable-shift nibble extraction, an
+/// 8-entry `permutevar8x32` magnitude table, a sign-bit XOR that preserves
+/// code 8's -0.0) and applies the same one multiply by `s` per element.
+/// SSE2 lacks the permute, so below AVX2 this stays on the byte-pair LUT.
+#[inline]
+pub fn decode_byte_pairs(codes: &[u8], s: f32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 2 * codes.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::decode_byte_pairs_avx2(codes, s, out) },
+        _ => decode_byte_pairs_scalar(codes, s, out),
+    }
+}
+
+fn decode_byte_pairs_scalar(codes: &[u8], s: f32, out: &mut [f32]) {
+    for (i, &byte) in codes.iter().enumerate() {
+        let pair = &E2M1_BYTE_PAIR_LUT[byte as usize];
+        out[2 * i] = pair[0] * s;
+        out[2 * i + 1] = pair[1] * s;
+    }
+}
+
+/// RTNE-quantize one scale block and pack nibbles:
+/// `code[j] = e2m1_encode(e2m1_quantize(src[j] · inv))`, lo nibble = even
+/// `j`. `src` must start at an even column (every scale block does — block
+/// sizes are even) and `out` must hold `src.len().div_ceil(2)` bytes,
+/// which are fully overwritten. The AVX2 arm mirrors the branchless
+/// three-segment form of `e2m1_quantize` with exact-integer rounds and
+/// blends, takes the sign bit straight from `src[j] · inv`, and derives
+/// the magnitude code arithmetically from the grid value — bit-for-bit
+/// the scalar codes, including -0.0 → code 8. Below AVX2 this stays
+/// scalar (SSE2 has neither a ties-even round nor a blend).
+#[inline]
+pub fn quantize_pack_rtne(src: &[f32], inv: f32, out: &mut [u8]) {
+    debug_assert_eq!(out.len(), src.len().div_ceil(2));
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::quantize_pack_rtne_avx2(src, inv, out) },
+        _ => quantize_pack_rtne_scalar(src, inv, out),
+    }
+}
+
+fn quantize_pack_rtne_scalar(src: &[f32], inv: f32, out: &mut [u8]) {
+    let n2 = src.len() & !1;
+    let mut j = 0usize;
+    while j < n2 {
+        let lo = e2m1_encode(e2m1_quantize(src[j] * inv));
+        let hi = e2m1_encode(e2m1_quantize(src[j + 1] * inv));
+        out[j / 2] = lo | (hi << 4);
+        j += 2;
+    }
+    if j < src.len() {
+        out[j / 2] = e2m1_encode(e2m1_quantize(src[j] * inv));
+    }
+}
+
+// ---------------------------------------------------------- x86 kernels --
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::super::fp4::E2M1_VALUES;
+    use std::arch::x86_64::*;
+
+    /// Magic constant for exact-integer round-to-nearest-even in f32:
+    /// for `0 ≤ x ≤ 12`, `(x + 1.5·2²³) - 1.5·2²³` lands on ulp-1.0
+    /// territory, so the add rounds to the nearest integer (ties to even)
+    /// and the subtract is exact — bit-identical to `f32::round_ties_even`
+    /// on the quantizer's whole input range, on SSE2-era hardware.
+    const RTE_MAGIC: f32 = 12_582_912.0;
+
+    /// # Safety
+    /// Caller must check `c.len() == w.len()` (debug-asserted upstream).
+    pub unsafe fn axpy_sse2(c: &mut [f32], a: f32, w: &[f32]) {
+        let n = c.len();
+        let cp = c.as_mut_ptr();
+        let wp = w.as_ptr();
+        let av = _mm_set1_ps(a);
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let prod = _mm_mul_ps(av, _mm_loadu_ps(wp.add(j)));
+            _mm_storeu_ps(cp.add(j), _mm_add_ps(_mm_loadu_ps(cp.add(j)), prod));
+            j += 4;
+        }
+        while j < n {
+            *cp.add(j) += a * *wp.add(j);
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must check `c.len() == w.len()`, and the CPU must support
+    /// AVX2 (the dispatcher's clamp guarantees it).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_avx2(c: &mut [f32], a: f32, w: &[f32]) {
+        let n = c.len();
+        let cp = c.as_mut_ptr();
+        let wp = w.as_ptr();
+        let av = _mm256_set1_ps(a);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let prod = _mm256_mul_ps(av, _mm256_loadu_ps(wp.add(j)));
+            _mm256_storeu_ps(cp.add(j), _mm256_add_ps(_mm256_loadu_ps(cp.add(j)), prod));
+            j += 8;
+        }
+        while j < n {
+            *cp.add(j) += a * *wp.add(j);
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// All four row slices must be `w.len()` long.
+    pub unsafe fn axpy4_sse2(
+        c0: &mut [f32],
+        c1: &mut [f32],
+        c2: &mut [f32],
+        c3: &mut [f32],
+        a: [f32; 4],
+        w: &[f32],
+    ) {
+        axpy_sse2(c0, a[0], w);
+        axpy_sse2(c1, a[1], w);
+        axpy_sse2(c2, a[2], w);
+        axpy_sse2(c3, a[3], w);
+    }
+
+    /// # Safety
+    /// All four row slices must be `w.len()` long; CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy4_avx2(
+        c0: &mut [f32],
+        c1: &mut [f32],
+        c2: &mut [f32],
+        c3: &mut [f32],
+        a: [f32; 4],
+        w: &[f32],
+    ) {
+        axpy_avx2(c0, a[0], w);
+        axpy_avx2(c1, a[1], w);
+        axpy_avx2(c2, a[2], w);
+        axpy_avx2(c3, a[3], w);
+    }
+
+    /// Four dot accumulators in four lanes of one register; `b[t]`
+    /// broadcast per step. Also serves the AVX2 level: widening to eight
+    /// lanes would split each accumulator's addition tree.
+    ///
+    /// # Safety
+    /// All four `a` slices must be `b.len()` long.
+    pub unsafe fn dot4_sse2(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], b: &[f32]) -> [f32; 4] {
+        let mut acc = _mm_setzero_ps();
+        for (t, &bv) in b.iter().enumerate() {
+            let av = _mm_set_ps(
+                *a3.get_unchecked(t),
+                *a2.get_unchecked(t),
+                *a1.get_unchecked(t),
+                *a0.get_unchecked(t),
+            );
+            acc = _mm_add_ps(acc, _mm_mul_ps(av, _mm_set1_ps(bv)));
+        }
+        let mut out = [0.0f32; 4];
+        _mm_storeu_ps(out.as_mut_ptr(), acc);
+        out
+    }
+
+    /// # Safety
+    /// `out.len() == 2 * codes.len()`; CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn decode_byte_pairs_avx2(codes: &[u8], s: f32, out: &mut [f32]) {
+        // magnitude table: E2M1_VALUES[code & 7] via an in-register permute
+        let mags = _mm256_loadu_ps(E2M1_VALUES.as_ptr());
+        let sv = _mm256_set1_ps(s);
+        // lanes 0..7 hold nibbles 0..7 of the 4-byte word: shift amounts
+        // 0,4,…,28 (set_epi32 lists the high lane first)
+        let shifts = _mm256_set_epi32(28, 24, 20, 16, 12, 8, 4, 0);
+        let nib_mask = _mm256_set1_epi32(0xF);
+        let mag_mask = _mm256_set1_epi32(0x7);
+        let sign_bit = _mm256_set1_epi32(0x8);
+        let n4 = codes.len() / 4 * 4;
+        let mut i = 0usize;
+        while i < n4 {
+            let word = u32::from_le_bytes([
+                *codes.get_unchecked(i),
+                *codes.get_unchecked(i + 1),
+                *codes.get_unchecked(i + 2),
+                *codes.get_unchecked(i + 3),
+            ]);
+            let nib = _mm256_and_si256(
+                _mm256_srlv_epi32(_mm256_set1_epi32(word as i32), shifts),
+                nib_mask,
+            );
+            let mag = _mm256_permutevar8x32_ps(mags, _mm256_and_si256(nib, mag_mask));
+            // bit 3 of the code → the f32 sign bit, XORed in so code 8
+            // decodes to -0.0 exactly
+            let sign = _mm256_slli_epi32::<28>(_mm256_and_si256(nib, sign_bit));
+            let val = _mm256_xor_ps(mag, _mm256_castsi256_ps(sign));
+            _mm256_storeu_ps(out.as_mut_ptr().add(2 * i), _mm256_mul_ps(val, sv));
+            i += 4;
+        }
+        super::decode_byte_pairs_scalar(&codes[i..], s, &mut out[2 * i..]);
+    }
+
+    /// Exact round-to-nearest-even for lanes in `[0, 12]`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn round_rte(x: __m256) -> __m256 {
+        let magic = _mm256_set1_ps(RTE_MAGIC);
+        _mm256_sub_ps(_mm256_add_ps(x, magic), magic)
+    }
+
+    /// # Safety
+    /// `out.len() == src.len().div_ceil(2)`; CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_pack_rtne_avx2(src: &[f32], inv: f32, out: &mut [u8]) {
+        let invv = _mm256_set1_ps(inv);
+        let abs_mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+        let sign_mask = _mm256_set1_epi32(0x8000_0000u32 as i32);
+        let half = _mm256_set1_ps(0.5);
+        let two = _mm256_set1_ps(2.0);
+        let four = _mm256_set1_ps(4.0);
+        let six = _mm256_set1_ps(6.0);
+        let seg1 = _mm256_set1_ps(1.75);
+        let seg2 = _mm256_set1_ps(3.5);
+        let n = src.len();
+        let n8 = n / 8 * 8;
+        let mut lanes = [0i32; 8];
+        let mut j = 0usize;
+        while j < n8 {
+            let v = _mm256_mul_ps(_mm256_loadu_ps(src.as_ptr().add(j)), invv);
+            // |v| clamped to the grid max; min_ps returns its second
+            // operand when the first is NaN, matching f32::min here
+            let mag = _mm256_min_ps(_mm256_and_ps(v, abs_mask), six);
+            // the three uniform-step segments of e2m1_quantize (each round
+            // operand is ≤ 12, inside round_rte's exact range)
+            let lo = _mm256_mul_ps(round_rte(_mm256_mul_ps(mag, two)), half);
+            let mid = round_rte(mag);
+            let hi = _mm256_mul_ps(round_rte(_mm256_mul_ps(mag, half)), two);
+            let ge1 = _mm256_blendv_ps(hi, mid, _mm256_cmp_ps::<_CMP_LT_OQ>(mag, seg2));
+            let q = _mm256_blendv_ps(ge1, lo, _mm256_cmp_ps::<_CMP_LT_OQ>(mag, seg1));
+            // grid value → magnitude code, arithmetically (exact on the
+            // grid): {0,.5,1,1.5}→2q, {2,3}→q+2, {4,6}→q/2+4
+            let code_f = _mm256_blendv_ps(
+                _mm256_blendv_ps(
+                    _mm256_add_ps(_mm256_mul_ps(q, half), four),
+                    _mm256_add_ps(q, two),
+                    _mm256_cmp_ps::<_CMP_LT_OQ>(q, four),
+                ),
+                _mm256_mul_ps(q, two),
+                _mm256_cmp_ps::<_CMP_LT_OQ>(q, two),
+            );
+            // sign bit of v (not of q — they agree, including -0.0) → bit 3
+            let sign = _mm256_srli_epi32::<28>(_mm256_and_si256(_mm256_castps_si256(v), sign_mask));
+            let code = _mm256_or_si256(_mm256_cvtps_epi32(code_f), sign);
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, code);
+            let base = j / 2;
+            for p in 0..4 {
+                *out.get_unchecked_mut(base + p) =
+                    (lanes[2 * p] as u8) | ((lanes[2 * p + 1] as u8) << 4);
+            }
+            j += 8;
+        }
+        super::quantize_pack_rtne_scalar(&src[j..], inv, &mut out[j / 2..]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+    use std::sync::{Mutex, MutexGuard};
+
+    /// The dispatch level is process-global, so the tests here (which
+    /// force and reset it) serialize on one lock.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn lock() -> MutexGuard<'static, ()> {
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn levels_to_try() -> Vec<SimdLevel> {
+        ALL_LEVELS.iter().copied().filter(|&l| l <= detect()).collect()
+    }
+
+    /// Run `f` with the dispatcher pinned at `l`, restoring auto after.
+    /// Safe against concurrent lib tests: every level computes identical
+    /// bits, so a racing force elsewhere cannot change any outcome.
+    fn at_level<T>(l: SimdLevel, f: impl FnOnce() -> T) -> T {
+        force(l);
+        let r = f();
+        reset_to_auto();
+        r
+    }
+
+    #[test]
+    fn force_clamps_to_detected_support() {
+        let _g = lock();
+        let eff = force(SimdLevel::Avx2);
+        assert!(eff <= detect(), "force must never exceed hardware support");
+        assert_eq!(level(), eff);
+        assert_eq!(force(SimdLevel::Scalar), SimdLevel::Scalar, "scalar is always available");
+        reset_to_auto();
+    }
+
+    #[test]
+    fn level_names_parse_and_print() {
+        let _g = lock();
+        for l in ALL_LEVELS {
+            assert_eq!(parse_level(&l.to_string()), Some(l));
+        }
+        assert_eq!(parse_level("off"), Some(SimdLevel::Scalar));
+        assert_eq!(parse_level("AVX2"), Some(SimdLevel::Avx2));
+        assert_eq!(parse_level("neon"), None);
+    }
+
+    #[test]
+    fn axpy_kernels_match_scalar_bitwise() {
+        let _g = lock();
+        let mut rng = Rng::new(0x51D);
+        // lengths straddling both vector widths and their tails
+        for n in [0usize, 1, 3, 4, 7, 8, 9, 31, 32, 33, 100] {
+            let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let base: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let a = rng.normal();
+            let mut want = base.clone();
+            axpy_scalar(&mut want, a, &w);
+            for l in levels_to_try() {
+                let mut got = base.clone();
+                at_level(l, || axpy(&mut got, a, &w));
+                for (g, e) in got.iter().zip(want.iter()) {
+                    assert_eq!(g.to_bits(), e.to_bits(), "axpy n={n} at {l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axpy4_kernels_match_scalar_bitwise() {
+        let _g = lock();
+        let mut rng = Rng::new(0x51E);
+        for n in [1usize, 5, 8, 13, 32, 67] {
+            let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let base: Vec<Vec<f32>> =
+                (0..4).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+            let a = [rng.normal(), rng.normal(), rng.normal(), rng.normal()];
+            let mut want = base.clone();
+            {
+                let [w0, w1, w2, w3] = &mut want[..] else { unreachable!() };
+                axpy4_scalar(w0, w1, w2, w3, a, &w);
+            }
+            for l in levels_to_try() {
+                let mut got = base.clone();
+                at_level(l, || {
+                    let [g0, g1, g2, g3] = &mut got[..] else { unreachable!() };
+                    axpy4(g0, g1, g2, g3, a, &w);
+                });
+                for (r, (gv, ev)) in got.iter().zip(want.iter()).enumerate() {
+                    for (g, e) in gv.iter().zip(ev.iter()) {
+                        assert_eq!(g.to_bits(), e.to_bits(), "axpy4 n={n} row={r} at {l}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot4_kernels_match_scalar_bitwise() {
+        let _g = lock();
+        let mut rng = Rng::new(0x51F);
+        for n in [1usize, 2, 5, 16, 33, 129] {
+            let rows: Vec<Vec<f32>> =
+                (0..4).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let want = dot4_scalar(&rows[0], &rows[1], &rows[2], &rows[3], &b);
+            for l in levels_to_try() {
+                let got = at_level(l, || dot4(&rows[0], &rows[1], &rows[2], &rows[3], &b));
+                for (g, e) in got.iter().zip(want.iter()) {
+                    assert_eq!(g.to_bits(), e.to_bits(), "dot4 n={n} at {l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_kernels_match_scalar_bitwise_over_all_bytes() {
+        let _g = lock();
+        // every code byte (both nibbles, including the ±0.0 codes), odd
+        // byte counts for the vector tail, and a negative scale
+        let codes: Vec<u8> = (0..=255u8).collect();
+        for &s in &[0.37f32, 1.0, -2.5] {
+            for take in [0usize, 1, 3, 4, 5, 97, 256] {
+                let mut want = vec![0.0f32; 2 * take];
+                decode_byte_pairs_scalar(&codes[..take], s, &mut want);
+                for l in levels_to_try() {
+                    let mut got = vec![0.0f32; 2 * take];
+                    at_level(l, || decode_byte_pairs(&codes[..take], s, &mut got));
+                    for (i, (g, e)) in got.iter().zip(want.iter()).enumerate() {
+                        assert_eq!(g.to_bits(), e.to_bits(), "decode[{i}] take={take} at {l}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_pack_kernels_match_scalar_on_dense_grid_sweep() {
+        let _g = lock();
+        // 1/64 steps hit every RTNE midpoint exactly (the ties-to-even
+        // cases), plus ±0 and saturating magnitudes
+        let mut src: Vec<f32> = (-448..=448).map(|i| i as f32 / 64.0).collect();
+        src.extend_from_slice(&[0.0, -0.0, 6.0, -6.0, 100.0, -100.0, 1e-30, -1e-30]);
+        for &inv in &[1.0f32, 0.73, 1.9] {
+            for take in [1usize, 2, 7, 8, 9, 16, src.len()] {
+                let mut want = vec![0u8; take.div_ceil(2)];
+                quantize_pack_rtne_scalar(&src[..take], inv, &mut want);
+                for l in levels_to_try() {
+                    let mut got = vec![0xAAu8; take.div_ceil(2)]; // dirty: must be overwritten
+                    at_level(l, || quantize_pack_rtne(&src[..take], inv, &mut got));
+                    assert_eq!(got, want, "quantize_pack take={take} inv={inv} at {l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_pack_preserves_negative_zero_codes() {
+        let _g = lock();
+        // tiny negatives round to magnitude 0 but must keep the sign bit
+        // (code 8), exactly like the scalar e2m1_encode path
+        let src = [-1e-6f32, 1e-6, -0.0, 0.0, -0.2, 0.2, -1e-6, -0.0];
+        for l in levels_to_try() {
+            let mut got = [0u8; 4];
+            at_level(l, || quantize_pack_rtne(&src, 1.0, &mut got));
+            assert_eq!(got, [0x08, 0x08, 0x08, 0x88], "at {l}");
+        }
+    }
+}

@@ -458,9 +458,13 @@ pub fn pool() -> PoolHandle {
 /// Size the persistent pool once for a run: sets the [`threads`] knob and
 /// pre-spawns the workers it implies. This is what the CLI `--threads`
 /// flag resolves to — after it, steady-state kernel calls neither spawn
-/// threads nor grow the pool.
+/// threads nor grow the pool. The SIMD dispatch level resolves here too
+/// (`quant::simd`, from `AVERIS_SIMD` + CPU detection), so a run pins its
+/// whole execution configuration in one place; a level already forced via
+/// `--simd` / `simd::force` is left alone.
 pub fn install(threads_knob: usize) -> PoolHandle {
     set_threads(threads_knob);
+    crate::quant::simd::init_from_env();
     let p = pool();
     p.warm();
     p

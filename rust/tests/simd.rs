@@ -1,0 +1,205 @@
+//! Differential bit-identity tests for the SIMD microkernel dispatch
+//! (DESIGN.md §9): every dispatch level the host supports must produce
+//! exactly the bits of the forced-scalar oracle — the packed RTNE
+//! quantize/pack, the ticketed-SR quantize/pack, range decode, and every
+//! packed GEMM entry point — across NVFP4 and MXFP4, 1/2/4 threads, and
+//! the adversarial shape set from tests/pool.rs (l = 1, ragged K, n < JT,
+//! row-sharded shared-slab shapes).
+//!
+//! The dispatch level is a process-global knob, so every test serializes
+//! on one file-local mutex (the tests/pool.rs pattern). Other test
+//! binaries are separate processes and cannot interfere. `force` clamps
+//! to hardware support and ignores `AVERIS_SIMD`, so these tests exercise
+//! the vector paths even on the CI leg that exports `AVERIS_SIMD=off`.
+
+use averis::quant::packed::{mu_times_packed_rows, packed_matmul, packed_matmul_bt};
+use averis::quant::simd::{self, SimdLevel};
+use averis::quant::{
+    rowq_matmul, Nvfp4Config, Nvfp4Quantizer, QuantizedMat, Rounding, RowQuantMat, SrTicket,
+};
+use averis::tensor::{parallel, Mat, Rng};
+use std::sync::Mutex;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Dispatch levels the host can actually run, ascending (scalar first).
+fn levels() -> Vec<SimdLevel> {
+    simd::ALL_LEVELS.into_iter().filter(|&l| l <= simd::detect()).collect()
+}
+
+/// Run `f` with the dispatch level forced to `l`, restoring autodetection
+/// after (the next `level()` call re-resolves env + hardware).
+fn at_level<T>(l: SimdLevel, f: impl FnOnce() -> T) -> T {
+    simd::force(l);
+    let r = f();
+    simd::reset_to_auto();
+    r
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: elem {i}: {x} vs {y}");
+    }
+}
+
+fn assert_qmat_eq(a: &QuantizedMat, b: &QuantizedMat, what: &str) {
+    assert_eq!(a.codes, b.codes, "{what}: packed code bytes");
+    assert_bits_eq(&a.scales, &b.scales, &format!("{what}: block scales"));
+    assert_eq!(a.tensor_scale.to_bits(), b.tensor_scale.to_bits(), "{what}: tensor scale");
+}
+
+/// The tests/pool.rs adversarial set: l = 1 skinny decode (inline and
+/// column-sharded), ragged K (33, 67, 21), n < JT (9, 3, 24), and the
+/// row-sharded shared-slab training shape (64, 256, 64).
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 33, 40),
+    (7, 67, 9),
+    (64, 256, 64),
+    (1, 512, 1024),
+    (5, 21, 3),
+    (16, 8, 16),
+    (9, 128, 33),
+    (2, 48, 24),
+];
+
+/// Decode a handful of adversarial ranges of `q` — full rows, odd starts
+/// (hi-nibble head), short block-straddling interiors, single trailing
+/// elements — and concatenate the results for bit comparison.
+fn decode_ranges(q: &QuantizedMat) -> Vec<f32> {
+    let cols = q.cols;
+    let ranges = [
+        (0, cols),
+        (1.min(cols), cols),
+        (cols / 3, (cols / 3 + 5).min(cols)),
+        (cols.saturating_sub(1), cols),
+    ];
+    let mut out = Vec::new();
+    for i in [0, q.rows - 1] {
+        for &(j0, j1) in &ranges {
+            let mut buf = vec![0.0f32; j1 - j0];
+            q.decode_row_range(i, j0, j1, &mut buf);
+            out.extend_from_slice(&buf);
+        }
+    }
+    out
+}
+
+/// The full differential matrix: for every supported level, every kernel
+/// family recomputed at that level must be bitwise identical to the
+/// forced-scalar result — packed codes, block scales, decoded ranges, and
+/// GEMM outputs — for NVFP4 and MXFP4 at 1/2/4 threads.
+#[test]
+fn forced_levels_bitwise_equal_scalar_oracle() {
+    let _g = lock();
+    let lv = levels();
+    let mut rng = Rng::new(0xA11D);
+    for cfg in [Nvfp4Config::nvfp4(), Nvfp4Config::mxfp4()] {
+        let quant = Nvfp4Quantizer::new(cfg);
+        let sr_quant = Nvfp4Quantizer::new(Nvfp4Config { rounding: Rounding::Stochastic, ..cfg });
+        for &(l, k, n) in SHAPES {
+            let x = Mat::randn(l, k, 1.0, &mut rng);
+            let w = Mat::randn(k, n, 0.3, &mut rng);
+            let wt = w.transpose();
+            let mu: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+            for &threads in &[1usize, 2, 4] {
+                parallel::set_threads(threads);
+                let tag = format!("[block {}] ({l},{k},{n})@{threads}", cfg.block);
+
+                // scalar oracle for every artifact this shape produces
+                let (o_xq, o_wq, o_sr, o_rq) = at_level(SimdLevel::Scalar, || {
+                    (
+                        quant.quantize_store(&x),
+                        quant.quantize_store(&wt),
+                        sr_quant.quantize_store_sr(&x, SrTicket::new(0xBEEF, 7)),
+                        RowQuantMat::quantize(&quant, &x),
+                    )
+                });
+                let (o_mm, o_bt, o_mu, o_rowq, o_dec) = at_level(SimdLevel::Scalar, || {
+                    (
+                        packed_matmul(&o_xq, &o_wq),
+                        packed_matmul_bt(&o_xq, &o_wq),
+                        mu_times_packed_rows(&mu, &o_wq),
+                        rowq_matmul(&o_rq, &o_wq),
+                        decode_ranges(&o_wq),
+                    )
+                });
+
+                for &level in &lv {
+                    let t = format!("{tag} {level}");
+                    let xq = at_level(level, || quant.quantize_store(&x));
+                    let wq = at_level(level, || quant.quantize_store(&wt));
+                    let srq = at_level(level, || {
+                        sr_quant.quantize_store_sr(&x, SrTicket::new(0xBEEF, 7))
+                    });
+                    let rq = at_level(level, || RowQuantMat::quantize(&quant, &x));
+                    assert_qmat_eq(&xq, &o_xq, &format!("{t} quantize_store(x)"));
+                    assert_qmat_eq(&wq, &o_wq, &format!("{t} quantize_store(wt)"));
+                    assert_qmat_eq(&srq, &o_sr, &format!("{t} quantize_store_sr(x)"));
+
+                    let mm = at_level(level, || packed_matmul(&xq, &wq));
+                    let bt = at_level(level, || packed_matmul_bt(&xq, &wq));
+                    let muv = at_level(level, || mu_times_packed_rows(&mu, &wq));
+                    let rv = at_level(level, || rowq_matmul(&rq, &wq));
+                    let dec = at_level(level, || decode_ranges(&wq));
+                    assert_bits_eq(&mm.data, &o_mm.data, &format!("{t} packed_matmul"));
+                    assert_bits_eq(&bt.data, &o_bt.data, &format!("{t} packed_matmul_bt"));
+                    assert_bits_eq(&muv, &o_mu, &format!("{t} mu_times_packed_rows"));
+                    assert_bits_eq(&rv.data, &o_rowq.data, &format!("{t} rowq_matmul"));
+                    assert_bits_eq(&dec, &o_dec, &format!("{t} decode_row_range"));
+                }
+            }
+        }
+    }
+    parallel::set_threads(0);
+}
+
+/// The default (autodetected or env-selected) dispatch level must match
+/// the forced-scalar oracle on the path real callers take — no forcing on
+/// the compute side.
+#[test]
+fn auto_level_matches_scalar_oracle() {
+    let _g = lock();
+    simd::reset_to_auto();
+    let mut rng = Rng::new(0x51D);
+    let quant = Nvfp4Quantizer::nvfp4();
+    let x = Mat::randn(9, 67, 1.0, &mut rng);
+    let w = Mat::randn(67, 33, 0.3, &mut rng);
+    let xq = quant.quantize_store(&x);
+    let wq = quant.quantize_store(&w.transpose());
+    let auto = packed_matmul(&xq, &wq);
+    let (o_xq, o_wq) = at_level(SimdLevel::Scalar, || {
+        (quant.quantize_store(&x), quant.quantize_store(&w.transpose()))
+    });
+    let oracle = at_level(SimdLevel::Scalar, || packed_matmul(&o_xq, &o_wq));
+    assert_qmat_eq(&xq, &o_xq, "auto quantize_store(x)");
+    assert_qmat_eq(&wq, &o_wq, "auto quantize_store(wt)");
+    assert_bits_eq(&auto.data, &oracle.data, "auto packed_matmul");
+}
+
+/// Forcing a level the CPU lacks degrades to the best supported one
+/// instead of faulting, forcing scalar always lands on scalar, and the
+/// documented flag spellings parse.
+#[test]
+fn dispatcher_degrades_gracefully_and_parses_levels() {
+    let _g = lock();
+    let det = simd::detect();
+    let got = simd::force(SimdLevel::Avx2);
+    assert_eq!(got, SimdLevel::Avx2.min(det));
+    assert_eq!(simd::level(), got);
+    assert_eq!(simd::force(SimdLevel::Scalar), SimdLevel::Scalar);
+    assert_eq!(simd::level(), SimdLevel::Scalar);
+    simd::reset_to_auto();
+    assert!(simd::level() <= det);
+
+    assert_eq!(simd::parse_level("off"), Some(SimdLevel::Scalar));
+    assert_eq!(simd::parse_level("Scalar"), Some(SimdLevel::Scalar));
+    assert_eq!(simd::parse_level("SSE2"), Some(SimdLevel::Sse2));
+    assert_eq!(simd::parse_level("avx2"), Some(SimdLevel::Avx2));
+    assert_eq!(simd::parse_level("neon"), None);
+    simd::reset_to_auto();
+}
