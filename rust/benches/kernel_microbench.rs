@@ -29,8 +29,8 @@
 //!                                    available level end to end)
 
 use averis::bench_harness::{
-    arg_value, bench, has_flag, record_markdown_block, simd_from_args, threads_from_args,
-    BenchOpts, TablePrinter,
+    arg_value, bench, has_flag, record_markdown_block, simd_from_args, telemetry_from_args,
+    threads_from_args, BenchOpts, TablePrinter,
 };
 use averis::quant::simd;
 use averis::quant::averis::mean_residual_split_inplace;
@@ -38,12 +38,14 @@ use averis::quant::gemm::QuantGemm;
 use averis::quant::hadamard::tiled_hadamard_inplace;
 use averis::quant::packed::{packed_matmul, packed_matmul_v1};
 use averis::quant::{rowq_matmul, Nvfp4Quantizer, QuantRecipe, RowQuantMat};
+use averis::telemetry;
 use averis::tensor::parallel::Vehicle;
 use averis::tensor::{parallel, Mat, Rng};
 
 fn main() {
     let threads = threads_from_args();
     let simd_level = simd_from_args();
+    let telemetry_on = telemetry_from_args();
     let smoke = has_flag("smoke");
     let record = arg_value("record");
     let vehicle = match parallel::vehicle() {
@@ -52,8 +54,9 @@ fn main() {
     };
     println!(
         "kernel_microbench: threads={threads}, vehicle={vehicle}, simd={simd_level} \
-         (detected {})",
-        simd::detect()
+         (detected {}), telemetry={}",
+        simd::detect(),
+        if telemetry_on { "on" } else { "off" }
     );
     println!();
     let mut rng = Rng::new(21);
@@ -457,6 +460,84 @@ fn main() {
         match record_markdown_block(path, "kernel-simd", &mds) {
             Ok(()) => println!("\nrecorded SIMD-level table into {path}"),
             Err(e) => eprintln!("\nfailed to record SIMD-level table into {path}: {e}"),
+        }
+    }
+
+    // telemetry on vs off: the instrumented hot-path kernels timed with the
+    // telemetry layer disabled (one relaxed atomic load per span site — the
+    // default) and enabled (spans record into per-thread shards). The delta
+    // column is what instrumentation costs; the *disabled* row is what every
+    // non-telemetry run pays, which the hot-path contract holds at the noise
+    // floor. Single thread so shard contention can't flatter the off column.
+    println!();
+    let t7 = TablePrinter::new(
+        &["telemetry overhead", "shape", "off ms", "on ms", "delta"],
+        &[22, 16, 10, 10, 8],
+    );
+    let mut mdt = String::from(
+        "| kernel | shape | telemetry off ms | telemetry on ms | delta (on/off) |\n\
+         |--------|-------|-----------------:|----------------:|---------------:|\n",
+    );
+    let (tl, tk, tn) = if smoke {
+        (32usize, 64usize, 32usize)
+    } else {
+        (256usize, 512usize, 512usize)
+    };
+    let xg = Mat::randn(tl, tk, 1.0, &mut rng);
+    let wg = Mat::randn(tk, tn, 0.1, &mut rng);
+    let xq = quant.quantize_store(&xg);
+    let wq = quant.quantize_store(&wg.transpose());
+    let mut telem_kernels: Vec<(&str, String, Box<dyn FnMut() + '_>)> = vec![
+        (
+            "quantize_store",
+            format!("{tk}x{tn}"),
+            Box::new(|| {
+                std::hint::black_box(quant.quantize_store(&wg));
+            }),
+        ),
+        (
+            "packed fwd",
+            format!("{tl}x{tk}x{tn}"),
+            Box::new(|| {
+                std::hint::black_box(packed_matmul(&xq, &wq));
+            }),
+        ),
+    ];
+    parallel::set_threads(1);
+    for (kernel, shp, f) in telem_kernels.iter_mut() {
+        telemetry::set_enabled(false);
+        let off = bench(opts, || f());
+        telemetry::set_enabled(true);
+        let on = bench(opts, || f());
+        telemetry::set_enabled(false);
+        let delta = (on.mean() / off.mean() - 1.0) * 100.0;
+        t7.row(&[
+            kernel.to_string(),
+            shp.clone(),
+            format!("{:.3}", off.mean()),
+            format!("{:.3}", on.mean()),
+            format!("{delta:+.1}%"),
+        ]);
+        mdt.push_str(&format!(
+            "| {kernel} | {shp} | {:.3} | {:.3} | {delta:+.1}% |\n",
+            off.mean(),
+            on.mean()
+        ));
+    }
+    drop(telem_kernels);
+    parallel::set_threads(0);
+    telemetry::reset();
+    telemetry::set_enabled(telemetry_on);
+    mdt.push_str(
+        "\nProtocol: `cargo bench --bench kernel_microbench -- --record EXPERIMENTS.md` \
+         (single thread, same kernel closure timed back-to-back with the telemetry layer \
+         toggled; bits are identical either way — `cargo test --test telemetry` pins that, \
+         this table only prices the spans).",
+    );
+    if let Some(path) = &record {
+        match record_markdown_block(path, "telemetry-overhead", &mdt) {
+            Ok(()) => println!("\nrecorded telemetry-overhead table into {path}"),
+            Err(e) => eprintln!("\nfailed to record telemetry-overhead table into {path}: {e}"),
         }
     }
 

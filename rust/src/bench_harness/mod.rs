@@ -131,6 +131,24 @@ pub fn simd_from_args() -> crate::quant::simd::SimdLevel {
     crate::quant::simd::level()
 }
 
+/// Apply a `--telemetry [PATH]` flag from the bench binary's argv to the
+/// telemetry layer and return whether it ended up enabled. Bench binaries
+/// call this after [`simd_from_args`]; with no flag the layer stays in its
+/// environment-resolved (`AVERIS_TELEMETRY`) state. The bench harness also
+/// toggles the layer around its overhead sections via
+/// `telemetry::set_enabled`, so this only sets the *initial* state.
+pub fn telemetry_from_args() -> bool {
+    if has_flag("telemetry") {
+        let path = arg_value("telemetry")
+            .filter(|v| !v.starts_with("--"))
+            .unwrap_or_else(|| crate::telemetry::DEFAULT_PATH.to_string());
+        crate::telemetry::enable(&path);
+    } else {
+        crate::telemetry::init_from_env();
+    }
+    crate::telemetry::enabled()
+}
+
 /// Value of a `--name value` flag in the bench binary's argv, if present.
 /// The one flag-scanning loop of this module — `threads_from_args` and
 /// `has_flag` are thin wrappers over the same argv walk.

@@ -26,6 +26,8 @@ pub enum Command {
     Generate,
     /// Continuous-batching serving throughput bench.
     ServeBench,
+    /// Render a text report from a telemetry JSONL snapshot stream.
+    TelemetryReport,
     /// Print artifact/manifest info.
     Info,
     Help,
@@ -41,6 +43,7 @@ impl Command {
             "quant-demo" => Ok(Command::QuantDemo),
             "generate" => Ok(Command::Generate),
             "serve-bench" => Ok(Command::ServeBench),
+            "telemetry-report" => Ok(Command::TelemetryReport),
             "info" => Ok(Command::Info),
             "help" | "--help" | "-h" => Ok(Command::Help),
             other => Err(format!("unknown command '{other}' — try `averis help`")),
@@ -67,6 +70,13 @@ COMMANDS:
                                            default autodetects, AVERIS_SIMD
                                            overrides. every level computes
                                            identical bits — DESIGN.md §9)
+              --telemetry [PATH]          (JSONL runtime/numerics snapshots;
+                                           bare flag writes telemetry.jsonl.
+                                           AVERIS_TELEMETRY overrides the
+                                           default; recorded bits are
+                                           identical on and off)
+              --telemetry-stride N        (sample FP4 numerics gauges on
+                                           1-in-N quantize calls; default 1)
               --corpus-seed N             (synthetic-corpus generator seed)
               --save FILE                 (write an f32 checkpoint + frozen
                                            calibration means after training)
@@ -85,6 +95,9 @@ COMMANDS:
               --record FILE               (rewrite the serve-bench block of
                                            EXPERIMENTS.md with the results)
               --out DIR                   (CSV output)
+  telemetry-report
+              render a text summary from a telemetry JSONL snapshot stream
+              --file FILE                 (default: telemetry.jsonl)
   analyze     regenerate Figs. 1-5, App. B/C/D, Theorem-1 validation
               --steps N (instrumented training length)  --out DIR
   table1      Table 1: loss gap + downstream probes across recipes

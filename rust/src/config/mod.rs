@@ -67,6 +67,11 @@ pub struct ExperimentConfig {
     /// init/SR seeds and vice versa.
     pub corpus_seed: u64,
     pub out_dir: String,
+    /// JSONL telemetry snapshot path (`--telemetry[=path]`); `None` leaves
+    /// the telemetry layer in its environment-resolved state.
+    pub telemetry: Option<String>,
+    /// Numerics-gauge sampling stride (1 = every quantize call).
+    pub telemetry_stride: u32,
 }
 
 /// Historical default corpus seed (the value previously hardcoded in the
@@ -90,6 +95,8 @@ impl ExperimentConfig {
             corpus,
             corpus_seed: DEFAULT_CORPUS_SEED,
             out_dir: "runs".to_string(),
+            telemetry: None,
+            telemetry_stride: 1,
         }
     }
 
@@ -122,6 +129,17 @@ pub fn apply_overrides(exp: &mut ExperimentConfig, file: &ConfigFile) -> Result<
             "recipe" => exp.recipe = v.parse()?,
             "model" => exp.preset = ModelPreset::parse(v)?,
             "out_dir" => exp.out_dir = v.clone(),
+            "telemetry" => {
+                exp.telemetry = match v.as_str() {
+                    "off" | "false" | "0" => None,
+                    "on" | "true" | "1" => Some(crate::telemetry::DEFAULT_PATH.to_string()),
+                    path => Some(path.to_string()),
+                }
+            }
+            "telemetry_stride" => {
+                exp.telemetry_stride =
+                    v.parse().map_err(|e| format!("telemetry_stride: {e}"))?
+            }
             other => return Err(format!("unknown config key '{other}'")),
         }
     }

@@ -15,6 +15,14 @@ pub fn sim_train_run(exp: &ExperimentConfig, capture_taps: bool) -> Result<Train
     // one persistent pool serves the whole experiment — corpus generation,
     // training, and eval — sized here from the experiment's thread knob
     crate::tensor::parallel::install(exp.train.threads);
+    // config-file/experiment telemetry settings apply only when nothing more
+    // specific (CLI flag, AVERIS_TELEMETRY) already configured the layer
+    if let Some(path) = &exp.telemetry {
+        if !crate::telemetry::configured() {
+            crate::telemetry::enable(path);
+            crate::telemetry::set_stride(exp.telemetry_stride);
+        }
+    }
     let corpus = Corpus::generate(exp.corpus, exp.corpus_seed);
     let mut tc = exp.train;
     tc.tap_steps = [capture_taps, capture_taps];
@@ -43,5 +51,9 @@ pub fn sim_train_run(exp: &ExperimentConfig, capture_taps: bool) -> Result<Train
         .num("final_eval_loss", result.final_eval_loss as f64)
         .num("sec_per_step", result.sec_per_step)
         .write(run.file("summary.json"))?;
+    if crate::telemetry::enabled() {
+        crate::telemetry::snapshot("train_summary", exp.train.steps as u64)
+            .write(run.file("telemetry_summary.json"))?;
+    }
     Ok(result)
 }

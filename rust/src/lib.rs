@@ -29,5 +29,6 @@ pub mod model;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod tensor;
 pub mod train;

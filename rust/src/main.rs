@@ -67,6 +67,17 @@ fn experiment_from_args(args: &CliArgs) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("out") {
         exp.out_dir = v.to_string();
     }
+    if let Some(v) = args.get("telemetry") {
+        // bare `--telemetry` parses as "true": use the default path
+        exp.telemetry = Some(if v == "true" {
+            averis::telemetry::DEFAULT_PATH.to_string()
+        } else {
+            v.to_string()
+        });
+    }
+    if let Some(v) = args.get_parse::<u32>("telemetry-stride").map_err(anyhow::Error::msg)? {
+        exp.telemetry_stride = v;
+    }
     Ok(exp)
 }
 
@@ -88,8 +99,26 @@ fn apply_simd_flag(args: &CliArgs) -> Result<()> {
     Ok(())
 }
 
+/// Apply `--telemetry [PATH]` / `--telemetry-stride N` before any command
+/// runs, so every subsystem (train, generate, serve-bench) sees the layer
+/// configured. A CLI flag wins over `AVERIS_TELEMETRY`: `enable` marks the
+/// layer configured, which makes the env resolution in
+/// `parallel::install` a no-op. Purely observational — recorded bits are
+/// identical with telemetry on, off, or sampled.
+fn apply_telemetry_flag(args: &CliArgs) -> Result<()> {
+    if let Some(v) = args.get("telemetry") {
+        let path = if v == "true" { averis::telemetry::DEFAULT_PATH } else { v };
+        averis::telemetry::enable(path);
+    }
+    if let Some(n) = args.get_parse::<u32>("telemetry-stride").map_err(anyhow::Error::msg)? {
+        averis::telemetry::set_stride(n);
+    }
+    Ok(())
+}
+
 fn run(args: &CliArgs) -> Result<()> {
     apply_simd_flag(args)?;
+    apply_telemetry_flag(args)?;
     match args.command {
         Command::Help => {
             println!("{USAGE}");
@@ -103,7 +132,17 @@ fn run(args: &CliArgs) -> Result<()> {
         Command::Table1 => table1_cmd(args),
         Command::Generate => generate_cmd(args),
         Command::ServeBench => serve_bench_cmd(args),
+        Command::TelemetryReport => telemetry_report_cmd(args),
     }
+}
+
+fn telemetry_report_cmd(args: &CliArgs) -> Result<()> {
+    let path = args.get_or("file", averis::telemetry::DEFAULT_PATH);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading telemetry stream {path}"))?;
+    let report = averis::telemetry::report::render_report(&text).map_err(anyhow::Error::msg)?;
+    print!("{report}");
+    Ok(())
 }
 
 fn info(args: &CliArgs) -> Result<()> {
@@ -344,27 +383,43 @@ fn serve_bench_cmd(args: &CliArgs) -> Result<()> {
         &cfg, &params, &calib, &batches, n_prompts, prompt_len, max_new, seed,
     );
     println!(
-        "{:>10} {:>10} {:>10} {:>10} {:>12}",
-        "max_active", "sessions", "tokens", "wall_s", "tok/s"
+        "{:>10} {:>10} {:>10} {:>10} {:>12} {:>9} {:>10} {:>13}",
+        "max_active", "sessions", "tokens", "wall_s", "tok/s", "queue_hw", "occupancy", "dec tok/step"
     );
     let mut md = String::from(
-        "| max_active | sessions | decode tokens | wall (s) | tokens/sec | vs sequential |\n\
-         |-----------:|---------:|--------------:|---------:|-----------:|--------------:|\n",
+        "| max_active | sessions | decode tokens | wall (s) | tokens/sec | queue HW | \
+         mean occupancy | decode tok/step | vs sequential |\n\
+         |-----------:|---------:|--------------:|---------:|-----------:|---------:|\
+         ---------------:|----------------:|--------------:|\n",
     );
     // "vs sequential" only means something against the max_active = 1 row
     let base_tps = rows.iter().find(|r| r.max_active == 1).map(|r| r.tok_per_s);
     for r in &rows {
         println!(
-            "{:>10} {:>10} {:>10} {:>10.3} {:>12.1}",
-            r.max_active, r.sessions, r.generated, r.wall_s, r.tok_per_s
+            "{:>10} {:>10} {:>10} {:>10.3} {:>12.1} {:>9} {:>10.2} {:>13.2}",
+            r.max_active,
+            r.sessions,
+            r.generated,
+            r.wall_s,
+            r.tok_per_s,
+            r.queue_high_water,
+            r.mean_occupancy,
+            r.decode_tok_per_step
         );
         let vs_seq = match base_tps {
             Some(b) => format!("{:.2}x", r.tok_per_s / b),
             None => "n/a".to_string(),
         };
         md.push_str(&format!(
-            "| {} | {} | {} | {:.3} | {:.1} | {vs_seq} |\n",
-            r.max_active, r.sessions, r.generated, r.wall_s, r.tok_per_s
+            "| {} | {} | {} | {:.3} | {:.1} | {} | {:.2} | {:.2} | {vs_seq} |\n",
+            r.max_active,
+            r.sessions,
+            r.generated,
+            r.wall_s,
+            r.tok_per_s,
+            r.queue_high_water,
+            r.mean_occupancy,
+            r.decode_tok_per_step
         ));
     }
     md.push_str(&format!(
@@ -378,7 +433,16 @@ fn serve_bench_cmd(args: &CliArgs) -> Result<()> {
     let run = RunDir::create(&args.get_or("out", "runs"), "serve_bench")?;
     let mut csv = CsvSink::create(
         run.file("serve_bench.csv"),
-        &["max_active", "sessions", "tokens", "wall_s", "tok_per_s"],
+        &[
+            "max_active",
+            "sessions",
+            "tokens",
+            "wall_s",
+            "tok_per_s",
+            "queue_high_water",
+            "mean_occupancy",
+            "decode_tok_per_step",
+        ],
     )?;
     for r in &rows {
         csv.row(&[
@@ -387,6 +451,9 @@ fn serve_bench_cmd(args: &CliArgs) -> Result<()> {
             r.generated as f64,
             r.wall_s,
             r.tok_per_s,
+            r.queue_high_water as f64,
+            r.mean_occupancy,
+            r.decode_tok_per_step,
         ])?;
     }
     println!("csv written to {}", run.file("serve_bench.csv").display());

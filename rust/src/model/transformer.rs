@@ -111,6 +111,9 @@ impl Transformer {
         let mut x = self.embed(params, tokens);
         let mut blocks = Vec::with_capacity(self.cfg.n_layers);
         for (li, bp) in params.blocks.iter().enumerate() {
+            // attribute this block's quantize-numerics gauges to layer li
+            // (a thread-local tag read only when a sample fires)
+            crate::telemetry::set_layer(li);
             taps.record(li, TapStage::BlockInput, &x);
             // attention sub-block (pre-norm, residual)
             let (xn, attn_norm) = rmsnorm_forward(&x, &bp.attn_norm);
@@ -145,6 +148,7 @@ impl Transformer {
                 ffn: ffn_cache,
             });
         }
+        crate::telemetry::clear_layer();
         let (xf, final_norm) = rmsnorm_forward(&x, &params.final_norm);
         // LM head: tied → logits = Xf · embedᵀ (kept unquantized like the
         // paper, whose W4A4G4 applies to the transformer GeMMs; the huge
@@ -199,6 +203,7 @@ impl Transformer {
 
         // blocks in reverse
         for li in (0..params.blocks.len()).rev() {
+            crate::telemetry::set_layer(li);
             let bp = &params.blocks[li];
             let bc = &cache.blocks[li];
             // FFN sub-block: x_out = x_mid + ffn(norm(x_mid))
@@ -260,6 +265,7 @@ impl Transformer {
             // analysis via taps; kept in the cache for potential re-use)
             let _ = (&bc.attn_norm_out, &bc.ffn_norm_out);
         }
+        crate::telemetry::clear_layer();
 
         // embedding backward: scatter-add token-row grads
         for (i, &t) in cache.tokens.iter().enumerate() {
@@ -344,6 +350,7 @@ impl Transformer {
         }
 
         for (li, blk) in ckpt.blocks.iter().enumerate() {
+            crate::telemetry::set_layer(li);
             // attention sub-block (pre-norm, residual)
             let (xn, _) = rmsnorm_forward(&x, &blk.attn_norm);
             let mut q = blk.wq.forward(&xn);
@@ -393,6 +400,7 @@ impl Transformer {
             let (fin, _) = rmsnorm_forward(&x, &blk.ffn_norm);
             x.axpy(1.0, &blk.ffn.forward(&fin));
         }
+        crate::telemetry::clear_layer();
 
         let (xf, _) = rmsnorm_forward(&x, &ckpt.final_norm);
         let logits = match &ckpt.lm_head {

@@ -37,6 +37,7 @@ use super::fp4::{
 use super::fp8::{e4m3_quantize, e8m0_quantize, E4M3_MAX};
 use super::simd;
 use super::sr::SrTicket;
+use crate::telemetry::{self, Span};
 use crate::tensor::{parallel, Mat, Rng};
 
 /// Element rounding mode.
@@ -420,6 +421,8 @@ impl Nvfp4Quantizer {
         if self.cfg.rounding == Rounding::Stochastic {
             assert!(sr.is_some(), "SR storage path needs an SrTicket");
         }
+        // timing only — the span has no FP side effects (hot-path contract)
+        let store_span = telemetry::span(Span::QuantizeStore);
         let tscale = self.tensor_scale(x.abs_max());
         let block = self.cfg.block;
         let (rows, cols) = (x.rows, x.cols);
@@ -494,6 +497,7 @@ impl Nvfp4Quantizer {
                 }
             },
         );
+        drop(store_span);
         QuantizedMat { rows, cols, block, codes, scales, tensor_scale: tscale }
     }
 

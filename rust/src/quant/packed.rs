@@ -55,6 +55,7 @@
 
 use super::nvfp4::QuantizedMat;
 use super::simd;
+use crate::telemetry::{self, Span};
 use crate::tensor::parallel::{self, min_cols_for as par_min_cols, min_rows_for as par_min_rows};
 use crate::tensor::{scratch, Mat};
 use std::panic::{self, AssertUnwindSafe};
@@ -295,6 +296,8 @@ where
     if l == 0 || n == 0 || k == 0 {
         return c;
     }
+    // spans time, never compute: one relaxed load when telemetry is off
+    let gemm_span = telemetry::span(Span::GemmIkj);
     let row_workers = parallel::worker_count(l, par_min_rows(k * n));
     let col_workers = parallel::worker_count(n, par_min_cols(l * k));
     let prefer_rows = row_workers > col_workers || (row_workers == col_workers && l >= n);
@@ -327,6 +330,7 @@ where
             stripe_ikj(l, k, decode_x, wt, col0, width, stripe);
         });
     }
+    drop(gemm_span);
     c
 }
 
@@ -422,6 +426,7 @@ pub fn packed_matmul_bt(a: &QuantizedMat, b: &QuantizedMat) -> Mat {
     if m == 0 || n == 0 {
         return c;
     }
+    let gemm_span = telemetry::span(Span::GemmBt);
     // worker count resolved through the same shared helpers as the ikj
     // driver (no local partition heuristics), then dispatched on the
     // persistent pool via the shared splitting primitive
@@ -484,6 +489,7 @@ pub fn packed_matmul_bt(a: &QuantizedMat, b: &QuantizedMat) -> Mat {
             ib0 = ib1;
         }
     });
+    drop(gemm_span);
     c
 }
 
@@ -501,6 +507,7 @@ pub fn mu_times_packed_rows(mu: &[f32], q: &QuantizedMat) -> Vec<f32> {
     if rows == 0 {
         return out;
     }
+    let gemm_span = telemetry::span(Span::GemmMu);
     // same shared worker-count helpers as every other kernel here, and
     // arena scratch for the per-worker decode row (fully rewritten per row)
     let workers = parallel::worker_count(rows, par_min_rows(q.cols));
@@ -518,6 +525,7 @@ pub fn mu_times_packed_rows(mu: &[f32], q: &QuantizedMat) -> Vec<f32> {
             *o = acc;
         }
     });
+    drop(gemm_span);
     out
 }
 

@@ -43,6 +43,7 @@ use super::recipe::QuantRecipe;
 use super::sr::SrStream;
 use super::svd_split::{spectral_split, SVD_SPLIT_RANK};
 use crate::quant::averis::mean_residual_split_inplace;
+use crate::telemetry::{self, GemmOperand, StageKind};
 use crate::tensor::{Mat, Rng};
 use std::borrow::Cow;
 
@@ -120,6 +121,22 @@ fn store_operand(quant: &Nvfp4Quantizer, x: &Mat, sr: &mut SrStream) -> Quantize
     }
 }
 
+/// The telemetry stage slot for a GeMM kind (gauges are keyed
+/// layer × stage × operand).
+fn stage_kind(kind: GemmKind) -> StageKind {
+    match kind {
+        GemmKind::Forward => StageKind::Forward,
+        GemmKind::Dgrad => StageKind::Dgrad,
+        GemmKind::Wgrad => StageKind::Wgrad,
+    }
+}
+
+/// ‖μ̂‖₂ with f64 accumulation. Telemetry-only: the result never feeds any
+/// computed value, so the extra precision cannot perturb training bits.
+fn l2_norm(v: &[f32]) -> f32 {
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+}
+
 // ---------------------------------------------------------------- stages --
 
 /// Full-precision multiply (the BF16 reference recipe).
@@ -191,10 +208,37 @@ impl Stage for MeanSplit {
         "mean_split"
     }
 
-    fn run(&self, st: &mut GemmState<'_>, _cx: &mut StageCtx<'_>) {
+    fn run(&self, st: &mut GemmState<'_>, cx: &mut StageCtx<'_>) {
+        // the paper's "curse" as a live gauge: ‖μ̂‖ and the dynamic-range
+        // inflation amax(X)/amax(X−μ̂), sampled at the telemetry stride.
+        // Everything inside the `sample` arms only *reads* operands, so
+        // the split's computed bits are identical on and off.
+        let sample = telemetry::should_sample();
+        let amax_a = if sample { st.a.abs_max() } else { 0.0 };
         st.mean_a = Some(mean_residual_split_inplace(st.a.to_mut()));
+        if sample {
+            let mu = st.mean_a.as_ref().expect("just set");
+            telemetry::record_mean_split(
+                stage_kind(cx.kind),
+                GemmOperand::A,
+                l2_norm(mu),
+                amax_a,
+                st.a.abs_max(),
+            );
+        }
         if self.both {
+            let amax_b = if sample { st.b.abs_max() } else { 0.0 };
             st.mean_b = Some(mean_residual_split_inplace(st.b.to_mut()));
+            if sample {
+                let mu = st.mean_b.as_ref().expect("just set");
+                telemetry::record_mean_split(
+                    stage_kind(cx.kind),
+                    GemmOperand::B,
+                    l2_norm(mu),
+                    amax_b,
+                    st.b.abs_max(),
+                );
+            }
         }
     }
 }
@@ -226,22 +270,45 @@ impl Stage for Quantize {
     }
 
     fn run(&self, st: &mut GemmState<'_>, cx: &mut StageCtx<'_>) {
+        // numerics gauges (clip/flush fractions, scale-exponent histogram,
+        // amax) read the packed result against its source matrix in packing
+        // orientation; the sampled arms never touch the codes themselves
+        let sample = telemetry::should_sample();
+        let tk = stage_kind(cx.kind);
         let (qa, qb) = match cx.kind {
             // K is already the column axis of a; b packs via its transpose
-            GemmKind::Forward => (
-                store_operand(&cx.quant_a, &st.a, cx.sr),
-                store_operand(&cx.quant_b, &st.b.transpose(), cx.sr),
-            ),
+            GemmKind::Forward => {
+                let bt = st.b.transpose();
+                let qa = store_operand(&cx.quant_a, &st.a, cx.sr);
+                let qb = store_operand(&cx.quant_b, &bt, cx.sr);
+                if sample {
+                    telemetry::record_quant_numerics(tk, GemmOperand::A, &st.a, &qa);
+                    telemetry::record_quant_numerics(tk, GemmOperand::B, &bt, &qb);
+                }
+                (qa, qb)
+            }
             // K = cols of both operands: pack directly
-            GemmKind::Dgrad => (
-                store_operand(&cx.quant_a, &st.a, cx.sr),
-                store_operand(&cx.quant_b, &st.b, cx.sr),
-            ),
+            GemmKind::Dgrad => {
+                let qa = store_operand(&cx.quant_a, &st.a, cx.sr);
+                let qb = store_operand(&cx.quant_b, &st.b, cx.sr);
+                if sample {
+                    telemetry::record_quant_numerics(tk, GemmOperand::A, &st.a, &qa);
+                    telemetry::record_quant_numerics(tk, GemmOperand::B, &st.b, &qb);
+                }
+                (qa, qb)
+            }
             // K = rows of both operands: pack the transposes
-            GemmKind::Wgrad => (
-                store_operand(&cx.quant_a, &st.a.transpose(), cx.sr),
-                store_operand(&cx.quant_b, &st.b.transpose(), cx.sr),
-            ),
+            GemmKind::Wgrad => {
+                let at = st.a.transpose();
+                let bt = st.b.transpose();
+                let qa = store_operand(&cx.quant_a, &at, cx.sr);
+                let qb = store_operand(&cx.quant_b, &bt, cx.sr);
+                if sample {
+                    telemetry::record_quant_numerics(tk, GemmOperand::A, &at, &qa);
+                    telemetry::record_quant_numerics(tk, GemmOperand::B, &bt, &qb);
+                }
+                (qa, qb)
+            }
         };
         st.qa = Some(qa);
         st.qb = Some(qb);

@@ -35,6 +35,36 @@ pub struct EngineStats {
     pub prefill_tokens: usize,
     /// tokens sampled across all sessions
     pub generated_tokens: usize,
+    /// most sessions ever left waiting after an admit pass (queue depth
+    /// high-water: demand the batch cap could not absorb)
+    pub queue_high_water: usize,
+    /// Σ active-batch size over all steps (mean occupancy = this / steps)
+    pub occupancy_sum: usize,
+    /// steps whose batch was pure decode (no prefilling session)
+    pub decode_steps: usize,
+    /// tokens sampled on pure-decode steps
+    pub decode_tokens: usize,
+}
+
+impl EngineStats {
+    /// Mean in-flight batch size per step.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / self.steps as f64
+        }
+    }
+
+    /// Tokens per pure-decode step — the steady-state decode throughput of
+    /// the continuous batch, unpolluted by prefill-heavy steps.
+    pub fn decode_tokens_per_step(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / self.decode_steps as f64
+        }
+    }
 }
 
 /// A finished generation.
@@ -120,6 +150,16 @@ impl Engine {
         if self.sched.active.is_empty() {
             return false;
         }
+        // serving gauges: queue depth the cap could not absorb, batch
+        // occupancy, and the prefill/decode step classification
+        self.stats.queue_high_water = self.stats.queue_high_water.max(self.sched.pending_len());
+        self.stats.occupancy_sum += self.sched.active_len();
+        let pure_decode = self.sched.active.iter().all(|s| s.prefilled);
+        let step_span = crate::telemetry::span(if pure_decode {
+            crate::telemetry::Span::ServeDecode
+        } else {
+            crate::telemetry::Span::ServePrefill
+        });
         // assemble the ragged step batch: whole prompt for fresh sessions
         // (prefill), one token for decoding ones
         let mut row_counts: Vec<usize> = Vec::with_capacity(self.sched.active.len());
@@ -153,6 +193,11 @@ impl Engine {
             off += r;
         }
         self.stats.steps += 1;
+        if pure_decode {
+            self.stats.decode_steps += 1;
+            self.stats.decode_tokens += row_counts.len();
+        }
+        drop(step_span);
         for s in self.sched.evict_finished() {
             self.done.push(Completion { id: s.id, prompt: s.prompt, tokens: s.generated });
         }
@@ -191,6 +236,13 @@ pub struct ServeBenchRow {
     pub generated: usize,
     pub wall_s: f64,
     pub tok_per_s: f64,
+    /// deepest the pending queue ever got after admission (see
+    /// [`EngineStats::queue_high_water`])
+    pub queue_high_water: usize,
+    /// mean in-flight batch size per step
+    pub mean_occupancy: f64,
+    /// tokens per pure-decode step (steady-state decode throughput)
+    pub decode_tok_per_step: f64,
     /// FNV-1a over every completion's (id, tokens) in id order: the
     /// scheduling-independent fingerprint of *what* was decoded. Identical
     /// across batch settings, thread counts, and kernel rewrites by the
@@ -256,6 +308,9 @@ pub fn bench_continuous_decode(
                 generated,
                 wall_s: wall,
                 tok_per_s: generated as f64 / wall.max(1e-9),
+                queue_high_water: engine.stats.queue_high_water,
+                mean_occupancy: engine.stats.mean_occupancy(),
+                decode_tok_per_step: engine.stats.decode_tokens_per_step(),
                 token_checksum: completions_checksum(&done),
             }
         })
@@ -287,6 +342,15 @@ mod tests {
         assert_eq!(done.iter().map(|c| c.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
         assert_eq!(e.stats.generated_tokens, 20);
         assert!(e.stats.prefill_tokens >= 15);
+        // 5 prompts with a 2-slot cap: 3 wait after the first admit pass
+        assert_eq!(e.stats.queue_high_water, 3);
+        // the batch is full (2 sessions) on most steps
+        let occ = e.stats.mean_occupancy();
+        assert!(occ > 1.0 && occ <= 2.0, "mean occupancy {occ}");
+        // each session decodes ≥ 3 tokens after its prefill step, so pure-
+        // decode steps exist and their throughput gauge is populated
+        assert!(e.stats.decode_steps > 0);
+        assert!(e.stats.decode_tokens_per_step() > 0.0);
     }
 
     #[test]

@@ -60,6 +60,11 @@ impl Scheduler {
         self.active.len()
     }
 
+    /// The in-flight batch cap (post-clamp), for occupancy gauges.
+    pub fn max_active(&self) -> usize {
+        self.max_active
+    }
+
     /// No work left anywhere.
     pub fn is_drained(&self) -> bool {
         self.pending.is_empty() && self.active.is_empty()

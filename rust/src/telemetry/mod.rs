@@ -1,0 +1,823 @@
+//! Process-wide observability: runtime tracing + FP4 numerics health.
+//!
+//! Three pillars (DESIGN.md §10):
+//!
+//! 1. **Runtime tracing** — a static registry of atomic counters and
+//!    log2-bucketed latency histograms behind scoped timing spans
+//!    (`telemetry::span(Span::GemmIkj)`), wired into the packed GEMM
+//!    driver, the quantize/pack pass, the worker pool's submit/wait
+//!    handshake, the train step loop, and the serve engine. Recording is
+//!    sharded per thread (`N_SHARDS` cache-line-aligned shards, assigned
+//!    round-robin at first touch) and aggregated only at snapshot time.
+//! 2. **FP4 numerics health** — per-GEMM-operand gauges sampled at a
+//!    configurable stride: clipped-to-max fraction, flushed-to-zero
+//!    fraction, block-scale exponent histogram, amax, residual-mean norm
+//!    ‖μ̂‖ and the dynamic-range-inflation ratio amax(X)/amax(X−μ̂) — the
+//!    paper's "curse of mean bias" as a live metric, keyed by layer ×
+//!    pipeline stage × operand.
+//! 3. **Export** — JSONL snapshots ([`write_snapshot`]) through
+//!    `metrics::JsonObj`, plus the `averis telemetry-report` text dump
+//!    ([`report`]).
+//!
+//! ## Hot-path contract
+//!
+//! * Disabled mode costs exactly one relaxed atomic load per span
+//!   ([`enabled`]); no `Instant::now()` is taken.
+//! * Recording never locks, never allocates, and never touches the
+//!   numeric data — the bit-determinism invariants (thread count, SIMD
+//!   level, vehicle, batch size) hold with telemetry on, off, or sampled,
+//!   pinned by `tests/telemetry.rs`.
+//! * Numerics gauges are only computed behind [`should_sample`] on the
+//!   *caller* thread of a pipeline stage (never inside `store_impl`'s
+//!   worker rows), so the kernel hot loops stay untouched.
+//! * Counters ([`incr`]) are unconditional — they absorb the pre-existing
+//!   `scratch::grows` / `parallel::pool_spawns` debug counters whose shims
+//!   must keep working with telemetry off. They only fire on cold events
+//!   (thread spawn, arena growth).
+
+pub mod report;
+
+use crate::metrics::JsonObj;
+use crate::quant::nvfp4::QuantizedMat;
+use crate::tensor::Mat;
+use std::cell::Cell;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// registry layout
+// ---------------------------------------------------------------------------
+
+/// Monotonic event counters (cold events only — see the hot-path contract).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Scratch-arena capacity growths (`tensor/scratch.rs`).
+    ScratchGrows = 0,
+    /// Worker threads spawned by the persistent pool (`tensor/parallel.rs`).
+    PoolSpawns = 1,
+    /// Numerics-gauge samples taken (stride-gated, see [`should_sample`]).
+    NumericsSamples = 2,
+}
+
+pub const N_COUNTERS: usize = 3;
+
+impl Counter {
+    pub const ALL: [Counter; N_COUNTERS] =
+        [Counter::ScratchGrows, Counter::PoolSpawns, Counter::NumericsSamples];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::ScratchGrows => "scratch.grows",
+            Counter::PoolSpawns => "pool.spawns",
+            Counter::NumericsSamples => "numerics.samples",
+        }
+    }
+}
+
+/// Scoped timing spans. Each records one log2-bucketed duration histogram.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Span {
+    /// Shape-adaptive packed GEMM driver (`quant/packed.rs::ikj_matmul`).
+    GemmIkj = 0,
+    /// `packed_matmul_bt` (wgrad-shaped packed GEMM).
+    GemmBt = 1,
+    /// The Averis Correct-stage μ̂-dot (`mu_times_packed_rows`).
+    GemmMu = 2,
+    /// Quantize+pack pass (`nvfp4.rs::store_impl`, timed on the caller).
+    QuantizeStore = 3,
+    /// Pool batch submit: lock acquisition through job publication.
+    PoolSubmit = 4,
+    /// Pool barrier wait: submitter blocked until all jobs drain.
+    PoolWait = 5,
+    /// One optimizer step of the training loop (`train/loop_.rs`).
+    TrainStep = 6,
+    /// Serve engine step that ran at least one prefill.
+    ServePrefill = 7,
+    /// Serve engine pure-decode step.
+    ServeDecode = 8,
+}
+
+pub const N_SPANS: usize = 9;
+
+impl Span {
+    pub const ALL: [Span; N_SPANS] = [
+        Span::GemmIkj,
+        Span::GemmBt,
+        Span::GemmMu,
+        Span::QuantizeStore,
+        Span::PoolSubmit,
+        Span::PoolWait,
+        Span::TrainStep,
+        Span::ServePrefill,
+        Span::ServeDecode,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Span::GemmIkj => "gemm.ikj",
+            Span::GemmBt => "gemm.bt",
+            Span::GemmMu => "gemm.mu_correct",
+            Span::QuantizeStore => "quantize.store",
+            Span::PoolSubmit => "pool.submit",
+            Span::PoolWait => "pool.wait",
+            Span::TrainStep => "train.step",
+            Span::ServePrefill => "serve.prefill_step",
+            Span::ServeDecode => "serve.decode_step",
+        }
+    }
+}
+
+/// Which GEMM of the pipeline a numerics gauge belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageKind {
+    Forward = 0,
+    Dgrad = 1,
+    Wgrad = 2,
+}
+
+pub const N_KINDS: usize = 3;
+
+impl StageKind {
+    pub const ALL: [StageKind; N_KINDS] = [StageKind::Forward, StageKind::Dgrad, StageKind::Wgrad];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StageKind::Forward => "forward",
+            StageKind::Dgrad => "dgrad",
+            StageKind::Wgrad => "wgrad",
+        }
+    }
+}
+
+/// Which operand of a GEMM a numerics gauge belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmOperand {
+    A = 0,
+    B = 1,
+}
+
+pub const N_OPERANDS: usize = 2;
+
+impl GemmOperand {
+    pub const ALL: [GemmOperand; N_OPERANDS] = [GemmOperand::A, GemmOperand::B];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GemmOperand::A => "a",
+            GemmOperand::B => "b",
+        }
+    }
+}
+
+/// Latency histograms use 64 log2 buckets: bucket b holds durations of
+/// `ns ∈ [2^b, 2^(b+1))` nanoseconds (bucket 0 also absorbs 0 ns).
+pub const N_BUCKETS: usize = 64;
+
+const N_SHARDS: usize = 16;
+
+#[repr(align(64))]
+struct Shard {
+    counters: [AtomicU64; N_COUNTERS],
+    span_count: [AtomicU64; N_SPANS],
+    span_total_ns: [AtomicU64; N_SPANS],
+    span_hist: [[AtomicU64; N_BUCKETS]; N_SPANS],
+}
+
+impl Shard {
+    const fn new() -> Self {
+        Shard {
+            counters: [const { AtomicU64::new(0) }; N_COUNTERS],
+            span_count: [const { AtomicU64::new(0) }; N_SPANS],
+            span_total_ns: [const { AtomicU64::new(0) }; N_SPANS],
+            span_hist: [const { [const { AtomicU64::new(0) }; N_BUCKETS] }; N_SPANS],
+        }
+    }
+}
+
+static SHARDS: [Shard; N_SHARDS] = [const { Shard::new() }; N_SHARDS];
+
+/// Layer slots for numerics gauges: indices `0..LAYER_OTHER` are model
+/// layers (tagged by the transformer's block loop via [`set_layer`]);
+/// [`LAYER_OTHER`] collects everything unattributed (LM head, tests).
+pub const N_LAYER_SLOTS: usize = 17;
+pub const LAYER_OTHER: usize = N_LAYER_SLOTS - 1;
+
+/// Exponent histogram covers block-scale exponents `-32..=31`, clamped.
+pub const N_EXP_BUCKETS: usize = 64;
+const EXP_BIAS: i32 = 32;
+
+#[repr(align(64))]
+struct GaugeSlot {
+    samples: AtomicU64,
+    elems: AtomicU64,
+    clipped: AtomicU64,
+    flushed: AtomicU64,
+    /// f32 bits of the running max |x| (monotone under `fetch_max` for
+    /// non-negative floats).
+    amax_bits: AtomicU32,
+    /// f32 bits of the last sampled ‖μ̂‖.
+    mu_norm_bits: AtomicU32,
+    /// f32 bits of the last sampled amax(X)/amax(X−μ̂).
+    inflation_bits: AtomicU32,
+    split_samples: AtomicU64,
+    exp_hist: [AtomicU64; N_EXP_BUCKETS],
+}
+
+impl GaugeSlot {
+    const fn new() -> Self {
+        GaugeSlot {
+            samples: AtomicU64::new(0),
+            elems: AtomicU64::new(0),
+            clipped: AtomicU64::new(0),
+            flushed: AtomicU64::new(0),
+            amax_bits: AtomicU32::new(0),
+            mu_norm_bits: AtomicU32::new(0),
+            inflation_bits: AtomicU32::new(0),
+            split_samples: AtomicU64::new(0),
+            exp_hist: [const { AtomicU64::new(0) }; N_EXP_BUCKETS],
+        }
+    }
+}
+
+static GAUGES: [[[GaugeSlot; N_OPERANDS]; N_KINDS]; N_LAYER_SLOTS] =
+    [const { [const { [const { GaugeSlot::new() }; N_OPERANDS] }; N_KINDS] }; N_LAYER_SLOTS];
+
+// ---------------------------------------------------------------------------
+// global switches
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static CONFIGURED: AtomicBool = AtomicBool::new(false);
+static STRIDE: AtomicU32 = AtomicU32::new(1);
+static SAMPLE_SEQ: AtomicU64 = AtomicU64::new(0);
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+static OUT_PATH: Mutex<Option<PathBuf>> = Mutex::new(None);
+
+/// Default JSONL snapshot path for `--telemetry` / `AVERIS_TELEMETRY=1`.
+pub const DEFAULT_PATH: &str = "telemetry.jsonl";
+
+thread_local! {
+    static SHARD_IDX: usize = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % N_SHARDS;
+    static CUR_LAYER: Cell<usize> = const { Cell::new(LAYER_OTHER) };
+}
+
+fn shard() -> &'static Shard {
+    SHARD_IDX.with(|&i| &SHARDS[i])
+}
+
+/// The one disabled-mode cost: a single relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip recording on/off without touching the snapshot path. Marks the
+/// process as explicitly configured so `init_from_env` won't override.
+pub fn set_enabled(on: bool) {
+    CONFIGURED.store(true, Ordering::Relaxed);
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Enable recording and route JSONL snapshots to `path`.
+pub fn enable(path: &str) {
+    let mut out = OUT_PATH.lock().unwrap_or_else(|p| p.into_inner());
+    *out = Some(PathBuf::from(path));
+    drop(out);
+    set_enabled(true);
+}
+
+/// Has an explicit `enable`/`set_enabled` (CLI flag, test) already run?
+pub fn configured() -> bool {
+    CONFIGURED.load(Ordering::Relaxed)
+}
+
+/// Numerics-gauge sampling stride (1 = every pipeline stage execution).
+pub fn set_stride(n: u32) {
+    STRIDE.store(n.max(1), Ordering::Relaxed);
+}
+
+pub fn stride() -> u32 {
+    STRIDE.load(Ordering::Relaxed).max(1)
+}
+
+/// Where JSONL snapshots go, if a sink was configured.
+pub fn out_path() -> Option<PathBuf> {
+    OUT_PATH.lock().unwrap_or_else(|p| p.into_inner()).clone()
+}
+
+/// Resolve `AVERIS_TELEMETRY` / `AVERIS_TELEMETRY_STRIDE` once, unless an
+/// explicit `enable`/`set_enabled` already configured the process (the
+/// CLI flag wins over the env, mirroring `--simd` vs `AVERIS_SIMD`).
+/// Called from `parallel::install`, so every entry point resolves it.
+pub fn init_from_env() {
+    if configured() {
+        return;
+    }
+    let Ok(v) = std::env::var("AVERIS_TELEMETRY") else {
+        return;
+    };
+    match v.trim() {
+        "" | "0" | "off" | "false" => {
+            CONFIGURED.store(true, Ordering::Relaxed);
+        }
+        "1" | "on" | "true" => enable(DEFAULT_PATH),
+        path => enable(path),
+    }
+    if let Ok(s) = std::env::var("AVERIS_TELEMETRY_STRIDE") {
+        if let Ok(n) = s.parse::<u32>() {
+            set_stride(n);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// counters
+// ---------------------------------------------------------------------------
+
+/// Bump a registry counter. Unconditional (see the hot-path contract):
+/// the events behind these are cold, and the `scratch::grows` /
+/// `parallel::pool_spawns` shims must report with telemetry off.
+#[inline]
+pub fn incr(c: Counter, n: u64) {
+    shard().counters[c as usize].fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total of a counter across all shards.
+pub fn counter_total(c: Counter) -> u64 {
+    SHARDS.iter().map(|s| s.counters[c as usize].load(Ordering::Relaxed)).sum()
+}
+
+// ---------------------------------------------------------------------------
+// spans
+// ---------------------------------------------------------------------------
+
+/// RAII timing span; records into the thread's shard on drop. Bind it to
+/// a named variable (`let _span = telemetry::span(..)`) — a bare `let _ =`
+/// drops immediately and times nothing.
+pub struct SpanGuard {
+    kind: Span,
+    start: Option<Instant>,
+}
+
+#[inline]
+pub fn span(kind: Span) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { kind, start: None };
+    }
+    SpanGuard { kind, start: Some(Instant::now()) }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            let ns = t0.elapsed().as_nanos() as u64;
+            let s = shard();
+            let k = self.kind as usize;
+            s.span_count[k].fetch_add(1, Ordering::Relaxed);
+            s.span_total_ns[k].fetch_add(ns, Ordering::Relaxed);
+            s.span_hist[k][bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Total recorded invocations of a span across all shards.
+pub fn span_count(k: Span) -> u64 {
+    SHARDS.iter().map(|s| s.span_count[k as usize].load(Ordering::Relaxed)).sum()
+}
+
+/// Total recorded nanoseconds of a span across all shards.
+pub fn span_total_ns(k: Span) -> u64 {
+    SHARDS.iter().map(|s| s.span_total_ns[k as usize].load(Ordering::Relaxed)).sum()
+}
+
+fn span_hist(k: Span) -> [u64; N_BUCKETS] {
+    let mut h = [0u64; N_BUCKETS];
+    for s in SHARDS.iter() {
+        for (b, a) in s.span_hist[k as usize].iter().enumerate() {
+            h[b] += a.load(Ordering::Relaxed);
+        }
+    }
+    h
+}
+
+/// Log2 bucket of a nanosecond duration: `floor(log2(max(ns, 1)))`.
+#[inline]
+pub fn bucket_of(ns: u64) -> usize {
+    ns.max(1).ilog2() as usize
+}
+
+/// Quantile (`q ∈ [0, 1]`) from a log2-bucketed histogram, linearly
+/// interpolated inside the winning bucket `[2^b, 2^(b+1))` with midpoint
+/// rank convention (a single sample reports the bucket midpoint). Empty
+/// histograms report 0.
+pub fn quantile_from_hist(hist: &[u64; N_BUCKETS], q: f64) -> f64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (b, &n) in hist.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        if cum + n >= target {
+            let lo = 2f64.powi(b as i32);
+            let hi = 2f64.powi(b as i32 + 1);
+            let frac = (target as f64 - cum as f64 - 0.5) / n as f64;
+            return lo + frac.clamp(0.0, 1.0) * (hi - lo);
+        }
+        cum += n;
+    }
+    // unreachable for total > 0, but stay total-sum-consistent
+    2f64.powi(N_BUCKETS as i32)
+}
+
+// ---------------------------------------------------------------------------
+// FP4 numerics gauges
+// ---------------------------------------------------------------------------
+
+/// Tag the layer numerics gauges attribute to on this thread (clamped to
+/// [`LAYER_OTHER`]). The transformer's block loops call this; anything
+/// that never tags lands in the `other` slot.
+#[inline]
+pub fn set_layer(li: usize) {
+    CUR_LAYER.with(|c| c.set(li.min(LAYER_OTHER)));
+}
+
+/// Reset this thread's layer attribution to the `other` slot.
+#[inline]
+pub fn clear_layer() {
+    set_layer(LAYER_OTHER);
+}
+
+/// Stride-gated sampling decision for the numerics gauges. Consuming a
+/// sequence ticket never touches numeric state, so which executions get
+/// sampled may vary run to run without affecting any computed bit.
+#[inline]
+pub fn should_sample() -> bool {
+    if !enabled() {
+        return false;
+    }
+    let stride = stride() as u64;
+    SAMPLE_SEQ.fetch_add(1, Ordering::Relaxed) % stride == 0
+}
+
+fn gauge(kind: StageKind, op: GemmOperand) -> &'static GaugeSlot {
+    let li = CUR_LAYER.with(|c| c.get());
+    &GAUGES[li][kind as usize][op as usize]
+}
+
+fn record_scale_exp(hist: &[AtomicU64; N_EXP_BUCKETS], scale: f32) {
+    // IEEE-754 exponent of the decoded block scale, clamped to the
+    // histogram range; zero scales (all-zero blocks) are not recorded.
+    let e = ((scale.to_bits() >> 23) & 0xff) as i32 - 127;
+    let idx = (e + EXP_BIAS).clamp(0, N_EXP_BUCKETS as i32 - 1) as usize;
+    hist[idx].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Sample FP4 health gauges for one quantized operand: walks the source
+/// matrix against the stored block scales and accumulates clip/flush
+/// fractions, amax, and the block-scale exponent histogram. Read-only on
+/// both operands; call behind [`should_sample`] on the caller thread.
+pub fn record_quant_numerics(kind: StageKind, op: GemmOperand, x: &Mat, q: &QuantizedMat) {
+    let slot = gauge(kind, op);
+    let bpr = q.blocks_per_row();
+    let mut elems = 0u64;
+    let mut clipped = 0u64;
+    let mut flushed = 0u64;
+    let mut amax = 0.0f32;
+    for r in 0..q.rows {
+        let row = x.row(r);
+        for b in 0..bpr {
+            let lo = b * q.block;
+            let hi = (lo + q.block).min(q.cols);
+            elems += (hi - lo) as u64;
+            let bs = q.scales[r * bpr + b];
+            let full = bs * q.tensor_scale;
+            if full <= 0.0 {
+                continue; // all-zero block: nothing can clip or flush
+            }
+            record_scale_exp(&slot.exp_hist, bs);
+            let inv = 1.0 / full;
+            for &v in &row[lo..hi] {
+                let a = v.abs();
+                if a > amax {
+                    amax = a;
+                }
+                let g = a * inv;
+                if g > crate::quant::fp4::E2M1_MAX {
+                    clipped += 1;
+                } else if v != 0.0 && g < 0.25 {
+                    // RTNE rounds |grid value| < 0.25 to the zero code
+                    flushed += 1;
+                }
+            }
+        }
+    }
+    slot.samples.fetch_add(1, Ordering::Relaxed);
+    slot.elems.fetch_add(elems, Ordering::Relaxed);
+    slot.clipped.fetch_add(clipped, Ordering::Relaxed);
+    slot.flushed.fetch_add(flushed, Ordering::Relaxed);
+    slot.amax_bits.fetch_max(amax.to_bits(), Ordering::Relaxed);
+    incr(Counter::NumericsSamples, 1);
+}
+
+/// Record the mean-split gauges for one operand: ‖μ̂‖ and the
+/// dynamic-range-inflation ratio amax(X)/amax(X−μ̂) (the paper's curse
+/// metric — how much the rank-one mean bias inflated blockwise range).
+pub fn record_mean_split(
+    kind: StageKind,
+    op: GemmOperand,
+    mu_norm: f32,
+    amax_before: f32,
+    amax_after: f32,
+) {
+    let slot = gauge(kind, op);
+    let inflation = if amax_before > 0.0 && amax_after > 0.0 {
+        amax_before / amax_after
+    } else {
+        1.0
+    };
+    slot.mu_norm_bits.store(mu_norm.to_bits(), Ordering::Relaxed);
+    slot.inflation_bits.store(inflation.to_bits(), Ordering::Relaxed);
+    slot.split_samples.fetch_add(1, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// snapshots
+// ---------------------------------------------------------------------------
+
+fn slot_key(li: usize, kind: StageKind, op: GemmOperand) -> String {
+    if li == LAYER_OTHER {
+        format!("other.{}.{}", kind.name(), op.name())
+    } else {
+        format!("layer{li}.{}.{}", kind.name(), op.name())
+    }
+}
+
+/// Aggregate the whole registry into one JSON object (cumulative since
+/// process start / last [`reset`]).
+pub fn snapshot(label: &str, step: u64) -> JsonObj {
+    let mut counters = JsonObj::new();
+    for c in Counter::ALL {
+        counters = counters.int(c.name(), counter_total(c) as i64);
+    }
+    let mut spans = JsonObj::new();
+    for k in Span::ALL {
+        let count = span_count(k);
+        if count == 0 {
+            continue;
+        }
+        let hist = span_hist(k);
+        let so = JsonObj::new()
+            .int("count", count as i64)
+            .num("total_ms", span_total_ns(k) as f64 / 1e6)
+            .num("p50_us", quantile_from_hist(&hist, 0.50) / 1e3)
+            .num("p90_us", quantile_from_hist(&hist, 0.90) / 1e3)
+            .num("p99_us", quantile_from_hist(&hist, 0.99) / 1e3);
+        spans = spans.obj(k.name(), so);
+    }
+    let mut numerics = JsonObj::new();
+    for li in 0..N_LAYER_SLOTS {
+        for kind in StageKind::ALL {
+            for op in GemmOperand::ALL {
+                let g = &GAUGES[li][kind as usize][op as usize];
+                let samples = g.samples.load(Ordering::Relaxed);
+                let splits = g.split_samples.load(Ordering::Relaxed);
+                if samples == 0 && splits == 0 {
+                    continue;
+                }
+                let mut o = JsonObj::new().int("samples", samples as i64);
+                let elems = g.elems.load(Ordering::Relaxed);
+                if elems > 0 {
+                    o = o
+                        .num("clip_frac", g.clipped.load(Ordering::Relaxed) as f64 / elems as f64)
+                        .num("flush_frac", g.flushed.load(Ordering::Relaxed) as f64 / elems as f64)
+                        .num("amax", f32::from_bits(g.amax_bits.load(Ordering::Relaxed)) as f64);
+                }
+                if splits > 0 {
+                    o = o
+                        .int("split_samples", splits as i64)
+                        .num("mu_norm", f32::from_bits(g.mu_norm_bits.load(Ordering::Relaxed)) as f64)
+                        .num(
+                            "range_inflation",
+                            f32::from_bits(g.inflation_bits.load(Ordering::Relaxed)) as f64,
+                        );
+                }
+                let mut eh = JsonObj::new();
+                for (b, a) in g.exp_hist.iter().enumerate() {
+                    let n = a.load(Ordering::Relaxed);
+                    if n > 0 {
+                        eh = eh.int(&format!("{}", b as i32 - EXP_BIAS), n as i64);
+                    }
+                }
+                o = o.obj("scale_exp", eh);
+                numerics = numerics.obj(&slot_key(li, kind, op), o);
+            }
+        }
+    }
+    JsonObj::new()
+        .str("kind", "snapshot")
+        .str("label", label)
+        .int("step", step as i64)
+        .int("stride", stride() as i64)
+        .obj("counters", counters)
+        .obj("spans", spans)
+        .obj("numerics", numerics)
+}
+
+/// Append one snapshot line to the configured JSONL sink (no-op when no
+/// sink is configured). Creates parent directories on first write.
+pub fn write_snapshot(label: &str, step: u64) -> std::io::Result<()> {
+    let Some(path) = out_path() else {
+        return Ok(());
+    };
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+    writeln!(f, "{}", snapshot(label, step).render())
+}
+
+/// Zero every shard and gauge (test/bench hook; racy against concurrent
+/// recorders, so only call it around quiesced measurement sections).
+pub fn reset() {
+    for s in SHARDS.iter() {
+        for a in s.counters.iter() {
+            a.store(0, Ordering::Relaxed);
+        }
+        for a in s.span_count.iter() {
+            a.store(0, Ordering::Relaxed);
+        }
+        for a in s.span_total_ns.iter() {
+            a.store(0, Ordering::Relaxed);
+        }
+        for h in s.span_hist.iter() {
+            for a in h.iter() {
+                a.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+    for g in GAUGES.iter().flatten().flatten() {
+        g.samples.store(0, Ordering::Relaxed);
+        g.elems.store(0, Ordering::Relaxed);
+        g.clipped.store(0, Ordering::Relaxed);
+        g.flushed.store(0, Ordering::Relaxed);
+        g.amax_bits.store(0, Ordering::Relaxed);
+        g.mu_norm_bits.store(0, Ordering::Relaxed);
+        g.inflation_bits.store(0, Ordering::Relaxed);
+        g.split_samples.store(0, Ordering::Relaxed);
+        for a in g.exp_hist.iter() {
+            a.store(0, Ordering::Relaxed);
+        }
+    }
+    SAMPLE_SEQ.store(0, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_of_edges() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), 63);
+    }
+
+    #[test]
+    fn quantile_empty_hist_is_zero() {
+        let h = [0u64; N_BUCKETS];
+        assert_eq!(quantile_from_hist(&h, 0.5), 0.0);
+        assert_eq!(quantile_from_hist(&h, 0.99), 0.0);
+    }
+
+    #[test]
+    fn quantile_single_sample_is_bucket_midpoint() {
+        let mut h = [0u64; N_BUCKETS];
+        h[3] = 1; // one sample in [8, 16)
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let v = quantile_from_hist(&h, q);
+            assert!((v - 12.0).abs() < 1e-9, "q={q} -> {v}");
+        }
+    }
+
+    #[test]
+    fn quantile_saturated_top_bucket_is_finite() {
+        let mut h = [0u64; N_BUCKETS];
+        h[63] = u32::MAX as u64; // everything in the top bucket
+        let v = quantile_from_hist(&h, 0.99);
+        assert!(v.is_finite());
+        assert!(v >= 2f64.powi(63) && v <= 2f64.powi(64));
+    }
+
+    #[test]
+    fn quantile_interpolates_across_buckets() {
+        let mut h = [0u64; N_BUCKETS];
+        h[2] = 50; // [4, 8)
+        h[5] = 50; // [32, 64)
+        let p25 = quantile_from_hist(&h, 0.25);
+        let p75 = quantile_from_hist(&h, 0.75);
+        assert!((4.0..8.0).contains(&p25), "p25={p25}");
+        assert!((32.0..64.0).contains(&p75), "p75={p75}");
+        // monotone in q
+        assert!(p25 <= quantile_from_hist(&h, 0.5));
+        assert!(quantile_from_hist(&h, 0.5) <= p75);
+    }
+
+    #[test]
+    fn span_records_when_enabled_only() {
+        // other unit tests may record spans concurrently; assert only on
+        // deltas this test is exclusively responsible for (monotone ≥).
+        let k = Span::TrainStep;
+        set_enabled(false);
+        let before = span_count(k);
+        {
+            let _s = span(k);
+        }
+        assert_eq!(span_count(k), before, "disabled span must not record");
+        set_enabled(true);
+        {
+            let _s = span(k);
+        }
+        assert!(span_count(k) >= before + 1, "enabled span must record");
+        set_enabled(false);
+    }
+
+    #[test]
+    fn stride_samples_one_in_n() {
+        set_enabled(true);
+        set_stride(4);
+        // the global sequence is shared; count sampled among 40 pulls — with
+        // stride 4 it must be between 1-in-4 and whatever concurrent pulls
+        // allow, but never zero and never all
+        let hits = (0..40).filter(|_| should_sample()).count();
+        assert!(hits >= 1, "stride sampling starved");
+        assert!(hits <= 20, "stride 4 sampled {hits}/40");
+        set_stride(1);
+        set_enabled(false);
+        assert!(!should_sample(), "disabled must never sample");
+    }
+
+    #[test]
+    fn quant_numerics_counts_clip_and_flush() {
+        use crate::quant::Nvfp4Quantizer;
+        use crate::tensor::Rng;
+        // exclusive slot: layer 3 is only written by this test (pipeline
+        // samples land in `other` and model layers are tagged per thread)
+        set_layer(3);
+        let mut rng = Rng::new(7);
+        let mut x = Mat::randn(8, 32, 1.0, &mut rng);
+        // plant an outlier so at least one block has a wide range with
+        // small cohabitants (flush candidates)
+        x.row_mut(0)[0] = 1000.0;
+        let quant = Nvfp4Quantizer::nvfp4();
+        let q = quant.quantize_store(&x);
+        record_quant_numerics(StageKind::Forward, GemmOperand::A, &x, &q);
+        let g = &GAUGES[3][StageKind::Forward as usize][GemmOperand::A as usize];
+        assert_eq!(g.samples.load(Ordering::Relaxed), 1);
+        assert_eq!(g.elems.load(Ordering::Relaxed), 8 * 32);
+        let amax = f32::from_bits(g.amax_bits.load(Ordering::Relaxed));
+        assert!((amax - 1000.0).abs() < 1e-3, "amax={amax}");
+        // the outlier block maps its small members far below the 0.25
+        // threshold -> flushes recorded; exponent histogram non-empty
+        assert!(g.flushed.load(Ordering::Relaxed) > 0);
+        let exp_n: u64 = g.exp_hist.iter().map(|a| a.load(Ordering::Relaxed)).sum();
+        assert!(exp_n > 0);
+        record_mean_split(StageKind::Forward, GemmOperand::A, 2.5, 8.0, 2.0);
+        assert_eq!(f32::from_bits(g.mu_norm_bits.load(Ordering::Relaxed)), 2.5);
+        assert_eq!(f32::from_bits(g.inflation_bits.load(Ordering::Relaxed)), 4.0);
+        clear_layer();
+    }
+
+    #[test]
+    fn snapshot_renders_expected_keys() {
+        set_layer(5);
+        let mut rng = crate::tensor::Rng::new(11);
+        let x = Mat::randn(4, 16, 1.0, &mut rng);
+        let q = crate::quant::Nvfp4Quantizer::nvfp4().quantize_store(&x);
+        record_quant_numerics(StageKind::Dgrad, GemmOperand::B, &x, &q);
+        clear_layer();
+        let s = snapshot("test", 42).render();
+        assert!(s.starts_with('{') && s.ends_with('}'));
+        assert!(s.contains("\"label\": \"test\""));
+        assert!(s.contains("\"step\": 42"));
+        assert!(s.contains("\"scratch.grows\""));
+        assert!(s.contains("\"pool.spawns\""));
+        assert!(s.contains("\"layer5.dgrad.b\""));
+        assert!(s.contains("\"clip_frac\""));
+        assert!(s.contains("\"scale_exp\""));
+    }
+}

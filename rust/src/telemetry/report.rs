@@ -1,0 +1,303 @@
+//! `averis telemetry-report`: parse the JSONL snapshots this crate's own
+//! [`super::snapshot`] writer emits and render a human-readable summary.
+//!
+//! The parser is a ~100-line recursive-descent scanner over the subset of
+//! JSON the snapshot writer produces (objects, strings, numbers) — not a
+//! general JSON library (the offline image has no serde). It round-trips
+//! every snapshot the writer can emit, pinned by the tests below.
+
+use std::fmt::Write as _;
+
+/// Minimal JSON value for the snapshot subset.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonVal {
+    Num(f64),
+    Str(String),
+    Obj(Vec<(String, JsonVal)>),
+}
+
+impl JsonVal {
+    pub fn get(&self, key: &str) -> Option<&JsonVal> {
+        match self {
+            JsonVal::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn num(&self) -> Option<f64> {
+        match self {
+            JsonVal::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn str(&self) -> Option<&str> {
+        match self {
+            JsonVal::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn entries(&self) -> &[(String, JsonVal)] {
+        match self {
+            JsonVal::Obj(kv) => kv,
+            _ => &[],
+        }
+    }
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Self {
+        Parser { s: s.as_bytes(), i: 0 }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.s.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonVal, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'"') => Ok(JsonVal::Str(self.string()?)),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(format!("unexpected {other:?} at byte {}", self.i)),
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonVal, String> {
+        self.expect(b'{')?;
+        let mut kv = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(JsonVal::Obj(kv));
+        }
+        loop {
+            let k = self.string()?;
+            self.expect(b':')?;
+            let v = self.value()?;
+            kv.push((k, v));
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(JsonVal::Obj(kv));
+                }
+                other => return Err(format!("expected ',' or '}}', got {other:?}")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        while let Some(&c) = self.s.get(self.i) {
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(&e) = self.s.get(self.i) else {
+                        return Err("dangling escape".into());
+                    };
+                    self.i += 1;
+                    out.push(match e {
+                        b'n' => '\n',
+                        b't' => '\t',
+                        other => other as char, // covers \" and \\
+                    });
+                }
+                other => out.push(other as char),
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    fn number(&mut self) -> Result<JsonVal, String> {
+        self.skip_ws();
+        let start = self.i;
+        while let Some(&c) = self.s.get(self.i) {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.s[start..self.i]).map_err(|e| e.to_string())?;
+        text.parse::<f64>().map(JsonVal::Num).map_err(|e| format!("bad number '{text}': {e}"))
+    }
+}
+
+/// Parse one snapshot line.
+pub fn parse_line(line: &str) -> Result<JsonVal, String> {
+    let mut p = Parser::new(line);
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.s.len() {
+        return Err(format!("trailing garbage at byte {}", p.i));
+    }
+    Ok(v)
+}
+
+fn fmt_f(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Render the text report for a JSONL snapshot stream: counts the
+/// snapshots and dumps the last (cumulative) one as aligned tables.
+pub fn render_report(text: &str) -> Result<String, String> {
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    if lines.is_empty() {
+        return Err("no snapshots in input".to_string());
+    }
+    let last = parse_line(lines[lines.len() - 1])
+        .map_err(|e| format!("snapshot line {}: {e}", lines.len()))?;
+    let label = last.get("label").and_then(JsonVal::str).unwrap_or("?");
+    let step = last.get("step").and_then(JsonVal::num).unwrap_or(0.0);
+    let stride = last.get("stride").and_then(JsonVal::num).unwrap_or(1.0);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "telemetry report — {} snapshot(s), last: label={label} step={step} stride={stride}",
+        lines.len()
+    );
+    if let Some(counters) = last.get("counters") {
+        let _ = writeln!(out, "\ncounters:");
+        for (k, v) in counters.entries() {
+            let _ = writeln!(out, "  {k:<24} {}", v.num().unwrap_or(0.0));
+        }
+    }
+    if let Some(spans) = last.get("spans") {
+        let _ = writeln!(
+            out,
+            "\nspans:                      count    total ms      p50 µs      p90 µs      p99 µs"
+        );
+        for (k, v) in spans.entries() {
+            let g = |f: &str| v.get(f).and_then(JsonVal::num).unwrap_or(0.0);
+            let _ = writeln!(
+                out,
+                "  {k:<24} {:>8} {:>11} {:>11} {:>11} {:>11}",
+                g("count"),
+                fmt_f(g("total_ms")),
+                fmt_f(g("p50_us")),
+                fmt_f(g("p90_us")),
+                fmt_f(g("p99_us"))
+            );
+        }
+    }
+    if let Some(numerics) = last.get("numerics") {
+        if !numerics.entries().is_empty() {
+            let _ = writeln!(out, "\nfp4 numerics (cumulative, sampled 1-in-{stride}):");
+        }
+        for (k, v) in numerics.entries() {
+            let g = |f: &str| v.get(f).and_then(JsonVal::num);
+            let mut line = format!("  {k:<24}");
+            if let Some(c) = g("clip_frac") {
+                let _ = write!(line, " clip {:.3}%", 100.0 * c);
+            }
+            if let Some(fl) = g("flush_frac") {
+                let _ = write!(line, "  flush {:.3}%", 100.0 * fl);
+            }
+            if let Some(a) = g("amax") {
+                let _ = write!(line, "  amax {}", fmt_f(a));
+            }
+            if let Some(m) = g("mu_norm") {
+                let _ = write!(line, "  ‖μ̂‖ {}", fmt_f(m));
+            }
+            if let Some(r) = g("range_inflation") {
+                let _ = write!(line, "  inflation {r:.2}x");
+            }
+            let _ = writeln!(out, "{line}");
+            if let Some(exp) = v.get("scale_exp") {
+                if !exp.entries().is_empty() {
+                    let mut hist = String::from("      scale_exp 2^e:");
+                    for (e, n) in exp.entries() {
+                        let _ = write!(hist, " {e}:{}", n.num().unwrap_or(0.0));
+                    }
+                    let _ = writeln!(out, "{hist}");
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_snapshot_writer_output() {
+        // a writer-shaped line: nested objects, dotted keys, floats
+        let line = r#"{"kind": "snapshot", "label": "train", "step": 2, "stride": 1, "counters": {"scratch.grows": 12, "pool.spawns": 3}, "spans": {"gemm.ikj": {"count": 40, "total_ms": 1.5, "p50_us": 30.25, "p90_us": 55, "p99_us": 80}}, "numerics": {"layer0.forward.a": {"samples": 2, "clip_frac": 0.001, "flush_frac": 0.04, "amax": 5.5, "mu_norm": 2.25, "range_inflation": 3.5, "scale_exp": {"-3": 7, "0": 9}}}}"#;
+        let v = parse_line(line).unwrap();
+        assert_eq!(v.get("label").and_then(JsonVal::str), Some("train"));
+        assert_eq!(v.get("step").and_then(JsonVal::num), Some(2.0));
+        let spans = v.get("spans").unwrap();
+        let ikj = spans.get("gemm.ikj").unwrap();
+        assert_eq!(ikj.get("count").and_then(JsonVal::num), Some(40.0));
+        let n = v.get("numerics").unwrap().get("layer0.forward.a").unwrap();
+        assert_eq!(n.get("range_inflation").and_then(JsonVal::num), Some(3.5));
+        assert_eq!(n.get("scale_exp").unwrap().get("-3").and_then(JsonVal::num), Some(7.0));
+    }
+
+    #[test]
+    fn parses_negative_and_exponent_numbers_and_escapes() {
+        let v = parse_line(r#"{"a": -1.5e-3, "b": "x\"y"}"#).unwrap();
+        assert_eq!(v.get("a").and_then(JsonVal::num), Some(-1.5e-3));
+        assert_eq!(v.get("b").and_then(JsonVal::str), Some("x\"y"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_line("").is_err());
+        assert!(parse_line("{\"a\": }").is_err());
+        assert!(parse_line("{\"a\": 1} trailing").is_err());
+        assert!(parse_line("[1, 2]").is_err()); // arrays are out of subset
+    }
+
+    #[test]
+    fn report_round_trips_a_live_snapshot() {
+        // render a real registry snapshot and feed it back through the
+        // parser + report path
+        let line = crate::telemetry::snapshot("roundtrip", 7).render();
+        let v = parse_line(&line).expect("snapshot output must parse");
+        assert_eq!(v.get("label").and_then(JsonVal::str), Some("roundtrip"));
+        let text = render_report(&format!("{line}\n{line}\n")).unwrap();
+        assert!(text.contains("2 snapshot(s)"));
+        assert!(text.contains("step=7"));
+        assert!(text.contains("counters:"));
+        assert!(text.contains("scratch.grows"));
+    }
+
+    #[test]
+    fn report_on_empty_input_errors() {
+        assert!(render_report("").is_err());
+        assert!(render_report("\n\n").is_err());
+    }
+}

@@ -32,6 +32,7 @@
 //! checks at 1, 2, and 4 threads.
 
 use super::scratch;
+use crate::telemetry::{self, Counter, Span};
 use std::any::Any;
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -131,12 +132,12 @@ pub fn vehicle() -> Vehicle {
 /// Pool worker threads spawned since process start. Spawns happen only
 /// when a batch demands more workers than the pool's high-water mark —
 /// after warmup this stays flat across kernel calls (the "zero per-call
-/// thread spawns" contract pinned by `tests/pool.rs`).
+/// thread spawns" contract pinned by `tests/pool.rs`). The count lives in
+/// the telemetry registry (`telemetry::Counter::PoolSpawns`) so snapshots
+/// report it alongside the spans; this stays as a thin shim over it.
 pub fn pool_spawns() -> usize {
-    POOL_SPAWNS.load(Ordering::Relaxed)
+    telemetry::counter_total(Counter::PoolSpawns) as usize
 }
-
-static POOL_SPAWNS: AtomicUsize = AtomicUsize::new(0);
 
 /// Lifetime-erased batch job: a thin pointer to the submitter's
 /// `&dyn Fn(usize)` slot plus a trampoline that re-materializes it.
@@ -300,7 +301,7 @@ impl WorkerPool {
                 .name(format!("averis-pool-{id}"))
                 .spawn(move || worker_loop(shared, id))
                 .expect("spawn pool worker");
-            POOL_SPAWNS.fetch_add(1, Ordering::Relaxed);
+            telemetry::incr(Counter::PoolSpawns, 1);
             hs.push(h);
         }
     }
@@ -324,6 +325,9 @@ impl WorkerPool {
             return;
         }
         let _batch = lock(&self.submit);
+        // covers worker growth, batch publish, and participant wakeup —
+        // the fixed per-dispatch cost a caller pays before its own chunk
+        let submit_span = telemetry::span(Span::PoolSubmit);
         self.ensure_workers(njobs - 1);
         let erased = ErasedJob::erase(&job);
         {
@@ -344,6 +348,7 @@ impl WorkerPool {
                 h.thread().unpark();
             }
         }
+        drop(submit_span);
         // Drains the batch even if the caller's own chunk panics below —
         // no worker may outlive the borrows erased into `job`.
         struct DrainGuard<'a>(&'a PoolShared);
@@ -364,7 +369,11 @@ impl WorkerPool {
             drop(drain);
             resume_unwind(p);
         }
+        // the drain wait proper: time the submitter spends blocked on
+        // stragglers after finishing its own chunk (load-balance skew)
+        let wait_span = telemetry::span(Span::PoolWait);
         drop(drain);
+        drop(wait_span);
         let worker_panic = lock(&self.shared.state).panic.take();
         if let Some(p) = worker_panic {
             resume_unwind(p);
@@ -459,12 +468,14 @@ pub fn pool() -> PoolHandle {
 /// pre-spawns the workers it implies. This is what the CLI `--threads`
 /// flag resolves to — after it, steady-state kernel calls neither spawn
 /// threads nor grow the pool. The SIMD dispatch level resolves here too
-/// (`quant::simd`, from `AVERIS_SIMD` + CPU detection), so a run pins its
-/// whole execution configuration in one place; a level already forced via
-/// `--simd` / `simd::force` is left alone.
+/// (`quant::simd`, from `AVERIS_SIMD` + CPU detection), and the telemetry
+/// layer resolves its `AVERIS_TELEMETRY` knobs, so a run pins its whole
+/// execution configuration in one place; a level already forced via
+/// `--simd` / `simd::force` (or `--telemetry`) is left alone.
 pub fn install(threads_knob: usize) -> PoolHandle {
     set_threads(threads_knob);
     crate::quant::simd::init_from_env();
+    crate::telemetry::init_from_env();
     let p = pool();
     p.warm();
     p

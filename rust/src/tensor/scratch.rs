@@ -27,10 +27,12 @@
 //! [`grows`] counts every allocation the arena ever performs (all
 //! threads); the pool stress test in `tests/pool.rs` pins it flat across
 //! GEMM calls after warmup — the "zero per-call slab/stripe/tile heap
-//! allocations" contract.
+//! allocations" contract. The count lives in the telemetry registry
+//! (`telemetry::Counter::ScratchGrows`) so snapshots report it alongside
+//! the spans; `grows()` stays as a thin shim over that counter.
 
+use crate::telemetry::{self, Counter};
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Per-thread free-list cap. Outstanding checkouts per thread are O(1) —
 /// a shared slab, a stripe block, and a couple of decode tiles — so a
@@ -45,12 +47,11 @@ thread_local! {
 
 /// Arena allocations (fresh buffers + capacity growths) since process
 /// start, summed over all threads. The perf-test hook: after warmup this
-/// must stay flat across kernel calls.
-static GROWS: AtomicUsize = AtomicUsize::new(0);
-
-/// See [`GROWS`].
+/// must stay flat across kernel calls. Thin shim over the telemetry
+/// registry's `scratch.grows` counter, which increments unconditionally
+/// (growth is a cold event — see the telemetry hot-path contract).
 pub fn grows() -> usize {
-    GROWS.load(Ordering::Relaxed)
+    telemetry::counter_total(Counter::ScratchGrows) as usize
 }
 
 /// Arena allocations performed by the **current thread** — the
@@ -142,7 +143,7 @@ fn checkout(len: usize) -> Vec<f32> {
         .unwrap_or_default();
     if v.len() < len {
         if v.capacity() < len {
-            GROWS.fetch_add(1, Ordering::Relaxed);
+            telemetry::incr(Counter::ScratchGrows, 1);
             THREAD_GROWS.with(|c| c.set(c.get() + 1));
         }
         v.resize(len, 0.0);

@@ -95,6 +95,7 @@ pub fn train(
     let mut ema: Option<f32> = None;
 
     for step in 0..cfg.steps {
+        let step_span = crate::telemetry::span(crate::telemetry::Span::TrainStep);
         let (inputs, targets) = batcher.next_batch();
         let capture = (cfg.tap_steps[0] && step == early_step)
             || (cfg.tap_steps[1] && step == late_step);
@@ -109,6 +110,7 @@ pub fn train(
         }
         clip_global_norm(&mut grads, cfg.grad_clip);
         opt.update(&mut params, &mut grads, sched.lr_at(step));
+        drop(step_span);
         ema = Some(match ema {
             None => loss,
             Some(e) => 0.95 * e + 0.05 * loss,
@@ -117,11 +119,19 @@ pub fn train(
         if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
             let ev = evaluate(&mut model, &params, &eval_set, cfg.batch, cfg.seq);
             eval_curve.push((step, ev));
+            // periodic JSONL snapshot at the eval cadence; telemetry must
+            // never fail a training run, so I/O errors only warn
+            if let Err(e) = crate::telemetry::write_snapshot("train", step + 1) {
+                eprintln!("warning: telemetry snapshot failed: {e}");
+            }
         }
     }
     let wall = t0.elapsed().as_secs_f64();
     let final_eval = evaluate(&mut model, &params, &eval_set, cfg.batch, cfg.seq);
     eval_curve.push((cfg.steps, final_eval));
+    if let Err(e) = crate::telemetry::write_snapshot("train", cfg.steps) {
+        eprintln!("warning: telemetry snapshot failed: {e}");
+    }
     TrainResult {
         recipe,
         final_train_loss: ema.unwrap_or(f32::NAN),

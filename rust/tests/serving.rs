@@ -226,6 +226,26 @@ fn bench_continuous_decode_output_unchanged_across_batches_and_threads() {
                 "{label}: decoded tokens diverged at max_active {}",
                 r.max_active
             );
+            // telemetry satellite: the bench rows carry the engine gauges.
+            // 4 prompts: at cap 1 three wait after the first admission; at
+            // cap 3 exactly one waits — deterministic, scheduling-free.
+            let expect_hw = 4 - r.max_active.min(4);
+            assert_eq!(
+                r.queue_high_water, expect_hw,
+                "{label}: queue high-water at max_active {}",
+                r.max_active
+            );
+            assert!(
+                r.mean_occupancy > 0.0 && r.mean_occupancy <= r.max_active as f64,
+                "{label}: mean occupancy {} out of range at max_active {}",
+                r.mean_occupancy,
+                r.max_active
+            );
+            assert!(
+                r.decode_tok_per_step > 0.0,
+                "{label}: decode tok/step not populated at max_active {}",
+                r.max_active
+            );
         }
     }
 }

@@ -1,0 +1,200 @@
+//! Telemetry-neutrality integration tests (ISSUE 7 acceptance criteria):
+//! the observability layer must never change a computed bit. Every suite
+//! here runs the same workload with telemetry off, on, and on-with-stride
+//! and asserts bit-identical outputs — across thread counts and forced
+//! SIMD levels for the kernel paths — then checks that the enabled mode
+//! actually recorded something (a span that never fires is not telemetry).
+//!
+//! Tests share process-global telemetry state, so every test takes the
+//! file-local lock (the tests/pool.rs pattern) and restores the disabled
+//! default before releasing it.
+
+use averis::data::{Corpus, CorpusConfig};
+use averis::model::{ModelConfig, Params};
+use averis::quant::gemm::QuantGemm;
+use averis::quant::packed::packed_matmul;
+use averis::quant::{simd, Nvfp4Quantizer, QuantRecipe};
+use averis::serve::{bench_continuous_decode, CalibMeans};
+use averis::telemetry::{self, Span};
+use averis::tensor::{parallel, Mat, Rng};
+use averis::train::{train, TrainConfig};
+use std::sync::Mutex;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restore the disabled default: recording off, stride 1, gauges cleared.
+fn restore() {
+    telemetry::set_enabled(false);
+    telemetry::set_stride(1);
+    telemetry::reset();
+    parallel::set_threads(0);
+}
+
+/// (enabled, stride) telemetry modes every neutrality suite sweeps.
+const MODES: [(bool, u32); 3] = [(false, 1), (true, 1), (true, 3)];
+
+#[test]
+fn packed_gemm_bits_unchanged_by_telemetry_across_threads_and_simd() {
+    let _g = lock();
+    let mut rng = Rng::new(4021);
+    let x = Mat::randn(48, 64, 1.0, &mut rng);
+    let w = Mat::randn(96, 64, 0.1, &mut rng); // packed-B layout: n x k
+    let quant = Nvfp4Quantizer::nvfp4();
+    let xq = quant.quantize_store(&x);
+    let wq = quant.quantize_store(&w);
+
+    // reference: telemetry off, scalar kernels, single thread
+    telemetry::set_enabled(false);
+    simd::force(simd::SimdLevel::Scalar);
+    parallel::set_threads(1);
+    let reference = packed_matmul(&xq, &wq);
+
+    for level in [simd::SimdLevel::Scalar, simd::detect()] {
+        simd::force(level);
+        for threads in [1usize, 2, 4] {
+            parallel::set_threads(threads);
+            for (on, stride) in MODES {
+                telemetry::set_enabled(on);
+                telemetry::set_stride(stride);
+                let got = packed_matmul(&xq, &wq);
+                for (i, (a, b)) in got.data.iter().zip(reference.data.iter()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "elem {i} diverged: simd={level}, threads={threads}, \
+                         telemetry={on}, stride={stride}"
+                    );
+                }
+            }
+        }
+    }
+    simd::force(simd::detect());
+    restore();
+}
+
+#[test]
+fn pipeline_forward_bits_unchanged_by_numerics_sampling() {
+    let _g = lock();
+    let mut rng = Rng::new(99);
+    let x = Mat::randn(32, 64, 1.0, &mut rng);
+    let w = Mat::randn(64, 48, 0.1, &mut rng);
+    // Averis exercises MeanSplit (mean-split gauges) on top of Quantize
+    // (clip/flush/scale-exp gauges); Nvfp4 covers the plain stack.
+    for recipe in [QuantRecipe::Averis, QuantRecipe::Nvfp4] {
+        let mut reference = None;
+        for (on, stride) in MODES {
+            telemetry::set_enabled(on);
+            telemetry::set_stride(stride);
+            let mut g = QuantGemm::new(recipe, 7);
+            let out = g.forward(&x, &w);
+            let bits: Vec<u32> = out.data.iter().map(|v| v.to_bits()).collect();
+            match &reference {
+                None => reference = Some(bits),
+                Some(r) => assert_eq!(
+                    r, &bits,
+                    "[{recipe}] forward bits diverged at telemetry={on}, stride={stride}"
+                ),
+            }
+        }
+    }
+    // the sampled pass must actually have recorded numerics
+    assert!(
+        telemetry::counter_total(telemetry::Counter::NumericsSamples) > 0,
+        "numerics gauges never sampled in enabled modes"
+    );
+    restore();
+}
+
+#[test]
+fn train_loss_curve_bit_identical_with_telemetry_on() {
+    let _g = lock();
+    let corpus =
+        Corpus::generate(CorpusConfig { tokens: 1 << 13, vocab: 64, ..Default::default() }, 17);
+    let cfg = ModelConfig::test_tiny(64);
+    let tc = TrainConfig { steps: 3, batch: 2, seq: 16, eval_every: 0, ..Default::default() };
+    let run = || {
+        train(cfg, QuantRecipe::Averis, tc, corpus.train.clone(), corpus.heldout.clone())
+            .loss_curve
+            .iter()
+            .map(|&(s, l)| (s, l.to_bits()))
+            .collect::<Vec<_>>()
+    };
+    telemetry::set_enabled(false);
+    let off = run();
+    telemetry::set_enabled(true);
+    telemetry::set_stride(1);
+    let on = run();
+    telemetry::set_stride(2);
+    let strided = run();
+    assert_eq!(off, on, "loss curve diverged with telemetry on");
+    assert_eq!(off, strided, "loss curve diverged with telemetry stride 2");
+    assert!(telemetry::span_count(Span::TrainStep) > 0, "train.step span never recorded");
+    restore();
+}
+
+#[test]
+fn serving_token_checksum_unchanged_by_telemetry() {
+    let _g = lock();
+    let cfg = ModelConfig::test_tiny(64);
+    let params = Params::init(&cfg, &mut Rng::new(9));
+    let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+    let run = || {
+        bench_continuous_decode(&cfg, &params, &calib, &[1, 3], 4, 6, 5, 77)
+            .iter()
+            .map(|r| r.token_checksum)
+            .collect::<Vec<_>>()
+    };
+    telemetry::set_enabled(false);
+    let off = run();
+    telemetry::set_enabled(true);
+    telemetry::set_stride(1);
+    let on = run();
+    assert_eq!(off, on, "decoded token checksums diverged with telemetry on");
+    assert!(
+        telemetry::span_count(Span::ServePrefill) + telemetry::span_count(Span::ServeDecode) > 0,
+        "serve step spans never recorded"
+    );
+    restore();
+}
+
+#[test]
+fn snapshot_carries_gemm_span_after_packed_matmul() {
+    let _g = lock();
+    telemetry::reset();
+    telemetry::set_enabled(true);
+    telemetry::set_stride(1);
+    let mut rng = Rng::new(5);
+    let x = Mat::randn(16, 32, 1.0, &mut rng);
+    let w = Mat::randn(24, 32, 0.1, &mut rng);
+    let quant = Nvfp4Quantizer::nvfp4();
+    let out = packed_matmul(&quant.quantize_store(&x), &quant.quantize_store(&w));
+    assert_eq!(out.rows, 16);
+    assert!(telemetry::span_count(Span::GemmIkj) > 0, "gemm.ikj span not recorded");
+    assert!(telemetry::span_count(Span::QuantizeStore) >= 2, "quantize.store spans missing");
+    let line = telemetry::snapshot("test", 1).render();
+    assert!(line.contains("gemm.ikj"), "snapshot missing gemm.ikj: {line}");
+    assert!(line.contains("quantize.store"), "snapshot missing quantize.store: {line}");
+    restore();
+}
+
+#[test]
+fn snapshot_report_round_trip() {
+    let _g = lock();
+    telemetry::reset();
+    telemetry::set_enabled(true);
+    let span = telemetry::span(Span::GemmIkj);
+    drop(span);
+    let stream = format!(
+        "{}\n{}\n",
+        telemetry::snapshot("test", 1).render(),
+        telemetry::snapshot("test", 2).render()
+    );
+    let report = telemetry::report::render_report(&stream).expect("report renders");
+    assert!(report.contains("gemm.ikj"), "report missing span section: {report}");
+    assert!(report.contains("counters"), "report missing counters section: {report}");
+    restore();
+}
