@@ -26,6 +26,8 @@ pub enum Command {
     Generate,
     /// Continuous-batching serving throughput bench.
     ServeBench,
+    /// Cache-churn bench: paged vs contiguous KV at a fixed memory budget.
+    ChurnBench,
     /// Render a text report from a telemetry JSONL snapshot stream.
     TelemetryReport,
     /// Print artifact/manifest info.
@@ -43,6 +45,7 @@ impl Command {
             "quant-demo" => Ok(Command::QuantDemo),
             "generate" => Ok(Command::Generate),
             "serve-bench" => Ok(Command::ServeBench),
+            "churn-bench" => Ok(Command::ChurnBench),
             "telemetry-report" => Ok(Command::TelemetryReport),
             "info" => Ok(Command::Info),
             "help" | "--help" | "-h" => Ok(Command::Help),
@@ -93,6 +96,13 @@ COMMANDS:
               --model dense|moe|tiny  --batches 1,8,32  --prompts N
               --prompt-len N  --max-new N  --seed N  --threads N  --simd L
               --record FILE               (rewrite the serve-bench block of
+                                           EXPERIMENTS.md with the results)
+              --out DIR                   (CSV output)
+  churn-bench paged vs contiguous KV cache under session churn at a fixed
+              memory budget (EXPERIMENTS.md §Serving, `kv-paged` block)
+              --model dense|moe|tiny  --seed N  --threads N  --simd L
+              --smoke                     (CI-sized shape, seconds not minutes)
+              --record FILE               (rewrite the kv-paged block of
                                            EXPERIMENTS.md with the results)
               --out DIR                   (CSV output)
   telemetry-report

@@ -16,8 +16,8 @@ use averis::quant::averis::split_vs_plain_error;
 use averis::quant::{Nvfp4Quantizer, QuantRecipe};
 use averis::runtime::{save_params_checkpoint, ArtifactStore};
 use averis::serve::{
-    bench_continuous_decode, measure_calib_means, CalibMeans, Engine, QuantizedCheckpoint,
-    SampleCfg,
+    bench_cache_churn, bench_continuous_decode, measure_calib_means, CalibMeans, ChurnShape,
+    Engine, QuantizedCheckpoint, SampleCfg,
 };
 use averis::tensor::{parallel, Mat, Rng};
 
@@ -132,6 +132,7 @@ fn run(args: &CliArgs) -> Result<()> {
         Command::Table1 => table1_cmd(args),
         Command::Generate => generate_cmd(args),
         Command::ServeBench => serve_bench_cmd(args),
+        Command::ChurnBench => churn_bench_cmd(args),
         Command::TelemetryReport => telemetry_report_cmd(args),
     }
 }
@@ -383,20 +384,29 @@ fn serve_bench_cmd(args: &CliArgs) -> Result<()> {
         &cfg, &params, &calib, &batches, n_prompts, prompt_len, max_new, seed,
     );
     println!(
-        "{:>10} {:>10} {:>10} {:>10} {:>12} {:>9} {:>10} {:>13}",
-        "max_active", "sessions", "tokens", "wall_s", "tok/s", "queue_hw", "occupancy", "dec tok/step"
+        "{:>10} {:>10} {:>10} {:>10} {:>12} {:>9} {:>10} {:>13} {:>10} {:>10}",
+        "max_active",
+        "sessions",
+        "tokens",
+        "wall_s",
+        "tok/s",
+        "queue_hw",
+        "occupancy",
+        "dec tok/step",
+        "blocks_hw",
+        "prefix_hit"
     );
     let mut md = String::from(
         "| max_active | sessions | decode tokens | wall (s) | tokens/sec | queue HW | \
-         mean occupancy | decode tok/step | vs sequential |\n\
+         mean occupancy | decode tok/step | blocks HW | prefix hit | vs sequential |\n\
          |-----------:|---------:|--------------:|---------:|-----------:|---------:|\
-         ---------------:|----------------:|--------------:|\n",
+         ---------------:|----------------:|----------:|-----------:|--------------:|\n",
     );
     // "vs sequential" only means something against the max_active = 1 row
     let base_tps = rows.iter().find(|r| r.max_active == 1).map(|r| r.tok_per_s);
     for r in &rows {
         println!(
-            "{:>10} {:>10} {:>10} {:>10.3} {:>12.1} {:>9} {:>10.2} {:>13.2}",
+            "{:>10} {:>10} {:>10} {:>10.3} {:>12.1} {:>9} {:>10.2} {:>13.2} {:>10} {:>9.1}%",
             r.max_active,
             r.sessions,
             r.generated,
@@ -404,14 +414,16 @@ fn serve_bench_cmd(args: &CliArgs) -> Result<()> {
             r.tok_per_s,
             r.queue_high_water,
             r.mean_occupancy,
-            r.decode_tok_per_step
+            r.decode_tok_per_step,
+            r.blocks_high_water,
+            r.prefix_hit_rate * 100.0
         );
         let vs_seq = match base_tps {
             Some(b) => format!("{:.2}x", r.tok_per_s / b),
             None => "n/a".to_string(),
         };
         md.push_str(&format!(
-            "| {} | {} | {} | {:.3} | {:.1} | {} | {:.2} | {:.2} | {vs_seq} |\n",
+            "| {} | {} | {} | {:.3} | {:.1} | {} | {:.2} | {:.2} | {} | {:.1}% | {vs_seq} |\n",
             r.max_active,
             r.sessions,
             r.generated,
@@ -419,7 +431,9 @@ fn serve_bench_cmd(args: &CliArgs) -> Result<()> {
             r.tok_per_s,
             r.queue_high_water,
             r.mean_occupancy,
-            r.decode_tok_per_step
+            r.decode_tok_per_step,
+            r.blocks_high_water,
+            r.prefix_hit_rate * 100.0
         ));
     }
     md.push_str(&format!(
@@ -442,6 +456,8 @@ fn serve_bench_cmd(args: &CliArgs) -> Result<()> {
             "queue_high_water",
             "mean_occupancy",
             "decode_tok_per_step",
+            "blocks_high_water",
+            "prefix_hit_rate",
         ],
     )?;
     for r in &rows {
@@ -454,12 +470,155 @@ fn serve_bench_cmd(args: &CliArgs) -> Result<()> {
             r.queue_high_water as f64,
             r.mean_occupancy,
             r.decode_tok_per_step,
+            r.blocks_high_water as f64,
+            r.prefix_hit_rate,
         ])?;
     }
     println!("csv written to {}", run.file("serve_bench.csv").display());
     if let Some(record) = args.get("record") {
         record_markdown_block(record, "serve-bench", &md)?;
         println!("recorded throughput table into {record}");
+    }
+    Ok(())
+}
+
+fn churn_bench_cmd(args: &CliArgs) -> Result<()> {
+    let preset = ModelPreset::parse(&args.get_or("model", "dense")).map_err(anyhow::Error::msg)?;
+    if let Some(t) = args.get_parse::<usize>("threads").map_err(anyhow::Error::msg)? {
+        parallel::install(t);
+    }
+    let smoke = args.get("smoke").is_some();
+    let mut shape = if smoke { ChurnShape::smoke() } else { ChurnShape::full() };
+    if let Some(s) = args.get_parse::<u64>("seed").map_err(anyhow::Error::msg)? {
+        shape.seed = s;
+    }
+    let cfg = preset.model_config(256);
+    let params = Params::init(&cfg, &mut Rng::new(shape.seed));
+    let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+    println!(
+        "churn-bench: {} — {} sessions × {} turns, shared prefix {} + unique {} tokens, \
+         {} new tokens/turn, KV budget {} rows/layer (block {}), cap {}, {} threads{}",
+        preset.name(),
+        shape.sessions,
+        shape.turns,
+        shape.system_prompt,
+        shape.unique_prompt,
+        shape.max_new,
+        shape.budget_tokens,
+        shape.block_tokens,
+        shape.max_active,
+        parallel::threads(),
+        if smoke { " [smoke]" } else { "" }
+    );
+    let rows = bench_cache_churn(&cfg, &params, &calib, &shape);
+    println!(
+        "{:>8} {:>10} {:>10} {:>9} {:>8} {:>8} {:>8} {:>10} {:>10} {:>10} {:>12}",
+        "backend",
+        "live_peak",
+        "turns",
+        "prefill",
+        "preempt",
+        "swap_out",
+        "swap_in",
+        "prefix_hit",
+        "blocks_hw",
+        "wall_s",
+        "tok/s"
+    );
+    let mut md = String::from(
+        "| backend | peak live sessions | turns served | prefill tokens | preemptions | \
+         swap-outs | swap-ins | prefix hit | blocks HW | wall (s) | tokens/sec | checksum |\n\
+         |--------:|-------------------:|-------------:|---------------:|------------:|\
+         ----------:|---------:|-----------:|----------:|---------:|-----------:|---------:|\n",
+    );
+    for r in &rows {
+        println!(
+            "{:>8} {:>10} {:>10} {:>9} {:>8} {:>8} {:>8} {:>9.1}% {:>10} {:>10.3} {:>12.1}",
+            r.backend,
+            r.peak_live_sessions,
+            r.completed_turns,
+            r.prefill_tokens,
+            r.preemptions,
+            r.swap_outs,
+            r.swap_ins,
+            r.prefix_hit_rate * 100.0,
+            r.blocks_high_water,
+            r.wall_s,
+            r.tok_per_s
+        );
+        md.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} | {:.1}% | {} | {:.3} | {:.1} | {:016x} |\n",
+            r.backend,
+            r.peak_live_sessions,
+            r.completed_turns,
+            r.prefill_tokens,
+            r.preemptions,
+            r.swap_outs,
+            r.swap_ins,
+            r.prefix_hit_rate * 100.0,
+            r.blocks_high_water,
+            r.wall_s,
+            r.tok_per_s,
+            r.token_checksum
+        ));
+    }
+    let ratio = rows[1].peak_live_sessions as f64 / rows[0].peak_live_sessions.max(1) as f64;
+    println!(
+        "paged sustains {ratio:.1}x the concurrent sessions of contiguous at the same budget \
+         (checksums equal: both served identical tokens)"
+    );
+    md.push_str(&format!(
+        "\nPaged sustains **{ratio:.1}x** the concurrent sessions of the contiguous baseline at \
+         the same KV budget; token checksums are equal, so the comparison is between runs that \
+         provably served identical streams. Protocol: `averis churn-bench --model {} --seed {} \
+         --threads {}{}`.",
+        args.get_or("model", "dense"),
+        shape.seed,
+        parallel::threads(),
+        if smoke { " --smoke" } else { "" }
+    ));
+    let run = RunDir::create(&args.get_or("out", "runs"), "churn_bench")?;
+    let mut csv = CsvSink::create(
+        run.file("churn_bench.csv"),
+        &[
+            "backend_is_paged",
+            "sessions",
+            "turns",
+            "completed_turns",
+            "peak_live_sessions",
+            "prefill_tokens",
+            "generated",
+            "preemptions",
+            "swap_outs",
+            "swap_ins",
+            "prefix_hit_rate",
+            "blocks_high_water",
+            "wall_s",
+            "tok_per_s",
+        ],
+    )?;
+    for r in &rows {
+        csv.row(&[
+            if r.backend == "paged" { 1.0 } else { 0.0 },
+            r.sessions as f64,
+            r.turns as f64,
+            r.completed_turns as f64,
+            r.peak_live_sessions as f64,
+            r.prefill_tokens as f64,
+            r.generated as f64,
+            r.preemptions as f64,
+            r.swap_outs as f64,
+            r.swap_ins as f64,
+            r.prefix_hit_rate,
+            r.blocks_high_water as f64,
+            r.wall_s,
+            r.tok_per_s,
+        ])?;
+    }
+    println!("csv written to {}", run.file("churn_bench.csv").display());
+    if let Some(record) = args.get("record") {
+        record_markdown_block(record, "kv-paged", &md)?;
+        println!("recorded churn table into {record}");
     }
     Ok(())
 }

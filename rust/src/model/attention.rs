@@ -8,6 +8,7 @@
 //! Input is the flattened token matrix X (l×d) with l = batch·seq; the
 //! attention core iterates sequences.
 
+use super::kv::KvStore;
 use super::params::AttnParams;
 use super::rope::RopeTables;
 use crate::quant::gemm::QuantGemm;
@@ -149,6 +150,18 @@ impl KvCache {
         self.len == 0
     }
 
+    /// Flatten to contiguous (K, V) slabs (swap-out parity with the paged
+    /// cache; the contiguous layout already is the snapshot).
+    pub fn snapshot(&self) -> (Vec<f32>, Vec<f32>) {
+        (self.k.clone(), self.v.clone())
+    }
+}
+
+impl KvStore for KvCache {
+    fn len(&self) -> usize {
+        self.len
+    }
+
     fn push(&mut self, k_row: &[f32], v_row: &[f32]) {
         debug_assert_eq!(k_row.len(), self.kv_cols);
         debug_assert_eq!(v_row.len(), self.kv_cols);
@@ -179,8 +192,12 @@ impl KvCache {
 /// probability skip), and a row's output depends only on the cache prefix
 /// and its own q — so chunked prefill and one-token-at-a-time decode produce
 /// bit-identical outputs.
-pub fn attn_core_cached(
-    cache: &mut KvCache,
+///
+/// Generic (monomorphized) over the [`KvStore`] backend: the contiguous
+/// [`KvCache`] and the paged block-table view run this exact arithmetic on
+/// the exact f32 row values, which is why paging cannot move a single bit.
+pub fn attn_core_cached<S: KvStore>(
+    cache: &mut S,
     q_new: &Mat,
     k_new: &Mat,
     v_new: &Mat,
@@ -531,6 +548,37 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "row {i}: {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn cached_core_paged_store_matches_contiguous_bitwise() {
+        use crate::model::kv::{KvBlockPool, PagedKvCache};
+        let (x, p, rope, shape, _) = setup(1, 8);
+        let mut g = QuantGemm::new(QuantRecipe::Bf16, 0);
+        let (_, cache) = attn_forward(&x, &p, &rope, shape, &mut g);
+        let (h, kv, dh) = (shape.n_heads, shape.n_kv_heads, shape.head_dim);
+        let mut contig = KvCache::new(kv, dh);
+        let full = attn_core_cached(&mut contig, &cache.q, &cache.k, &cache.v, h, kv, dh);
+        // block size 3: rows 0..8 straddle three blocks, so block-boundary
+        // indexing is exercised while decoding one token at a time
+        let pool = KvBlockPool::shared(3, kv * dh, None);
+        let mut paged = PagedKvCache::new(pool);
+        for i in 0..8 {
+            let step = attn_core_cached(
+                &mut paged.view(),
+                &cache.q.rows_slice(i, 1),
+                &cache.k.rows_slice(i, 1),
+                &cache.v.rows_slice(i, 1),
+                h,
+                kv,
+                dh,
+            );
+            for (a, b) in step.row(0).iter().zip(full.row(i).iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {i}: {a} vs {b}");
+            }
+        }
+        assert_eq!(paged.len(), 8);
+        assert_eq!(paged.n_blocks(), 3);
     }
 
     #[test]

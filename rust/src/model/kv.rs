@@ -1,0 +1,629 @@
+//! Paged KV-cache storage: a process-wide pool of fixed-size KV blocks plus
+//! per-session block tables (the vLLM design), replacing the contiguous
+//! per-session buffers whose worst-case reservation made memory — not
+//! compute — the concurrent-session ceiling.
+//!
+//! Layout: the pool owns two f32 slabs (K and V); block `b` spans rows
+//! `b·block_tokens .. (b+1)·block_tokens`, each row `kv_cols` wide (the
+//! rotated K/V projection layout of `attn_core_cached`). A session's cache
+//! is a table of block ids; logical row `i` lives at offset `i %
+//! block_tokens` of block `table[i / block_tokens]`.
+//!
+//! Sharing: blocks are refcounted. Because serve-path logits are
+//! row-independent (`quant::rowq`) and a K/V row at position `i` is a pure
+//! function of tokens `0..=i`, sessions whose prompts share a token prefix
+//! produce bitwise-identical K/V rows there — so full blocks of a common
+//! prefix are shared copy-free through a chain-hash index, verified against
+//! the actual tokens so a 64-bit collision can never alias two prefixes.
+//! Appending into a block another table still references triggers
+//! copy-on-write at the divergence point. Reads return the same f32 values
+//! in the same order as the contiguous cache, so attention arithmetic — and
+//! therefore every logit — is bit-identical by construction.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Abstract KV row storage driven by the cached attention core: rows are
+/// appended once per token and addressed by absolute sequence position.
+/// Implemented by the contiguous [`super::attention::KvCache`] and by
+/// [`PagedKvView`]; `attn_core_cached` is generic (monomorphized) over it,
+/// so both backends run the exact same attention arithmetic.
+pub trait KvStore {
+    /// Cached sequence length (rows stored so far).
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Append one rotated K row and V row (each `kv_cols` wide).
+    fn push(&mut self, k_row: &[f32], v_row: &[f32]);
+    fn k_row(&self, i: usize) -> &[f32];
+    fn v_row(&self, i: usize) -> &[f32];
+}
+
+/// Block size (tokens per KV block): `AVERIS_KV_BLOCK` env override, else 32.
+/// CI forces a small value so multi-block paths exercise on tiny prompts.
+pub fn default_block_tokens() -> usize {
+    std::env::var("AVERIS_KV_BLOCK")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(32)
+}
+
+/// Seed of the prefix chain hash (FNV-1a offset basis).
+pub const PREFIX_HASH_SEED: u64 = 0xcbf29ce484222325;
+
+/// Extend a chain hash over a token run. Chaining block hashes through their
+/// parents means a hash identifies the *entire* prefix ending at its block,
+/// not just the block's own tokens.
+pub fn chain_hash(parent: u64, tokens: &[u32]) -> u64 {
+    let mut h = parent;
+    for &t in tokens {
+        h = (h ^ (t as u64 + 1)).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Pool occupancy and sharing gauges, sampled by the engine each step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// blocks currently referenced by at least one table or prefix entry
+    pub blocks_in_use: usize,
+    /// most blocks ever simultaneously in use
+    pub blocks_high_water: usize,
+    /// copy-on-write block copies (divergence inside a shared block)
+    pub cow_copies: u64,
+}
+
+/// One cached full-prefix block: the chain hash maps to the blocks holding
+/// that prefix's K/V rows in every layer, plus the verification material.
+struct PrefixEntry {
+    /// chain hash of the prefix ending at the previous block (or
+    /// [`PREFIX_HASH_SEED`] for the first block)
+    parent: u64,
+    /// the block's own tokens — lookup verifies `(parent, tokens)` so a
+    /// 64-bit hash collision degrades to a miss, never to aliased KV rows
+    tokens: Vec<u32>,
+    /// one block id per layer, all holding this prefix span
+    blocks: Vec<u32>,
+    /// pool clock at last hit (LRU eviction key; unique per entry)
+    last_used: u64,
+}
+
+/// The process-wide block pool. Wrap in [`SharedKvPool`] to share across
+/// sessions; every engine session's per-layer caches draw from one pool.
+pub struct KvBlockPool {
+    block_tokens: usize,
+    kv_cols: usize,
+    /// hard block budget; `None` grows on demand (private/unbounded pools)
+    max_blocks: Option<usize>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    refcount: Vec<u32>,
+    /// free block ids, LIFO for locality
+    free: Vec<u32>,
+    prefix: HashMap<u64, PrefixEntry>,
+    /// monotone LRU clock (bumped per index touch → unique, deterministic)
+    clock: u64,
+    stats: PoolStats,
+}
+
+/// Handle shared by every session cache drawing from one pool.
+pub type SharedKvPool = Arc<Mutex<KvBlockPool>>;
+
+/// Lock a shared pool, shrugging off poison (pool state is valid after any
+/// panic: all mutations are single-field or guarded by refcounts).
+pub fn lock_pool(pool: &SharedKvPool) -> MutexGuard<'_, KvBlockPool> {
+    pool.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl KvBlockPool {
+    pub fn new(block_tokens: usize, kv_cols: usize, max_blocks: Option<usize>) -> KvBlockPool {
+        assert!(block_tokens >= 1, "block_tokens must be at least 1");
+        assert!(kv_cols >= 1, "kv_cols must be at least 1");
+        KvBlockPool {
+            block_tokens,
+            kv_cols,
+            max_blocks,
+            k: Vec::new(),
+            v: Vec::new(),
+            refcount: Vec::new(),
+            free: Vec::new(),
+            prefix: HashMap::new(),
+            clock: 0,
+            stats: PoolStats::default(),
+        }
+    }
+
+    pub fn shared(block_tokens: usize, kv_cols: usize, max_blocks: Option<usize>) -> SharedKvPool {
+        Arc::new(Mutex::new(KvBlockPool::new(block_tokens, kv_cols, max_blocks)))
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn kv_cols(&self) -> usize {
+        self.kv_cols
+    }
+
+    pub fn max_blocks(&self) -> Option<usize> {
+        self.max_blocks
+    }
+
+    /// Blocks currently referenced by a table or prefix entry.
+    pub fn blocks_in_use(&self) -> usize {
+        self.refcount.len() - self.free.len()
+    }
+
+    /// Blocks allocatable right now (`usize::MAX` when unbounded).
+    pub fn free_blocks(&self) -> usize {
+        match self.max_blocks {
+            Some(cap) => self.free.len() + cap.saturating_sub(self.refcount.len()),
+            None => usize::MAX,
+        }
+    }
+
+    /// Number of cached prefix entries.
+    pub fn prefix_entries(&self) -> usize {
+        self.prefix.len()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats { blocks_in_use: self.blocks_in_use(), ..self.stats }
+    }
+
+    pub fn refcount(&self, block: u32) -> u32 {
+        self.refcount[block as usize]
+    }
+
+    /// Allocate one block with refcount 1, or `None` at the budget cap.
+    /// Contents are whatever the previous tenant left — rows are always
+    /// written before `len` admits reading them.
+    pub fn alloc(&mut self) -> Option<u32> {
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                if let Some(cap) = self.max_blocks {
+                    if self.refcount.len() >= cap {
+                        return None;
+                    }
+                }
+                let id = self.refcount.len() as u32;
+                self.refcount.push(0);
+                let n = self.block_tokens * self.kv_cols;
+                self.k.resize(self.k.len() + n, 0.0);
+                self.v.resize(self.v.len() + n, 0.0);
+                id
+            }
+        };
+        self.refcount[id as usize] = 1;
+        self.stats.blocks_high_water = self.stats.blocks_high_water.max(self.blocks_in_use());
+        Some(id)
+    }
+
+    pub fn incref(&mut self, block: u32) {
+        self.refcount[block as usize] += 1;
+    }
+
+    /// Drop one reference; a block at zero returns to the free list.
+    pub fn decref(&mut self, block: u32) {
+        let rc = &mut self.refcount[block as usize];
+        debug_assert!(*rc > 0, "decref of a free block");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(block);
+        }
+    }
+
+    #[inline]
+    fn row_start(&self, block: u32, off: usize) -> usize {
+        debug_assert!(off < self.block_tokens);
+        (block as usize * self.block_tokens + off) * self.kv_cols
+    }
+
+    #[inline]
+    pub fn k_row(&self, block: u32, off: usize) -> &[f32] {
+        let s = self.row_start(block, off);
+        &self.k[s..s + self.kv_cols]
+    }
+
+    #[inline]
+    pub fn v_row(&self, block: u32, off: usize) -> &[f32] {
+        let s = self.row_start(block, off);
+        &self.v[s..s + self.kv_cols]
+    }
+
+    #[inline]
+    fn k_row_mut(&mut self, block: u32, off: usize) -> &mut [f32] {
+        let s = self.row_start(block, off);
+        &mut self.k[s..s + self.kv_cols]
+    }
+
+    #[inline]
+    fn v_row_mut(&mut self, block: u32, off: usize) -> &mut [f32] {
+        let s = self.row_start(block, off);
+        &mut self.v[s..s + self.kv_cols]
+    }
+
+    /// Look up a cached full-prefix block. On a verified hit the returned
+    /// blocks (one per layer) carry a fresh reference each — the caller owns
+    /// them (attach to a table or decref). Hash collisions and stale entries
+    /// fail the `(parent, tokens)` check and miss.
+    pub fn prefix_lookup(&mut self, hash: u64, parent: u64, tokens: &[u32]) -> Option<Vec<u32>> {
+        self.clock += 1;
+        let clock = self.clock;
+        let e = self.prefix.get_mut(&hash)?;
+        if e.parent != parent || e.tokens != tokens {
+            return None;
+        }
+        e.last_used = clock;
+        let blocks = e.blocks.clone();
+        for &b in &blocks {
+            self.refcount[b as usize] += 1;
+        }
+        Some(blocks)
+    }
+
+    /// Probe without taking references (admission-time capacity planning).
+    pub fn prefix_contains(&self, hash: u64, parent: u64, tokens: &[u32]) -> bool {
+        self.prefix.get(&hash).is_some_and(|e| e.parent == parent && e.tokens == tokens)
+    }
+
+    /// Publish one full-prefix block (idempotent: an existing entry wins).
+    /// The index takes its own reference on every block, so cached prefixes
+    /// outlive the sessions that produced them until LRU-evicted.
+    pub fn prefix_insert(&mut self, hash: u64, parent: u64, tokens: &[u32], blocks: &[u32]) {
+        if self.prefix.contains_key(&hash) {
+            return;
+        }
+        for &b in blocks {
+            self.refcount[b as usize] += 1;
+        }
+        self.clock += 1;
+        self.prefix.insert(
+            hash,
+            PrefixEntry {
+                parent,
+                tokens: tokens.to_vec(),
+                blocks: blocks.to_vec(),
+                last_used: self.clock,
+            },
+        );
+    }
+
+    /// Evict the least-recently-used prefix entry (deterministic: clock
+    /// values are unique). Returns false when the index is empty. Freed
+    /// blocks only return to the free list if no live table references them.
+    pub fn prefix_evict_lru(&mut self) -> bool {
+        let Some((&h, _)) = self.prefix.iter().min_by_key(|(_, e)| e.last_used) else {
+            return false;
+        };
+        let e = self.prefix.remove(&h).expect("entry just found");
+        for b in e.blocks {
+            self.decref(b);
+        }
+        true
+    }
+}
+
+/// One sequence's paged KV cache for a single layer: a block table over a
+/// shared pool. Dropping the cache releases its block references.
+pub struct PagedKvCache {
+    pool: SharedKvPool,
+    table: Vec<u32>,
+    len: usize,
+}
+
+impl PagedKvCache {
+    pub fn new(pool: SharedKvPool) -> PagedKvCache {
+        PagedKvCache { pool, table: Vec::new(), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn pool(&self) -> &SharedKvPool {
+        &self.pool
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Block id backing table slot `idx`.
+    pub fn block(&self, idx: usize) -> u32 {
+        self.table[idx]
+    }
+
+    /// Append one shared full block (reference already transferred to this
+    /// cache by `prefix_lookup`). Only legal on a block boundary.
+    pub fn attach_shared(&mut self, block: u32) {
+        let bt = lock_pool(&self.pool).block_tokens();
+        assert_eq!(self.len % bt, 0, "shared blocks attach only on block boundaries");
+        self.table.push(block);
+        self.len += bt;
+    }
+
+    /// An independent cache over the same rows: every block gains a
+    /// reference, and the first divergent append copies-on-write.
+    pub fn fork(&self) -> PagedKvCache {
+        {
+            let mut pool = lock_pool(&self.pool);
+            for &b in &self.table {
+                pool.incref(b);
+            }
+        }
+        PagedKvCache { pool: Arc::clone(&self.pool), table: self.table.clone(), len: self.len }
+    }
+
+    /// Lock the pool once and expose [`KvStore`] row access for one
+    /// attention call.
+    pub fn view(&mut self) -> PagedKvView<'_> {
+        let PagedKvCache { pool, table, len } = self;
+        PagedKvView { pool: lock_pool(pool), table, len }
+    }
+
+    /// Flatten the cached rows to contiguous (K, V) slabs (swap-out path).
+    pub fn snapshot(&self) -> (Vec<f32>, Vec<f32>) {
+        let pool = lock_pool(&self.pool);
+        let (bt, cols) = (pool.block_tokens(), pool.kv_cols());
+        let mut k = Vec::with_capacity(self.len * cols);
+        let mut v = Vec::with_capacity(self.len * cols);
+        for i in 0..self.len {
+            k.extend_from_slice(pool.k_row(self.table[i / bt], i % bt));
+            v.extend_from_slice(pool.v_row(self.table[i / bt], i % bt));
+        }
+        (k, v)
+    }
+
+    /// Rebuild a cache from [`Self::snapshot`] slabs (fault-in path). The
+    /// rows land bitwise where they were, so decode resumes bit-identically.
+    pub fn restore(pool: &SharedKvPool, k: &[f32], v: &[f32]) -> PagedKvCache {
+        let cols = lock_pool(pool).kv_cols();
+        assert_eq!(k.len(), v.len(), "K/V slab length mismatch");
+        assert_eq!(k.len() % cols, 0, "slab not a whole number of rows");
+        let n = k.len() / cols;
+        let mut cache = PagedKvCache::new(Arc::clone(pool));
+        {
+            let mut view = cache.view();
+            for i in 0..n {
+                view.push(&k[i * cols..(i + 1) * cols], &v[i * cols..(i + 1) * cols]);
+            }
+        }
+        cache
+    }
+}
+
+impl Drop for PagedKvCache {
+    fn drop(&mut self) {
+        let mut pool = lock_pool(&self.pool);
+        for &b in &self.table {
+            pool.decref(b);
+        }
+    }
+}
+
+/// A locked row-access window over one [`PagedKvCache`]; the pool mutex is
+/// held for the view's lifetime, i.e. one attention core call.
+pub struct PagedKvView<'a> {
+    pool: MutexGuard<'a, KvBlockPool>,
+    table: &'a mut Vec<u32>,
+    len: &'a mut usize,
+}
+
+impl KvStore for PagedKvView<'_> {
+    fn len(&self) -> usize {
+        *self.len
+    }
+
+    fn push(&mut self, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), self.pool.kv_cols);
+        debug_assert_eq!(v_row.len(), self.pool.kv_cols);
+        let bt = self.pool.block_tokens;
+        let off = *self.len % bt;
+        if off == 0 {
+            let b = self
+                .pool
+                .alloc()
+                .expect("KV block pool exhausted: the scheduler must reserve step capacity");
+            self.table.push(b);
+        } else {
+            let tail = *self.table.last().expect("partial block implies a tail entry");
+            if self.pool.refcount(tail) > 1 {
+                // copy-on-write: this table diverges inside a shared block —
+                // copy the shared rows into a private block, then append
+                let nb = self
+                    .pool
+                    .alloc()
+                    .expect("KV block pool exhausted: the scheduler must reserve step capacity");
+                let cols = self.pool.kv_cols;
+                let src = tail as usize * bt * cols;
+                let dst = nb as usize * bt * cols;
+                let n = off * cols;
+                self.pool.k.copy_within(src..src + n, dst);
+                self.pool.v.copy_within(src..src + n, dst);
+                self.pool.decref(tail);
+                *self.table.last_mut().expect("tail entry") = nb;
+                self.pool.stats.cow_copies += 1;
+            }
+        }
+        let tail = *self.table.last().expect("block allocated above");
+        self.pool.k_row_mut(tail, off).copy_from_slice(k_row);
+        self.pool.v_row_mut(tail, off).copy_from_slice(v_row);
+        *self.len += 1;
+    }
+
+    #[inline]
+    fn k_row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < *self.len);
+        let bt = self.pool.block_tokens;
+        self.pool.k_row(self.table[i / bt], i % bt)
+    }
+
+    #[inline]
+    fn v_row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < *self.len);
+        let bt = self.pool.block_tokens;
+        self.pool.v_row(self.table[i / bt], i % bt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(seed: usize, cols: usize) -> Vec<f32> {
+        (0..cols).map(|j| ((seed * 31 + j) as f32) * 0.125 - 2.0).collect()
+    }
+
+    #[test]
+    fn alloc_free_refcount_roundtrip() {
+        let mut p = KvBlockPool::new(4, 8, Some(2));
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_eq!(p.blocks_in_use(), 2);
+        assert!(p.alloc().is_none(), "cap enforced");
+        p.incref(a);
+        p.decref(a);
+        assert_eq!(p.blocks_in_use(), 2, "still referenced");
+        p.decref(a);
+        assert_eq!(p.blocks_in_use(), 1);
+        assert_eq!(p.free_blocks(), 1);
+        let c = p.alloc().unwrap();
+        assert_eq!(c, a, "freed block is reused");
+        assert_eq!(p.stats().blocks_high_water, 2);
+        p.decref(b);
+        p.decref(c);
+        assert_eq!(p.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn paged_rows_roundtrip_across_block_boundaries() {
+        let pool = KvBlockPool::shared(4, 8, None);
+        let mut c = PagedKvCache::new(Arc::clone(&pool));
+        for i in 0..10 {
+            let (k, v) = (row(i, 8), row(100 + i, 8));
+            c.view().push(&k, &v);
+        }
+        assert_eq!(c.len(), 10);
+        assert_eq!(c.n_blocks(), 3);
+        let view = c.view();
+        for i in 0..10 {
+            assert_eq!(view.k_row(i), &row(i, 8)[..], "k row {i}");
+            assert_eq!(view.v_row(i), &row(100 + i, 8)[..], "v row {i}");
+        }
+    }
+
+    #[test]
+    fn fork_copy_on_write_leaves_original_untouched() {
+        let pool = KvBlockPool::shared(4, 4, None);
+        let mut a = PagedKvCache::new(Arc::clone(&pool));
+        for i in 0..6 {
+            a.view().push(&row(i, 4), &row(50 + i, 4));
+        }
+        let mut b = a.fork();
+        assert_eq!(b.len(), 6);
+        // divergence mid-block: b appends row 6 into the half-full block 1
+        b.view().push(&row(600, 4), &row(650, 4));
+        a.view().push(&row(700, 4), &row(750, 4));
+        assert_eq!(lock_pool(&pool).stats().cow_copies, 1, "exactly one COW copy");
+        {
+            let av = a.view();
+            for i in 0..6 {
+                assert_eq!(av.k_row(i), &row(i, 4)[..], "shared prefix row {i} (a)");
+            }
+            assert_eq!(av.k_row(6), &row(700, 4)[..]);
+        }
+        let bview = b.view();
+        for i in 0..6 {
+            assert_eq!(bview.k_row(i), &row(i, 4)[..], "shared prefix row {i} (b)");
+        }
+        assert_eq!(bview.k_row(6), &row(600, 4)[..]);
+    }
+
+    #[test]
+    fn prefix_index_verifies_and_evicts_lru() {
+        let mut p = KvBlockPool::new(4, 4, None);
+        let b0 = p.alloc().unwrap();
+        let b1 = p.alloc().unwrap();
+        let toks = [1u32, 2, 3, 4];
+        let h = chain_hash(PREFIX_HASH_SEED, &toks);
+        p.prefix_insert(h, PREFIX_HASH_SEED, &toks, &[b0, b1]);
+        // creator drops its references; index keeps the blocks alive
+        p.decref(b0);
+        p.decref(b1);
+        assert_eq!(p.blocks_in_use(), 2);
+        // verified hit hands out fresh references
+        let got = p.prefix_lookup(h, PREFIX_HASH_SEED, &toks).unwrap();
+        assert_eq!(got, vec![b0, b1]);
+        // a forged hash with different tokens misses
+        assert!(p.prefix_lookup(h, PREFIX_HASH_SEED, &[9, 9, 9, 9]).is_none());
+        assert!(p.prefix_lookup(h, 12345, &toks).is_none());
+        // eviction drops the index references; the lookup's survive
+        assert!(p.prefix_evict_lru());
+        assert!(!p.prefix_evict_lru(), "index empty");
+        assert_eq!(p.blocks_in_use(), 2, "lookup references still live");
+        p.decref(b0);
+        p.decref(b1);
+        assert_eq!(p.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn snapshot_restore_is_bitwise() {
+        let pool = KvBlockPool::shared(4, 8, None);
+        let mut c = PagedKvCache::new(Arc::clone(&pool));
+        for i in 0..7 {
+            c.view().push(&row(i, 8), &row(200 + i, 8));
+        }
+        let (k, v) = c.snapshot();
+        drop(c);
+        assert_eq!(lock_pool(&pool).blocks_in_use(), 0, "drop released everything");
+        let mut r = PagedKvCache::restore(&pool, &k, &v);
+        assert_eq!(r.len(), 7);
+        let view = r.view();
+        for i in 0..7 {
+            for (x, y) in view.k_row(i).iter().zip(row(i, 8).iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in view.v_row(i).iter().zip(row(200 + i, 8).iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn attach_shared_counts_full_blocks() {
+        let pool = KvBlockPool::shared(4, 4, None);
+        let (b, h) = {
+            let mut p = lock_pool(&pool);
+            let b = p.alloc().unwrap();
+            let toks = [7u32, 8, 9, 10];
+            let h = chain_hash(PREFIX_HASH_SEED, &toks);
+            p.prefix_insert(h, PREFIX_HASH_SEED, &toks, &[b]);
+            p.decref(b);
+            (b, h)
+        };
+        let mut c = PagedKvCache::new(Arc::clone(&pool));
+        let got = lock_pool(&pool).prefix_lookup(h, PREFIX_HASH_SEED, &[7, 8, 9, 10]).unwrap();
+        assert_eq!(got, vec![b]);
+        c.attach_shared(got[0]);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.n_blocks(), 1);
+        // appending after the shared block allocates a private one
+        c.view().push(&row(1, 4), &row(2, 4));
+        assert_eq!(c.len(), 5);
+        assert_eq!(c.n_blocks(), 2);
+        assert_eq!(lock_pool(&pool).stats().cow_copies, 0, "boundary append is not a COW");
+    }
+
+    #[test]
+    fn default_block_tokens_is_positive() {
+        assert!(default_block_tokens() >= 1);
+    }
+}

@@ -17,6 +17,7 @@
 pub mod attention;
 pub mod config;
 pub mod ffn;
+pub mod kv;
 pub mod moe;
 pub mod norm;
 pub mod params;
@@ -26,6 +27,7 @@ pub mod transformer;
 
 pub use attention::KvCache;
 pub use config::ModelConfig;
+pub use kv::{KvBlockPool, KvStore, PagedKvCache, PoolStats, SharedKvPool};
 pub use params::Params;
 pub use taps::{TapStage, Taps};
-pub use transformer::{DecodeState, Transformer};
+pub use transformer::{DecodeState, LayerKv, Transformer};

@@ -8,6 +8,7 @@ use super::attention::{
 };
 use super::config::{FfnKind, ModelConfig};
 use super::ffn::{ffn_backward, ffn_forward, FfnCache};
+use super::kv::{PagedKvCache, SharedKvPool};
 use super::moe::{moe_backward, moe_forward, MoeCache};
 use super::norm::{rmsnorm_backward, rmsnorm_forward, RmsNormCache};
 use super::params::{BlockFfn, Params};
@@ -19,19 +20,72 @@ use crate::serve::checkpoint::QuantizedCheckpoint;
 use crate::tensor::ops::cross_entropy;
 use crate::tensor::Mat;
 
+/// One layer's KV storage backend: a private contiguous buffer, or a block
+/// table over a shared paged pool. Both feed the same monomorphized
+/// `attn_core_cached`, so the choice cannot change a single logit bit.
+pub enum LayerKv {
+    Contig(KvCache),
+    Paged(PagedKvCache),
+}
+
+impl LayerKv {
+    /// Cached sequence length.
+    pub fn len(&self) -> usize {
+        match self {
+            LayerKv::Contig(c) => c.len(),
+            LayerKv::Paged(p) => p.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Per-sequence incremental-decode state: one KV cache per layer plus the
 /// absolute position of the next token.
 pub struct DecodeState {
     pub pos: usize,
-    pub layers: Vec<KvCache>,
+    pub layers: Vec<LayerKv>,
 }
 
 impl DecodeState {
+    /// Contiguous per-sequence buffers (the pre-paging layout; still the
+    /// default for standalone `prefill`/`decode_step` use).
     pub fn new(cfg: &ModelConfig) -> DecodeState {
         DecodeState {
             pos: 0,
             layers: (0..cfg.n_layers)
-                .map(|_| KvCache::new(cfg.n_kv_heads, cfg.head_dim()))
+                .map(|_| LayerKv::Contig(KvCache::new(cfg.n_kv_heads, cfg.head_dim())))
+                .collect(),
+        }
+    }
+
+    /// Block tables over a shared paged pool, whose `kv_cols` must match
+    /// the model's KV projection width.
+    pub fn paged(cfg: &ModelConfig, pool: &SharedKvPool) -> DecodeState {
+        let cols = super::kv::lock_pool(pool).kv_cols();
+        assert_eq!(cols, cfg.n_kv_heads * cfg.head_dim(), "pool kv_cols mismatch");
+        DecodeState {
+            pos: 0,
+            layers: (0..cfg.n_layers)
+                .map(|_| LayerKv::Paged(PagedKvCache::new(std::sync::Arc::clone(pool))))
+                .collect(),
+        }
+    }
+
+    /// An independent state over the same cached rows: contiguous layers
+    /// deep-copy, paged layers share blocks copy-on-write.
+    pub fn fork(&self) -> DecodeState {
+        DecodeState {
+            pos: self.pos,
+            layers: self
+                .layers
+                .iter()
+                .map(|l| match l {
+                    LayerKv::Contig(c) => LayerKv::Contig(c.clone()),
+                    LayerKv::Paged(p) => LayerKv::Paged(p.fork()),
+                })
                 .collect(),
         }
     }
@@ -380,15 +434,16 @@ impl Transformer {
                 let mut off = 0;
                 for (state, toks) in chunks.iter_mut() {
                     let r = toks.len();
-                    let out = attn_core_cached(
-                        &mut state.layers[li],
-                        &q.rows_slice(off, r),
-                        &k.rows_slice(off, r),
-                        &v.rows_slice(off, r),
-                        n_heads,
-                        n_kv,
-                        dh,
-                    );
+                    let (qs, ks, vs) =
+                        (q.rows_slice(off, r), k.rows_slice(off, r), v.rows_slice(off, r));
+                    let out = match &mut state.layers[li] {
+                        LayerKv::Contig(c) => {
+                            attn_core_cached(c, &qs, &ks, &vs, n_heads, n_kv, dh)
+                        }
+                        LayerKv::Paged(p) => {
+                            attn_core_cached(&mut p.view(), &qs, &ks, &vs, n_heads, n_kv, dh)
+                        }
+                    };
                     for i in 0..r {
                         attn_out.row_mut(off + i).copy_from_slice(out.row(i));
                     }

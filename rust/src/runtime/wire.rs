@@ -109,6 +109,67 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// Magic prefix of a KV swap record ("KVSW" little-endian).
+pub const KV_SWAP_MAGIC: u32 = 0x4B56_5357;
+/// Bump on layout changes; decode rejects other versions.
+pub const KV_SWAP_VERSION: u32 = 1;
+
+/// Encode one session's evicted KV state: `pos` cached rows per layer, each
+/// layer as its flattened (K, V) row-major f32 slabs of `kv_cols` columns.
+/// Layout: magic, version, pos, kv_cols, layer count, then per layer the K
+/// slab and V slab as length-prefixed f32 runs.
+pub fn encode_kv_swap(pos: u64, kv_cols: u64, layers: &[(Vec<f32>, Vec<f32>)]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u32(&mut out, KV_SWAP_MAGIC);
+    put_u32(&mut out, KV_SWAP_VERSION);
+    put_u64(&mut out, pos);
+    put_u64(&mut out, kv_cols);
+    put_u64(&mut out, layers.len() as u64);
+    for (k, v) in layers {
+        put_f32s(&mut out, k);
+        put_f32s(&mut out, v);
+    }
+    out
+}
+
+/// Decode a [`encode_kv_swap`] record, validating magic/version and that
+/// every layer slab holds exactly `pos × kv_cols` values.
+#[allow(clippy::type_complexity)]
+pub fn decode_kv_swap(buf: &[u8]) -> Result<(u64, u64, Vec<(Vec<f32>, Vec<f32>)>)> {
+    let mut r = Reader::new(buf);
+    let magic = r.u32()?;
+    if magic != KV_SWAP_MAGIC {
+        bail!("not a KV swap record: magic {magic:#x}");
+    }
+    let version = r.u32()?;
+    if version != KV_SWAP_VERSION {
+        bail!("unsupported KV swap version {version}");
+    }
+    let pos = r.u64()?;
+    let kv_cols = r.u64()?;
+    let n_layers = r.u64()?;
+    let want = pos
+        .checked_mul(kv_cols)
+        .and_then(|n| usize::try_from(n).ok())
+        .context("KV swap record corrupt: row count overflows")?;
+    let mut layers = Vec::with_capacity(n_layers as usize);
+    for li in 0..n_layers {
+        let k = r.f32s()?;
+        let v = r.f32s()?;
+        if k.len() != want || v.len() != want {
+            bail!(
+                "KV swap layer {li} corrupt: {}x{} K / {} V values, expected {want}",
+                pos,
+                kv_cols,
+                v.len()
+            );
+        }
+        layers.push((k, v));
+    }
+    r.done()?;
+    Ok((pos, kv_cols, layers))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +199,48 @@ mod tests {
         put_u64(&mut buf, 100); // length prefix promising 100 f32s
         let mut r = Reader::new(&buf);
         assert!(r.f32s().is_err());
+    }
+
+    #[test]
+    fn kv_swap_roundtrips_bitwise() {
+        let layers: Vec<(Vec<f32>, Vec<f32>)> = (0..3)
+            .map(|li| {
+                let k: Vec<f32> = (0..8).map(|i| (li * 8 + i) as f32 * 0.5 - 1.0).collect();
+                let v: Vec<f32> = (0..8).map(|i| -((li * 8 + i) as f32) * 0.25).collect();
+                (k, v)
+            })
+            .collect();
+        let buf = encode_kv_swap(2, 4, &layers);
+        let (pos, kv_cols, got) = decode_kv_swap(&buf).unwrap();
+        assert_eq!((pos, kv_cols), (2, 4));
+        assert_eq!(got.len(), 3);
+        for (a, b) in got.iter().zip(layers.iter()) {
+            for (x, y) in a.0.iter().zip(b.0.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in a.1.iter().zip(b.1.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn kv_swap_rejects_corruption() {
+        let layers = vec![(vec![1.0f32; 4], vec![2.0f32; 4])];
+        let good = encode_kv_swap(1, 4, &layers);
+        // wrong magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode_kv_swap(&bad).is_err());
+        // truncated
+        assert!(decode_kv_swap(&good[..good.len() - 3]).is_err());
+        // slab size disagreeing with pos × kv_cols
+        let short = encode_kv_swap(2, 4, &layers);
+        assert!(decode_kv_swap(&short).is_err());
+        // trailing garbage
+        let mut long = good;
+        long.push(0);
+        assert!(decode_kv_swap(&long).is_err());
     }
 
     #[test]

@@ -191,13 +191,25 @@ fn pack_ffn(f: &FfnParams, mu_in: &[f32], quant: Nvfp4Quantizer) -> PackedFfn {
 }
 
 impl QuantizedCheckpoint {
-    /// Pack every weight matrix once. `calib` supplies the frozen μ̂ per
-    /// tapped operand; `CalibMeans::zeros` gives plain row quantization.
+    /// Pack every weight matrix once with the NVFP4 recipe. `calib` supplies
+    /// the frozen μ̂ per tapped operand; `CalibMeans::zeros` gives plain row
+    /// quantization.
     pub fn build(cfg: &ModelConfig, params: &Params, calib: &CalibMeans) -> QuantizedCheckpoint {
+        QuantizedCheckpoint::build_with(cfg, params, calib, Nvfp4Quantizer::nvfp4())
+    }
+
+    /// [`QuantizedCheckpoint::build`] with an explicit block-quantizer
+    /// recipe (NVFP4 or MXFP4) — the serving determinism contract is pinned
+    /// across both.
+    pub fn build_with(
+        cfg: &ModelConfig,
+        params: &Params,
+        calib: &CalibMeans,
+        quant: Nvfp4Quantizer,
+    ) -> QuantizedCheckpoint {
         cfg.validate().expect("invalid model config");
         assert_eq!(calib.attn_in.len(), cfg.n_layers, "calibration layer count");
         assert_eq!(calib.ffn_in.len(), cfg.n_layers, "calibration layer count");
-        let quant = Nvfp4Quantizer::nvfp4();
         let attn_out_zeros = vec![0.0f32; cfg.n_heads * cfg.head_dim()];
         let blocks = params
             .blocks

@@ -1,0 +1,248 @@
+//! Cache-churn bench: the serving scenario the paged KV cache exists for.
+//!
+//! N sessions share a system-prompt prefix, each with a unique tail. Every
+//! session survives `turns` rounds of generate → idle → resume under a fixed
+//! per-layer KV budget. The same workload runs on both backends:
+//!
+//!  * `contig` — contiguous per-session buffers. Admission must reserve each
+//!    session's worst case up front, parked sessions drop their KV, and every
+//!    resume re-prefills the whole context. Concurrency is budget-bound.
+//!  * `paged` — the block pool. Prefix blocks are shared copy-free, idle
+//!    sessions swap to disk under pressure instead of capping admission, and
+//!    resume faults KV back in bitwise.
+//!
+//! Both runs decode greedily with counter-seeded sampling over identical
+//! contexts, so their completion checksums must be equal — the harness
+//! asserts it: the throughput comparison is only meaningful between runs
+//! that provably served the same tokens.
+
+use super::checkpoint::{CalibMeans, QuantizedCheckpoint};
+use super::engine::{completions_checksum, Completion, Engine, EngineConfig, KvBackendCfg};
+use super::session::SampleCfg;
+use crate::model::{ModelConfig, Params};
+use crate::tensor::Rng;
+use std::time::Instant;
+
+/// Workload shape for [`bench_cache_churn`].
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnShape {
+    /// concurrent keep-alive sessions
+    pub sessions: usize,
+    /// generate → idle → resume rounds per session
+    pub turns: usize,
+    /// shared system-prompt tokens (the prefix-share candidate)
+    pub system_prompt: usize,
+    /// unique per-session prompt tail tokens
+    pub unique_prompt: usize,
+    /// tokens sampled per turn
+    pub max_new: usize,
+    /// per-layer KV row budget both backends get
+    pub budget_tokens: usize,
+    /// paged backend's block size
+    pub block_tokens: usize,
+    /// in-flight batch cap
+    pub max_active: usize,
+    pub seed: u64,
+}
+
+impl ChurnShape {
+    /// The EXPERIMENTS.md record shape (dense_small).
+    pub fn full() -> ChurnShape {
+        ChurnShape {
+            sessions: 12,
+            turns: 3,
+            system_prompt: 48,
+            unique_prompt: 8,
+            max_new: 8,
+            budget_tokens: 128,
+            block_tokens: 16,
+            max_active: 4,
+            seed: 23,
+        }
+    }
+
+    /// CI-sized variant (seconds, not minutes).
+    pub fn smoke() -> ChurnShape {
+        ChurnShape {
+            sessions: 6,
+            turns: 2,
+            system_prompt: 32,
+            unique_prompt: 4,
+            max_new: 4,
+            budget_tokens: 96,
+            block_tokens: 16,
+            max_active: 4,
+            seed: 23,
+        }
+    }
+
+    /// Final context length a session reaches (shape sanity bound).
+    pub fn final_context(&self) -> usize {
+        // turn 1: prompt + max_new; each later turn adds 1 extra + max_new
+        self.system_prompt + self.unique_prompt + self.turns * self.max_new + (self.turns - 1)
+    }
+}
+
+/// One backend's churn measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnBenchRow {
+    pub backend: &'static str,
+    pub sessions: usize,
+    pub turns: usize,
+    /// turn-completions served (sessions × turns when nothing stalls)
+    pub completed_turns: usize,
+    /// most sessions ever holding live KV (resident or swapped) at once —
+    /// the concurrency headline the block pool buys
+    pub peak_live_sessions: usize,
+    /// context rows pushed through prefill steps (re-prefill shows up here)
+    pub prefill_tokens: usize,
+    pub generated: usize,
+    pub preemptions: usize,
+    pub swap_outs: usize,
+    pub swap_ins: usize,
+    pub prefix_hit_rate: f64,
+    pub blocks_high_water: usize,
+    pub wall_s: f64,
+    pub tok_per_s: f64,
+    /// fingerprint of every served token, turn-major — equal across
+    /// backends or the comparison is void (asserted by the harness)
+    pub token_checksum: u64,
+}
+
+fn run_churn(
+    backend: &'static str,
+    ckpt: QuantizedCheckpoint,
+    kv: KvBackendCfg,
+    shape: &ChurnShape,
+) -> ChurnBenchRow {
+    let vocab = ckpt.cfg.vocab;
+    let mut engine = Engine::with_config(
+        ckpt,
+        EngineConfig { max_active: shape.max_active, seed: shape.seed, kv },
+    );
+    // shared system prompt + per-session unique tails, deterministic in the
+    // shape seed (counter-seeded per session, so order never matters)
+    let mut srng = Rng::new(shape.seed ^ 0xC0FF_EE);
+    let system: Vec<u32> = (0..shape.system_prompt).map(|_| srng.below(vocab) as u32).collect();
+    let mut ids = Vec::with_capacity(shape.sessions);
+    for i in 0..shape.sessions {
+        let mut prng = Rng::counter_seeded(shape.seed, i as u64, 1);
+        let mut prompt = system.clone();
+        prompt.extend((0..shape.unique_prompt).map(|_| prng.below(vocab) as u32));
+        let id = engine
+            .submit_keep(prompt, shape.max_new, SampleCfg::Greedy, None)
+            .expect("churn session fits the budget");
+        ids.push(id);
+    }
+    let t0 = Instant::now();
+    let mut completions: Vec<Completion> = engine.run();
+    for turn in 1..shape.turns {
+        for &id in &ids {
+            let mut erng = Rng::counter_seeded(shape.seed ^ 0xE17A, id, turn as u64);
+            let extra = [erng.below(vocab) as u32];
+            engine.resume(id, &extra, shape.max_new).expect("resume fits the budget");
+        }
+        completions.extend(engine.run());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let generated: usize = completions.iter().map(|c| c.tokens.len()).sum();
+    ChurnBenchRow {
+        backend,
+        sessions: shape.sessions,
+        turns: shape.turns,
+        completed_turns: completions.len(),
+        peak_live_sessions: engine.stats.live_sessions_high_water,
+        prefill_tokens: engine.stats.prefill_tokens,
+        generated,
+        preemptions: engine.stats.preemptions,
+        swap_outs: engine.stats.swap_outs,
+        swap_ins: engine.stats.swap_ins,
+        prefix_hit_rate: engine.stats.prefix_hit_rate(),
+        blocks_high_water: engine.stats.blocks_high_water,
+        wall_s: wall,
+        tok_per_s: generated as f64 / wall.max(1e-9),
+        token_checksum: completions_checksum(&completions),
+    }
+}
+
+/// Run the churn workload on both KV backends at the same budget and return
+/// `[contig, paged]`. Panics if the two backends served different tokens —
+/// a determinism regression, not a perf difference.
+pub fn bench_cache_churn(
+    cfg: &ModelConfig,
+    params: &Params,
+    calib: &CalibMeans,
+    shape: &ChurnShape,
+) -> Vec<ChurnBenchRow> {
+    assert!(shape.final_context() + shape.max_new <= cfg.max_seq, "churn shape exceeds max_seq");
+    assert!(shape.final_context() <= shape.budget_tokens, "one session must fit the budget");
+    let ckpt = QuantizedCheckpoint::build(cfg, params, calib);
+    let contig = run_churn(
+        "contig",
+        ckpt.clone(),
+        KvBackendCfg::Contig { budget_tokens: Some(shape.budget_tokens) },
+        shape,
+    );
+    let paged = run_churn(
+        "paged",
+        ckpt,
+        KvBackendCfg::Paged {
+            block_tokens: shape.block_tokens,
+            budget_tokens: Some(shape.budget_tokens),
+            prefix_share: true,
+            swap_dir: None,
+        },
+        shape,
+    );
+    assert_eq!(
+        contig.token_checksum, paged.token_checksum,
+        "KV backends served different tokens — determinism regression"
+    );
+    vec![contig, paged]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn churn_shapes_are_self_consistent() {
+        for shape in [ChurnShape::full(), ChurnShape::smoke()] {
+            assert!(shape.final_context() <= shape.budget_tokens);
+            assert!(shape.system_prompt >= shape.block_tokens, "prefix must span ≥ 1 block");
+        }
+    }
+
+    #[test]
+    fn churn_backends_agree_and_paged_holds_more_sessions() {
+        let cfg = ModelConfig::test_tiny(64);
+        let params = Params::init(&cfg, &mut Rng::new(30));
+        let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+        // tiny shape: max_seq 32 caps the context
+        let shape = ChurnShape {
+            sessions: 4,
+            turns: 2,
+            system_prompt: 8,
+            unique_prompt: 2,
+            max_new: 3,
+            budget_tokens: 20,
+            block_tokens: 4,
+            max_active: 2,
+            seed: 5,
+        };
+        let rows = bench_cache_churn(&cfg, &params, &calib, &shape);
+        assert_eq!(rows.len(), 2);
+        let (contig, paged) = (&rows[0], &rows[1]);
+        assert_eq!(contig.token_checksum, paged.token_checksum);
+        assert_eq!(contig.completed_turns, shape.sessions * shape.turns);
+        assert_eq!(paged.completed_turns, shape.sessions * shape.turns);
+        assert!(
+            paged.peak_live_sessions > contig.peak_live_sessions,
+            "paged {} vs contig {}",
+            paged.peak_live_sessions,
+            contig.peak_live_sessions
+        );
+        // contig re-prefills parked contexts on resume; paged faults in
+        assert!(paged.prefill_tokens < contig.prefill_tokens);
+    }
+}

@@ -2,28 +2,36 @@
 //! checkpoint.
 //!
 //! Each [`Engine::step`] is one iteration of the continuous-batching loop:
-//! admit pending prompts into the in-flight set, assemble one ragged step
-//! batch (newly admitted sessions contribute their whole prompt — prefill —
-//! while decoding sessions contribute exactly one token), run a single
-//! stacked [`Transformer::forward_incremental`] so every packed GEMM
-//! amortizes its weight decode across sessions, sample one token per
-//! session, and evict finished sequences.
+//! admit waiting prompts into the in-flight set (capacity-aware against the
+//! KV budget — faulting swapped sessions back in and attaching shared
+//! prefix blocks copy-free), reserve this step's KV blocks (evicting idle
+//! prefixes, swapping parked sessions to disk, and preempting the newest
+//! active sessions under pressure instead of failing), assemble one ragged
+//! step batch (prefilling sessions contribute their unfed context rows,
+//! decoding sessions exactly one token), run a single stacked
+//! [`Transformer::forward_incremental`] so every packed GEMM amortizes its
+//! weight decode across sessions, sample one token per session, publish
+//! finished prompt blocks to the prefix cache, and park or complete
+//! finished sequences.
 //!
 //! Output is bit-deterministic: logits are row-independent (see
 //! `quant::rowq`) and sampling randomness is counter-seeded per
-//! `(engine seed, session id, token index)`, so completions do not depend
-//! on batch composition, admission order, or thread count — continuous
-//! batching at any `max_active` reproduces sequential decoding exactly.
+//! `(engine seed, session id, sampled-token index)`, so completions do not
+//! depend on batch composition, admission order, thread count, KV backend
+//! (contiguous vs. paged), or any evict → swap → resume cycle.
 
 use super::checkpoint::QuantizedCheckpoint;
 use super::scheduler::Scheduler;
 use super::session::{sample_token, SampleCfg, Session};
-use crate::model::{DecodeState, Params, Transformer};
+use crate::model::kv::{self, chain_hash, KvBlockPool, SharedKvPool, PREFIX_HASH_SEED};
+use crate::model::{DecodeState, LayerKv, PagedKvCache, Params, Transformer};
 use crate::quant::QuantRecipe;
+use crate::runtime::wire;
 use crate::serve::checkpoint::CalibMeans;
 use crate::tensor::parallel::{self, PoolHandle};
 use crate::tensor::Rng;
 use anyhow::{bail, Result};
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// Aggregate serving counters (the serve-bench inputs).
@@ -31,7 +39,7 @@ use std::time::Instant;
 pub struct EngineStats {
     /// continuous-batching iterations run
     pub steps: usize,
-    /// prompt tokens pushed through prefill
+    /// prompt/context tokens pushed through prefill steps
     pub prefill_tokens: usize,
     /// tokens sampled across all sessions
     pub generated_tokens: usize,
@@ -44,6 +52,23 @@ pub struct EngineStats {
     pub decode_steps: usize,
     /// tokens sampled on pure-decode steps
     pub decode_tokens: usize,
+    /// most KV blocks simultaneously in use (paged backend)
+    pub blocks_high_water: usize,
+    /// prompt tokens that were prefix-share candidates (full hashed blocks)
+    pub prefix_lookup_tokens: usize,
+    /// prompt tokens attached copy-free from the prefix cache
+    pub prefix_hit_tokens: usize,
+    /// copy-on-write block copies (divergence inside a shared block)
+    pub cow_copies: u64,
+    /// sessions swapped out to disk (idle eviction + preemption)
+    pub swap_outs: usize,
+    /// sessions faulted back in from disk
+    pub swap_ins: usize,
+    /// active sessions preempted under memory pressure
+    pub preemptions: usize,
+    /// most sessions ever holding live KV (resident or swapped) at once —
+    /// the concurrency the cache actually sustains
+    pub live_sessions_high_water: usize,
 }
 
 impl EngineStats {
@@ -65,14 +90,70 @@ impl EngineStats {
             self.decode_tokens as f64 / self.decode_steps as f64
         }
     }
+
+    /// Fraction of prefix-share candidate tokens served copy-free.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookup_tokens == 0 {
+            0.0
+        } else {
+            self.prefix_hit_tokens as f64 / self.prefix_lookup_tokens as f64
+        }
+    }
 }
 
-/// A finished generation.
+/// A finished generation (one turn of one session).
 #[derive(Clone, Debug)]
 pub struct Completion {
     pub id: u64,
+    /// the tokens submitted for this turn (original prompt, or resume suffix)
     pub prompt: Vec<u32>,
     pub tokens: Vec<u32>,
+}
+
+/// KV cache backend selection.
+#[derive(Clone, Debug)]
+pub enum KvBackendCfg {
+    /// Contiguous per-session buffers (the pre-paging layout). Admission
+    /// reserves the worst case — `context + remaining budget` rows per
+    /// layer — against `budget_tokens`, and parked sessions drop their KV
+    /// (re-prefilling the whole context on resume). The baseline the paged
+    /// pool is benchmarked against.
+    Contig { budget_tokens: Option<usize> },
+    /// Paged block pool shared by every session.
+    Paged {
+        /// tokens per KV block
+        block_tokens: usize,
+        /// per-layer KV row budget (`None` grows on demand); the pool cap
+        /// is `ceil(budget_tokens / block_tokens) · n_layers` blocks
+        budget_tokens: Option<usize>,
+        /// share full prompt-prefix blocks copy-free across sessions
+        prefix_share: bool,
+        /// where evicted sessions swap (default: a per-process temp dir)
+        swap_dir: Option<PathBuf>,
+    },
+}
+
+impl KvBackendCfg {
+    /// The default serving backend: an unbounded paged pool with prefix
+    /// sharing, block size from `AVERIS_KV_BLOCK` (default 32).
+    pub fn paged_default() -> KvBackendCfg {
+        KvBackendCfg::Paged {
+            block_tokens: kv::default_block_tokens(),
+            budget_tokens: None,
+            prefix_share: true,
+            swap_dir: None,
+        }
+    }
+}
+
+/// Full engine configuration (see [`Engine::with_config`]).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// in-flight continuous-batch cap
+    pub max_active: usize,
+    /// keys every session's sampling stream
+    pub seed: u64,
+    pub kv: KvBackendCfg,
 }
 
 pub struct Engine {
@@ -88,37 +169,96 @@ pub struct Engine {
     seed: u64,
     next_id: u64,
     done: Vec<Completion>,
+    /// the shared block pool (None = contiguous backend)
+    kv_pool: Option<SharedKvPool>,
+    prefix_share: bool,
+    /// contiguous backend's per-layer row budget for worst-case admission
+    contig_budget: Option<usize>,
+    swap_dir: PathBuf,
+    /// step clock driving session LRU
+    clock: u64,
 }
 
 impl Engine {
-    /// Build an engine over a packed checkpoint. `max_active` caps the
-    /// in-flight continuous batch; `seed` keys the sampling streams.
+    /// Build an engine over a packed checkpoint with the default paged KV
+    /// backend. `max_active` caps the in-flight continuous batch; `seed`
+    /// keys the sampling streams.
     pub fn new(ckpt: QuantizedCheckpoint, max_active: usize, seed: u64) -> Engine {
+        Engine::with_config(
+            ckpt,
+            EngineConfig { max_active, seed, kv: KvBackendCfg::paged_default() },
+        )
+    }
+
+    /// Build an engine with an explicit KV backend / budget configuration.
+    pub fn with_config(ckpt: QuantizedCheckpoint, cfg: EngineConfig) -> Engine {
         // the Transformer here only carries cfg + RoPE tables: every serve
         // GEMM runs the packed FrozenLinear path inside the checkpoint
         let model = Transformer::new(ckpt.cfg, QuantRecipe::Bf16, 0);
         let pool = parallel::pool();
         pool.warm();
+        let kv_cols = ckpt.cfg.n_kv_heads * ckpt.cfg.head_dim();
+        let n_layers = ckpt.cfg.n_layers;
+        let (kv_pool, prefix_share, contig_budget, swap_dir) = match cfg.kv {
+            KvBackendCfg::Contig { budget_tokens } => (None, false, budget_tokens, None),
+            KvBackendCfg::Paged { block_tokens, budget_tokens, prefix_share, swap_dir } => {
+                let max_blocks =
+                    budget_tokens.map(|b| (b + block_tokens - 1) / block_tokens * n_layers);
+                let pool = KvBlockPool::shared(block_tokens, kv_cols, max_blocks);
+                (Some(pool), prefix_share, None, swap_dir)
+            }
+        };
+        let swap_dir = swap_dir.unwrap_or_else(|| {
+            std::env::temp_dir().join(format!("averis-kv-{}", std::process::id()))
+        });
         Engine {
             model,
             ckpt,
-            sched: Scheduler::new(max_active),
+            sched: Scheduler::new(cfg.max_active),
             stats: EngineStats::default(),
             pool,
-            seed,
+            seed: cfg.seed,
             next_id: 0,
             done: Vec::new(),
+            kv_pool,
+            prefix_share,
+            contig_budget,
+            swap_dir,
+            clock: 0,
         }
     }
 
     /// Queue one prompt. Fails if prompt + budget cannot fit the model's
-    /// positional range.
+    /// positional range or the KV budget cannot hold even this one session.
     pub fn submit(
         &mut self,
         prompt: Vec<u32>,
         max_new: usize,
         sampler: SampleCfg,
         eos: Option<u32>,
+    ) -> Result<u64> {
+        self.submit_session(prompt, max_new, sampler, eos, false)
+    }
+
+    /// [`Engine::submit`], but the finished session parks with its KV
+    /// retained (paged backend) for a later [`Engine::resume`] turn.
+    pub fn submit_keep(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        sampler: SampleCfg,
+        eos: Option<u32>,
+    ) -> Result<u64> {
+        self.submit_session(prompt, max_new, sampler, eos, true)
+    }
+
+    fn submit_session(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        sampler: SampleCfg,
+        eos: Option<u32>,
+        keep: bool,
     ) -> Result<u64> {
         if prompt.is_empty() {
             bail!("empty prompt");
@@ -137,19 +277,88 @@ impl Engine {
                 self.ckpt.cfg.max_seq
             );
         }
+        self.check_budget_fits(prompt.len() + max_new)?;
         let id = self.next_id;
         self.next_id += 1;
-        self.sched.submit(Session::new(id, prompt, max_new, sampler, eos, &self.ckpt.cfg));
+        let mut s = Session::new(id, prompt, max_new, sampler, eos, &self.ckpt.cfg);
+        s.keep = keep;
+        if let Some(pool) = &self.kv_pool {
+            s.state = DecodeState::paged(&self.ckpt.cfg, pool);
+            if self.prefix_share {
+                // chain-hash the prompt's *full* blocks, excluding the one
+                // holding the last prompt row — its logits are needed to
+                // sample, so at least one row always prefills
+                let bt = kv::lock_pool(pool).block_tokens();
+                let m = (s.context.len() - 1) / bt;
+                let mut parent = PREFIX_HASH_SEED;
+                for b in 0..m {
+                    parent = chain_hash(parent, &s.context[b * bt..(b + 1) * bt]);
+                    s.prefix_hashes.push(parent);
+                }
+            }
+        }
+        self.sched.submit(s);
         Ok(id)
     }
 
-    /// One continuous-batching iteration. Returns false once all work is
-    /// drained.
+    /// Start a new turn on a parked session: feed `extra` tokens and sample
+    /// up to `max_new` more, continuing the same context and sampling
+    /// stream. The session re-enters the admission queue; if its KV was
+    /// swapped out it faults back in transparently at admission.
+    pub fn resume(&mut self, id: u64, extra: &[u32], max_new: usize) -> Result<()> {
+        if max_new == 0 {
+            bail!("max_new must be at least 1");
+        }
+        if let Some(&t) = extra.iter().find(|&&t| t as usize >= self.ckpt.cfg.vocab) {
+            bail!("resume token {t} out of vocab {}", self.ckpt.cfg.vocab);
+        }
+        let Some(parked) = self.sched.parked.iter().find(|s| s.id == id) else {
+            bail!("session {id} is not parked (unknown, still running, or completed without keep)")
+        };
+        let total = parked.context.len() + extra.len() + max_new;
+        if total > self.ckpt.cfg.max_seq {
+            bail!("resume of session {id} would reach {total} tokens, exceeding max_seq {}",
+                self.ckpt.cfg.max_seq);
+        }
+        self.check_budget_fits(total)?;
+        let mut s = self.sched.unpark(id).expect("located above");
+        s.begin_turn(extra, max_new);
+        self.sched.submit(s);
+        Ok(())
+    }
+
+    /// Fail fast when a session could never fit the KV budget even with the
+    /// whole pool to itself (otherwise the admission loop would wedge).
+    fn check_budget_fits(&self, worst_rows: usize) -> Result<()> {
+        if let Some(pool) = &self.kv_pool {
+            let p = kv::lock_pool(pool);
+            if let Some(cap) = p.max_blocks() {
+                let bt = p.block_tokens();
+                let need = (worst_rows + bt - 1) / bt * self.ckpt.cfg.n_layers;
+                if need > cap {
+                    bail!(
+                        "session needs up to {need} KV blocks but the pool budget is {cap}: \
+                         raise budget_tokens"
+                    );
+                }
+            }
+        } else if let Some(budget) = self.contig_budget {
+            if worst_rows > budget {
+                bail!("session worst case of {worst_rows} KV rows exceeds budget_tokens {budget}");
+            }
+        }
+        Ok(())
+    }
+
+    /// One continuous-batching iteration. Returns false once all runnable
+    /// work is drained (parked sessions are idle, not work).
     pub fn step(&mut self) -> bool {
-        self.sched.admit();
+        self.clock += 1;
+        self.admit_ready();
         if self.sched.active.is_empty() {
             return false;
         }
+        self.reserve_step_capacity();
         // serving gauges: queue depth the cap could not absorb, batch
         // occupancy, and the prefill/decode step classification
         self.stats.queue_high_water = self.stats.queue_high_water.max(self.sched.pending_len());
@@ -160,18 +369,17 @@ impl Engine {
         } else {
             crate::telemetry::Span::ServePrefill
         });
-        // assemble the ragged step batch: whole prompt for fresh sessions
-        // (prefill), one token for decoding ones
+        // assemble the ragged step batch: every session contributes its
+        // unfed context rows — the whole prompt for fresh sessions, the
+        // resume suffix for re-admitted ones, one token for decoding ones
         let mut row_counts: Vec<usize> = Vec::with_capacity(self.sched.active.len());
         let mut chunks: Vec<(&mut DecodeState, &[u32])> =
             Vec::with_capacity(self.sched.active.len());
         for s in self.sched.active.iter_mut() {
-            let Session { state, prompt, generated, prefilled, .. } = s;
-            let toks: &[u32] = if *prefilled {
-                std::slice::from_ref(generated.last().expect("decoding session has a token"))
-            } else {
-                &prompt[..]
-            };
+            let Session { state, context, .. } = s;
+            let pos = state.pos;
+            debug_assert!(pos < context.len(), "active session has no pending rows");
+            let toks: &[u32] = &context[pos..];
             row_counts.push(toks.len());
             chunks.push((state, toks));
         }
@@ -179,16 +387,20 @@ impl Engine {
         drop(chunks);
         // sample one token per session from its last logit row
         let mut off = 0usize;
+        let clock = self.clock;
         for (si, s) in self.sched.active.iter_mut().enumerate() {
             let r = row_counts[si];
             let last_row = logits.row(off + r - 1);
-            let mut rng = Rng::counter_seeded(self.seed, s.id, s.generated.len() as u64);
+            let mut rng = Rng::counter_seeded(self.seed, s.id, s.sampled_total);
             let tok = sample_token(last_row, s.sampler, &mut rng);
             if !s.prefilled {
                 s.prefilled = true;
                 self.stats.prefill_tokens += r;
             }
             s.generated.push(tok);
+            s.context.push(tok);
+            s.sampled_total += 1;
+            s.last_used = clock;
             self.stats.generated_tokens += 1;
             off += r;
         }
@@ -198,10 +410,319 @@ impl Engine {
             self.stats.decode_tokens += row_counts.len();
         }
         drop(step_span);
-        for s in self.sched.evict_finished() {
-            self.done.push(Completion { id: s.id, prompt: s.prompt, tokens: s.generated });
+        self.register_prefixes();
+        for mut s in self.sched.evict_finished() {
+            self.done.push(Completion {
+                id: s.id,
+                prompt: std::mem::take(&mut s.turn_prompt),
+                tokens: s.generated.clone(),
+            });
+            if s.keep {
+                if self.kv_pool.is_none() {
+                    // contiguous baseline: a parked session drops its KV
+                    // and re-prefills the whole context on resume — the
+                    // recompute cost the paged pool exists to remove
+                    s.state = DecodeState::new(&self.ckpt.cfg);
+                }
+                self.sched.parked.push(s);
+            }
         }
+        self.refresh_gauges();
         true
+    }
+
+    /// Admit waiting sessions (preempted first) while slots and KV capacity
+    /// allow. Head-of-line blocking is deliberate: FIFO order is part of
+    /// the determinism story, so a stuck head is reclaimed-for, not skipped.
+    fn admit_ready(&mut self) {
+        while self.sched.active_len() < self.sched.max_active() {
+            if self.sched.peek_next().is_none() {
+                return;
+            }
+            if !self.try_admit_head() {
+                if self.sched.active.is_empty() {
+                    // nothing running and the head still cannot fit after
+                    // reclaiming everything idle — unreachable when the
+                    // submit/resume budget checks hold; fail fast regardless
+                    panic!(
+                        "KV budget cannot admit session {}: raise budget_tokens",
+                        self.sched.peek_next().map(|s| s.id).unwrap_or(u64::MAX)
+                    );
+                }
+                return;
+            }
+        }
+    }
+
+    /// Try to admit the next queued session: fault in swapped KV, attach
+    /// shared prefix blocks, and reserve its first step chunk. On capacity
+    /// failure the session returns to the head of its queue untouched
+    /// (shared attachments are kept — they cost no extra blocks).
+    fn try_admit_head(&mut self) -> bool {
+        let was_preempted = self.sched.preempted_len() > 0;
+        let mut s = self.sched.pop_next().expect("caller checked a head exists");
+        if s.swap_file.is_some() {
+            let need = self.blocks_for_span(0, s.state.pos);
+            if !self.ensure_free_blocks(need) {
+                self.sched.push_front(s, was_preempted);
+                return false;
+            }
+            self.fault_in(&mut s);
+        }
+        if s.state.pos == 0 && s.shared_len == 0 && !s.prefix_hashes.is_empty() {
+            self.attach_prefix(&mut s);
+        }
+        let need = self.blocks_for_span(s.state.pos, s.context.len());
+        if !self.ensure_free_blocks(need) {
+            self.sched.push_front(s, was_preempted);
+            return false;
+        }
+        if self.kv_pool.is_none() {
+            if let Some(budget) = self.contig_budget {
+                // contiguous buffers cannot be reclaimed mid-flight, so
+                // admission reserves every session's worst case up front
+                let resident: usize = self
+                    .sched
+                    .active
+                    .iter()
+                    .map(|a| a.context.len() + (a.max_new - a.generated.len()))
+                    .sum();
+                let worst = s.context.len() + (s.max_new - s.generated.len());
+                if resident + worst > budget {
+                    self.sched.push_front(s, was_preempted);
+                    return false;
+                }
+            }
+        }
+        self.sched.activate(s);
+        true
+    }
+
+    /// Walk the session's prefix hashes through the pool's index, attaching
+    /// every matching full block (all layers) copy-free. Stops at the first
+    /// miss: blocks must be position-contiguous.
+    fn attach_prefix(&mut self, s: &mut Session) {
+        let Some(pool) = self.kv_pool.clone() else { return };
+        let mut attached: Vec<Vec<u32>> = Vec::new();
+        let bt = {
+            let mut p = kv::lock_pool(&pool);
+            let bt = p.block_tokens();
+            let mut parent = PREFIX_HASH_SEED;
+            for (b, &h) in s.prefix_hashes.iter().enumerate() {
+                let toks = &s.context[b * bt..(b + 1) * bt];
+                let Some(blocks) = p.prefix_lookup(h, parent, toks) else { break };
+                attached.push(blocks);
+                parent = h;
+            }
+            bt
+        };
+        self.stats.prefix_lookup_tokens += s.prefix_hashes.len() * bt;
+        for blocks in &attached {
+            for (li, &blk) in blocks.iter().enumerate() {
+                match &mut s.state.layers[li] {
+                    LayerKv::Paged(pc) => pc.attach_shared(blk),
+                    LayerKv::Contig(_) => unreachable!("paged engine states are paged"),
+                }
+            }
+        }
+        s.shared_len = attached.len() * bt;
+        s.state.pos = s.shared_len;
+        self.stats.prefix_hit_tokens += s.shared_len;
+    }
+
+    /// After a session's prompt has fully prefilled, publish its full
+    /// prompt blocks to the prefix cache so later sessions share them.
+    fn register_prefixes(&mut self) {
+        let Some(pool) = self.kv_pool.clone() else { return };
+        if !self.prefix_share {
+            return;
+        }
+        let mut p = kv::lock_pool(&pool);
+        let bt = p.block_tokens();
+        for s in self.sched.active.iter_mut() {
+            if s.registered || !s.prefilled || s.prefix_hashes.is_empty() {
+                continue;
+            }
+            let mut parent = PREFIX_HASH_SEED;
+            for (b, &h) in s.prefix_hashes.iter().enumerate() {
+                let toks = &s.context[b * bt..(b + 1) * bt];
+                let blocks: Vec<u32> = s
+                    .state
+                    .layers
+                    .iter()
+                    .map(|l| match l {
+                        LayerKv::Paged(pc) => pc.block(b),
+                        LayerKv::Contig(_) => unreachable!("paged engine states are paged"),
+                    })
+                    .collect();
+                p.prefix_insert(h, parent, toks, &blocks);
+                parent = h;
+            }
+            s.registered = true;
+        }
+    }
+
+    /// Make sure every active session can append its pending rows this
+    /// step. Reclaims in escalating order: idle prefix entries → swapping
+    /// parked sessions to disk → preempting the newest active sessions
+    /// (swap + requeue ahead of pending). Sessions earlier in the active
+    /// set win, so the head of the batch always makes progress.
+    fn reserve_step_capacity(&mut self) {
+        let Some(pool) = self.kv_pool.clone() else { return };
+        if kv::lock_pool(&pool).max_blocks().is_none() {
+            return;
+        }
+        let mut planned = 0usize;
+        let mut i = 0;
+        while i < self.sched.active.len() {
+            let (from, to) = {
+                let s = &self.sched.active[i];
+                (s.state.pos, s.context.len())
+            };
+            let need = self.blocks_for_span(from, to);
+            while !self.ensure_free_blocks(planned + need) {
+                if self.sched.active.len() > i + 1 {
+                    self.preempt_tail();
+                } else {
+                    // unreachable when the submit/resume budget checks hold
+                    panic!(
+                        "KV pool budget too small for in-flight session {}",
+                        self.sched.active[i].id
+                    );
+                }
+            }
+            planned += need;
+            i += 1;
+        }
+    }
+
+    /// Preempt the most recently admitted active session: swap its KV to
+    /// disk and requeue it ahead of pending work.
+    fn preempt_tail(&mut self) {
+        let mut s = self.sched.active.pop().expect("caller checked the tail exists");
+        self.swap_out(&mut s);
+        self.stats.preemptions += 1;
+        self.sched.preempted.push_front(s);
+    }
+
+    /// Blocks needed (across all layers) to extend a session's KV from
+    /// `from` rows to `to` rows. 0 for the contiguous backend.
+    fn blocks_for_span(&self, from: usize, to: usize) -> usize {
+        let Some(pool) = &self.kv_pool else { return 0 };
+        let bt = kv::lock_pool(pool).block_tokens();
+        let blocks = |rows: usize| (rows + bt - 1) / bt;
+        (blocks(to) - blocks(from)) * self.ckpt.cfg.n_layers
+    }
+
+    /// Free at least `need` blocks: evict LRU prefix entries, then swap the
+    /// LRU resident parked session to disk, repeating until satisfied or
+    /// nothing idle remains.
+    fn ensure_free_blocks(&mut self, need: usize) -> bool {
+        let Some(pool) = self.kv_pool.clone() else { return true };
+        loop {
+            if kv::lock_pool(&pool).free_blocks() >= need {
+                return true;
+            }
+            if kv::lock_pool(&pool).prefix_evict_lru() {
+                continue;
+            }
+            if self.swap_out_lru_parked() {
+                continue;
+            }
+            return false;
+        }
+    }
+
+    /// Swap the least-recently-used parked session still holding resident
+    /// blocks out to disk. Returns false when none qualifies.
+    fn swap_out_lru_parked(&mut self) -> bool {
+        if self.kv_pool.is_none() {
+            return false;
+        }
+        let idx = self
+            .sched
+            .parked
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.swap_file.is_none() && s.kv_resident())
+            .min_by_key(|(_, s)| s.last_used)
+            .map(|(i, _)| i);
+        let Some(i) = idx else { return false };
+        let mut s = self.sched.parked.swap_remove(i);
+        self.swap_out(&mut s);
+        self.sched.parked.push(s);
+        true
+    }
+
+    /// Serialize a session's KV rows through the wire codec, write them to
+    /// the swap dir, and release its blocks (position is preserved; the
+    /// rows fault back in bitwise).
+    fn swap_out(&mut self, s: &mut Session) {
+        let _sp = crate::telemetry::span(crate::telemetry::Span::KvSwapOut);
+        let layers: Vec<(Vec<f32>, Vec<f32>)> = s
+            .state
+            .layers
+            .iter()
+            .map(|l| match l {
+                LayerKv::Paged(p) => p.snapshot(),
+                LayerKv::Contig(c) => c.snapshot(),
+            })
+            .collect();
+        let kv_cols = self.ckpt.cfg.n_kv_heads * self.ckpt.cfg.head_dim();
+        let buf = wire::encode_kv_swap(s.state.pos as u64, kv_cols as u64, &layers);
+        std::fs::create_dir_all(&self.swap_dir).expect("create KV swap dir");
+        let path = self.swap_dir.join(format!("session-{}.kv", s.id));
+        std::fs::write(&path, &buf).expect("write KV swap record");
+        s.swap_file = Some(path);
+        let pos = s.state.pos;
+        s.state = DecodeState::paged(
+            &self.ckpt.cfg,
+            self.kv_pool.as_ref().expect("swap-out runs on the paged backend"),
+        );
+        s.state.pos = pos;
+        self.stats.swap_outs += 1;
+    }
+
+    /// Read a session's swap record back into freshly allocated blocks
+    /// (bit-identical rows; block sharing is not reconstructed) and delete
+    /// the file.
+    fn fault_in(&mut self, s: &mut Session) {
+        let _sp = crate::telemetry::span(crate::telemetry::Span::KvSwapIn);
+        let path = s.swap_file.take().expect("caller checked the session is swapped");
+        let buf = std::fs::read(&path).expect("read KV swap record");
+        let (pos, kv_cols, layers) = wire::decode_kv_swap(&buf).expect("decode KV swap record");
+        assert_eq!(pos as usize, s.state.pos, "swap record position mismatch");
+        assert_eq!(
+            kv_cols as usize,
+            self.ckpt.cfg.n_kv_heads * self.ckpt.cfg.head_dim(),
+            "swap record width mismatch"
+        );
+        assert_eq!(layers.len(), self.ckpt.cfg.n_layers, "swap record layer count mismatch");
+        let pool = self.kv_pool.clone().expect("fault-in runs on the paged backend");
+        s.state.layers = layers
+            .into_iter()
+            .map(|(k, v)| LayerKv::Paged(PagedKvCache::restore(&pool, &k, &v)))
+            .collect();
+        let _ = std::fs::remove_file(&path);
+        self.stats.swap_ins += 1;
+    }
+
+    /// Sync pool-side gauges into [`EngineStats`] after a step.
+    fn refresh_gauges(&mut self) {
+        if let Some(pool) = &self.kv_pool {
+            let st = kv::lock_pool(pool).stats();
+            self.stats.blocks_high_water = st.blocks_high_water;
+            self.stats.cow_copies = st.cow_copies;
+        }
+        let live = self.sched.active_len()
+            + self.sched.preempted_len()
+            + self
+                .sched
+                .parked
+                .iter()
+                .filter(|s| s.kv_resident() || s.swap_file.is_some())
+                .count();
+        self.stats.live_sessions_high_water = self.stats.live_sessions_high_water.max(live);
     }
 
     /// Drive the loop until every submitted session finishes; returns the
@@ -243,6 +764,10 @@ pub struct ServeBenchRow {
     pub mean_occupancy: f64,
     /// tokens per pure-decode step (steady-state decode throughput)
     pub decode_tok_per_step: f64,
+    /// most KV blocks simultaneously in use (paged pool occupancy)
+    pub blocks_high_water: usize,
+    /// fraction of prefix-share candidate tokens served copy-free
+    pub prefix_hit_rate: f64,
     /// FNV-1a over every completion's (id, tokens) in id order: the
     /// scheduling-independent fingerprint of *what* was decoded. Identical
     /// across batch settings, thread counts, and kernel rewrites by the
@@ -257,8 +782,9 @@ fn fnv1a(h: u64, v: u64) -> u64 {
     (h ^ v).wrapping_mul(0x100000001b3)
 }
 
-/// Deterministic fingerprint of a completion set (assumed id-sorted).
-fn completions_checksum(done: &[Completion]) -> u64 {
+/// Deterministic fingerprint of a completion sequence (callers fix the
+/// order: id-sorted within a turn, turn-major across turns).
+pub fn completions_checksum(done: &[Completion]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for c in done {
         h = fnv1a(h, c.id);
@@ -311,6 +837,8 @@ pub fn bench_continuous_decode(
                 queue_high_water: engine.stats.queue_high_water,
                 mean_occupancy: engine.stats.mean_occupancy(),
                 decode_tok_per_step: engine.stats.decode_tokens_per_step(),
+                blocks_high_water: engine.stats.blocks_high_water,
+                prefix_hit_rate: engine.stats.prefix_hit_rate(),
                 token_checksum: completions_checksum(&done),
             }
         })
@@ -351,6 +879,8 @@ mod tests {
         // decode steps exist and their throughput gauge is populated
         assert!(e.stats.decode_steps > 0);
         assert!(e.stats.decode_tokens_per_step() > 0.0);
+        // the default backend pages: blocks were allocated and observed
+        assert!(e.stats.blocks_high_water > 0);
     }
 
     #[test]
@@ -373,5 +903,53 @@ mod tests {
         e2.submit(vec![5, 6, 7], 4, SampleCfg::Greedy, Some(first)).unwrap();
         let done = e2.run();
         assert_eq!(done[0].tokens, vec![first]);
+    }
+
+    #[test]
+    fn submit_rejects_sessions_larger_than_the_kv_budget() {
+        let cfg = ModelConfig::test_tiny(64);
+        let params = Params::init(&cfg, &mut Rng::new(30));
+        let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+        let ckpt = QuantizedCheckpoint::build(&cfg, &params, &calib);
+        let mut e = Engine::with_config(
+            ckpt,
+            EngineConfig {
+                max_active: 2,
+                seed: 7,
+                kv: KvBackendCfg::Paged {
+                    block_tokens: 4,
+                    budget_tokens: Some(8),
+                    prefix_share: true,
+                    swap_dir: None,
+                },
+            },
+        );
+        // 6 + 4 = 10 rows > 8-row budget → rejected up front, not wedged
+        assert!(e.submit(vec![1, 2, 3, 4, 5, 6], 4, SampleCfg::Greedy, None).is_err());
+        // a fitting session still runs
+        e.submit(vec![1, 2, 3], 4, SampleCfg::Greedy, None).unwrap();
+        assert_eq!(e.run().len(), 1);
+    }
+
+    #[test]
+    fn keep_sessions_park_and_resume_continues_the_stream() {
+        // one engine runs 6 tokens in a single turn; another runs 3 + 3
+        // across a park/resume boundary — identical context → identical
+        // tokens, because the sampling stream is indexed by sampled_total
+        let mut e1 = tiny_engine(1);
+        e1.submit(vec![4, 5, 6], 6, SampleCfg::Greedy, None).unwrap();
+        let full = e1.run()[0].tokens.clone();
+        let mut e2 = tiny_engine(1);
+        let id = e2.submit_keep(vec![4, 5, 6], 3, SampleCfg::Greedy, None).unwrap();
+        let first = e2.run();
+        assert_eq!(first[0].tokens[..], full[..3]);
+        assert_eq!(e2.sched.parked_len(), 1);
+        // resume with no fresh turn tokens is modeled by feeding the next
+        // context token the single-turn run would have fed itself — i.e.
+        // resume(extra) continues as if the turn had never been split when
+        // extra is empty-equivalent; here we feed zero extra tokens
+        e2.resume(id, &[], 3).unwrap();
+        let second = e2.run();
+        assert_eq!(second[0].tokens[..], full[3..6]);
     }
 }

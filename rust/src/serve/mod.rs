@@ -7,10 +7,15 @@
 //!    training taps; serving never re-quantizes a weight. Binary save/load.
 //!  * `session` — one in-flight request (prompt, sampled continuation,
 //!    per-layer KV caches, counter-seeded sampling).
-//!  * `scheduler` — continuous-batching admission/eviction bookkeeping.
+//!  * `scheduler` — continuous-batching admission/eviction bookkeeping,
+//!    plus the preempted/parked lifecycle queues of the paged KV cache.
 //!  * `engine` — the step loop: ragged batches mixing prefill and decode
-//!    through one stacked `Transformer::forward_incremental` call, plus the
-//!    tokens/sec bench protocol of EXPERIMENTS.md §Serving.
+//!    through one stacked `Transformer::forward_incremental` call, running
+//!    over a paged block-pool KV cache (copy-free prefix sharing, LRU
+//!    swap-to-disk, preemptive scheduling under memory pressure; DESIGN.md
+//!    §11), plus the tokens/sec bench protocol of EXPERIMENTS.md §Serving.
+//!  * `churn` — the cache-churn bench: arriving/idling/resuming sessions
+//!    with shared prefixes, paged vs contiguous at a fixed KV budget.
 //!
 //! The numeric contract throughout: logits are a pure function of a
 //! sequence's own prefix (row-independent quantization, `quant::rowq`), and
@@ -19,11 +24,16 @@
 //! orders, and KV-cached decode matches full-context recomputation exactly.
 
 pub mod checkpoint;
+pub mod churn;
 pub mod engine;
 pub mod scheduler;
 pub mod session;
 
 pub use checkpoint::{measure_calib_means, CalibMeans, QuantizedCheckpoint};
-pub use engine::{bench_continuous_decode, Completion, Engine, EngineStats, ServeBenchRow};
+pub use churn::{bench_cache_churn, ChurnBenchRow, ChurnShape};
+pub use engine::{
+    bench_continuous_decode, completions_checksum, Completion, Engine, EngineConfig, EngineStats,
+    KvBackendCfg, ServeBenchRow,
+};
 pub use scheduler::Scheduler;
 pub use session::{sample_token, SampleCfg, Session};

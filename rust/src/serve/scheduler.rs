@@ -1,26 +1,43 @@
-//! Continuous-batching admission control: a FIFO of waiting sessions and
-//! the in-flight set the engine steps together.
+//! Continuous-batching admission control: a FIFO of waiting sessions, the
+//! in-flight set the engine steps together, plus the paged-cache lifecycle
+//! queues — sessions preempted under memory pressure (resumed before any
+//! new admission, FIFO, so preemption never reorders or starves work) and
+//! parked keep-alive sessions awaiting their next turn.
 //!
 //! The policy is the standard continuous-batching loop: whenever an active
 //! slot frees up (a sequence finishes), the next pending prompt is admitted
 //! *into the running batch* — it prefills alongside the decoding sessions
 //! in the same ragged step batch rather than waiting for the whole batch to
 //! drain. Pure bookkeeping: the scheduler never touches the model, which
-//! keeps the policy unit-testable and the engine loop thin.
+//! keeps the policy unit-testable and the engine loop thin. Capacity-aware
+//! admission (KV budget) lives in the engine, which peeks/pops through
+//! [`Scheduler::peek_next`]/[`Scheduler::pop_next`].
 
 use super::session::Session;
 use std::collections::VecDeque;
 
 pub struct Scheduler {
     pending: VecDeque<Session>,
+    /// sessions kicked out of the active set under memory pressure; they
+    /// re-admit ahead of pending (FIFO), so preemption cannot starve
+    pub preempted: VecDeque<Session>,
     pub active: Vec<Session>,
+    /// finished keep-alive sessions holding KV (in memory or swapped) for
+    /// a future resume; not counted as work by [`Scheduler::is_drained`]
+    pub parked: Vec<Session>,
     max_active: usize,
 }
 
 impl Scheduler {
     /// `max_active` is the in-flight batch cap (≥ 1).
     pub fn new(max_active: usize) -> Scheduler {
-        Scheduler { pending: VecDeque::new(), active: Vec::new(), max_active: max_active.max(1) }
+        Scheduler {
+            pending: VecDeque::new(),
+            preempted: VecDeque::new(),
+            active: Vec::new(),
+            parked: Vec::new(),
+            max_active: max_active.max(1),
+        }
     }
 
     /// Queue a session for admission (FIFO).
@@ -28,12 +45,14 @@ impl Scheduler {
         self.pending.push_back(s);
     }
 
-    /// Move pending sessions into the in-flight set while capacity allows.
-    /// Returns how many were admitted this call.
+    /// Move waiting sessions into the in-flight set while slots allow —
+    /// preempted first, then pending. Returns how many were admitted.
+    /// (Unconditional variant; the engine's capacity-aware loop uses
+    /// [`Self::peek_next`]/[`Self::pop_next`] instead.)
     pub fn admit(&mut self) -> usize {
         let mut n = 0;
         while self.active.len() < self.max_active {
-            match self.pending.pop_front() {
+            match self.pop_next() {
                 Some(s) => {
                     self.active.push(s);
                     n += 1;
@@ -44,6 +63,32 @@ impl Scheduler {
         n
     }
 
+    /// The next session admission would take (preempted before pending).
+    pub fn peek_next(&self) -> Option<&Session> {
+        self.preempted.front().or_else(|| self.pending.front())
+    }
+
+    /// Pop the next session to admit (preempted before pending).
+    pub fn pop_next(&mut self) -> Option<Session> {
+        self.preempted.pop_front().or_else(|| self.pending.pop_front())
+    }
+
+    /// Return a session to the head of its queue (failed admission — e.g.
+    /// capacity must be reclaimed first); keeps FIFO order intact.
+    pub fn push_front(&mut self, s: Session, was_preempted: bool) {
+        if was_preempted {
+            self.preempted.push_front(s);
+        } else {
+            self.pending.push_front(s);
+        }
+    }
+
+    /// Place a popped session into the in-flight set.
+    pub fn activate(&mut self, s: Session) {
+        debug_assert!(self.active.len() < self.max_active);
+        self.active.push(s);
+    }
+
     /// Remove finished sessions from the in-flight set and return them.
     pub fn evict_finished(&mut self) -> Vec<Session> {
         let (done, keep): (Vec<Session>, Vec<Session>) =
@@ -52,12 +97,26 @@ impl Scheduler {
         done
     }
 
+    /// Pull a parked session by id (resume path).
+    pub fn unpark(&mut self, id: u64) -> Option<Session> {
+        let idx = self.parked.iter().position(|s| s.id == id)?;
+        Some(self.parked.remove(idx))
+    }
+
     pub fn pending_len(&self) -> usize {
         self.pending.len()
     }
 
+    pub fn preempted_len(&self) -> usize {
+        self.preempted.len()
+    }
+
     pub fn active_len(&self) -> usize {
         self.active.len()
+    }
+
+    pub fn parked_len(&self) -> usize {
+        self.parked.len()
     }
 
     /// The in-flight batch cap (post-clamp), for occupancy gauges.
@@ -65,9 +124,9 @@ impl Scheduler {
         self.max_active
     }
 
-    /// No work left anywhere.
+    /// No work left anywhere (parked sessions are idle, not work).
     pub fn is_drained(&self) -> bool {
-        self.pending.is_empty() && self.active.is_empty()
+        self.pending.is_empty() && self.preempted.is_empty() && self.active.is_empty()
     }
 }
 
@@ -129,5 +188,31 @@ mod tests {
         let mut s = Scheduler::new(0);
         s.submit(session(0, 1));
         assert_eq!(s.admit(), 1);
+    }
+
+    #[test]
+    fn preempted_resume_ahead_of_pending() {
+        let mut s = Scheduler::new(2);
+        s.submit(session(0, 1));
+        s.preempted.push_back(session(9, 1));
+        assert_eq!(s.peek_next().unwrap().id, 9);
+        let first = s.pop_next().unwrap();
+        assert_eq!(first.id, 9);
+        // a failed admission goes back to the head of its own queue
+        s.push_front(first, true);
+        assert_eq!(s.pop_next().unwrap().id, 9);
+        assert_eq!(s.pop_next().unwrap().id, 0);
+        assert!(s.pop_next().is_none());
+    }
+
+    #[test]
+    fn parked_sessions_are_idle_not_work() {
+        let mut s = Scheduler::new(1);
+        s.parked.push(session(3, 1));
+        assert!(s.is_drained());
+        assert_eq!(s.parked_len(), 1);
+        let got = s.unpark(3).unwrap();
+        assert_eq!(got.id, 3);
+        assert!(s.unpark(3).is_none());
     }
 }

@@ -65,19 +65,44 @@ pub fn sample_token(logits: &[f32], cfg: SampleCfg, rng: &mut Rng) -> u32 {
     }
 }
 
-/// One generation request moving through the scheduler.
+/// One generation request moving through the scheduler. A session lives
+/// through turns: submit → prefill+decode → finish, then optionally park
+/// (`keep`) with its KV retained for a later [`Session::begin_turn`] resume.
+/// `context` accumulates every token ever fed or sampled, so each step's
+/// chunk is simply `context[state.pos..]` — prefill, decode, and
+/// resume-after-eviction are all the same code path.
 pub struct Session {
     pub id: u64,
-    pub prompt: Vec<u32>,
-    pub generated: Vec<u32>,
-    pub max_new: usize,
     pub sampler: SampleCfg,
     /// stop early when this token is sampled
     pub eos: Option<u32>,
-    /// prompt rows already pushed through the model (the first sampled
-    /// token comes from the prefill logits)
+    /// park with KV retained on finish instead of completing for good
+    pub keep: bool,
+    /// prompt + every token fed or sampled, across all turns
+    pub context: Vec<u32>,
+    /// tokens submitted for the current turn (original prompt, or the
+    /// resume suffix) — what the turn's completion reports as its prompt
+    pub turn_prompt: Vec<u32>,
+    /// tokens sampled in the current turn
+    pub generated: Vec<u32>,
+    /// tokens sampled across every turn — the counter-seeded sampling
+    /// stream index, so resumed sessions continue the same random stream
+    pub sampled_total: u64,
+    /// current turn's sampling budget
+    pub max_new: usize,
+    /// current turn has pushed its first step batch through the model
     pub prefilled: bool,
     pub state: DecodeState,
+    /// context rows attached copy-free from the prefix cache at admission
+    pub shared_len: usize,
+    /// chain hashes of the prompt's full KV blocks (prefix cache keys)
+    pub prefix_hashes: Vec<u64>,
+    /// prompt blocks already published to the prefix cache
+    pub registered: bool,
+    /// engine clock at last step (LRU key for swap-out)
+    pub last_used: u64,
+    /// where this session's KV lives while evicted to disk
+    pub swap_file: Option<std::path::PathBuf>,
 }
 
 impl Session {
@@ -92,24 +117,64 @@ impl Session {
         assert!(!prompt.is_empty(), "empty prompt");
         Session {
             id,
-            prompt,
-            generated: Vec::with_capacity(max_new),
-            max_new,
             sampler,
             eos,
+            keep: false,
+            turn_prompt: prompt.clone(),
+            context: prompt,
+            generated: Vec::with_capacity(max_new),
+            sampled_total: 0,
+            max_new,
             prefilled: false,
             state: DecodeState::new(cfg),
+            shared_len: 0,
+            prefix_hashes: Vec::new(),
+            registered: false,
+            last_used: 0,
+            swap_file: None,
         }
     }
 
     /// Tokens seen + generated so far (the KV footprint after prefill).
     pub fn total_len(&self) -> usize {
-        self.prompt.len() + self.generated.len()
+        self.context.len()
+    }
+
+    /// Context rows not yet pushed through the model — the session's chunk
+    /// in the next step batch (1 for decoding sessions, more for prefill
+    /// and resume-after-park).
+    pub fn pending_rows(&self) -> usize {
+        self.context.len() - self.state.pos
     }
 
     pub fn finished(&self) -> bool {
         self.generated.len() >= self.max_new
             || (self.eos.is_some() && self.generated.last() == self.eos.as_ref())
+    }
+
+    /// Start a new turn on a parked session: feed `extra` tokens after the
+    /// existing context (the last sampled token was never fed, so it joins
+    /// the resume chunk naturally) and sample up to `max_new` more.
+    pub fn begin_turn(&mut self, extra: &[u32], max_new: usize) {
+        self.turn_prompt = extra.to_vec();
+        self.context.extend_from_slice(extra);
+        self.generated.clear();
+        self.max_new = max_new;
+        self.prefilled = false;
+    }
+
+    /// Whether any KV for this session is materialized in memory (parked
+    /// contiguous sessions drop theirs; swapped sessions hold a file).
+    pub fn kv_resident(&self) -> bool {
+        self.state.layers.first().map(|l| !l.is_empty()).unwrap_or(false)
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        if let Some(path) = self.swap_file.take() {
+            let _ = std::fs::remove_file(path);
+        }
     }
 }
 
@@ -162,8 +227,32 @@ mod tests {
         s.generated.push(9);
         assert!(s.finished());
         let mut s2 = Session::new(1, vec![1], 1, SampleCfg::Greedy, None, &cfg);
+        // the engine records a sampled token in both streams
         s2.generated.push(5);
+        s2.context.push(5);
         assert!(s2.finished());
         assert_eq!(s2.total_len(), 2);
+    }
+
+    #[test]
+    fn begin_turn_resets_turn_state_and_extends_context() {
+        let cfg = ModelConfig::test_tiny(64);
+        let mut s = Session::new(0, vec![1, 2], 2, SampleCfg::Greedy, None, &cfg);
+        s.generated.push(3);
+        s.context.push(3);
+        s.generated.push(4);
+        s.context.push(4);
+        s.sampled_total = 2;
+        s.prefilled = true;
+        assert!(s.finished());
+        s.begin_turn(&[5, 6], 3);
+        assert!(!s.finished());
+        assert!(!s.prefilled);
+        assert_eq!(s.context, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(s.turn_prompt, vec![5, 6]);
+        assert_eq!(s.generated, Vec::<u32>::new());
+        assert_eq!(s.sampled_total, 2, "sampling stream continues across turns");
+        // nothing fed yet → the whole context is pending
+        assert_eq!(s.pending_rows(), 6);
     }
 }

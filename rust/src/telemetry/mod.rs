@@ -97,9 +97,13 @@ pub enum Span {
     ServePrefill = 7,
     /// Serve engine pure-decode step.
     ServeDecode = 8,
+    /// KV block swap-out: encode an idle session's blocks and write to disk.
+    KvSwapOut = 9,
+    /// KV fault-in: read a swapped session's record and repopulate blocks.
+    KvSwapIn = 10,
 }
 
-pub const N_SPANS: usize = 9;
+pub const N_SPANS: usize = 11;
 
 impl Span {
     pub const ALL: [Span; N_SPANS] = [
@@ -112,6 +116,8 @@ impl Span {
         Span::TrainStep,
         Span::ServePrefill,
         Span::ServeDecode,
+        Span::KvSwapOut,
+        Span::KvSwapIn,
     ];
 
     pub fn name(self) -> &'static str {
@@ -125,6 +131,8 @@ impl Span {
             Span::TrainStep => "train.step",
             Span::ServePrefill => "serve.prefill_step",
             Span::ServeDecode => "serve.decode_step",
+            Span::KvSwapOut => "serve.kv_swap_out",
+            Span::KvSwapIn => "serve.kv_swap_in",
         }
     }
 }

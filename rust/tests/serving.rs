@@ -1,18 +1,21 @@
-//! Integration tests of the FP4 serving subsystem (ISSUE 2 acceptance
-//! criteria): KV-cached decode is logit-identical to full-context
+//! Integration tests of the FP4 serving subsystem (ISSUE 2 + ISSUE 8
+//! acceptance criteria): KV-cached decode is logit-identical to full-context
 //! recomputation for dense and MoE presets, greedy generation from a saved
 //! checkpoint is bit-identical across 1/2/4 threads, checkpoint round trips
-//! preserve eval loss exactly, and continuous batched decode reproduces
-//! sequential single-prompt decode token for token.
+//! preserve eval loss exactly, continuous batched decode reproduces
+//! sequential single-prompt decode token for token, and the paged
+//! block-pool KV cache (prefix sharing, COW, swap-to-disk eviction,
+//! preemptive scheduling) is bit-identical to the contiguous cache across
+//! recipes, thread counts, and evict → swap → resume boundaries.
 
 use averis::data::{Corpus, CorpusConfig};
 use averis::model::config::FfnKind;
-use averis::model::{DecodeState, ModelConfig, Params, Transformer};
-use averis::quant::QuantRecipe;
+use averis::model::{DecodeState, KvBlockPool, ModelConfig, Params, Transformer};
+use averis::quant::{Nvfp4Quantizer, QuantRecipe};
 use averis::runtime::{load_params_checkpoint, save_params_checkpoint};
 use averis::serve::{
-    bench_continuous_decode, measure_calib_means, CalibMeans, Engine, QuantizedCheckpoint,
-    SampleCfg,
+    bench_continuous_decode, completions_checksum, measure_calib_means, CalibMeans, Engine,
+    EngineConfig, KvBackendCfg, QuantizedCheckpoint, SampleCfg,
 };
 use averis::tensor::{parallel, Rng};
 use averis::train::{train, TrainConfig};
@@ -181,19 +184,52 @@ fn continuous_batched_decode_matches_sequential_single_prompt_decode() {
     let prompts: Vec<Vec<u32>> = (0..6)
         .map(|_| (0..4 + rng.below(6)).map(|_| rng.below(64) as u32).collect())
         .collect();
-    let run = |max_active: usize| {
-        let ckpt = calibrated_ckpt(&cfg, 11);
-        let mut engine = Engine::new(ckpt, max_active, 123);
+    let submit_all = |engine: &mut Engine| {
         for p in &prompts {
             engine
                 .submit(p.clone(), 6, SampleCfg::TopK { k: 4, temperature: 0.9 }, None)
                 .unwrap();
         }
-        engine.run().into_iter().map(|c| (c.id, c.tokens)).collect::<Vec<_>>()
     };
-    let sequential = run(1);
-    assert_eq!(sequential, run(3), "max_active 3 diverged from sequential");
-    assert_eq!(sequential, run(6), "max_active 6 diverged from sequential");
+    let run = |max_active: usize| {
+        let mut engine = Engine::new(calibrated_ckpt(&cfg, 11), max_active, 123);
+        submit_all(&mut engine);
+        let done = engine.run();
+        (completions_checksum(&done), done.into_iter().map(|c| (c.id, c.tokens)).collect::<Vec<_>>())
+    };
+    let (seq_checksum, sequential) = run(1);
+    assert_eq!(sequential, run(3).1, "max_active 3 diverged from sequential");
+    assert_eq!(sequential, run(6).1, "max_active 6 diverged from sequential");
+    // the token_checksum oracle must also hold across evict/resume
+    // boundaries: a tight KV budget forces the scheduler to preempt active
+    // sessions (swap to disk) and fault them back in mid-generation
+    let mut engine = Engine::with_config(
+        calibrated_ckpt(&cfg, 11),
+        EngineConfig {
+            max_active: 3,
+            seed: 123,
+            kv: KvBackendCfg::Paged {
+                block_tokens: 4,
+                budget_tokens: Some(20),
+                prefix_share: true,
+                swap_dir: None,
+            },
+        },
+    );
+    submit_all(&mut engine);
+    let done = engine.run();
+    assert!(engine.stats.preemptions > 0, "budget never forced a preemption");
+    assert!(engine.stats.swap_outs > 0 && engine.stats.swap_ins > 0);
+    assert_eq!(
+        sequential,
+        done.iter().map(|c| (c.id, c.tokens.clone())).collect::<Vec<_>>(),
+        "evict/swap/resume changed served tokens"
+    );
+    assert_eq!(
+        completions_checksum(&done),
+        seq_checksum,
+        "token_checksum oracle broke across evict/resume boundaries"
+    );
 }
 
 #[test]
@@ -248,6 +284,212 @@ fn bench_continuous_decode_output_unchanged_across_batches_and_threads() {
             );
         }
     }
+}
+
+/// ISSUE 8: the paged block-pool cache must be bit-identical to the
+/// contiguous cache — same completions, same checksum — for sessions
+/// spanning multiple KV blocks, across NVFP4 and MXFP4 checkpoints and
+/// across 1/2/4 threads.
+#[test]
+fn paged_cache_matches_contiguous_bitwise_across_recipes_and_threads() {
+    let cfg = ModelConfig::test_tiny(64);
+    let params = Params::init(&cfg, &mut Rng::new(55));
+    let calib_tokens: Vec<u32> = (0..32).map(|i| (i * 7 % 64) as u32).collect();
+    let calib = measure_calib_means(&cfg, &params, &calib_tokens, 2, 16);
+    for (recipe, quant) in
+        [("nvfp4", Nvfp4Quantizer::nvfp4()), ("mxfp4", Nvfp4Quantizer::mxfp4())]
+    {
+        let ckpt = QuantizedCheckpoint::build_with(&cfg, &params, &calib, quant);
+        let run = |threads: usize, kv: KvBackendCfg| {
+            parallel::set_threads(threads);
+            let mut engine =
+                Engine::with_config(ckpt.clone(), EngineConfig { max_active: 2, seed: 3, kv });
+            for i in 0..3u32 {
+                // prompt 6 + decode 8 = 14 rows: 4 blocks at block size 4,
+                // so every session crosses multiple block boundaries
+                engine
+                    .submit(
+                        vec![5 + i, 1, 2, 3, 4, 9],
+                        8,
+                        SampleCfg::TopK { k: 3, temperature: 0.8 },
+                        None,
+                    )
+                    .unwrap();
+            }
+            let done = engine.run();
+            parallel::set_threads(0);
+            (completions_checksum(&done), done.into_iter().map(|c| c.tokens).collect::<Vec<_>>())
+        };
+        let contig = run(1, KvBackendCfg::Contig { budget_tokens: None });
+        for threads in [1usize, 2, 4] {
+            let paged = run(
+                threads,
+                KvBackendCfg::Paged {
+                    block_tokens: 4,
+                    budget_tokens: None,
+                    prefix_share: true,
+                    swap_dir: None,
+                },
+            );
+            assert_eq!(contig, paged, "{recipe}: paged diverged from contiguous at {threads} threads");
+        }
+    }
+}
+
+/// ISSUE 8: LRU eviction swaps an idle session's KV to disk through the
+/// wire codec and faults it back in bitwise — a constrained pool serves the
+/// exact tokens of an unconstrained one, across park → swap → resume.
+#[test]
+fn eviction_swap_and_resume_round_trip_is_bitwise() {
+    let cfg = ModelConfig::test_tiny(64);
+    let two_turns = |kv: KvBackendCfg| {
+        let mut engine =
+            Engine::with_config(calibrated_ckpt(&cfg, 17), EngineConfig { max_active: 2, seed: 4, kv });
+        let ids: Vec<u64> = (0..4u32)
+            .map(|i| {
+                engine.submit_keep(vec![1 + i, 6, 2, 8], 5, SampleCfg::Greedy, None).unwrap()
+            })
+            .collect();
+        let mut all = engine.run();
+        for &id in &ids {
+            engine.resume(id, &[0], 5).unwrap();
+        }
+        all.extend(engine.run());
+        (completions_checksum(&all), engine.stats)
+    };
+    let (base, base_stats) = two_turns(KvBackendCfg::Paged {
+        block_tokens: 4,
+        budget_tokens: None,
+        prefix_share: true,
+        swap_dir: None,
+    });
+    assert_eq!(base_stats.swap_outs, 0, "unbounded pool must never swap");
+    // 20-row budget = 10 blocks; two turn-2 sessions need 16 — parked
+    // sessions must swap out and fault back in to make room
+    let (tight, stats) = two_turns(KvBackendCfg::Paged {
+        block_tokens: 4,
+        budget_tokens: Some(20),
+        prefix_share: true,
+        swap_dir: None,
+    });
+    assert!(stats.swap_outs > 0, "budget never forced a swap-out");
+    assert!(stats.swap_ins > 0, "swapped sessions never faulted back in");
+    assert_eq!(base, tight, "evict → swap → resume changed served tokens");
+}
+
+/// ISSUE 8: forked decode states diverging inside a shared block trigger
+/// copy-on-write, and both forks stay bit-identical to independent decode.
+#[test]
+fn forked_states_copy_on_write_mid_block_and_stay_bit_identical() {
+    let cfg = ModelConfig::test_tiny(64);
+    let ckpt = calibrated_ckpt(&cfg, 23);
+    let model = Transformer::new(cfg, QuantRecipe::Bf16, 0);
+    let kv_cols = cfg.n_kv_heads * cfg.head_dim();
+    let pool = KvBlockPool::shared(4, kv_cols, None);
+    // 6-row prompt: the second block is half full, so the fork's next
+    // append diverges mid-block
+    let prompt = [3u32, 9, 27, 11, 2, 14];
+    let mut a = DecodeState::paged(&cfg, &pool);
+    let _ = model.prefill(&ckpt, &mut a, &prompt);
+    let mut b = a.fork();
+    let la = model.decode_step(&ckpt, &mut a, 7);
+    let lb = model.decode_step(&ckpt, &mut b, 7);
+    for (x, y) in la.iter().zip(lb.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "forks diverged on identical input");
+    }
+    {
+        let p = pool.lock().unwrap();
+        assert!(p.stats().cow_copies >= 1, "mid-block divergence must copy-on-write");
+    }
+    // both forks must now match a never-forked contiguous decode bitwise
+    let mut fresh = DecodeState::new(&cfg);
+    let _ = model.prefill(&ckpt, &mut fresh, &prompt);
+    let lf = model.decode_step(&ckpt, &mut fresh, 7);
+    for (x, y) in la.iter().zip(lf.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "paged fork diverged from contiguous");
+    }
+    // and divergent continuations stay independent
+    let la2 = model.decode_step(&ckpt, &mut a, 1);
+    let lf2 = model.decode_step(&ckpt, &mut fresh, 1);
+    for (x, y) in la2.iter().zip(lf2.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    let _ = model.decode_step(&ckpt, &mut b, 2);
+}
+
+/// ISSUE 8: when the pool is exhausted the scheduler preempts sessions
+/// (swap + requeue) instead of rejecting them, and the preempted sessions
+/// resume to produce exactly the unconstrained output.
+#[test]
+fn pool_exhaustion_preempts_then_resumes_bit_identically() {
+    let cfg = ModelConfig::test_tiny(64);
+    let run = |budget: Option<usize>| {
+        let mut engine = Engine::with_config(
+            calibrated_ckpt(&cfg, 29),
+            EngineConfig {
+                max_active: 3,
+                seed: 8,
+                kv: KvBackendCfg::Paged {
+                    block_tokens: 4,
+                    budget_tokens: budget,
+                    prefix_share: true,
+                    swap_dir: None,
+                },
+            },
+        );
+        for i in 0..5u32 {
+            // 14 rows each: 8 blocks at budget 20 (cap 10) — two sessions
+            // can never coexist fully, forcing mid-flight preemption
+            engine.submit(vec![11 + i, 3, 5, 7, 2, 4], 8, SampleCfg::Greedy, None).unwrap();
+        }
+        let done = engine.run();
+        (completions_checksum(&done), engine.stats)
+    };
+    let (unbounded, free_stats) = run(None);
+    assert_eq!(free_stats.preemptions, 0);
+    let (tight, stats) = run(Some(20));
+    assert!(stats.preemptions > 0, "exhaustion never preempted");
+    assert_eq!(unbounded, tight, "preempt → resume changed served tokens");
+}
+
+/// ISSUE 8: sessions sharing a system-prompt prefix attach its full KV
+/// blocks copy-free, and sharing changes served tokens not at all.
+#[test]
+fn shared_system_prompt_prefix_attaches_copy_free() {
+    let cfg = ModelConfig::test_tiny(64);
+    let system = [7u32, 3, 1, 4, 1, 5, 9, 2, 6]; // 2 full blocks at size 4
+    let run = |share: bool| {
+        let mut engine = Engine::with_config(
+            calibrated_ckpt(&cfg, 19),
+            EngineConfig {
+                max_active: 1, // serialize so later sessions see the published prefix
+                seed: 6,
+                kv: KvBackendCfg::Paged {
+                    block_tokens: 4,
+                    budget_tokens: None,
+                    prefix_share: share,
+                    swap_dir: None,
+                },
+            },
+        );
+        for i in 0..3u32 {
+            let mut prompt = system.to_vec();
+            prompt.push(40 + i);
+            engine.submit(prompt, 4, SampleCfg::Greedy, None).unwrap();
+        }
+        let done = engine.run();
+        (completions_checksum(&done), engine.stats)
+    };
+    let (shared, stats) = run(true);
+    let (unshared, no_share_stats) = run(false);
+    assert_eq!(shared, unshared, "prefix sharing changed served tokens");
+    assert_eq!(no_share_stats.prefix_hit_tokens, 0);
+    // sessions 2 and 3 each attach the 2-block (8-token) system prefix
+    assert_eq!(stats.prefix_hit_tokens, 16, "prefix hits");
+    assert!(stats.prefix_hit_rate() > 0.5, "hit rate {}", stats.prefix_hit_rate());
+    // shared prefixes skip prefill work: only the first session prefills
+    // the system prompt through the model
+    assert!(stats.prefill_tokens < no_share_stats.prefill_tokens);
 }
 
 #[test]
