@@ -1,0 +1,392 @@
+//! Daemon load generator: open-loop Poisson arrivals and a closed-loop
+//! comparison against a live `averis serve` endpoint, measuring TTFT and
+//! total-latency percentiles plus goodput under deliberate overload
+//! (EXPERIMENTS.md §serve-load).
+//!
+//! Run: cargo bench --bench serve_load [-- --threads N] [--smoke]
+//!        [--addr HOST:PORT]     target an external `averis serve` (default:
+//!                               spawn an in-process daemon on a free port)
+//!        [--faults SPEC]        arm fault injection on the in-process daemon
+//!        [--shutdown]           POST /v1/shutdown to an external target when
+//!                               done (the in-process daemon always drains)
+//!        [--record EXPERIMENTS.md]   write the `serve-load` marked block
+//!
+//! Open-loop vs closed-loop is the point: a closed-loop client cannot
+//! overload the server (it waits for each response), so it measures best-
+//! case latency; the open-loop schedule keeps firing on its Poisson clock
+//! regardless of completions, so queue depth grows past `queue_cap` and the
+//! bench observes what the robustness layer actually does under pressure —
+//! 429s with Retry-After, never wedge, never silent drop. The arrival
+//! schedule is counter-seeded and deterministic; wall-clock results vary,
+//! the offered pattern does not.
+
+use averis::bench_harness::{
+    arg_value, has_flag, record_markdown_block, threads_from_args, TablePrinter,
+};
+use averis::model::{ModelConfig, Params};
+use averis::serve::daemon::client;
+use averis::serve::{
+    CalibMeans, Daemon, DaemonConfig, Engine, EngineConfig, FaultPlan, KvBackendCfg,
+    QuantizedCheckpoint,
+};
+use averis::tensor::Rng;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One request's outcome, as observed from the client side.
+#[derive(Clone, Copy)]
+struct ReqResult {
+    status: u16,
+    tokens: usize,
+    ttft_ms: Option<f64>,
+    total_ms: f64,
+    /// transport-level failure (connect/read error) — must stay zero
+    transport_err: bool,
+    /// stream ended with `done` (not cancelled)
+    done: bool,
+}
+
+fn run_one(addr: &str, body: &str) -> ReqResult {
+    match client::generate_stream(addr, body, TIMEOUT) {
+        Ok(o) => ReqResult {
+            status: o.status,
+            tokens: o.tokens.len(),
+            ttft_ms: o.ttft.map(|d| d.as_secs_f64() * 1e3),
+            total_ms: o.total.as_secs_f64() * 1e3,
+            transport_err: false,
+            done: o.terminal == "done",
+        },
+        Err(_) => ReqResult {
+            status: 0,
+            tokens: 0,
+            ttft_ms: None,
+            total_ms: 0.0,
+            transport_err: true,
+            done: false,
+        },
+    }
+}
+
+/// Deterministic request body: `prompt_len` token ids below `vocab`.
+fn gen_body(seed: u64, i: u64, vocab: usize, prompt_len: usize, max_new: usize) -> String {
+    let mut rng = Rng::counter_seeded(seed, i, 0x10ad);
+    let prompt: Vec<String> = (0..prompt_len).map(|_| rng.below(vocab).to_string()).collect();
+    format!("{{\"prompt\": \"{}\", \"max_new\": {max_new}}}", prompt.join(" "))
+}
+
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx]
+}
+
+/// Aggregate a scenario's results into one table row.
+struct Row {
+    scenario: String,
+    offered: String,
+    sent: usize,
+    ok: usize,
+    rejected_429: usize,
+    errors: usize,
+    goodput_tok_s: f64,
+    p50_ttft: f64,
+    p99_ttft: f64,
+    p50_total: f64,
+    p99_total: f64,
+}
+
+fn summarize(scenario: &str, offered: &str, results: &[ReqResult], wall_s: f64) -> Row {
+    let ok: Vec<&ReqResult> = results.iter().filter(|r| r.status == 200 && r.done).collect();
+    let mut ttft: Vec<f64> = ok.iter().filter_map(|r| r.ttft_ms).collect();
+    let mut total: Vec<f64> = ok.iter().map(|r| r.total_ms).collect();
+    ttft.sort_by(f64::total_cmp);
+    total.sort_by(f64::total_cmp);
+    let good_tokens: usize = ok.iter().map(|r| r.tokens).sum();
+    Row {
+        scenario: scenario.to_string(),
+        offered: offered.to_string(),
+        sent: results.len(),
+        ok: ok.len(),
+        rejected_429: results.iter().filter(|r| r.status == 429).count(),
+        errors: results
+            .iter()
+            .filter(|r| r.transport_err || (r.status != 200 && r.status != 429))
+            .count(),
+        goodput_tok_s: good_tokens as f64 / wall_s.max(1e-9),
+        p50_ttft: pct(&ttft, 50.0),
+        p99_ttft: pct(&ttft, 99.0),
+        p50_total: pct(&total, 50.0),
+        p99_total: pct(&total, 99.0),
+    }
+}
+
+/// Closed-loop: `workers` threads each issue requests back-to-back. The
+/// in-flight count can never exceed `workers`, so this is the no-overload
+/// baseline the open-loop numbers are read against.
+fn closed_loop(
+    addr: &str,
+    workers: usize,
+    per_worker: usize,
+    seed: u64,
+    vocab: usize,
+    prompt_len: usize,
+    max_new: usize,
+) -> (Vec<ReqResult>, f64) {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..workers)
+        .map(|w| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                (0..per_worker)
+                    .map(|i| {
+                        let body = gen_body(
+                            seed,
+                            (w * per_worker + i) as u64,
+                            vocab,
+                            prompt_len,
+                            max_new,
+                        );
+                        run_one(&addr, &body)
+                    })
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    let mut results = Vec::new();
+    for h in handles {
+        results.extend(h.join().expect("closed-loop worker"));
+    }
+    (results, t0.elapsed().as_secs_f64())
+}
+
+/// Open-loop: fire requests on a deterministic Poisson schedule (`rate`
+/// arrivals/sec, exponential inter-arrival gaps), each on its own thread,
+/// without waiting for completions.
+fn open_loop(
+    addr: &str,
+    rate: f64,
+    n: usize,
+    seed: u64,
+    vocab: usize,
+    prompt_len: usize,
+    max_new: usize,
+) -> (Vec<ReqResult>, f64) {
+    let mut gaps = Rng::counter_seeded(seed, 0xa881, 0);
+    let mut offsets = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    for _ in 0..n {
+        // exponential inter-arrival; clamp u away from 1.0 so ln stays finite
+        let u = (gaps.uniform() as f64).min(0.999_999);
+        t += -(1.0 - u).ln() / rate;
+        offsets.push(t);
+    }
+    let results = Arc::new(Mutex::new(Vec::with_capacity(n)));
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(n);
+    for (i, off) in offsets.into_iter().enumerate() {
+        let due = Duration::from_secs_f64(off);
+        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let addr = addr.to_string();
+        let results = Arc::clone(&results);
+        let body = gen_body(seed, i as u64, vocab, prompt_len, max_new);
+        handles.push(std::thread::spawn(move || {
+            let r = run_one(&addr, &body);
+            results.lock().expect("results lock").push(r);
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let results = Arc::try_unwrap(results).unwrap_or_else(|_| unreachable!("all writers joined"));
+    (results.into_inner().expect("results lock"), wall)
+}
+
+/// Burst: `n` simultaneous requests, all at once — guaranteed past the
+/// queue cap, so the 429 path is exercised every run.
+fn burst(
+    addr: &str,
+    n: usize,
+    seed: u64,
+    vocab: usize,
+    prompt_len: usize,
+    max_new: usize,
+) -> (Vec<ReqResult>, f64) {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let addr = addr.to_string();
+            let body = gen_body(seed ^ 0xb0b0, i as u64, vocab, prompt_len, max_new);
+            std::thread::spawn(move || run_one(&addr, &body))
+        })
+        .collect();
+    let results: Vec<ReqResult> = handles
+        .into_iter()
+        .map(|h| h.join().expect("burst worker"))
+        .collect();
+    (results, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let threads = threads_from_args();
+    let smoke = has_flag("smoke");
+    let record = arg_value("record");
+    let seed = 42u64;
+    let (prompt_len, max_new) = if smoke { (6, 6) } else { (8, 16) };
+    let queue_cap = if smoke { 4 } else { 16 };
+    // spawn an in-process daemon unless --addr targets an external one
+    let external = arg_value("addr");
+    let (addr, daemon, vocab) = match &external {
+        Some(a) => (a.clone(), None, 64usize),
+        None => {
+            let cfg = if smoke {
+                ModelConfig::test_tiny(64)
+            } else {
+                ModelConfig::dense_small(256)
+            };
+            let params = Params::init(&cfg, &mut Rng::new(seed));
+            let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+            let vocab = cfg.vocab;
+            let mut engine = Engine::with_config(
+                QuantizedCheckpoint::build(&cfg, &params, &calib),
+                EngineConfig {
+                    max_active: if smoke { 4 } else { 8 },
+                    seed,
+                    kv: KvBackendCfg::paged_default(),
+                },
+            );
+            if let Some(spec) = arg_value("faults") {
+                let plan = FaultPlan::parse(&spec, seed).expect("--faults spec");
+                println!("fault injection armed: {}", plan.spec());
+                engine.set_faults(plan);
+            }
+            let d = Daemon::spawn(engine, DaemonConfig { queue_cap, ..DaemonConfig::default() })
+                .expect("spawn in-process daemon");
+            (d.addr(), Some(d), vocab)
+        }
+    };
+    println!(
+        "serve-load → {addr} ({threads} threads, queue_cap {queue_cap}{})",
+        if smoke { ", smoke" } else { "" }
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    // 1) closed-loop baseline: latency with bounded concurrency
+    let (workers, per_worker) = if smoke { (3, 3) } else { (8, 8) };
+    let (res, wall) = closed_loop(&addr, workers, per_worker, seed, vocab, prompt_len, max_new);
+    rows.push(summarize("closed-loop", &format!("{workers} workers"), &res, wall));
+
+    // 2) open-loop Poisson at moderate, then at deliberately excessive rate
+    let (n_open, rate_lo, rate_hi) = if smoke {
+        (10, 8.0, 60.0)
+    } else {
+        (60, 20.0, 200.0)
+    };
+    let (res, wall) = open_loop(&addr, rate_lo, n_open, seed, vocab, prompt_len, max_new);
+    rows.push(summarize("open-loop", &format!("{rate_lo:.0} req/s"), &res, wall));
+    let (res, wall) = open_loop(&addr, rate_hi, n_open, seed ^ 1, vocab, prompt_len, max_new);
+    rows.push(summarize("open-loop-hot", &format!("{rate_hi:.0} req/s"), &res, wall));
+
+    // 3) overload burst: all-at-once past the queue cap → 429s guaranteed
+    let n_burst = queue_cap * 4;
+    let (res, wall) = burst(&addr, n_burst, seed, vocab, prompt_len, max_new);
+    rows.push(summarize("burst", &format!("{n_burst} at once"), &res, wall));
+
+    let cols = [
+        "scenario", "offered", "sent", "ok", "429", "err", "goodput", "p50 ttft", "p99 ttft",
+        "p50 tot", "p99 tot",
+    ];
+    let t = TablePrinter::new(&cols, &[13, 12, 5, 5, 5, 4, 9, 9, 9, 9, 9]);
+    let mut md = String::from(
+        "| scenario | offered load | sent | ok | 429 | errors | goodput tok/s | \
+         p50 TTFT (ms) | p99 TTFT (ms) | p50 total (ms) | p99 total (ms) |\n\
+         |----------|--------------|-----:|---:|----:|-------:|--------------:|\
+         --------------:|--------------:|---------------:|---------------:|\n",
+    );
+    for r in &rows {
+        t.row(&[
+            r.scenario.clone(),
+            r.offered.clone(),
+            r.sent.to_string(),
+            r.ok.to_string(),
+            r.rejected_429.to_string(),
+            r.errors.to_string(),
+            format!("{:.1}", r.goodput_tok_s),
+            format!("{:.1}", r.p50_ttft),
+            format!("{:.1}", r.p99_ttft),
+            format!("{:.1}", r.p50_total),
+            format!("{:.1}", r.p99_total),
+        ]);
+        md.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {:.1} | {:.1} | {:.1} | {:.1} | {:.1} |\n",
+            r.scenario,
+            r.offered,
+            r.sent,
+            r.ok,
+            r.rejected_429,
+            r.errors,
+            r.goodput_tok_s,
+            r.p50_ttft,
+            r.p99_ttft,
+            r.p50_total,
+            r.p99_total
+        ));
+    }
+
+    // the robustness bar this bench exists to hold: overload produces loud
+    // 429s, zero transport errors, and the server stays healthy after
+    let burst_row = rows.last().expect("burst row");
+    assert!(
+        burst_row.rejected_429 > 0,
+        "burst of {n_burst} past queue_cap {queue_cap} produced no 429s"
+    );
+    let errors: usize = rows.iter().map(|r| r.errors).sum();
+    assert_eq!(errors, 0, "load produced transport errors or non-200/429 statuses");
+    let health = client::request(&addr, "GET", "/healthz", None, TIMEOUT)
+        .expect("healthz after overload");
+    assert_eq!(health.status, 200, "server unhealthy after overload");
+
+    md.push_str(&format!(
+        "\nEvery overload response is an explicit `429 Too Many Requests` + `Retry-After` \
+         (burst: {} of {} rejected, 0 transport errors); the daemon stays healthy throughout \
+         and drains clean at shutdown. Protocol: `cargo bench --bench serve_load -- --threads \
+         {threads}{}` (open-loop arrivals on a deterministic Poisson schedule; closed-loop \
+         row is the no-overload latency baseline).",
+        burst_row.rejected_429,
+        burst_row.sent,
+        if smoke { " --smoke" } else { "" }
+    ));
+
+    if let Some(d) = daemon {
+        let report = d.shutdown();
+        println!(
+            "daemon report: accepted={} completed={} rejected_429={} deadline_cancels={} \
+             disconnect_cancels={} drained_clean={}",
+            report.accepted,
+            report.completed,
+            report.rejected_429,
+            report.deadline_cancels,
+            report.disconnect_cancels,
+            report.drained_clean
+        );
+        assert!(report.drained_clean, "in-process daemon failed to drain clean");
+        assert_eq!(report.blocks_after_drain, 0, "KV blocks leaked across the load run");
+    } else if has_flag("shutdown") {
+        let r = client::request(&addr, "POST", "/v1/shutdown", Some("{}"), TIMEOUT)
+            .expect("shutdown request");
+        println!("external daemon shutdown: {}", r.status);
+    }
+
+    if let Some(path) = &record {
+        match record_markdown_block(path, "serve-load", &md) {
+            Ok(()) => println!("recorded serve-load table into {path}"),
+            Err(e) => eprintln!("failed to record serve-load table into {path}: {e}"),
+        }
+    }
+}

@@ -24,6 +24,8 @@ pub enum Command {
     QuantDemo,
     /// Autoregressive generation from a saved checkpoint (serve path).
     Generate,
+    /// HTTP/1.1 serving daemon over the continuous-batching engine.
+    Serve,
     /// Continuous-batching serving throughput bench.
     ServeBench,
     /// Cache-churn bench: paged vs contiguous KV at a fixed memory budget.
@@ -44,6 +46,7 @@ impl Command {
             "fig6" => Ok(Command::Fig6),
             "quant-demo" => Ok(Command::QuantDemo),
             "generate" => Ok(Command::Generate),
+            "serve" => Ok(Command::Serve),
             "serve-bench" => Ok(Command::ServeBench),
             "churn-bench" => Ok(Command::ChurnBench),
             "telemetry-report" => Ok(Command::TelemetryReport),
@@ -92,6 +95,24 @@ COMMANDS:
               --prompt \"1,2,3\"          (token ids; default: random)
               --prompt-len N  --max-new N --seed N  --threads N  --simd L
               --top-k K  --temperature T  (omit --top-k for greedy)
+  serve       HTTP/1.1 daemon over the continuous-batching engine
+              (DESIGN.md §12): POST /v1/generate streams tokens, GET
+              /v1/metrics, GET /healthz, POST /v1/shutdown. SIGINT/SIGTERM
+              drain gracefully.
+              --port N | --addr HOST:PORT (default 127.0.0.1:8417)
+              --ckpt FILE                 (packed or f32 checkpoint; omit to
+                                           synthesize --model dense|moe|tiny
+                                           weights from --seed)
+              --seed N  --max-active N  --max-new N (default cap per request)
+              --queue-cap N               (admission queue depth; 429 beyond)
+              --kv-budget ROWS            (per-layer KV row budget; 0 = grow)
+              --kv-block N  --kv-watermark F  --swap-dir DIR
+              --deadline-ms N             (default per-request deadline; 0 = none)
+              --idle-timeout-ms N  --drain-timeout-ms N
+              --faults kind:rate,...      (deterministic fault injection:
+                                           io_short_read, swap_torn_write,
+                                           worker_stall)
+              --fault-seed N  --stall-ms N  --threads N  --simd L  --telemetry
   serve-bench continuous-batching throughput (EXPERIMENTS.md §Serving)
               --model dense|moe|tiny  --batches 1,8,32  --prompts N
               --prompt-len N  --max-new N  --seed N  --threads N  --simd L

@@ -17,7 +17,8 @@ use averis::quant::{Nvfp4Quantizer, QuantRecipe};
 use averis::runtime::{save_params_checkpoint, ArtifactStore};
 use averis::serve::{
     bench_cache_churn, bench_continuous_decode, measure_calib_means, CalibMeans, ChurnShape,
-    Engine, QuantizedCheckpoint, SampleCfg,
+    Daemon, DaemonConfig, Engine, EngineConfig, FaultPlan, KvBackendCfg, QuantizedCheckpoint,
+    SampleCfg,
 };
 use averis::tensor::{parallel, Mat, Rng};
 
@@ -131,6 +132,7 @@ fn run(args: &CliArgs) -> Result<()> {
         Command::Fig6 => fig6_cmd(args),
         Command::Table1 => table1_cmd(args),
         Command::Generate => generate_cmd(args),
+        Command::Serve => serve_cmd(args),
         Command::ServeBench => serve_bench_cmd(args),
         Command::ChurnBench => churn_bench_cmd(args),
         Command::TelemetryReport => telemetry_report_cmd(args),
@@ -343,6 +345,126 @@ fn generate_cmd(args: &CliArgs) -> Result<()> {
         wall,
         toks.len() as f64 / wall.max(1e-9)
     );
+    Ok(())
+}
+
+/// `averis serve` — run the HTTP daemon until SIGINT/SIGTERM or
+/// `POST /v1/shutdown`, then drain gracefully and report.
+fn serve_cmd(args: &CliArgs) -> Result<()> {
+    if let Some(t) = args.get_parse::<usize>("threads").map_err(anyhow::Error::msg)? {
+        parallel::install(t);
+    }
+    let seed = args.get_parse::<u64>("seed").map_err(anyhow::Error::msg)?.unwrap_or(0);
+    let ckpt = match args.get("ckpt") {
+        Some(path) => QuantizedCheckpoint::load_any(path)?,
+        None => {
+            // no checkpoint: synthesize deterministic weights so the daemon
+            // (and its CI smoke leg) runs self-contained
+            let preset =
+                ModelPreset::parse(&args.get_or("model", "tiny")).map_err(anyhow::Error::msg)?;
+            let cfg = preset.model_config(256);
+            let params = Params::init(&cfg, &mut Rng::new(seed));
+            let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+            QuantizedCheckpoint::build(&cfg, &params, &calib)
+        }
+    };
+    println!(
+        "serve: model d={} layers={} vocab={} ({} KiB packed)",
+        ckpt.cfg.d_model,
+        ckpt.cfg.n_layers,
+        ckpt.cfg.vocab,
+        ckpt.storage_bytes() / 1024
+    );
+    let max_active = args.get_parse::<usize>("max-active").map_err(anyhow::Error::msg)?.unwrap_or(8);
+    let kv = KvBackendCfg::Paged {
+        block_tokens: args
+            .get_parse::<usize>("kv-block")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(32),
+        budget_tokens: args
+            .get_parse::<usize>("kv-budget")
+            .map_err(anyhow::Error::msg)?
+            .filter(|&b| b > 0),
+        prefix_share: true,
+        swap_dir: args.get("swap-dir").map(std::path::PathBuf::from),
+    };
+    let mut engine = Engine::with_config(ckpt, EngineConfig { max_active, seed, kv });
+    if let Some(spec) = args.get("faults") {
+        let fault_seed =
+            args.get_parse::<u64>("fault-seed").map_err(anyhow::Error::msg)?.unwrap_or(0);
+        let mut plan = FaultPlan::parse(spec, fault_seed).map_err(anyhow::Error::msg)?;
+        if let Some(stall) = args.get_parse::<u64>("stall-ms").map_err(anyhow::Error::msg)? {
+            plan.set_stall_ms(stall);
+        }
+        println!("serve: fault injection armed: {}", plan.spec());
+        engine.set_faults(plan);
+    }
+    let addr = match (args.get("addr"), args.get_parse::<u16>("port").map_err(anyhow::Error::msg)?)
+    {
+        (Some(a), _) => a.to_string(),
+        (None, Some(p)) => format!("127.0.0.1:{p}"),
+        (None, None) => "127.0.0.1:8417".to_string(),
+    };
+    let dcfg = DaemonConfig {
+        addr,
+        queue_cap: args.get_parse("queue-cap").map_err(anyhow::Error::msg)?.unwrap_or(64),
+        kv_watermark: args.get_parse("kv-watermark").map_err(anyhow::Error::msg)?.unwrap_or(0.9),
+        default_max_new: args.get_parse("max-new").map_err(anyhow::Error::msg)?.unwrap_or(16),
+        deadline_ms: args.get_parse("deadline-ms").map_err(anyhow::Error::msg)?.unwrap_or(0),
+        idle_timeout_ms: args
+            .get_parse("idle-timeout-ms")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(5000),
+        drain_timeout_ms: args
+            .get_parse("drain-timeout-ms")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(10_000),
+    };
+    let (queue_cap, watermark) = (dcfg.queue_cap, dcfg.kv_watermark);
+    let daemon = Daemon::spawn(engine, dcfg)?;
+    println!(
+        "serve: listening on {} (max_active={max_active}, queue_cap={queue_cap}, \
+         kv_watermark={watermark:.2}, {} threads)",
+        daemon.addr(),
+        parallel::threads()
+    );
+    sig::install();
+    while !sig::requested() && !daemon.shutdown_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    println!("serve: shutdown requested, draining in-flight sessions...");
+    let r = daemon.shutdown();
+    println!(
+        "serve: accepted={} completed={} rejected_429={} rejected_4xx={} deadline_cancels={} \
+         disconnect_cancels={} shutdown_cancels={}",
+        r.accepted,
+        r.completed,
+        r.rejected_429,
+        r.rejected_4xx,
+        r.deadline_cancels,
+        r.disconnect_cancels,
+        r.shutdown_cancels
+    );
+    println!(
+        "serve: engine steps={} generated={} swap_outs={} swap_ins={} swap_recoveries={} \
+         preemptions={} cancels={} stale_swaps_reclaimed={}",
+        r.stats.steps,
+        r.stats.generated_tokens,
+        r.stats.swap_outs,
+        r.stats.swap_ins,
+        r.stats.swap_recoveries,
+        r.stats.preemptions,
+        r.stats.cancels,
+        r.stats.stale_swaps_reclaimed
+    );
+    if r.drained_clean {
+        println!("serve: drained clean (0 KV blocks leaked)");
+    } else {
+        println!(
+            "serve: drain incomplete: {} KV blocks still allocated after quiesce",
+            r.blocks_after_drain
+        );
+    }
     Ok(())
 }
 
@@ -621,6 +743,45 @@ fn churn_bench_cmd(args: &CliArgs) -> Result<()> {
         println!("recorded churn table into {record}");
     }
     Ok(())
+}
+
+/// Signal plumbing for `averis serve`: SIGINT/SIGTERM set an atomic the
+/// serve loop polls — the handler itself is async-signal-safe (one store,
+/// nothing else), and the graceful drain runs on the main thread.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn handle(_signum: i32) {
+        REQUESTED.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(2, handle); // SIGINT (ctrl-c)
+            signal(15, handle); // SIGTERM
+        }
+    }
+
+    pub fn requested() -> bool {
+        REQUESTED.load(Ordering::SeqCst)
+    }
+}
+
+/// Non-unix fallback: no signal hooks; shutdown comes via `POST /v1/shutdown`.
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
 }
 
 fn analyze_cmd(args: &CliArgs) -> Result<()> {

@@ -92,7 +92,7 @@ pub fn params_checkpoint_from_bytes(bytes: &[u8]) -> Result<(ModelConfig, Params
             Ok(v) => {
                 err = Some(anyhow::anyhow!("tensor length {} != expected {}", v.len(), s.len()))
             }
-            Err(e) => err = Some(e),
+            Err(e) => err = Some(e.into()),
         }
     });
     if let Some(e) = err {

@@ -1,10 +1,59 @@
 //! Little-endian binary encoding helpers for the checkpoint formats
 //! (`runtime::artifacts` f32 training checkpoints, `serve::checkpoint`
-//! packed serving checkpoints). No serde in the offline image, so the
-//! formats are hand-rolled: fixed-width scalars plus u64-length-prefixed
-//! slices, always little-endian.
+//! packed serving checkpoints) and the KV swap records of the paged cache.
+//! No serde in the offline image, so the formats are hand-rolled:
+//! fixed-width scalars plus u64-length-prefixed slices, always
+//! little-endian.
+//!
+//! Decoding is hardened against hostile input (DESIGN.md §12): every parse
+//! failure is a typed [`WireError`] — truncation, bad magic, unsupported
+//! version, corrupt structure — never a panic, and no allocation is ever
+//! sized from an attacker-controlled length prefix before the prefix has
+//! been bounded by the bytes actually present. The vendored `anyhow` stub
+//! cannot downcast, so the typed error *is* the concrete return type of
+//! [`Reader`] and [`decode_kv_swap`]; `?` still converts into
+//! `anyhow::Result` callers through the blanket `From<std::error::Error>`.
 
-use anyhow::{bail, Context, Result};
+use crate::serve::faults::{FaultKind, FaultPlan};
+use std::fmt;
+use std::path::Path;
+
+/// What went wrong while decoding a wire record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireErrorKind {
+    /// The buffer ends before the bytes a field needs.
+    Truncated,
+    /// The magic prefix identifies a different (or no) format.
+    BadMagic,
+    /// The format version is not one this build decodes.
+    BadVersion,
+    /// Structurally invalid: a length prefix exceeding the buffer, a slab
+    /// size disagreeing with the header, an overflowing count.
+    Corrupt,
+    /// Bytes remain after the last field of the record.
+    TrailingBytes,
+}
+
+/// Typed decode error for checkpoint / KV-swap records.
+#[derive(Clone, Debug)]
+pub struct WireError {
+    pub kind: WireErrorKind,
+    msg: String,
+}
+
+impl WireError {
+    fn new(kind: WireErrorKind, msg: String) -> WireError {
+        WireError { kind, msg }
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for WireError {}
 
 pub fn put_u8(out: &mut Vec<u8>, v: u8) {
     out.push(v);
@@ -47,63 +96,86 @@ impl<'a> Reader<'a> {
         Reader { buf, off: 0 }
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    /// Bytes not yet consumed — the hard ceiling any element count parsed
+    /// from the stream must respect before it sizes an allocation.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.off
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
         // overflow-safe: a corrupt length prefix must Err, never wrap/panic
-        if n > self.buf.len() - self.off {
-            bail!(
-                "checkpoint truncated: need {} bytes at offset {}, have {}",
-                n,
-                self.off,
-                self.buf.len()
-            );
+        if n > self.remaining() {
+            return Err(WireError::new(
+                WireErrorKind::Truncated,
+                format!(
+                    "checkpoint truncated: need {} bytes at offset {}, have {}",
+                    n,
+                    self.off,
+                    self.buf.len()
+                ),
+            ));
         }
         let s = &self.buf[self.off..self.off + n];
         self.off += n;
         Ok(s)
     }
 
-    pub fn u8(&mut self) -> Result<u8> {
+    pub fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
 
-    pub fn u32(&mut self) -> Result<u32> {
+    pub fn u32(&mut self) -> Result<u32, WireError> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    pub fn u64(&mut self) -> Result<u64> {
+    pub fn u64(&mut self) -> Result<u64, WireError> {
         let b = self.take(8)?;
         Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
-    pub fn f32(&mut self) -> Result<f32> {
+    pub fn f32(&mut self) -> Result<f32, WireError> {
         let b = self.take(4)?;
         Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn len_prefix(&mut self) -> Result<usize> {
+    fn len_prefix(&mut self) -> Result<usize, WireError> {
         let n = self.u64()?;
-        usize::try_from(n).ok().filter(|&n| n <= self.buf.len()).with_context(|| {
-            format!("checkpoint corrupt: length prefix {n} exceeds buffer {}", self.buf.len())
+        usize::try_from(n).ok().filter(|&n| n <= self.buf.len()).ok_or_else(|| {
+            WireError::new(
+                WireErrorKind::Corrupt,
+                format!(
+                    "checkpoint corrupt: length prefix {n} exceeds buffer {}",
+                    self.buf.len()
+                ),
+            )
         })
     }
 
-    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+    pub fn bytes(&mut self) -> Result<Vec<u8>, WireError> {
         let n = self.len_prefix()?;
         Ok(self.take(n)?.to_vec())
     }
 
-    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+    pub fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
         let n = self.len_prefix()?;
-        let nbytes = n.checked_mul(4).context("checkpoint corrupt: f32 count overflows")?;
+        let nbytes = n.checked_mul(4).ok_or_else(|| {
+            WireError::new(
+                WireErrorKind::Corrupt,
+                format!("checkpoint corrupt: f32 count {n} overflows"),
+            )
+        })?;
         let b = self.take(nbytes)?;
         Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
     }
 
     /// Assert the buffer was consumed exactly.
-    pub fn done(&self) -> Result<()> {
+    pub fn done(&self) -> Result<(), WireError> {
         if self.off != self.buf.len() {
-            bail!("checkpoint has {} trailing bytes", self.buf.len() - self.off);
+            return Err(WireError::new(
+                WireErrorKind::TrailingBytes,
+                format!("checkpoint has {} trailing bytes", self.buf.len() - self.off),
+            ));
         }
         Ok(())
     }
@@ -133,17 +205,26 @@ pub fn encode_kv_swap(pos: u64, kv_cols: u64, layers: &[(Vec<f32>, Vec<f32>)]) -
 }
 
 /// Decode a [`encode_kv_swap`] record, validating magic/version and that
-/// every layer slab holds exactly `pos × kv_cols` values.
+/// every layer slab holds exactly `pos × kv_cols` values. The declared
+/// layer count is bounded by the bytes actually present (each layer costs
+/// at least two u64 length prefixes) before it sizes anything, so a
+/// hostile header cannot force a huge allocation.
 #[allow(clippy::type_complexity)]
-pub fn decode_kv_swap(buf: &[u8]) -> Result<(u64, u64, Vec<(Vec<f32>, Vec<f32>)>)> {
+pub fn decode_kv_swap(buf: &[u8]) -> Result<(u64, u64, Vec<(Vec<f32>, Vec<f32>)>), WireError> {
     let mut r = Reader::new(buf);
     let magic = r.u32()?;
     if magic != KV_SWAP_MAGIC {
-        bail!("not a KV swap record: magic {magic:#x}");
+        return Err(WireError::new(
+            WireErrorKind::BadMagic,
+            format!("not a KV swap record: magic {magic:#x}"),
+        ));
     }
     let version = r.u32()?;
     if version != KV_SWAP_VERSION {
-        bail!("unsupported KV swap version {version}");
+        return Err(WireError::new(
+            WireErrorKind::BadVersion,
+            format!("unsupported KV swap version {version}"),
+        ));
     }
     let pos = r.u64()?;
     let kv_cols = r.u64()?;
@@ -151,23 +232,67 @@ pub fn decode_kv_swap(buf: &[u8]) -> Result<(u64, u64, Vec<(Vec<f32>, Vec<f32>)>
     let want = pos
         .checked_mul(kv_cols)
         .and_then(|n| usize::try_from(n).ok())
-        .context("KV swap record corrupt: row count overflows")?;
+        .ok_or_else(|| {
+            WireError::new(
+                WireErrorKind::Corrupt,
+                format!("KV swap record corrupt: row count {pos}×{kv_cols} overflows"),
+            )
+        })?;
+    let max_layers = (r.remaining() / 16) as u64;
+    if n_layers > max_layers {
+        return Err(WireError::new(
+            WireErrorKind::Corrupt,
+            format!(
+                "KV swap record corrupt: {n_layers} layers declared but only {} bytes remain",
+                r.remaining()
+            ),
+        ));
+    }
     let mut layers = Vec::with_capacity(n_layers as usize);
     for li in 0..n_layers {
         let k = r.f32s()?;
         let v = r.f32s()?;
         if k.len() != want || v.len() != want {
-            bail!(
-                "KV swap layer {li} corrupt: {}x{} K / {} V values, expected {want}",
-                pos,
-                kv_cols,
-                v.len()
-            );
+            return Err(WireError::new(
+                WireErrorKind::Corrupt,
+                format!(
+                    "KV swap layer {li} corrupt: {}x{} K / {} V values, expected {want}",
+                    pos,
+                    kv_cols,
+                    v.len()
+                ),
+            ));
         }
         layers.push((k, v));
     }
     r.done()?;
     Ok((pos, kv_cols, layers))
+}
+
+/// Write a KV swap record to disk through a tmp-file + rename, so a crash
+/// mid-write leaves at worst a stale `.tmp`, never a half-written record
+/// at the final path — unless a `swap_torn_write` fault fires, which
+/// deliberately lands a truncated record there (the crash the rename
+/// discipline exists to prevent, made reproducible for the fault tests).
+pub fn write_swap_file(path: &Path, bytes: &[u8], faults: &FaultPlan) -> std::io::Result<()> {
+    if faults.fire(FaultKind::SwapTornWrite) {
+        return std::fs::write(path, &bytes[..bytes.len() / 2]);
+    }
+    let tmp = path.with_extension("kvswap.tmp");
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Read a KV swap record back. An `io_short_read` fault drops the tail of
+/// the buffer, which downstream [`decode_kv_swap`] reports as
+/// [`WireErrorKind::Truncated`] — the caller's recovery path (recompute
+/// from prompt) takes over from there.
+pub fn read_swap_file(path: &Path, faults: &FaultPlan) -> std::io::Result<Vec<u8>> {
+    let mut buf = std::fs::read(path)?;
+    if faults.fire(FaultKind::IoShortRead) {
+        buf.truncate(buf.len() / 2);
+    }
+    Ok(buf)
 }
 
 #[cfg(test)]
@@ -194,11 +319,16 @@ mod tests {
     }
 
     #[test]
-    fn truncation_is_an_error() {
+    fn truncation_is_a_typed_error() {
         let mut buf = Vec::new();
         put_u64(&mut buf, 100); // length prefix promising 100 f32s
-        let mut r = Reader::new(&buf);
-        assert!(r.f32s().is_err());
+        let err = Reader::new(&buf).f32s().unwrap_err();
+        assert_eq!(err.kind, WireErrorKind::Corrupt, "prefix exceeds buffer");
+        let mut buf2 = Vec::new();
+        put_f32s(&mut buf2, &[1.0; 8]);
+        buf2.truncate(buf2.len() - 4);
+        let err2 = Reader::new(&buf2).f32s().unwrap_err();
+        assert_eq!(err2.kind, WireErrorKind::Truncated);
     }
 
     #[test]
@@ -225,22 +355,29 @@ mod tests {
     }
 
     #[test]
-    fn kv_swap_rejects_corruption() {
+    fn kv_swap_rejects_corruption_with_typed_kinds() {
         let layers = vec![(vec![1.0f32; 4], vec![2.0f32; 4])];
         let good = encode_kv_swap(1, 4, &layers);
         // wrong magic
         let mut bad = good.clone();
         bad[0] ^= 0xFF;
-        assert!(decode_kv_swap(&bad).is_err());
+        assert_eq!(decode_kv_swap(&bad).unwrap_err().kind, WireErrorKind::BadMagic);
+        // wrong version
+        let mut badv = good.clone();
+        badv[4] ^= 0xFF;
+        assert_eq!(decode_kv_swap(&badv).unwrap_err().kind, WireErrorKind::BadVersion);
         // truncated
-        assert!(decode_kv_swap(&good[..good.len() - 3]).is_err());
+        assert_eq!(
+            decode_kv_swap(&good[..good.len() - 3]).unwrap_err().kind,
+            WireErrorKind::Truncated
+        );
         // slab size disagreeing with pos × kv_cols
         let short = encode_kv_swap(2, 4, &layers);
-        assert!(decode_kv_swap(&short).is_err());
+        assert_eq!(decode_kv_swap(&short).unwrap_err().kind, WireErrorKind::Corrupt);
         // trailing garbage
         let mut long = good;
         long.push(0);
-        assert!(decode_kv_swap(&long).is_err());
+        assert_eq!(decode_kv_swap(&long).unwrap_err().kind, WireErrorKind::TrailingBytes);
     }
 
     #[test]
@@ -254,5 +391,46 @@ mod tests {
             put_u64(&mut buf2, prefix);
             assert!(Reader::new(&buf2).bytes().is_err(), "prefix {prefix}");
         }
+    }
+
+    #[test]
+    fn hostile_layer_count_is_bounded_before_allocation() {
+        // a record declaring u64::MAX layers with an empty body must fail
+        // on the count bound, not attempt a with_capacity of that size
+        let mut buf = Vec::new();
+        put_u32(&mut buf, KV_SWAP_MAGIC);
+        put_u32(&mut buf, KV_SWAP_VERSION);
+        put_u64(&mut buf, 1); // pos
+        put_u64(&mut buf, 4); // kv_cols
+        put_u64(&mut buf, u64::MAX); // layer count
+        let err = decode_kv_swap(&buf).unwrap_err();
+        assert_eq!(err.kind, WireErrorKind::Corrupt);
+        assert!(format!("{err}").contains("layers declared"));
+    }
+
+    #[test]
+    fn swap_file_roundtrip_and_faults() {
+        let dir = std::env::temp_dir().join(format!("averis-wire-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.kvswap");
+        let rec = encode_kv_swap(1, 2, &[(vec![1.0, 2.0], vec![3.0, 4.0])]);
+        let clean = FaultPlan::none();
+        write_swap_file(&path, &rec, &clean).unwrap();
+        let back = read_swap_file(&path, &clean).unwrap();
+        assert_eq!(back, rec);
+        // torn write: the record on disk is truncated, decode reports it
+        let torn = FaultPlan::parse("swap_torn_write:1", 0).unwrap();
+        write_swap_file(&path, &rec, &torn).unwrap();
+        let tornback = read_swap_file(&path, &clean).unwrap();
+        assert_eq!(tornback.len(), rec.len() / 2);
+        assert!(decode_kv_swap(&tornback).is_err());
+        // short read: the file is fine, the read drops the tail
+        write_swap_file(&path, &rec, &clean).unwrap();
+        let shorty = FaultPlan::parse("io_short_read:1", 0).unwrap();
+        let half = read_swap_file(&path, &shorty).unwrap();
+        assert_eq!(half.len(), rec.len() / 2);
+        assert!(decode_kv_swap(&half).is_err());
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
     }
 }

@@ -327,34 +327,87 @@ impl QuantizedCheckpoint {
         }
         let cfg = read_config(&mut r)?;
         let embed = read_mat(&mut r)?;
+        if embed.rows != cfg.vocab || embed.cols != cfg.d_model {
+            bail!("embedding is {}x{}, config implies {}x{}", embed.rows, embed.cols, cfg.vocab,
+                cfg.d_model);
+        }
+        // every decoded shape is checked against the (validated) config
+        // before the checkpoint is handed to the forward pass — a hostile
+        // or stale record fails here with a typed message, never deep in a
+        // GEMM with a shape-mismatch panic
+        let check_lin = |lin: &FrozenLinear, i: usize, o: usize, what: &str| -> Result<()> {
+            if lin.in_dim() != i || lin.out_dim() != o {
+                bail!("{what} is {}x{}, config implies {i}x{o}", lin.in_dim(), lin.out_dim());
+            }
+            Ok(())
+        };
+        let check_ffn = |f: &PackedFfn, what: &str| -> Result<()> {
+            check_lin(&f.w_gate, cfg.d_model, cfg.d_ff, what)?;
+            check_lin(&f.w_up, cfg.d_model, cfg.d_ff, what)?;
+            check_lin(&f.w_down, cfg.d_ff, cfg.d_model, what)
+        };
+        let (qo, kvo) = (cfg.n_heads * cfg.head_dim(), cfg.n_kv_heads * cfg.head_dim());
         let quant = Nvfp4Quantizer::nvfp4();
         let mut blocks = Vec::with_capacity(cfg.n_layers);
-        for _ in 0..cfg.n_layers {
+        for li in 0..cfg.n_layers {
             let attn_norm = r.f32s()?;
             let wq = read_linear(&mut r, quant)?;
             let wk = read_linear(&mut r, quant)?;
             let wv = read_linear(&mut r, quant)?;
             let wo = read_linear(&mut r, quant)?;
             let ffn_norm = r.f32s()?;
-            let ffn = match r.u8()? {
-                0 => PackedBlockFfn::Dense(read_packed_ffn(&mut r, quant)?),
-                1 => {
+            if attn_norm.len() != cfg.d_model || ffn_norm.len() != cfg.d_model {
+                bail!("layer {li} norm width mismatch vs d_model {}", cfg.d_model);
+            }
+            check_lin(&wq, cfg.d_model, qo, "wq")?;
+            check_lin(&wk, cfg.d_model, kvo, "wk")?;
+            check_lin(&wv, cfg.d_model, kvo, "wv")?;
+            check_lin(&wo, qo, cfg.d_model, "wo")?;
+            let ffn = match (r.u8()?, cfg.ffn) {
+                (0, FfnKind::Dense) => {
+                    let f = read_packed_ffn(&mut r, quant)?;
+                    check_ffn(&f, "ffn")?;
+                    PackedBlockFfn::Dense(f)
+                }
+                (1, FfnKind::Moe { experts: cfg_exp, top_k: cfg_top_k }) => {
                     let n_exp = r.u32()? as usize;
                     let top_k = r.u32()? as usize;
+                    if n_exp != cfg_exp || top_k != cfg_top_k {
+                        bail!(
+                            "layer {li} MoE {n_exp} experts/top-{top_k}, config implies \
+                             {cfg_exp}/top-{cfg_top_k}"
+                        );
+                    }
                     let router = read_linear(&mut r, quant)?;
+                    check_lin(&router, cfg.d_model, n_exp, "router")?;
                     let experts = (0..n_exp)
-                        .map(|_| read_packed_ffn(&mut r, quant))
+                        .map(|_| {
+                            let f = read_packed_ffn(&mut r, quant)?;
+                            check_ffn(&f, "expert")?;
+                            Ok(f)
+                        })
                         .collect::<Result<Vec<_>>>()?;
                     PackedBlockFfn::Moe { router, experts, top_k }
                 }
-                t => bail!("unknown FFN tag {t}"),
+                (t @ (0 | 1), _) => bail!("layer {li} FFN tag {t} disagrees with config FFN kind"),
+                (t, _) => bail!("unknown FFN tag {t}"),
             };
             blocks.push(PackedBlock { attn_norm, wq, wk, wv, wo, ffn_norm, ffn });
         }
         let final_norm = r.f32s()?;
+        if final_norm.len() != cfg.d_model {
+            bail!("final norm width {} != d_model {}", final_norm.len(), cfg.d_model);
+        }
         let lm_head = match r.u8()? {
             0 => None,
-            _ => Some(read_mat(&mut r)?),
+            _ => {
+                let h = read_mat(&mut r)?;
+                if h.rows != cfg.d_model || h.cols != cfg.vocab {
+                    bail!("lm_head is {}x{}, config implies {}x{}", h.rows, h.cols, cfg.d_model,
+                        cfg.vocab);
+                }
+                Some(h)
+            }
         };
         r.done()?;
         Ok(QuantizedCheckpoint { cfg, embed, blocks, final_norm, lm_head })
@@ -570,5 +623,57 @@ mod tests {
         assert_eq!(back.blocks[0].wq.mu_q, ckpt.blocks[0].wq.mu_q);
         assert_eq!(back.blocks[1].ffn_norm, ckpt.blocks[1].ffn_norm);
         let _ = std::fs::remove_file(&path);
+    }
+
+    fn encoded_checkpoint(cfg: &ModelConfig, tag: &str) -> Vec<u8> {
+        let params = Params::init(cfg, &mut Rng::new(6));
+        let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+        let ckpt = QuantizedCheckpoint::build(cfg, &params, &calib);
+        let path = std::env::temp_dir().join(format!("averis_qckpt_harden_{tag}.bin"));
+        ckpt.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        bytes
+    }
+
+    #[test]
+    fn truncated_checkpoint_is_typed_error_never_panic() {
+        let bytes = encoded_checkpoint(&ModelConfig::test_tiny(64), "trunc");
+        let mut cuts: Vec<usize> = (0..bytes.len()).step_by(97).collect();
+        cuts.push(bytes.len() - 1);
+        for cut in cuts {
+            assert!(QuantizedCheckpoint::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // and the pristine bytes still load
+        QuantizedCheckpoint::from_bytes(&bytes).unwrap();
+    }
+
+    #[test]
+    fn shape_config_mismatch_is_rejected_at_load() {
+        // rewrite the config's vocab field (offset 8, after magic+version):
+        // the config still validates on its own, but the embedding shape no
+        // longer matches what it implies — must fail at load, not panic in
+        // a GEMM later
+        let mut bytes = encoded_checkpoint(&ModelConfig::test_tiny(64), "shape");
+        bytes[8..12].copy_from_slice(&(128u32).to_le_bytes());
+        let err = QuantizedCheckpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("embedding"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn moe_expert_count_mismatch_is_rejected_at_load() {
+        // moe_small encodes `experts` at config offset 8+7*4+1 = 37; halve
+        // it so the record's routers/expert lists disagree with the config
+        let mut bytes = encoded_checkpoint(&ModelConfig::moe_small(64), "moe");
+        assert_eq!(u32::from_le_bytes(bytes[37..41].try_into().unwrap()), 8);
+        bytes[37..41].copy_from_slice(&(4u32).to_le_bytes());
+        assert!(QuantizedCheckpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut bytes = encoded_checkpoint(&ModelConfig::test_tiny(64), "trail");
+        bytes.extend_from_slice(&[0u8; 8]);
+        assert!(QuantizedCheckpoint::from_bytes(&bytes).is_err());
     }
 }

@@ -1,0 +1,293 @@
+//! A minimal blocking HTTP/1.1 client for the daemon's own tests, the
+//! `serve_load` bench, and CLI smoke checks. Speaks exactly the dialect
+//! the daemon emits: one request per connection, `Connection: close`,
+//! responses either `Content-Length`-delimited or chunked token streams.
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// A complete non-streaming response.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl Response {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// What one `/v1/generate` call produced, successful or not.
+#[derive(Debug)]
+pub struct StreamOutcome {
+    pub status: u16,
+    /// streamed token ids (empty on rejection)
+    pub tokens: Vec<u32>,
+    /// `done`, `cancelled:<reason>`, or empty when the request was refused
+    pub terminal: String,
+    /// time to first streamed token
+    pub ttft: Option<Duration>,
+    /// wall time for the whole exchange
+    pub total: Duration,
+    /// parsed `Retry-After` header (backpressure responses carry one)
+    pub retry_after: Option<u64>,
+    /// response body for non-streaming (error) responses
+    pub body: String,
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn read_line<R: BufRead>(r: &mut R) -> io::Result<String> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line)?;
+    if n == 0 {
+        return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "connection closed"));
+    }
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(line)
+}
+
+/// Parse the status line + headers.
+fn read_head<R: BufRead>(r: &mut R) -> io::Result<(u16, Vec<(String, String)>)> {
+    let status_line = read_line(r)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad(format!("malformed status line '{status_line}'")))?;
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r)?;
+        if line.is_empty() {
+            return Ok((status, headers));
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+}
+
+/// Decode a chunked body, handing each chunk's text to `on_chunk`; a
+/// `false` return stops reading early (simulated mid-stream disconnect).
+fn read_chunks<R: BufRead>(
+    r: &mut R,
+    mut on_chunk: impl FnMut(&str) -> bool,
+) -> io::Result<()> {
+    loop {
+        let size_line = read_line(r)?;
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .map_err(|_| bad(format!("bad chunk size '{size_line}'")))?;
+        if size == 0 {
+            let _ = read_line(r); // trailing CRLF after the last chunk
+            return Ok(());
+        }
+        let mut data = vec![0u8; size];
+        r.read_exact(&mut data)?;
+        let _ = read_line(r); // chunk-terminating CRLF
+        let text = String::from_utf8(data).map_err(|_| bad("non-UTF-8 chunk".to_string()))?;
+        if !on_chunk(&text) {
+            return Ok(());
+        }
+    }
+}
+
+fn connect(addr: &str, timeout: Duration) -> io::Result<TcpStream> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_nodelay(true)?;
+    Ok(stream)
+}
+
+fn send_request(
+    stream: &mut TcpStream,
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> io::Result<()> {
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n");
+    if let Some(b) = body {
+        req.push_str(&format!("Content-Length: {}\r\n\r\n{b}", b.len()));
+    } else {
+        req.push_str("\r\n");
+    }
+    stream.write_all(req.as_bytes())?;
+    stream.flush()
+}
+
+/// One plain request/response exchange (chunked bodies are concatenated).
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    timeout: Duration,
+) -> io::Result<Response> {
+    let mut stream = connect(addr, timeout)?;
+    send_request(&mut stream, addr, method, path, body)?;
+    let mut r = BufReader::new(stream);
+    let (status, headers) = read_head(&mut r)?;
+    let chunked = headers
+        .iter()
+        .any(|(k, v)| k == "transfer-encoding" && v.eq_ignore_ascii_case("chunked"));
+    let mut body = String::new();
+    if chunked {
+        read_chunks(&mut r, |c| {
+            body.push_str(c);
+            true
+        })?;
+    } else if let Some(len) = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse::<usize>().ok())
+    {
+        let mut buf = vec![0u8; len];
+        r.read_exact(&mut buf)?;
+        body = String::from_utf8(buf).map_err(|_| bad("non-UTF-8 body".to_string()))?;
+    } else {
+        r.read_to_string(&mut body)?;
+    }
+    Ok(Response { status, headers, body })
+}
+
+/// Run one `/v1/generate` call to completion, timing the stream.
+pub fn generate_stream(addr: &str, json_body: &str, timeout: Duration) -> io::Result<StreamOutcome> {
+    let t0 = Instant::now();
+    let mut stream = connect(addr, timeout)?;
+    send_request(&mut stream, addr, "POST", "/v1/generate", Some(json_body))?;
+    let mut r = BufReader::new(stream);
+    let (status, headers) = read_head(&mut r)?;
+    let retry_after = headers
+        .iter()
+        .find(|(k, _)| k == "retry-after")
+        .and_then(|(_, v)| v.parse().ok());
+    if status != 200 {
+        let body = match headers
+            .iter()
+            .find(|(k, _)| k == "content-length")
+            .and_then(|(_, v)| v.parse::<usize>().ok())
+        {
+            Some(len) => {
+                let mut buf = vec![0u8; len];
+                r.read_exact(&mut buf)?;
+                String::from_utf8(buf).unwrap_or_default()
+            }
+            None => String::new(),
+        };
+        return Ok(StreamOutcome {
+            status,
+            tokens: Vec::new(),
+            terminal: String::new(),
+            ttft: None,
+            total: t0.elapsed(),
+            retry_after,
+            body,
+        });
+    }
+    let mut tokens = Vec::new();
+    let mut terminal = String::new();
+    let mut ttft = None;
+    read_chunks(&mut r, |chunk| {
+        let line = chunk.trim_end();
+        if let Ok(tok) = line.parse::<u32>() {
+            if ttft.is_none() {
+                ttft = Some(t0.elapsed());
+            }
+            tokens.push(tok);
+        } else {
+            terminal = line.to_string();
+        }
+        true
+    })?;
+    Ok(StreamOutcome {
+        status,
+        tokens,
+        terminal,
+        ttft,
+        total: t0.elapsed(),
+        retry_after,
+        body: String::new(),
+    })
+}
+
+/// Start a `/v1/generate` stream and hang up after `after_tokens` tokens —
+/// the mid-stream disconnect the daemon must detect and reclaim. Returns
+/// how many tokens were read before the socket dropped.
+pub fn generate_abandon(
+    addr: &str,
+    json_body: &str,
+    after_tokens: usize,
+    timeout: Duration,
+) -> io::Result<usize> {
+    let mut stream = connect(addr, timeout)?;
+    send_request(&mut stream, addr, "POST", "/v1/generate", Some(json_body))?;
+    let mut r = BufReader::new(stream);
+    let (status, _headers) = read_head(&mut r)?;
+    if status != 200 {
+        return Ok(0);
+    }
+    let mut seen = 0usize;
+    read_chunks(&mut r, |chunk| {
+        if chunk.trim_end().parse::<u32>().is_ok() {
+            seen += 1;
+        }
+        seen < after_tokens
+    })?;
+    // dropping the reader closes the socket mid-stream
+    Ok(seen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_heads_and_chunked_bodies() {
+        let raw = "HTTP/1.1 429 Too Many Requests\r\nRetry-After: 1\r\nContent-Length: 2\r\n\r\nhi";
+        let mut r = Cursor::new(raw.as_bytes());
+        let (status, headers) = read_head(&mut r).unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(headers.iter().find(|(k, _)| k == "retry-after").unwrap().1, "1");
+
+        let stream = "3\r\n42\n\r\n5\r\ndone\n\r\n0\r\n\r\n";
+        let mut r = Cursor::new(stream.as_bytes());
+        let mut chunks = Vec::new();
+        read_chunks(&mut r, |c| {
+            chunks.push(c.to_string());
+            true
+        })
+        .unwrap();
+        assert_eq!(chunks, vec!["42\n", "done\n"]);
+    }
+
+    #[test]
+    fn chunk_reader_can_stop_early() {
+        let stream = "2\r\n1\n\r\n2\r\n2\n\r\n2\r\n3\n\r\n0\r\n\r\n";
+        let mut r = Cursor::new(stream.as_bytes());
+        let mut n = 0;
+        read_chunks(&mut r, |_| {
+            n += 1;
+            n < 2
+        })
+        .unwrap();
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn garbage_heads_are_errors_not_panics() {
+        let mut r = Cursor::new("not http at all\r\n\r\n".as_bytes());
+        assert!(read_head(&mut r).is_err());
+        let mut r = Cursor::new("zz\r\n".as_bytes());
+        assert!(read_chunks(&mut r, |_| true).is_err());
+    }
+}

@@ -1,0 +1,340 @@
+//! Bounded HTTP/1.1 request parsing and response writing over `std::net`.
+//!
+//! Hand-rolled because the image has no HTTP crate — and deliberately
+//! narrow: one request per connection (`Connection: close`), HTTP/1.1 only,
+//! no keep-alive, no pipelining. Every limit is enforced *before* the
+//! corresponding allocation, so a hostile peer cannot make the daemon
+//! allocate from an attacker-controlled length: the request line, each
+//! header line, the header count, and the declared body length are all
+//! capped, and a `Content-Length` above [`MAX_BODY`] is rejected with 413
+//! without ever reserving the buffer. Every malformed input maps to a typed
+//! [`HttpError`] carrying its 4xx status — the daemon never panics on
+//! socket bytes.
+
+use std::io::{BufRead, Read, Write};
+
+/// Longest accepted request line (`METHOD path HTTP/1.1`).
+pub const MAX_REQUEST_LINE: usize = 1024;
+/// Longest accepted single header line.
+pub const MAX_HEADER_LINE: usize = 1024;
+/// Most headers accepted per request.
+pub const MAX_HEADERS: usize = 64;
+/// Largest accepted request body (checked before allocating).
+pub const MAX_BODY: usize = 256 * 1024;
+
+/// Everything that can go wrong reading a request, each with the HTTP
+/// status the daemon answers with. `Closed` means the peer is gone and no
+/// response can be delivered.
+#[derive(Debug, PartialEq, Eq)]
+pub enum HttpError {
+    /// malformed syntax, bad Content-Length, non-UTF-8 where text is
+    /// required — 400
+    BadRequest(String),
+    /// declared body larger than [`MAX_BODY`] — 413
+    PayloadTooLarge,
+    /// request line longer than [`MAX_REQUEST_LINE`] — 414
+    UriTooLong,
+    /// header line or header count over the cap — 431
+    HeaderTooLarge,
+    /// socket read timed out (slow or stalled client) — 408
+    Timeout,
+    /// connection closed or reset mid-request — nothing to answer
+    Closed,
+}
+
+impl HttpError {
+    /// The status code to answer with, if the peer can still hear one.
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            HttpError::BadRequest(_) => Some(400),
+            HttpError::PayloadTooLarge => Some(413),
+            HttpError::UriTooLong => Some(414),
+            HttpError::HeaderTooLarge => Some(431),
+            HttpError::Timeout => Some(408),
+            HttpError::Closed => None,
+        }
+    }
+
+    pub fn message(&self) -> String {
+        match self {
+            HttpError::BadRequest(m) => m.clone(),
+            HttpError::PayloadTooLarge => format!("body exceeds {MAX_BODY} bytes"),
+            HttpError::UriTooLong => format!("request line exceeds {MAX_REQUEST_LINE} bytes"),
+            HttpError::HeaderTooLarge => "header section too large".to_string(),
+            HttpError::Timeout => "timed out reading request".to_string(),
+            HttpError::Closed => "connection closed".to_string(),
+        }
+    }
+}
+
+fn io_err(e: std::io::Error) -> HttpError {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => HttpError::Timeout,
+        _ => HttpError::Closed,
+    }
+}
+
+/// One parsed request. Header names are lower-cased at parse time.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (names were lower-cased at parse).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// The body as UTF-8 text; invalid bytes are a 400, not a panic.
+    pub fn body_utf8(&self) -> Result<&str, HttpError> {
+        std::str::from_utf8(&self.body)
+            .map_err(|_| HttpError::BadRequest("body is not valid UTF-8".into()))
+    }
+}
+
+/// Read one CRLF/LF-terminated line, rejecting lines over `max` bytes
+/// with `HeaderTooLarge` (callers remap for the request line) and
+/// non-UTF-8 bytes with 400.
+fn read_line_bounded<R: BufRead>(r: &mut R, max: usize) -> Result<String, HttpError> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let byte = {
+            let buf = r.fill_buf().map_err(io_err)?;
+            if buf.is_empty() {
+                return Err(HttpError::Closed);
+            }
+            buf[0]
+        };
+        r.consume(1);
+        if byte == b'\n' {
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            return String::from_utf8(line)
+                .map_err(|_| HttpError::BadRequest("non-UTF-8 bytes in header".into()));
+        }
+        line.push(byte);
+        if line.len() > max {
+            return Err(HttpError::HeaderTooLarge);
+        }
+    }
+}
+
+/// Read and validate one full request (start line, headers, body).
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request, HttpError> {
+    let start = match read_line_bounded(r, MAX_REQUEST_LINE) {
+        Err(HttpError::HeaderTooLarge) => return Err(HttpError::UriTooLong),
+        other => other?,
+    };
+    let mut parts = start.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) => (m.to_string(), p.to_string(), v),
+        _ => return Err(HttpError::BadRequest(format!("malformed request line '{start}'"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::BadRequest(format!("unsupported protocol '{version}'")));
+    }
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = read_line_bounded(r, MAX_HEADER_LINE)?;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::HeaderTooLarge);
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::BadRequest(format!("malformed header '{line}'")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let req = Request { method, path, headers, body: Vec::new() };
+    if req.method != "POST" && req.method != "PUT" {
+        return Ok(req);
+    }
+    // POST bodies require an explicit, sane Content-Length; the cap is
+    // enforced before the buffer exists
+    let Some(cl) = req.header("content-length") else {
+        return Err(HttpError::BadRequest("POST without Content-Length".into()));
+    };
+    let len: usize = cl
+        .parse()
+        .map_err(|_| HttpError::BadRequest(format!("bad Content-Length '{cl}'")))?;
+    if len > MAX_BODY {
+        return Err(HttpError::PayloadTooLarge);
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(io_err)?;
+    Ok(Request { body, ..req })
+}
+
+/// Reason phrase for the status codes the daemon emits.
+pub fn status_line(code: u16) -> &'static str {
+    match code {
+        200 => "200 OK",
+        400 => "400 Bad Request",
+        404 => "404 Not Found",
+        405 => "405 Method Not Allowed",
+        408 => "408 Request Timeout",
+        413 => "413 Payload Too Large",
+        414 => "414 URI Too Long",
+        429 => "429 Too Many Requests",
+        431 => "431 Request Header Fields Too Large",
+        503 => "503 Service Unavailable",
+        _ => "500 Internal Server Error",
+    }
+}
+
+/// Write a complete non-streaming response (`Connection: close`).
+pub fn write_response(
+    w: &mut impl Write,
+    code: u16,
+    extra_headers: &[(&str, &str)],
+    body: &str,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n",
+        status_line(code),
+        body.len()
+    )?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "\r\n{body}")?;
+    w.flush()
+}
+
+/// Start a chunked token stream (one token per chunk follows).
+pub fn write_chunked_head(w: &mut impl Write) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )?;
+    w.flush()
+}
+
+/// Write one chunk and flush — flushing per token is what makes the stream
+/// observable (TTFT) and what surfaces a dead peer as a write error.
+pub fn write_chunk(w: &mut impl Write, data: &str) -> std::io::Result<()> {
+    write!(w, "{:x}\r\n{data}\r\n", data.len())?;
+    w.flush()
+}
+
+/// Terminate a chunked stream.
+pub fn finish_chunked(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Request, HttpError> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_get_and_post() {
+        let r = parse("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert_eq!(r.header("HOST"), Some("x"));
+        assert!(r.body.is_empty());
+        let r = parse("POST /v1/generate HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd").unwrap();
+        assert_eq!(r.body, b"abcd");
+        assert_eq!(r.body_utf8().unwrap(), "abcd");
+        // bare-LF lines parse too
+        let r = parse("GET / HTTP/1.1\nX-A: 1\n\n").unwrap();
+        assert_eq!(r.header("x-a"), Some("1"));
+    }
+
+    #[test]
+    fn every_malformed_input_is_a_typed_4xx() {
+        assert!(matches!(parse("garbage\r\n\r\n"), Err(HttpError::BadRequest(_))));
+        assert!(matches!(parse("GET / SPDY/3\r\n\r\n"), Err(HttpError::BadRequest(_))));
+        assert!(matches!(parse("GET / HTTP/1.1\r\nnocolon\r\n\r\n"), Err(HttpError::BadRequest(_))));
+        assert!(matches!(
+            parse("POST /v1/generate HTTP/1.1\r\n\r\n"),
+            Err(HttpError::BadRequest(_))
+        ));
+        assert!(matches!(
+            parse("POST / HTTP/1.1\r\nContent-Length: abc\r\n\r\n"),
+            Err(HttpError::BadRequest(_))
+        ));
+        assert!(matches!(
+            parse("POST / HTTP/1.1\r\nContent-Length: -5\r\n\r\n"),
+            Err(HttpError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn hostile_lengths_are_rejected_before_allocation() {
+        // 2^63 bytes declared: must answer 413, never try to allocate
+        let huge = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 1u64 << 63);
+        assert_eq!(parse(&huge), Err(HttpError::PayloadTooLarge));
+        // absurd u64-overflowing length: 400, not a panic
+        let over = "POST / HTTP/1.1\r\nContent-Length: 99999999999999999999999999\r\n\r\n";
+        assert!(matches!(parse(over), Err(HttpError::BadRequest(_))));
+    }
+
+    #[test]
+    fn line_and_header_limits_hold() {
+        let long_uri = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_REQUEST_LINE));
+        assert_eq!(parse(&long_uri), Err(HttpError::UriTooLong));
+        let long_header =
+            format!("GET / HTTP/1.1\r\nX-A: {}\r\n\r\n", "b".repeat(MAX_HEADER_LINE));
+        assert_eq!(parse(&long_header), Err(HttpError::HeaderTooLarge));
+        let many: String = (0..=MAX_HEADERS).map(|i| format!("X-{i}: 1\r\n")).collect();
+        let too_many = format!("GET / HTTP/1.1\r\n{many}\r\n");
+        assert_eq!(parse(&too_many), Err(HttpError::HeaderTooLarge));
+    }
+
+    #[test]
+    fn truncated_requests_report_closed() {
+        assert_eq!(parse("GET / HTT"), Err(HttpError::Closed));
+        assert_eq!(
+            parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"),
+            Err(HttpError::Closed)
+        );
+    }
+
+    #[test]
+    fn non_utf8_header_bytes_are_400() {
+        let mut raw = b"GET / HTTP/1.1\r\nX-A: ".to_vec();
+        raw.extend_from_slice(&[0xff, 0xfe]);
+        raw.extend_from_slice(b"\r\n\r\n");
+        assert!(matches!(
+            read_request(&mut Cursor::new(raw)),
+            Err(HttpError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn responses_render_well_formed() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, &[("Retry-After", "1")], "{\"error\": \"busy\"}").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Content-Length: 17\r\n"));
+        assert!(text.ends_with("{\"error\": \"busy\"}"));
+        let mut s = Vec::new();
+        write_chunked_head(&mut s).unwrap();
+        write_chunk(&mut s, "42\n").unwrap();
+        write_chunk(&mut s, "done\n").unwrap();
+        finish_chunked(&mut s).unwrap();
+        let text = String::from_utf8(s).unwrap();
+        assert!(text.contains("Transfer-Encoding: chunked"));
+        assert!(text.contains("3\r\n42\n\r\n"));
+        assert!(text.contains("5\r\ndone\n\r\n"));
+        assert!(text.ends_with("0\r\n\r\n"));
+    }
+}

@@ -1,0 +1,289 @@
+//! The `averis serve` daemon (DESIGN.md §12): an HTTP/1.1 front end over
+//! the continuous-batching [`Engine`], built on `std::net` alone.
+//!
+//! Three threads of control:
+//!  * the **acceptor** — a nonblocking `TcpListener` loop that hands each
+//!    connection to a short-lived handler thread;
+//!  * **handler threads** — parse one bounded request ([`http`]), run
+//!    admission control, forward a submit over the control channel, and
+//!    relay the session's token events back as a chunked HTTP stream (one
+//!    token per chunk, flushed, so time-to-first-token is real and a dead
+//!    peer surfaces as a write error);
+//!  * the **engine thread** — the only thread that touches the [`Engine`].
+//!    It drains control messages, runs `step()`, pushes freshly sampled
+//!    tokens to each session's handler, enforces per-request deadlines, and
+//!    publishes gauges.
+//!
+//! Robustness contract:
+//!  * **Backpressure, not collapse** — admission rejects with `429` +
+//!    `Retry-After` when the queue is past `queue_cap` or when worst-case
+//!    projected KV occupancy (every admitted session running to its
+//!    `max_new` ceiling) would cross `kv_watermark` of the pool budget.
+//!    Accepted work can always complete; excess load is refused loudly,
+//!    never dropped silently and never allowed to wedge the pool.
+//!  * **Deadlines** — a request's `deadline_ms` bounds its wall time;
+//!    expiry cancels the session on the engine thread, which frees its KV
+//!    blocks immediately. Completion wins a deadline race.
+//!  * **Disconnects** — a failed token write (or a dead event channel)
+//!    cancels the session the same way; a vanished client stops costing
+//!    compute and memory within one step.
+//!  * **Hostile input** — every parse failure is a typed 4xx; size caps
+//!    are enforced before allocation; the daemon never panics on bytes
+//!    from a socket.
+//!  * **Graceful drain** — shutdown (SIGTERM/ctrl-c via the CLI, or
+//!    `POST /v1/shutdown`) stops accepting, answers `503` on new work,
+//!    steps in-flight sessions to completion within `drain_timeout_ms`,
+//!    cancels stragglers, quiesces the KV pool (zero blocks after a clean
+//!    drain — anything else is a leak, reported), and flushes a telemetry
+//!    snapshot.
+//!
+//! Determinism is inherited from the engine: token streams are
+//! bit-identical to an in-process [`Engine::run`] over the same prompts —
+//! `tests/daemon.rs` pins HTTP output against the in-process oracle across
+//! quantization recipes and thread counts.
+
+pub mod client;
+pub mod http;
+mod server;
+
+use super::engine::{Engine, EngineStats};
+use super::session::SampleCfg;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Tuning knobs for one daemon instance.
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// bind address; port 0 picks a free port (see [`Daemon::local_addr`])
+    pub addr: String,
+    /// admission cap on waiting work (queued in the engine + accepted by
+    /// handlers but not yet consumed); beyond it, generate requests get 429
+    pub queue_cap: usize,
+    /// fraction of the KV pool budget that projected worst-case occupancy
+    /// may reach before admission answers 429 (unbounded pools skip this)
+    pub kv_watermark: f64,
+    /// `max_new` when a request does not specify one
+    pub default_max_new: usize,
+    /// default per-request deadline (0 = none; requests may override)
+    pub deadline_ms: u64,
+    /// socket read timeout — a client that stalls mid-request gets 408
+    pub idle_timeout_ms: u64,
+    /// how long shutdown steps in-flight sessions before cancelling them
+    pub drain_timeout_ms: u64,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> DaemonConfig {
+        DaemonConfig {
+            addr: "127.0.0.1:0".to_string(),
+            queue_cap: 64,
+            kv_watermark: 0.9,
+            default_max_new: 16,
+            deadline_ms: 0,
+            idle_timeout_ms: 5000,
+            drain_timeout_ms: 10_000,
+        }
+    }
+}
+
+/// What a daemon did with its life, returned by [`Daemon::join`].
+#[derive(Clone, Copy, Debug)]
+pub struct DaemonReport {
+    /// generate requests admitted into the engine
+    pub accepted: u64,
+    /// sessions that ran to completion (EOS or token budget)
+    pub completed: u64,
+    /// generate requests refused by admission control
+    pub rejected_429: u64,
+    /// malformed requests answered with a 4xx
+    pub rejected_4xx: u64,
+    /// sessions cancelled by deadline expiry
+    pub deadline_cancels: u64,
+    /// sessions cancelled by client disconnect
+    pub disconnect_cancels: u64,
+    /// sessions cancelled because drain timed out at shutdown
+    pub shutdown_cancels: u64,
+    /// the engine's own counters at shutdown
+    pub stats: EngineStats,
+    /// KV blocks still allocated after the drain + quiesce (0 when clean)
+    pub blocks_after_drain: usize,
+    /// true iff every in-flight session finished inside the drain window
+    /// and the KV pool quiesced to zero blocks
+    pub drained_clean: bool,
+}
+
+/// One generate request crossing from a handler to the engine thread.
+pub(crate) struct SubmitReq {
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub sampler: SampleCfg,
+    pub eos: Option<u32>,
+    pub deadline: Option<Instant>,
+    /// worst-case KV blocks the handler reserved in `projected_inflight`
+    /// at admission; the engine thread transfers the reservation to its
+    /// own projection when it consumes the submit
+    pub need_blocks: usize,
+    pub events: mpsc::Sender<Ev>,
+    pub reply: mpsc::Sender<std::result::Result<u64, String>>,
+}
+
+pub(crate) enum Ctl {
+    Submit(Box<SubmitReq>),
+    Cancel { id: u64, reason: &'static str },
+}
+
+/// Events streamed from the engine thread to a request handler.
+pub(crate) enum Ev {
+    Token(u32),
+    Done,
+    Cancelled(&'static str),
+}
+
+/// Shared state between the engine thread (writer) and handlers (readers):
+/// the admission gauges, lifecycle counters, and the pre-rendered metrics
+/// document. Plain atomics — handlers never lock anything the engine loop
+/// holds across a step.
+#[derive(Default)]
+pub(crate) struct Gauges {
+    /// sessions waiting in the engine (pending + preempted)
+    pub queued: AtomicUsize,
+    pub active: AtomicUsize,
+    /// submits accepted by handlers the engine has not consumed yet
+    pub inflight: AtomicUsize,
+    /// engine-side worst-case KV projection ([`Engine::projected_worst_blocks`])
+    pub projected_engine: AtomicUsize,
+    /// handler-side reservations not yet transferred to the engine
+    pub projected_inflight: AtomicUsize,
+    pub blocks_in_use: AtomicUsize,
+    /// pool budget in blocks (0 = unbounded → watermark admission is off)
+    pub pool_blocks: AtomicUsize,
+    pub block_tokens: AtomicUsize,
+    pub n_layers: AtomicUsize,
+    pub shutting_down: AtomicBool,
+    pub accepted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected_429: AtomicU64,
+    pub rejected_4xx: AtomicU64,
+    pub deadline_cancels: AtomicU64,
+    pub disconnect_cancels: AtomicU64,
+    pub live_handlers: AtomicUsize,
+    pub metrics_json: Mutex<String>,
+}
+
+/// A running daemon. Dropping the handle without [`Daemon::join`] leaves
+/// the threads serving; `join` (or `shutdown`) reaps them.
+pub struct Daemon {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    engine_thread: Option<JoinHandle<DaemonReport>>,
+    acceptor: Option<JoinHandle<()>>,
+    /// keeps the control channel open so the engine loop never sees a
+    /// spurious disconnect while the daemon handle is alive
+    _ctl: mpsc::Sender<Ctl>,
+}
+
+impl Daemon {
+    /// Bind `cfg.addr`, move `engine` onto its own thread, and start
+    /// serving. Returns once the socket is listening.
+    pub fn spawn(engine: Engine, cfg: DaemonConfig) -> Result<Daemon> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind {}", cfg.addr))?;
+        let addr = listener.local_addr().context("local_addr")?;
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let gauges = Arc::new(Gauges::default());
+        *gauges.metrics_json.lock().expect("metrics lock") = "{}".to_string();
+        let (ctl_tx, ctl_rx) = mpsc::channel::<Ctl>();
+        let faults = engine.faults().clone();
+        let engine_thread = {
+            let g = Arc::clone(&gauges);
+            let sd = Arc::clone(&shutdown);
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("averis-serve-engine".to_string())
+                .spawn(move || server::engine_loop(engine, ctl_rx, g, cfg, sd))
+                .context("spawn engine thread")?
+        };
+        let acceptor = {
+            let g = Arc::clone(&gauges);
+            let sd = Arc::clone(&shutdown);
+            let tx = ctl_tx.clone();
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("averis-serve-accept".to_string())
+                .spawn(move || server::accept_loop(listener, tx, g, cfg, sd, faults))
+                .context("spawn acceptor thread")?
+        };
+        Ok(Daemon {
+            addr,
+            shutdown,
+            engine_thread: Some(engine_thread),
+            acceptor: Some(acceptor),
+            _ctl: ctl_tx,
+        })
+    }
+
+    /// The bound socket address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// `host:port` as a dialable string.
+    pub fn addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Begin graceful shutdown without waiting (idempotent; also triggered
+    /// by `POST /v1/shutdown` and the CLI's signal handler).
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether shutdown has been requested by any path (signal, HTTP, or
+    /// [`Daemon::request_shutdown`]) — the CLI's serve loop polls this so
+    /// `POST /v1/shutdown` also ends the process.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Wait for the daemon to finish (something must request shutdown —
+    /// this call does not) and collect its report.
+    pub fn join(mut self) -> DaemonReport {
+        let report = self
+            .engine_thread
+            .take()
+            .expect("join consumes the handle")
+            .join()
+            .expect("engine thread never panics");
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        report
+    }
+
+    /// Request shutdown and wait for the drain: the one-call teardown.
+    pub fn shutdown(self) -> DaemonReport {
+        self.request_shutdown();
+        self.join()
+    }
+}
+
+/// Engine-thread bookkeeping for one streaming session.
+pub(crate) struct StreamState {
+    pub events: mpsc::Sender<Ev>,
+    /// tokens already pushed to the handler
+    pub sent: usize,
+    pub deadline: Option<Instant>,
+}
+
+pub(crate) type Streams = HashMap<u64, StreamState>;
+
+pub(crate) fn ms(d: u64) -> Duration {
+    Duration::from_millis(d)
+}

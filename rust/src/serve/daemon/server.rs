@@ -1,0 +1,595 @@
+//! Daemon internals: the acceptor loop, per-connection request handlers
+//! (parse → admission → stream relay), and the engine thread's event loop.
+//!
+//! Threading discipline: the engine thread is the **only** thread that
+//! touches the [`Engine`]. Handlers communicate with it exclusively through
+//! the `Ctl` channel and read shared state only through [`Gauges`]
+//! atomics — no lock is ever held across a model step.
+
+use super::http;
+use super::{
+    ms, Ctl, DaemonConfig, DaemonReport, Ev, Gauges, StreamState, Streams, SubmitReq,
+};
+use crate::metrics::JsonObj;
+use crate::serve::engine::Engine;
+use crate::serve::faults::{FaultKind, FaultPlan};
+use crate::serve::session::SampleCfg;
+use crate::telemetry::{self, report, Counter};
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+const ORD: Ordering = Ordering::SeqCst;
+
+/// Decrements `live_handlers` when a handler thread exits by any path, so
+/// shutdown's bounded wait never hangs on a panicked or early-returned
+/// handler.
+struct HandlerGuard(Arc<Gauges>);
+
+impl Drop for HandlerGuard {
+    fn drop(&mut self) {
+        self.0.live_handlers.fetch_sub(1, ORD);
+    }
+}
+
+/// Accept connections until shutdown. The listener is nonblocking so the
+/// loop can observe the flag; each connection gets its own handler thread
+/// (requests are single-shot, so handlers are short-lived).
+pub(crate) fn accept_loop(
+    listener: TcpListener,
+    tx: mpsc::Sender<Ctl>,
+    gauges: Arc<Gauges>,
+    cfg: DaemonConfig,
+    shutdown: Arc<AtomicBool>,
+    faults: FaultPlan,
+) {
+    while !shutdown.load(ORD) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let tx = tx.clone();
+                let g = Arc::clone(&gauges);
+                let cfg = cfg.clone();
+                let sd = Arc::clone(&shutdown);
+                let f = faults.clone();
+                // counted before spawn so the drain's handler wait can
+                // never miss a thread that is still starting up
+                gauges.live_handlers.fetch_add(1, ORD);
+                let spawned = std::thread::Builder::new()
+                    .name("averis-serve-conn".to_string())
+                    .spawn(move || {
+                        let _guard = HandlerGuard(Arc::clone(&g));
+                        handle_conn(stream, tx, &g, &cfg, &sd, &f);
+                    });
+                if spawned.is_err() {
+                    gauges.live_handlers.fetch_sub(1, ORD);
+                }
+            }
+            Err(_) => std::thread::sleep(ms(5)),
+        }
+    }
+}
+
+fn err_body(msg: &str) -> String {
+    JsonObj::new().str("error", msg).render()
+}
+
+/// Discard whatever remains of a rejected request (bounded by the socket
+/// read timeout and a size cap). Closing with unread bytes in the receive
+/// queue makes the kernel RST the connection, which can destroy the typed
+/// 4xx response before the client reads it — drain first, then close.
+fn drain_input(r: &mut impl std::io::Read) {
+    let mut buf = [0u8; 4096];
+    let mut left = http::MAX_BODY;
+    while left > 0 {
+        match r.read(&mut buf) {
+            Ok(0) | Err(_) => return,
+            Ok(n) => left = left.saturating_sub(n),
+        }
+    }
+}
+
+/// One connection, one request, one response.
+fn handle_conn(
+    stream: TcpStream,
+    tx: mpsc::Sender<Ctl>,
+    g: &Gauges,
+    cfg: &DaemonConfig,
+    shutdown: &AtomicBool,
+    faults: &FaultPlan,
+) {
+    if faults.fire(FaultKind::WorkerStall) {
+        std::thread::sleep(faults.stall());
+    }
+    let _ = stream.set_read_timeout(Some(ms(cfg.idle_timeout_ms.max(1))));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut w = stream;
+    let req = match http::read_request(&mut reader) {
+        Ok(r) => r,
+        Err(e) => {
+            // typed 4xx (or 408) for everything malformed; a vanished peer
+            // gets nothing
+            if let Some(code) = e.status() {
+                g.rejected_4xx.fetch_add(1, ORD);
+                let _ = http::write_response(&mut w, code, &[], &err_body(&e.message()));
+                drain_input(&mut reader);
+            }
+            return;
+        }
+    };
+    let draining = shutdown.load(ORD) || g.shutting_down.load(ORD);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let (code, status) = if draining { (503, "draining") } else { (200, "ok") };
+            let body = JsonObj::new().str("status", status).render();
+            let _ = http::write_response(&mut w, code, &[], &body);
+        }
+        ("GET", "/v1/metrics") => {
+            let body = g.metrics_json.lock().expect("metrics lock").clone();
+            let _ = http::write_response(&mut w, 200, &[], &body);
+        }
+        ("POST", "/v1/shutdown") => {
+            shutdown.store(true, ORD);
+            let body = JsonObj::new().str("status", "shutting down").render();
+            let _ = http::write_response(&mut w, 200, &[], &body);
+        }
+        ("POST", "/v1/generate") => handle_generate(&req, &mut w, tx, g, cfg, draining),
+        (_, "/healthz" | "/v1/metrics" | "/v1/generate" | "/v1/shutdown") => {
+            g.rejected_4xx.fetch_add(1, ORD);
+            let _ = http::write_response(&mut w, 405, &[], &err_body("method not allowed"));
+        }
+        (_, path) => {
+            g.rejected_4xx.fetch_add(1, ORD);
+            let _ =
+                http::write_response(&mut w, 404, &[], &err_body(&format!("no route {path}")));
+        }
+    }
+}
+
+/// A parsed `/v1/generate` body.
+struct GenReq {
+    prompt: Vec<u32>,
+    max_new: usize,
+    sampler: SampleCfg,
+    eos: Option<u32>,
+    deadline_ms: u64,
+}
+
+/// Read an optional integer field with bounds; anything non-integral or
+/// out of range is a 400.
+fn int_field(v: &report::JsonVal, key: &str, lo: f64, hi: f64) -> Result<Option<u64>, String> {
+    let Some(field) = v.get(key) else { return Ok(None) };
+    let n = field.num().ok_or_else(|| format!("field '{key}' must be a number"))?;
+    if !n.is_finite() || n.fract() != 0.0 || n < lo || n > hi {
+        return Err(format!("field '{key}' must be an integer in [{lo}, {hi}]"));
+    }
+    Ok(Some(n as u64))
+}
+
+fn parse_generate(body: &str, cfg: &DaemonConfig) -> Result<GenReq, String> {
+    let v = report::parse_line(body).map_err(|e| format!("bad JSON: {e}"))?;
+    let prompt_str = v
+        .get("prompt")
+        .and_then(|p| p.str())
+        .ok_or("missing string field 'prompt' (space-separated token ids)")?;
+    let mut prompt = Vec::new();
+    for t in prompt_str.split_whitespace() {
+        let tok: u32 =
+            t.parse().map_err(|_| format!("prompt token '{t}' is not a token id"))?;
+        prompt.push(tok);
+    }
+    if prompt.is_empty() {
+        return Err("prompt has no tokens".to_string());
+    }
+    let max_new = int_field(&v, "max_new", 1.0, 1e9)?
+        .map(|n| n as usize)
+        .unwrap_or(cfg.default_max_new);
+    let top_k = int_field(&v, "top_k", 1.0, 1e9)?.map(|n| n as usize);
+    let temperature = match v.get("temperature") {
+        None => 1.0,
+        Some(t) => {
+            let t = t.num().ok_or("field 'temperature' must be a number")?;
+            if !t.is_finite() || t <= 0.0 {
+                return Err("field 'temperature' must be a positive number".to_string());
+            }
+            t as f32
+        }
+    };
+    let sampler = match top_k {
+        Some(k) if k > 1 => SampleCfg::TopK { k, temperature },
+        _ => SampleCfg::Greedy,
+    };
+    let eos = int_field(&v, "eos", 0.0, u32::MAX as f64)?.map(|n| n as u32);
+    let deadline_ms = int_field(&v, "deadline_ms", 0.0, 1e12)?.unwrap_or(cfg.deadline_ms);
+    Ok(GenReq { prompt, max_new, sampler, eos, deadline_ms })
+}
+
+/// Admission control, handler side. Returns the worst-case KV block
+/// reservation charged to `projected_inflight` on success, or `Err` when
+/// the request must be answered 429. Both gates reserve optimistically and
+/// roll back on rejection, so concurrent handlers cannot jointly overshoot.
+fn admit(g: &Gauges, cfg: &DaemonConfig, prompt_len: usize, max_new: usize) -> Result<usize, ()> {
+    // gate 1: queue depth — accepted-but-unconsumed plus engine-side queue
+    let inflight = g.inflight.fetch_add(1, ORD) + 1;
+    if inflight + g.queued.load(ORD) > cfg.queue_cap.max(1) {
+        g.inflight.fetch_sub(1, ORD);
+        return Err(());
+    }
+    // gate 2: projected worst-case KV occupancy vs the pool watermark
+    // (unbounded pools skip it — there is nothing to wedge)
+    let pool_blocks = g.pool_blocks.load(ORD);
+    if pool_blocks == 0 {
+        return Ok(0);
+    }
+    let bt = g.block_tokens.load(ORD).max(1);
+    let need = (prompt_len + max_new).div_ceil(bt) * g.n_layers.load(ORD).max(1);
+    let projected =
+        g.projected_engine.load(ORD) + g.projected_inflight.fetch_add(need, ORD) + need;
+    let limit = ((pool_blocks as f64 * cfg.kv_watermark) as usize).max(1);
+    if projected > limit {
+        g.projected_inflight.fetch_sub(need, ORD);
+        g.inflight.fetch_sub(1, ORD);
+        return Err(());
+    }
+    Ok(need)
+}
+
+fn handle_generate(
+    req: &http::Request,
+    w: &mut TcpStream,
+    tx: mpsc::Sender<Ctl>,
+    g: &Gauges,
+    cfg: &DaemonConfig,
+    draining: bool,
+) {
+    if draining {
+        let _ = http::write_response(
+            w,
+            503,
+            &[("Retry-After", "1")],
+            &err_body("shutting down"),
+        );
+        return;
+    }
+    let gen = match req.body_utf8().map_err(|e| e.message()).and_then(|b| parse_generate(b, cfg))
+    {
+        Ok(gen) => gen,
+        Err(msg) => {
+            g.rejected_4xx.fetch_add(1, ORD);
+            let _ = http::write_response(w, 400, &[], &err_body(&msg));
+            return;
+        }
+    };
+    let Ok(need_blocks) = admit(g, cfg, gen.prompt.len(), gen.max_new) else {
+        g.rejected_429.fetch_add(1, ORD);
+        telemetry::incr(Counter::Http429, 1);
+        let _ = http::write_response(
+            w,
+            429,
+            &[("Retry-After", "1")],
+            &err_body("at capacity, retry later"),
+        );
+        return;
+    };
+    let (ev_tx, ev_rx) = mpsc::channel::<Ev>();
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let deadline =
+        (gen.deadline_ms > 0).then(|| Instant::now() + ms(gen.deadline_ms));
+    let submit = SubmitReq {
+        prompt: gen.prompt,
+        max_new: gen.max_new,
+        sampler: gen.sampler,
+        eos: gen.eos,
+        deadline,
+        need_blocks,
+        events: ev_tx,
+        reply: reply_tx,
+    };
+    if tx.send(Ctl::Submit(Box::new(submit))).is_err() {
+        // engine thread already gone: release the reservations it would
+        // have consumed
+        g.inflight.fetch_sub(1, ORD);
+        if need_blocks > 0 {
+            g.projected_inflight.fetch_sub(need_blocks, ORD);
+        }
+        let _ =
+            http::write_response(w, 503, &[("Retry-After", "1")], &err_body("shutting down"));
+        return;
+    }
+    let id = match reply_rx.recv_timeout(Duration::from_secs(30)) {
+        Ok(Ok(id)) => id,
+        Ok(Err(msg)) => {
+            // the engine refused the submit (over max_seq, out-of-vocab,
+            // over the KV budget outright, or drain started)
+            g.rejected_4xx.fetch_add(1, ORD);
+            let _ = http::write_response(w, 400, &[], &err_body(&msg));
+            return;
+        }
+        Err(_) => {
+            let _ = http::write_response(
+                w,
+                503,
+                &[("Retry-After", "1")],
+                &err_body("engine unavailable"),
+            );
+            return;
+        }
+    };
+    // stream: one token per chunk; the terminal chunk is `done` or
+    // `cancelled:<reason>`. A failed write means the client hung up — tell
+    // the engine so the session's KV frees this step.
+    if http::write_chunked_head(w).is_err() {
+        let _ = tx.send(Ctl::Cancel { id, reason: "disconnect" });
+        return;
+    }
+    loop {
+        match ev_rx.recv_timeout(Duration::from_secs(300)) {
+            Ok(Ev::Token(t)) => {
+                if http::write_chunk(w, &format!("{t}\n")).is_err() {
+                    let _ = tx.send(Ctl::Cancel { id, reason: "disconnect" });
+                    return;
+                }
+            }
+            Ok(Ev::Done) => {
+                let _ = http::write_chunk(w, "done\n");
+                let _ = http::finish_chunked(w);
+                return;
+            }
+            Ok(Ev::Cancelled(reason)) => {
+                let _ = http::write_chunk(w, &format!("cancelled:{reason}\n"));
+                let _ = http::finish_chunked(w);
+                return;
+            }
+            Err(_) => {
+                // engine thread died or wedged past the backstop
+                let _ = http::write_chunk(w, "cancelled:shutdown\n");
+                let _ = http::finish_chunked(w);
+                return;
+            }
+        }
+    }
+}
+
+/// Consume one control message on the engine thread.
+fn handle_ctl(engine: &mut Engine, streams: &mut Streams, g: &Gauges, msg: Ctl) {
+    match msg {
+        Ctl::Submit(req) => {
+            let req = *req;
+            // the handler's reservation transfers to the engine-side
+            // projection (republished right after the submit lands)
+            g.inflight.fetch_sub(1, ORD);
+            if req.need_blocks > 0 {
+                g.projected_inflight.fetch_sub(req.need_blocks, ORD);
+            }
+            match engine.submit(req.prompt, req.max_new, req.sampler, req.eos) {
+                Ok(id) => {
+                    g.accepted.fetch_add(1, ORD);
+                    streams.insert(
+                        id,
+                        StreamState { events: req.events, sent: 0, deadline: req.deadline },
+                    );
+                    let _ = req.reply.send(Ok(id));
+                }
+                Err(e) => {
+                    let _ = req.reply.send(Err(e.to_string()));
+                }
+            }
+        }
+        Ctl::Cancel { id, reason } => cancel_stream(engine, streams, g, id, reason),
+    }
+}
+
+/// Cancel a session and notify its handler. Frees KV immediately; a no-op
+/// for ids that already completed (the completion wins the race).
+fn cancel_stream(
+    engine: &mut Engine,
+    streams: &mut Streams,
+    g: &Gauges,
+    id: u64,
+    reason: &'static str,
+) {
+    let existed = engine.cancel(id);
+    if let Some(st) = streams.remove(&id) {
+        let _ = st.events.send(Ev::Cancelled(reason));
+    }
+    if existed {
+        match reason {
+            "deadline" => {
+                g.deadline_cancels.fetch_add(1, ORD);
+                telemetry::incr(Counter::DeadlineCancels, 1);
+            }
+            "disconnect" => {
+                g.disconnect_cancels.fetch_add(1, ORD);
+                telemetry::incr(Counter::DisconnectCancels, 1);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Push freshly sampled tokens to each session's handler and settle
+/// completions. A dead event channel is a disconnect: the handler exited
+/// (its socket write failed, or it timed out) and the session must stop
+/// paying for compute and KV.
+fn pump_streams(engine: &mut Engine, streams: &mut Streams, g: &Gauges) {
+    let mut dead: Vec<u64> = Vec::new();
+    for s in engine.sched.active.iter() {
+        let Some(st) = streams.get_mut(&s.id) else { continue };
+        while st.sent < s.generated.len() {
+            if st.events.send(Ev::Token(s.generated[st.sent])).is_err() {
+                dead.push(s.id);
+                break;
+            }
+            st.sent += 1;
+        }
+    }
+    for id in dead {
+        cancel_stream(engine, streams, g, id, "disconnect");
+    }
+    for c in engine.drain_done() {
+        g.completed.fetch_add(1, ORD);
+        let Some(st) = streams.remove(&c.id) else { continue };
+        let from = st.sent.min(c.tokens.len());
+        if c.tokens[from..].iter().all(|&t| st.events.send(Ev::Token(t)).is_ok()) {
+            let _ = st.events.send(Ev::Done);
+        }
+    }
+}
+
+/// Cancel every stream whose deadline has passed. Runs *after*
+/// [`pump_streams`] settles completions, so a session that finished on the
+/// same step it expired counts as completed, not cancelled.
+fn enforce_deadlines(engine: &mut Engine, streams: &mut Streams, g: &Gauges) {
+    let now = Instant::now();
+    let expired: Vec<u64> = streams
+        .iter()
+        .filter(|(_, st)| st.deadline.is_some_and(|d| d <= now))
+        .map(|(&id, _)| id)
+        .collect();
+    for id in expired {
+        cancel_stream(engine, streams, g, id, "deadline");
+    }
+}
+
+fn render_metrics(engine: &Engine, g: &Gauges, streams: &Streams) -> String {
+    let s = &engine.stats;
+    JsonObj::new()
+        .int("queued", (engine.sched.pending_len() + engine.sched.preempted_len()) as i64)
+        .int("active", engine.sched.active_len() as i64)
+        .int("streams", streams.len() as i64)
+        .int("blocks_in_use", engine.blocks_in_use() as i64)
+        .int("projected_blocks", engine.projected_worst_blocks() as i64)
+        .int("pool_blocks", g.pool_blocks.load(ORD) as i64)
+        .int("accepted", g.accepted.load(ORD) as i64)
+        .int("completed", g.completed.load(ORD) as i64)
+        .int("rejected_429", g.rejected_429.load(ORD) as i64)
+        .int("rejected_4xx", g.rejected_4xx.load(ORD) as i64)
+        .int("deadline_cancels", g.deadline_cancels.load(ORD) as i64)
+        .int("disconnect_cancels", g.disconnect_cancels.load(ORD) as i64)
+        .obj(
+            "engine",
+            JsonObj::new()
+                .int("steps", s.steps as i64)
+                .int("generated_tokens", s.generated_tokens as i64)
+                .int("prefill_tokens", s.prefill_tokens as i64)
+                .int("preemptions", s.preemptions as i64)
+                .int("swap_outs", s.swap_outs as i64)
+                .int("swap_ins", s.swap_ins as i64)
+                .int("swap_recoveries", s.swap_recoveries as i64)
+                .int("stale_swaps_reclaimed", s.stale_swaps_reclaimed as i64)
+                .int("cancels", s.cancels as i64)
+                .num("mean_occupancy", s.mean_occupancy())
+                .num("prefix_hit_rate", s.prefix_hit_rate()),
+        )
+        .render()
+}
+
+/// Refresh every engine-owned gauge and the metrics document.
+fn publish_gauges(engine: &Engine, g: &Gauges, streams: &Streams) {
+    g.queued.store(engine.sched.pending_len() + engine.sched.preempted_len(), ORD);
+    g.active.store(engine.sched.active_len(), ORD);
+    g.projected_engine.store(engine.projected_worst_blocks(), ORD);
+    g.blocks_in_use.store(engine.blocks_in_use(), ORD);
+    *g.metrics_json.lock().expect("metrics lock") = render_metrics(engine, g, streams);
+}
+
+/// The engine thread: drain control messages, step, relay tokens, enforce
+/// deadlines — then, on shutdown, drain in-flight work, cancel stragglers,
+/// quiesce the KV pool, and report.
+pub(crate) fn engine_loop(
+    mut engine: Engine,
+    ctl: mpsc::Receiver<Ctl>,
+    g: Arc<Gauges>,
+    cfg: DaemonConfig,
+    shutdown: Arc<AtomicBool>,
+) -> DaemonReport {
+    if let Some((bt, max_blocks)) = engine.kv_geometry() {
+        g.block_tokens.store(bt, ORD);
+        g.pool_blocks.store(max_blocks.unwrap_or(0), ORD);
+    }
+    g.n_layers.store(engine.ckpt.cfg.n_layers, ORD);
+    let mut streams: Streams = Streams::new();
+    publish_gauges(&engine, &g, &streams);
+    while !shutdown.load(ORD) {
+        let mut got = false;
+        while let Ok(msg) = ctl.try_recv() {
+            got = true;
+            handle_ctl(&mut engine, &mut streams, &g, msg);
+        }
+        if engine.sched.is_drained() && !got {
+            // idle: block briefly for work so the loop neither spins nor
+            // misses the shutdown flag
+            match ctl.recv_timeout(ms(25)) {
+                Ok(msg) => handle_ctl(&mut engine, &mut streams, &g, msg),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            publish_gauges(&engine, &g, &streams);
+            continue;
+        }
+        engine.step();
+        pump_streams(&mut engine, &mut streams, &g);
+        enforce_deadlines(&mut engine, &mut streams, &g);
+        publish_gauges(&engine, &g, &streams);
+    }
+    // ---- graceful drain ----
+    g.shutting_down.store(true, ORD);
+    let drain_until = Instant::now() + ms(cfg.drain_timeout_ms);
+    while !engine.sched.is_drained() && Instant::now() < drain_until {
+        engine.step();
+        pump_streams(&mut engine, &mut streams, &g);
+        enforce_deadlines(&mut engine, &mut streams, &g);
+    }
+    let fully_drained = engine.sched.is_drained();
+    // refuse whatever is still queued on the control channel
+    while let Ok(msg) = ctl.try_recv() {
+        match msg {
+            Ctl::Submit(req) => {
+                g.inflight.fetch_sub(1, ORD);
+                if req.need_blocks > 0 {
+                    g.projected_inflight.fetch_sub(req.need_blocks, ORD);
+                }
+                let _ = req.reply.send(Err("shutting down".to_string()));
+            }
+            Ctl::Cancel { id, reason } => {
+                cancel_stream(&mut engine, &mut streams, &g, id, reason)
+            }
+        }
+    }
+    // cancel sessions the drain window did not finish
+    let mut shutdown_cancels = 0u64;
+    let leftover: Vec<u64> = streams.keys().copied().collect();
+    for id in leftover {
+        if engine.cancel(id) {
+            shutdown_cancels += 1;
+        }
+        if let Some(st) = streams.remove(&id) {
+            let _ = st.events.send(Ev::Cancelled("shutdown"));
+        }
+    }
+    // park nothing, leak nothing: swap out / evict everything idle and
+    // measure what is still allocated
+    let blocks_after_drain = engine.quiesce();
+    let _ = telemetry::write_snapshot("serve-shutdown", engine.stats.steps as u64);
+    publish_gauges(&engine, &g, &streams);
+    // give handlers a bounded window to flush their terminal chunks
+    let t0 = Instant::now();
+    while g.live_handlers.load(ORD) > 0 && t0.elapsed() < Duration::from_secs(1) {
+        std::thread::sleep(ms(5));
+    }
+    DaemonReport {
+        accepted: g.accepted.load(ORD),
+        completed: g.completed.load(ORD),
+        rejected_429: g.rejected_429.load(ORD),
+        rejected_4xx: g.rejected_4xx.load(ORD),
+        deadline_cancels: g.deadline_cancels.load(ORD),
+        disconnect_cancels: g.disconnect_cancels.load(ORD),
+        shutdown_cancels,
+        stats: engine.stats,
+        blocks_after_drain,
+        drained_clean: fully_drained && blocks_after_drain == 0,
+    }
+}

@@ -21,6 +21,7 @@
 //! (contiguous vs. paged), or any evict → swap → resume cycle.
 
 use super::checkpoint::QuantizedCheckpoint;
+use super::faults::FaultPlan;
 use super::scheduler::Scheduler;
 use super::session::{sample_token, SampleCfg, Session};
 use crate::model::kv::{self, chain_hash, KvBlockPool, SharedKvPool, PREFIX_HASH_SEED};
@@ -31,7 +32,7 @@ use crate::serve::checkpoint::CalibMeans;
 use crate::tensor::parallel::{self, PoolHandle};
 use crate::tensor::Rng;
 use anyhow::{bail, Result};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 /// Aggregate serving counters (the serve-bench inputs).
@@ -69,6 +70,14 @@ pub struct EngineStats {
     /// most sessions ever holding live KV (resident or swapped) at once —
     /// the concurrency the cache actually sustains
     pub live_sessions_high_water: usize,
+    /// swap fault-ins whose record was unreadable or corrupt and fell back
+    /// to recomputing the context from the prompt (bit-identical output)
+    pub swap_recoveries: usize,
+    /// orphaned `*.kvswap` files from a dead run (kill -9, crash) reclaimed
+    /// at engine construction
+    pub stale_swaps_reclaimed: usize,
+    /// sessions cancelled mid-flight (deadline, disconnect, shutdown)
+    pub cancels: usize,
 }
 
 impl EngineStats {
@@ -177,6 +186,49 @@ pub struct Engine {
     swap_dir: PathBuf,
     /// step clock driving session LRU
     clock: u64,
+    /// deterministic fault-injection schedule (default: none / `AVERIS_FAULTS`)
+    faults: FaultPlan,
+    /// distinguishes this engine's swap files from a dead run's leftovers
+    run_nonce: u64,
+}
+
+/// A process-unique nonce keying this engine instance's swap-file names, so
+/// startup can tell its own files from a dead run's orphans.
+fn fresh_run_nonce() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static CTR: AtomicU64 = AtomicU64::new(0);
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let c = CTR.fetch_add(1, Ordering::Relaxed);
+    (t ^ ((std::process::id() as u64) << 32))
+        .wrapping_add(c.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        | 1
+}
+
+/// Delete every `*.kvswap` file in `dir` that does not carry `keep_prefix`
+/// (this engine's own nonce). Constructing an engine claims its swap dir:
+/// any other swap file there is an orphan from a run that died without
+/// dropping its sessions (kill -9, crash) and its blocks will never fault
+/// back in — reclaim the disk. Live engines never share a swap dir (the
+/// default dir embeds the nonce; an explicit `swap_dir` grants exclusive
+/// ownership).
+fn sweep_stale_swaps(dir: &Path, keep_prefix: &str) -> usize {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    let mut reclaimed = 0;
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let stale = path.extension().and_then(|e| e.to_str()) == Some("kvswap")
+            && !path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with(keep_prefix));
+        if stale && std::fs::remove_file(&path).is_ok() {
+            reclaimed += 1;
+        }
+    }
+    reclaimed
 }
 
 impl Engine {
@@ -208,14 +260,27 @@ impl Engine {
                 (Some(pool), prefix_share, None, swap_dir)
             }
         };
+        let run_nonce = fresh_run_nonce();
         let swap_dir = swap_dir.unwrap_or_else(|| {
-            std::env::temp_dir().join(format!("averis-kv-{}", std::process::id()))
+            std::env::temp_dir()
+                .join(format!("averis-kv-{}-{run_nonce:016x}", std::process::id()))
         });
+        let faults = match FaultPlan::from_env() {
+            Ok(p) => p,
+            Err(e) => panic!("invalid AVERIS_FAULTS: {e}"),
+        };
+        let stats = EngineStats {
+            stale_swaps_reclaimed: sweep_stale_swaps(
+                &swap_dir,
+                &format!("sess-{run_nonce:016x}-"),
+            ),
+            ..EngineStats::default()
+        };
         Engine {
             model,
             ckpt,
             sched: Scheduler::new(cfg.max_active),
-            stats: EngineStats::default(),
+            stats,
             pool,
             seed: cfg.seed,
             next_id: 0,
@@ -225,7 +290,19 @@ impl Engine {
             contig_budget,
             swap_dir,
             clock: 0,
+            faults,
+            run_nonce,
         }
+    }
+
+    /// Replace the fault-injection schedule (tests and `--faults`).
+    pub fn set_faults(&mut self, plan: FaultPlan) {
+        self.faults = plan;
+    }
+
+    /// The active fault-injection schedule.
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
     }
 
     /// Queue one prompt. Fails if prompt + budget cannot fit the model's
@@ -325,6 +402,79 @@ impl Engine {
         s.begin_turn(extra, max_new);
         self.sched.submit(s);
         Ok(())
+    }
+
+    /// Cancel a session wherever it lives (pending, preempted, active, or
+    /// parked). Dropping it releases its KV blocks and swap file
+    /// immediately — the capacity is available to the next admission pass.
+    /// Returns false when the id is unknown or already completed.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        match self.sched.remove(id) {
+            Some(s) => {
+                drop(s);
+                self.stats.cancels += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Take the completions accumulated since the last call (streaming
+    /// consumers poll between steps; [`Engine::run`] drains implicitly).
+    pub fn drain_done(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// Quiesce for shutdown: swap every resident parked session to disk and
+    /// evict every shared prefix entry, then report the KV blocks still
+    /// allocated. After a completed drain (no pending/preempted/active
+    /// work) the return value is 0 — anything else is a leak.
+    pub fn quiesce(&mut self) -> usize {
+        while self.swap_out_lru_parked() {}
+        if let Some(pool) = &self.kv_pool {
+            let mut p = kv::lock_pool(pool);
+            while p.prefix_evict_lru() {}
+        }
+        self.blocks_in_use()
+    }
+
+    /// KV blocks currently allocated from the paged pool (0 for contig).
+    pub fn blocks_in_use(&self) -> usize {
+        self.kv_pool.as_ref().map_or(0, |p| kv::lock_pool(p).blocks_in_use())
+    }
+
+    /// Paged-pool geometry for the daemon's admission gauge:
+    /// `(block_tokens, max_blocks)`. `None` for the contiguous backend.
+    pub fn kv_geometry(&self) -> Option<(usize, Option<usize>)> {
+        self.kv_pool.as_ref().map(|p| {
+            let g = kv::lock_pool(p);
+            (g.block_tokens(), g.max_blocks())
+        })
+    }
+
+    /// Worst-case KV occupancy if every session the engine already owns ran
+    /// to its `max_new` ceiling: blocks in use now plus each waiting /
+    /// in-flight session's remaining growth. Swapped sessions count their
+    /// full resident footprint (fault-in reallocates it). The daemon's
+    /// projected-occupancy watermark admits against this, so accepted work
+    /// can always complete without wedging on the pool budget.
+    pub fn projected_worst_blocks(&self) -> usize {
+        let Some(pool) = &self.kv_pool else { return 0 };
+        let bt = kv::lock_pool(pool).block_tokens();
+        let blocks = |rows: usize| rows.div_ceil(bt);
+        let growth = |s: &Session| {
+            let have = if s.swap_file.is_some() { 0 } else { s.state.pos };
+            let worst = s.context.len() + s.max_new.saturating_sub(s.generated.len());
+            blocks(worst).saturating_sub(blocks(have)) * self.ckpt.cfg.n_layers
+        };
+        let waiting: usize = self
+            .sched
+            .pending_iter()
+            .chain(self.sched.preempted.iter())
+            .chain(self.sched.active.iter())
+            .map(growth)
+            .sum();
+        self.blocks_in_use() + waiting
     }
 
     /// Fail fast when a session could never fit the KV budget even with the
@@ -671,8 +821,9 @@ impl Engine {
         let kv_cols = self.ckpt.cfg.n_kv_heads * self.ckpt.cfg.head_dim();
         let buf = wire::encode_kv_swap(s.state.pos as u64, kv_cols as u64, &layers);
         std::fs::create_dir_all(&self.swap_dir).expect("create KV swap dir");
-        let path = self.swap_dir.join(format!("session-{}.kv", s.id));
-        std::fs::write(&path, &buf).expect("write KV swap record");
+        let path =
+            self.swap_dir.join(format!("sess-{:016x}-{}.kvswap", self.run_nonce, s.id));
+        wire::write_swap_file(&path, &buf, &self.faults).expect("write KV swap record");
         s.swap_file = Some(path);
         let pos = s.state.pos;
         s.state = DecodeState::paged(
@@ -685,26 +836,46 @@ impl Engine {
 
     /// Read a session's swap record back into freshly allocated blocks
     /// (bit-identical rows; block sharing is not reconstructed) and delete
-    /// the file.
+    /// the file. A missing, truncated, or corrupt record is **survivable**:
+    /// the session falls back to recomputing its KV from the prompt (its
+    /// whole context re-prefills), which yields bit-identical output —
+    /// logits are a pure function of the session's own prefix and the
+    /// sampling stream continues at `sampled_total` — at recompute cost.
     fn fault_in(&mut self, s: &mut Session) {
         let _sp = crate::telemetry::span(crate::telemetry::Span::KvSwapIn);
         let path = s.swap_file.take().expect("caller checked the session is swapped");
-        let buf = std::fs::read(&path).expect("read KV swap record");
-        let (pos, kv_cols, layers) = wire::decode_kv_swap(&buf).expect("decode KV swap record");
-        assert_eq!(pos as usize, s.state.pos, "swap record position mismatch");
-        assert_eq!(
-            kv_cols as usize,
-            self.ckpt.cfg.n_kv_heads * self.ckpt.cfg.head_dim(),
-            "swap record width mismatch"
-        );
-        assert_eq!(layers.len(), self.ckpt.cfg.n_layers, "swap record layer count mismatch");
+        let want_cols = self.ckpt.cfg.n_kv_heads * self.ckpt.cfg.head_dim();
         let pool = self.kv_pool.clone().expect("fault-in runs on the paged backend");
-        s.state.layers = layers
-            .into_iter()
-            .map(|(k, v)| LayerKv::Paged(PagedKvCache::restore(&pool, &k, &v)))
-            .collect();
+        let restored = wire::read_swap_file(&path, &self.faults)
+            .map_err(|e| e.to_string())
+            .and_then(|buf| wire::decode_kv_swap(&buf).map_err(|e| e.to_string()))
+            .and_then(|(pos, kv_cols, layers)| {
+                if pos as usize != s.state.pos {
+                    Err(format!("position {pos} != session position {}", s.state.pos))
+                } else if kv_cols as usize != want_cols {
+                    Err(format!("width {kv_cols} != model KV width {want_cols}"))
+                } else if layers.len() != self.ckpt.cfg.n_layers {
+                    Err(format!("{} layers != model {}", layers.len(), self.ckpt.cfg.n_layers))
+                } else {
+                    Ok(layers)
+                }
+            });
         let _ = std::fs::remove_file(&path);
-        self.stats.swap_ins += 1;
+        match restored {
+            Ok(layers) => {
+                s.state.layers = layers
+                    .into_iter()
+                    .map(|(k, v)| LayerKv::Paged(PagedKvCache::restore(&pool, &k, &v)))
+                    .collect();
+                self.stats.swap_ins += 1;
+            }
+            Err(_why) => {
+                s.state = DecodeState::paged(&self.ckpt.cfg, &pool);
+                s.shared_len = 0;
+                self.stats.swap_recoveries += 1;
+                crate::telemetry::incr(crate::telemetry::Counter::SwapRecoveries, 1);
+            }
+        }
     }
 
     /// Sync pool-side gauges into [`EngineStats`] after a step.
@@ -951,5 +1122,95 @@ mod tests {
         e2.resume(id, &[], 3).unwrap();
         let second = e2.run();
         assert_eq!(second[0].tokens[..], full[3..6]);
+    }
+
+    #[test]
+    fn stale_swap_files_are_swept_at_startup() {
+        let dir = std::env::temp_dir().join("averis-test-stale-sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("sess-00000000deadbeef-3.kvswap"), b"orphan").unwrap();
+        std::fs::write(dir.join("unrelated.txt"), b"keep").unwrap();
+        let cfg = ModelConfig::test_tiny(64);
+        let params = Params::init(&cfg, &mut Rng::new(30));
+        let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+        let e = Engine::with_config(
+            QuantizedCheckpoint::build(&cfg, &params, &calib),
+            EngineConfig {
+                max_active: 1,
+                seed: 7,
+                kv: KvBackendCfg::Paged {
+                    block_tokens: 4,
+                    budget_tokens: None,
+                    prefix_share: true,
+                    swap_dir: Some(dir.clone()),
+                },
+            },
+        );
+        assert_eq!(e.stats.stale_swaps_reclaimed, 1);
+        assert!(!dir.join("sess-00000000deadbeef-3.kvswap").exists());
+        assert!(dir.join("unrelated.txt").exists(), "non-swap files are untouched");
+        drop(e);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Park a keep session, force its KV to disk, then resume — optionally
+    /// with faults armed during the swap write or the fault-in read.
+    fn park_swap_resume(
+        write_faults: Option<FaultPlan>,
+        read_faults: Option<FaultPlan>,
+    ) -> (Vec<u32>, EngineStats) {
+        let mut e = tiny_engine(1);
+        let sampler = SampleCfg::TopK { k: 4, temperature: 0.8 };
+        let id = e.submit_keep(vec![4, 5, 6], 3, sampler, None).unwrap();
+        e.run();
+        if let Some(p) = write_faults {
+            e.set_faults(p);
+        }
+        assert_eq!(e.quiesce(), 0, "quiesce swaps the parked session and frees every block");
+        e.set_faults(read_faults.unwrap_or_else(FaultPlan::none));
+        e.resume(id, &[], 3).unwrap();
+        let done = e.run();
+        (done[0].tokens.clone(), e.stats)
+    }
+
+    #[test]
+    fn corrupt_swap_records_recover_bit_identically() {
+        let (clean, s0) = park_swap_resume(None, None);
+        assert_eq!(s0.swap_ins, 1);
+        assert_eq!(s0.swap_recoveries, 0);
+        // a torn write leaves a truncated record at the final path; the
+        // resume falls back to recompute and decodes the same tokens
+        let torn = FaultPlan::parse("swap_torn_write:1", 0).unwrap();
+        let (t1, s1) = park_swap_resume(Some(torn), None);
+        assert_eq!(t1, clean);
+        assert_eq!(s1.swap_recoveries, 1);
+        // a short read of an intact record recovers the same way
+        let short = FaultPlan::parse("io_short_read:1", 0).unwrap();
+        let (t2, s2) = park_swap_resume(None, Some(short));
+        assert_eq!(t2, clean);
+        assert_eq!(s2.swap_recoveries, 1);
+    }
+
+    #[test]
+    fn cancel_releases_capacity_and_leaves_survivors_intact() {
+        let mut e = tiny_engine(2);
+        let a = e.submit(vec![1, 2, 3], 8, SampleCfg::Greedy, None).unwrap();
+        let b = e.submit(vec![4, 5, 6], 8, SampleCfg::Greedy, None).unwrap();
+        e.step();
+        assert!(e.blocks_in_use() > 0);
+        assert!(e.cancel(a));
+        assert!(!e.cancel(a), "double cancel is a no-op");
+        let done = e.run();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, b);
+        assert_eq!(e.stats.cancels, 1);
+        // the survivor decodes exactly what it decodes in a solo run
+        let mut solo = tiny_engine(2);
+        solo.submit(vec![9], 1, SampleCfg::Greedy, None).unwrap(); // consume id 0
+        let sb = solo.submit(vec![4, 5, 6], 8, SampleCfg::Greedy, None).unwrap();
+        assert_eq!(sb, b);
+        let solo_done = solo.run();
+        assert_eq!(solo_done.iter().find(|c| c.id == b).unwrap().tokens, done[0].tokens);
+        assert_eq!(e.quiesce(), 0, "no leaked blocks after cancel + drain");
     }
 }

@@ -1,0 +1,258 @@
+//! Deterministic fault injection for the serving stack (DESIGN.md §12).
+//!
+//! A [`FaultPlan`] decides, at each instrumented site, whether to inject a
+//! failure: a short read of a KV swap record, a torn (truncated) swap
+//! write, or a stalled connection worker. Decisions are **counter-seeded**,
+//! the same discipline as sampling randomness: site `k`'s `n`-th draw fires
+//! iff `splitmix64(seed ⊕ kind ⊕ n)` falls under the configured rate. Two
+//! runs with the same plan and the same per-site draw sequence inject the
+//! exact same faults — and because every swap-path draw happens on the
+//! single engine thread in scheduler order, engine-level fault scenarios
+//! replay bit-identically. That is what lets `tests/daemon.rs` assert the
+//! `completions_checksum` oracle against a fault-free run: injected faults
+//! may change *how* tokens got computed (recompute instead of fault-in),
+//! never *which* tokens.
+//!
+//! Configuration comes from `AVERIS_FAULTS` / `--faults` as
+//! `kind:rate,kind:rate,...`, e.g.
+//! `AVERIS_FAULTS=io_short_read:0.01,swap_torn_write:0.01,worker_stall:0.05`
+//! (`AVERIS_FAULT_SEED` keys the draw hash; default 0). Rates are clamped
+//! to `[0, 1]`; a rate of 1 fires every draw, which the tests use to make
+//! every swap record torn.
+//!
+//! The plan is carried per engine/daemon instance (`Clone` shares the
+//! counters), never global state — concurrently running engines (tests)
+//! cannot perturb each other's draw sequences.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// The failure modes the serving stack knows how to inject.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// KV swap record read returns fewer bytes than the file holds.
+    IoShortRead = 0,
+    /// KV swap write is cut short mid-record (simulated crash mid-write,
+    /// bypassing the tmp-file + rename discipline that normally prevents
+    /// a torn record from landing at the final path).
+    SwapTornWrite = 1,
+    /// A daemon connection worker stalls before reading the request —
+    /// a slow client / stalled network thread (surfaces as idle timeouts).
+    WorkerStall = 2,
+}
+
+pub const N_FAULT_KINDS: usize = 3;
+
+impl FaultKind {
+    pub const ALL: [FaultKind; N_FAULT_KINDS] =
+        [FaultKind::IoShortRead, FaultKind::SwapTornWrite, FaultKind::WorkerStall];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::IoShortRead => "io_short_read",
+            FaultKind::SwapTornWrite => "swap_torn_write",
+            FaultKind::WorkerStall => "worker_stall",
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultKind> {
+        FaultKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+#[derive(Default)]
+struct FaultState {
+    draws: [AtomicU64; N_FAULT_KINDS],
+    injected: [AtomicU64; N_FAULT_KINDS],
+}
+
+/// A deterministic fault schedule shared by everything serving one engine.
+/// Cloning shares the draw counters (one schedule, many sites).
+#[derive(Clone)]
+pub struct FaultPlan {
+    rates: [f64; N_FAULT_KINDS],
+    seed: u64,
+    /// worker_stall sleep, in milliseconds
+    stall_ms: u64,
+    state: Arc<FaultState>,
+}
+
+impl fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "FaultPlan({})", self.spec())
+    }
+}
+
+/// SplitMix64: the draw hash. Full-avalanche, so consecutive tickets give
+/// independent-looking uniform draws.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+impl FaultPlan {
+    /// The no-fault plan (every `fire` is false, zero overhead beyond one
+    /// float compare).
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            rates: [0.0; N_FAULT_KINDS],
+            seed: 0,
+            stall_ms: 40,
+            state: Arc::new(FaultState::default()),
+        }
+    }
+
+    /// Parse a `kind:rate,...` spec. Unknown kinds and unparseable rates
+    /// are errors; rates clamp to `[0, 1]`.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::none();
+        plan.seed = seed;
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (name, rate) = part
+                .split_once(':')
+                .ok_or_else(|| format!("fault spec '{part}': expected kind:rate"))?;
+            let kind = FaultKind::parse(name.trim())
+                .ok_or_else(|| format!("unknown fault kind '{name}'"))?;
+            let rate: f64 = rate
+                .trim()
+                .parse()
+                .map_err(|e| format!("fault rate '{rate}' for {name}: {e}"))?;
+            plan.rates[kind as usize] = rate.clamp(0.0, 1.0);
+        }
+        Ok(plan)
+    }
+
+    /// Resolve `AVERIS_FAULTS` / `AVERIS_FAULT_SEED`. An unset or empty
+    /// var is the no-fault plan; a malformed var is an error (a typo'd
+    /// fault spec silently injecting nothing would defeat the harness).
+    pub fn from_env() -> Result<FaultPlan, String> {
+        let Ok(spec) = std::env::var("AVERIS_FAULTS") else {
+            return Ok(FaultPlan::none());
+        };
+        if spec.trim().is_empty() {
+            return Ok(FaultPlan::none());
+        }
+        let seed = std::env::var("AVERIS_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        FaultPlan::parse(&spec, seed)
+    }
+
+    /// Whether any fault kind has a nonzero rate.
+    pub fn armed(&self) -> bool {
+        self.rates.iter().any(|&r| r > 0.0)
+    }
+
+    /// Draw one fault decision at a site of `kind`. Deterministic: the
+    /// `n`-th draw of a kind fires iff `splitmix64(seed ⊕ kind ⊕ n)`
+    /// scaled to `[0, 1)` falls under the configured rate.
+    pub fn fire(&self, kind: FaultKind) -> bool {
+        let rate = self.rates[kind as usize];
+        if rate <= 0.0 {
+            return false;
+        }
+        let ticket = self.state.draws[kind as usize].fetch_add(1, Ordering::Relaxed);
+        let h = splitmix64(self.seed ^ ((kind as u64) << 56) ^ ticket);
+        // top 53 bits → uniform f64 in [0, 1)
+        let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+        let hit = u < rate;
+        if hit {
+            self.state.injected[kind as usize].fetch_add(1, Ordering::Relaxed);
+            crate::telemetry::incr(crate::telemetry::Counter::FaultsInjected, 1);
+        }
+        hit
+    }
+
+    /// Draws made at sites of `kind` so far.
+    pub fn draws(&self, kind: FaultKind) -> u64 {
+        self.state.draws[kind as usize].load(Ordering::Relaxed)
+    }
+
+    /// Faults actually injected for `kind` so far.
+    pub fn injected(&self, kind: FaultKind) -> u64 {
+        self.state.injected[kind as usize].load(Ordering::Relaxed)
+    }
+
+    /// Total faults injected across every kind.
+    pub fn total_injected(&self) -> u64 {
+        FaultKind::ALL.iter().map(|&k| self.injected(k)).sum()
+    }
+
+    /// How long a fired `worker_stall` sleeps.
+    pub fn stall(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.stall_ms)
+    }
+
+    /// Override the worker-stall duration (tests use short stalls).
+    pub fn set_stall_ms(&mut self, ms: u64) {
+        self.stall_ms = ms;
+    }
+
+    /// Render the plan back to `kind:rate,...` (armed kinds only).
+    pub fn spec(&self) -> String {
+        let parts: Vec<String> = FaultKind::ALL
+            .iter()
+            .filter(|&&k| self.rates[k as usize] > 0.0)
+            .map(|&k| format!("{}:{}", k.name(), self.rates[k as usize]))
+            .collect();
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join(",")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_and_rejects_garbage() {
+        let p = FaultPlan::parse("io_short_read:0.5, swap_torn_write:1.0", 7).unwrap();
+        assert_eq!(p.spec(), "io_short_read:0.5,swap_torn_write:1");
+        assert!(p.armed());
+        assert!(FaultPlan::parse("bogus:0.5", 0).is_err());
+        assert!(FaultPlan::parse("io_short_read", 0).is_err());
+        assert!(FaultPlan::parse("io_short_read:x", 0).is_err());
+        assert!(!FaultPlan::parse("", 0).unwrap().armed());
+    }
+
+    #[test]
+    fn rate_one_always_fires_rate_zero_never() {
+        let p = FaultPlan::parse("swap_torn_write:1", 3).unwrap();
+        for _ in 0..32 {
+            assert!(p.fire(FaultKind::SwapTornWrite));
+            assert!(!p.fire(FaultKind::IoShortRead));
+        }
+        assert_eq!(p.injected(FaultKind::SwapTornWrite), 32);
+        assert_eq!(p.draws(FaultKind::IoShortRead), 0, "zero-rate sites skip the ticket");
+    }
+
+    #[test]
+    fn decisions_are_counter_deterministic() {
+        let a = FaultPlan::parse("io_short_read:0.3", 42).unwrap();
+        let b = FaultPlan::parse("io_short_read:0.3", 42).unwrap();
+        let da: Vec<bool> = (0..256).map(|_| a.fire(FaultKind::IoShortRead)).collect();
+        let db: Vec<bool> = (0..256).map(|_| b.fire(FaultKind::IoShortRead)).collect();
+        assert_eq!(da, db);
+        // the empirical rate lands near 0.3
+        let hits = da.iter().filter(|&&x| x).count();
+        assert!((32..=128).contains(&hits), "hits {hits}");
+    }
+
+    #[test]
+    fn clones_share_the_draw_sequence() {
+        let a = FaultPlan::parse("worker_stall:1", 0).unwrap();
+        let b = a.clone();
+        assert!(a.fire(FaultKind::WorkerStall));
+        assert!(b.fire(FaultKind::WorkerStall));
+        assert_eq!(a.draws(FaultKind::WorkerStall), 2);
+        assert_eq!(b.injected(FaultKind::WorkerStall), 2);
+        assert_eq!(a.total_injected(), 2);
+    }
+}

@@ -16,6 +16,12 @@
 //!    §11), plus the tokens/sec bench protocol of EXPERIMENTS.md §Serving.
 //!  * `churn` — the cache-churn bench: arriving/idling/resuming sessions
 //!    with shared prefixes, paged vs contiguous at a fixed KV budget.
+//!  * `faults` — deterministic, counter-seeded fault injection (torn swap
+//!    writes, short reads, stalled connection workers) threaded through the
+//!    swap I/O and the daemon's socket loop.
+//!  * `daemon` — the `averis serve` HTTP/1.1 front end (DESIGN.md §12):
+//!    bounded admission with 429 backpressure, per-request deadlines,
+//!    disconnect detection with immediate KV reuse, graceful drain.
 //!
 //! The numeric contract throughout: logits are a pure function of a
 //! sequence's own prefix (row-independent quantization, `quant::rowq`), and
@@ -25,15 +31,19 @@
 
 pub mod checkpoint;
 pub mod churn;
+pub mod daemon;
 pub mod engine;
+pub mod faults;
 pub mod scheduler;
 pub mod session;
 
 pub use checkpoint::{measure_calib_means, CalibMeans, QuantizedCheckpoint};
 pub use churn::{bench_cache_churn, ChurnBenchRow, ChurnShape};
+pub use daemon::{Daemon, DaemonConfig, DaemonReport};
 pub use engine::{
     bench_continuous_decode, completions_checksum, Completion, Engine, EngineConfig, EngineStats,
     KvBackendCfg, ServeBenchRow,
 };
+pub use faults::{FaultKind, FaultPlan};
 pub use scheduler::Scheduler;
 pub use session::{sample_token, SampleCfg, Session};

@@ -103,8 +103,30 @@ impl Scheduler {
         Some(self.parked.remove(idx))
     }
 
+    /// Remove a session by id from whichever queue holds it (cancellation:
+    /// deadline expiry, client disconnect, shutdown). The caller owns the
+    /// returned session; dropping it releases its KV blocks and swap file.
+    pub fn remove(&mut self, id: u64) -> Option<Session> {
+        if let Some(idx) = self.pending.iter().position(|s| s.id == id) {
+            return self.pending.remove(idx);
+        }
+        if let Some(idx) = self.preempted.iter().position(|s| s.id == id) {
+            return self.preempted.remove(idx);
+        }
+        if let Some(idx) = self.active.iter().position(|s| s.id == id) {
+            return Some(self.active.remove(idx));
+        }
+        self.unpark(id)
+    }
+
     pub fn pending_len(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Iterate waiting (not yet admitted) sessions — used by the daemon's
+    /// projected-KV-occupancy admission gauge.
+    pub fn pending_iter(&self) -> impl Iterator<Item = &Session> {
+        self.pending.iter()
     }
 
     pub fn preempted_len(&self) -> usize {
@@ -203,6 +225,21 @@ mod tests {
         assert_eq!(s.pop_next().unwrap().id, 9);
         assert_eq!(s.pop_next().unwrap().id, 0);
         assert!(s.pop_next().is_none());
+    }
+
+    #[test]
+    fn remove_finds_sessions_in_any_queue() {
+        let mut s = Scheduler::new(4);
+        s.submit(session(1, 1));
+        s.preempted.push_back(session(2, 1));
+        s.active.push(session(3, 1));
+        s.parked.push(session(4, 1));
+        for id in [1, 2, 3, 4] {
+            assert_eq!(s.remove(id).unwrap().id, id, "remove({id})");
+        }
+        assert!(s.remove(1).is_none());
+        assert!(s.is_drained());
+        assert_eq!(s.parked_len(), 0);
     }
 
     #[test]

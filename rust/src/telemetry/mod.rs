@@ -59,19 +59,43 @@ pub enum Counter {
     PoolSpawns = 1,
     /// Numerics-gauge samples taken (stride-gated, see [`should_sample`]).
     NumericsSamples = 2,
+    /// Requests shed by daemon admission control (429 + Retry-After).
+    Http429 = 3,
+    /// Sessions cancelled because their deadline expired (`serve/daemon`).
+    DeadlineCancels = 4,
+    /// Sessions cancelled because the client disconnected mid-stream.
+    DisconnectCancels = 5,
+    /// Faults fired by the injection layer (`serve/faults.rs`).
+    FaultsInjected = 6,
+    /// Swap fault-ins that fell back to recompute-from-prompt after a
+    /// corrupt/truncated record (`serve/engine.rs`).
+    SwapRecoveries = 7,
 }
 
-pub const N_COUNTERS: usize = 3;
+pub const N_COUNTERS: usize = 8;
 
 impl Counter {
-    pub const ALL: [Counter; N_COUNTERS] =
-        [Counter::ScratchGrows, Counter::PoolSpawns, Counter::NumericsSamples];
+    pub const ALL: [Counter; N_COUNTERS] = [
+        Counter::ScratchGrows,
+        Counter::PoolSpawns,
+        Counter::NumericsSamples,
+        Counter::Http429,
+        Counter::DeadlineCancels,
+        Counter::DisconnectCancels,
+        Counter::FaultsInjected,
+        Counter::SwapRecoveries,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
             Counter::ScratchGrows => "scratch.grows",
             Counter::PoolSpawns => "pool.spawns",
             Counter::NumericsSamples => "numerics.samples",
+            Counter::Http429 => "serve.http_429",
+            Counter::DeadlineCancels => "serve.deadline_cancels",
+            Counter::DisconnectCancels => "serve.disconnect_cancels",
+            Counter::FaultsInjected => "faults.injected",
+            Counter::SwapRecoveries => "serve.swap_recoveries",
         }
     }
 }

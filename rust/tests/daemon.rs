@@ -1,0 +1,547 @@
+//! Integration tests of the `averis serve` daemon (ISSUE 9 acceptance
+//! criteria): HTTP token streams are bit-identical to the in-process
+//! [`Engine`] oracle across NVFP4/MXFP4 checkpoints and 1/2/4 threads;
+//! overload answers `429` + `Retry-After` and never wedges; malformed
+//! requests get typed 4xx responses without ever killing the daemon;
+//! deadlines cancel waiting work (and completion wins the race);
+//! mid-stream disconnects free the session without touching survivors;
+//! scheduler lifecycle edge cases under fault injection keep survivor
+//! checksums identical to a fault-free run; graceful shutdown leaves zero
+//! leaked KV blocks; and a daemon restart reclaims a dead run's orphaned
+//! swap files.
+
+use averis::model::{ModelConfig, Params};
+use averis::quant::Nvfp4Quantizer;
+use averis::serve::daemon::client;
+use averis::serve::{
+    completions_checksum, CalibMeans, Daemon, DaemonConfig, Engine, EngineConfig, FaultPlan,
+    KvBackendCfg, QuantizedCheckpoint, SampleCfg,
+};
+use averis::telemetry::report;
+use averis::tensor::{parallel, Rng};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+const T: Duration = Duration::from_secs(30);
+
+fn ckpt(cfg: &ModelConfig, seed: u64) -> QuantizedCheckpoint {
+    let params = Params::init(cfg, &mut Rng::new(seed));
+    let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+    QuantizedCheckpoint::build(cfg, &params, &calib)
+}
+
+fn paged(block_tokens: usize, budget_tokens: Option<usize>) -> KvBackendCfg {
+    KvBackendCfg::Paged { block_tokens, budget_tokens, prefix_share: true, swap_dir: None }
+}
+
+/// `/v1/generate` body: space-separated token-id prompt plus extra fields
+/// spliced in verbatim (`, "top_k": 4`).
+fn body(prompt: &[u32], max_new: usize, extra: &str) -> String {
+    let p: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!("{{\"prompt\": \"{}\", \"max_new\": {max_new}{extra}}}", p.join(" "))
+}
+
+/// A numeric field of `GET /v1/metrics` (-1 when absent/unparseable).
+fn metrics_num(addr: &str, key: &str) -> f64 {
+    let Ok(r) = client::request(addr, "GET", "/v1/metrics", None, T) else { return -1.0 };
+    report::parse_line(&r.body)
+        .ok()
+        .and_then(|v| v.get(key).and_then(|n| n.num()))
+        .unwrap_or(-1.0)
+}
+
+/// Poll the metrics endpoint until `key >= target` (or a 10 s cap).
+fn wait_metric(addr: &str, key: &str, target: f64) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_secs(10) {
+        if metrics_num(addr, key) >= target {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    false
+}
+
+/// The tentpole determinism contract: streamed tokens over HTTP are
+/// bit-identical to the in-process engine oracle over the same prompts,
+/// for NVFP4 and MXFP4 checkpoints, at 1/2/4 worker threads.
+#[test]
+fn http_streams_bit_identical_to_in_process_engine_across_recipes_and_threads() {
+    let cfg = ModelConfig::test_tiny(64);
+    let params = Params::init(&cfg, &mut Rng::new(55));
+    let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+    let prompts: [&[u32]; 3] = [&[5, 1, 2, 3, 4, 9], &[7, 3, 1, 4, 1, 5], &[2, 6, 10, 12]];
+    let recipes = [("nvfp4", Nvfp4Quantizer::nvfp4()), ("mxfp4", Nvfp4Quantizer::mxfp4())];
+    for (recipe, quant) in recipes {
+        let ck = QuantizedCheckpoint::build_with(&cfg, &params, &calib, quant);
+        let econf = || EngineConfig { max_active: 2, seed: 3, kv: paged(4, None) };
+        let mut oracle = Engine::with_config(ck.clone(), econf());
+        for p in &prompts {
+            oracle
+                .submit(p.to_vec(), 8, SampleCfg::TopK { k: 4, temperature: 0.8 }, None)
+                .unwrap();
+        }
+        let mut done = oracle.run();
+        done.sort_by_key(|c| c.id);
+        let expect: Vec<Vec<u32>> = done.into_iter().map(|c| c.tokens).collect();
+        for threads in [1usize, 2, 4] {
+            parallel::set_threads(threads);
+            let d = Daemon::spawn(
+                Engine::with_config(ck.clone(), econf()),
+                DaemonConfig { queue_cap: 16, ..DaemonConfig::default() },
+            )
+            .unwrap();
+            let addr = d.addr();
+            let mut got = Vec::new();
+            for p in &prompts {
+                // sequential requests pin session-id assignment to submit
+                // order, matching the oracle
+                let b = body(p, 8, ", \"top_k\": 4, \"temperature\": 0.8");
+                let o = client::generate_stream(&addr, &b, T).unwrap();
+                assert_eq!(o.status, 200, "{recipe}/{threads}t: {}", o.body);
+                assert_eq!(o.terminal, "done", "{recipe}/{threads}t");
+                got.push(o.tokens);
+            }
+            let r = d.shutdown();
+            parallel::set_threads(0);
+            assert_eq!(got, expect, "{recipe}: HTTP stream diverged at {threads} threads");
+            assert_eq!((r.accepted, r.completed), (3, 3), "{recipe}/{threads}t");
+            assert!(r.drained_clean, "{recipe}/{threads}t: {} blocks leaked", r.blocks_after_drain);
+        }
+    }
+}
+
+/// Overload produces loud `429` + `Retry-After`, never a panic, hang, or
+/// silent drop — and every admitted stream still serves the exact greedy
+/// oracle tokens. Afterwards the daemon is healthy and serves normally.
+#[test]
+fn overload_answers_429_with_retry_after_and_recovers() {
+    let cfg = ModelConfig::test_tiny(64);
+    let ck = ckpt(&cfg, 13);
+    let prompt = [3u32, 1, 4, 1, 5];
+    let expect = Engine::generate(ck.clone(), &prompt, 6, SampleCfg::Greedy, 0).unwrap();
+    let d = Daemon::spawn(
+        Engine::with_config(ck, EngineConfig { max_active: 1, seed: 9, kv: paged(4, None) }),
+        DaemonConfig { queue_cap: 2, ..DaemonConfig::default() },
+    )
+    .unwrap();
+    let addr = d.addr();
+    let handles: Vec<_> = (0..12)
+        .map(|_| {
+            let addr = addr.clone();
+            let b = body(&prompt, 6, "");
+            std::thread::spawn(move || client::generate_stream(&addr, &b, T).unwrap())
+        })
+        .collect();
+    let outcomes: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let mut ok = 0usize;
+    let mut rejected = 0usize;
+    for o in &outcomes {
+        match o.status {
+            200 => {
+                assert_eq!(o.terminal, "done");
+                assert_eq!(o.tokens, expect, "admitted stream diverged under overload");
+                ok += 1;
+            }
+            429 => {
+                assert!(o.retry_after.is_some(), "429 without Retry-After");
+                rejected += 1;
+            }
+            s => panic!("unexpected status {s} under overload: {}", o.body),
+        }
+    }
+    assert!(rejected > 0, "12 concurrent vs queue_cap 2 never hit backpressure");
+    assert_eq!(ok + rejected, 12);
+    // the pile-up left nothing wedged: health is green and new work flows
+    let h = client::request(&addr, "GET", "/healthz", None, T).unwrap();
+    assert_eq!(h.status, 200);
+    let after = client::generate_stream(&addr, &body(&prompt, 6, ""), T).unwrap();
+    assert_eq!((after.status, after.terminal.as_str()), (200, "done"));
+    assert_eq!(after.tokens, expect);
+    let r = d.shutdown();
+    assert_eq!(r.rejected_429, rejected as u64);
+    assert_eq!(r.completed, (ok + 1) as u64);
+    assert!(r.drained_clean, "{} blocks leaked after overload", r.blocks_after_drain);
+}
+
+/// Raw-socket exchange: write `req` (ignoring write errors — the server may
+/// reject mid-request) and return the response status code, if any.
+fn raw_status(addr: &str, req: &[u8]) -> Option<u16> {
+    let mut s = TcpStream::connect(addr).ok()?;
+    s.set_read_timeout(Some(T)).ok()?;
+    let _ = s.write_all(req);
+    let _ = s.shutdown(std::net::Shutdown::Write);
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    out.lines().next()?.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// Every flavor of hostile or malformed input gets a typed 4xx — size caps
+/// before allocation, no panics — and the daemon keeps serving afterwards.
+#[test]
+fn malformed_requests_get_typed_4xx_and_never_kill_the_daemon() {
+    let cfg = ModelConfig::test_tiny(64);
+    let d = Daemon::spawn(
+        Engine::with_config(
+            ckpt(&cfg, 40),
+            EngineConfig { max_active: 2, seed: 1, kv: paged(4, None) },
+        ),
+        DaemonConfig::default(),
+    )
+    .unwrap();
+    let addr = d.addr();
+    let long_uri = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(2000));
+    let many_headers = {
+        let mut r = String::from("GET /healthz HTTP/1.1\r\n");
+        for i in 0..70 {
+            r.push_str(&format!("x-h{i}: v\r\n"));
+        }
+        r.push_str("\r\n");
+        r
+    };
+    let long_header = format!("GET /healthz HTTP/1.1\r\nx-big: {}\r\n\r\n", "b".repeat(2000));
+    let raw_cases: [(&str, &[u8], u16); 6] = [
+        ("not HTTP at all", b"GARBAGE\r\n\r\n", 400),
+        ("oversized URI", long_uri.as_bytes(), 414),
+        ("too many headers", many_headers.as_bytes(), 431),
+        ("oversized header line", long_header.as_bytes(), 431),
+        (
+            "hostile content-length rejected before allocation",
+            b"POST /v1/generate HTTP/1.1\r\nContent-Length: 9999999999\r\n\r\n",
+            413,
+        ),
+        ("POST without content-length", b"POST /v1/generate HTTP/1.1\r\n\r\n", 400),
+    ];
+    for (what, req, want) in raw_cases {
+        assert_eq!(raw_status(&addr, req), Some(want), "{what}");
+    }
+    let body_cases: [(&str, &str, u16); 8] = [
+        ("bad JSON", "{nope", 400),
+        ("missing prompt", "{\"max_new\": 4}", 400),
+        ("empty prompt", "{\"prompt\": \"\"}", 400),
+        ("non-numeric prompt token", "{\"prompt\": \"1 xyzzy 3\"}", 400),
+        ("out-of-vocab token", "{\"prompt\": \"999\"}", 400),
+        ("max_new of zero", "{\"prompt\": \"1 2\", \"max_new\": 0}", 400),
+        ("max_new past max_seq", "{\"prompt\": \"1 2\", \"max_new\": 1000}", 400),
+        (
+            "non-positive temperature",
+            "{\"prompt\": \"1 2\", \"top_k\": 4, \"temperature\": 0}",
+            400,
+        ),
+    ];
+    for (what, b, want) in body_cases {
+        let r = client::request(&addr, "POST", "/v1/generate", Some(b), T).unwrap();
+        assert_eq!(r.status, want, "{what}: {}", r.body);
+    }
+    let route_cases: [(&str, &str, &str, u16); 3] = [
+        ("wrong method on generate", "GET", "/v1/generate", 405),
+        ("wrong method on healthz", "POST", "/healthz", 405),
+        ("unknown path", "GET", "/no/such/route", 404),
+    ];
+    for (what, method, path, want) in route_cases {
+        let r = client::request(&addr, method, path, None, T).unwrap();
+        assert_eq!(r.status, want, "{what}");
+    }
+    // after all that abuse: still healthy, still serving
+    assert_eq!(client::request(&addr, "GET", "/healthz", None, T).unwrap().status, 200);
+    let o = client::generate_stream(&addr, &body(&[1, 2, 3], 4, ""), T).unwrap();
+    assert_eq!((o.status, o.terminal.as_str()), (200, "done"));
+    let r = d.shutdown();
+    assert!(r.rejected_4xx >= 14, "typed-4xx counter saw {}", r.rejected_4xx);
+    assert_eq!(r.completed, 1);
+    assert!(r.drained_clean);
+}
+
+/// Deadlines: a request queued behind heavy work expires and is cancelled
+/// (KV freed — the final drain still reaches zero blocks), while a request
+/// with a generous deadline completes — completion wins the race.
+#[test]
+fn deadline_expiry_cancels_queued_work_and_completion_wins_the_race() {
+    // dense_small is deliberately heavy here: four saturating sessions of
+    // 120 decode steps each make it physically impossible for the 1 ms
+    // deadline below to be beaten by actual completion
+    let cfg = ModelConfig::dense_small(64);
+    let d = Daemon::spawn(
+        Engine::with_config(
+            ckpt(&cfg, 31),
+            EngineConfig { max_active: 1, seed: 2, kv: paged(8, None) },
+        ),
+        DaemonConfig { queue_cap: 16, ..DaemonConfig::default() },
+    )
+    .unwrap();
+    let addr = d.addr();
+    let longs: Vec<_> = (0..4u32)
+        .map(|i| {
+            let addr = addr.clone();
+            let b = body(&[5 + i, 1, 2, 3], 120, "");
+            std::thread::spawn(move || client::generate_stream(&addr, &b, T).unwrap())
+        })
+        .collect();
+    // wait until the long sessions are actually admitted, so the deadline
+    // request demonstrably queues behind >= 2 full sessions of work
+    assert!(wait_metric(&addr, "accepted", 4.0), "long sessions never admitted");
+    let o = client::generate_stream(&addr, &body(&[9, 9, 9], 8, ", \"deadline_ms\": 1"), T)
+        .unwrap();
+    assert_eq!(o.status, 200);
+    assert_eq!(o.terminal, "cancelled:deadline", "1 ms deadline did not expire");
+    // generous deadline: completion wins even though a deadline is armed
+    let o2 = client::generate_stream(&addr, &body(&[9, 9, 9], 8, ", \"deadline_ms\": 60000"), T)
+        .unwrap();
+    assert_eq!(o2.terminal, "done", "completion lost a race it should win");
+    for h in longs {
+        assert_eq!(h.join().unwrap().terminal, "done");
+    }
+    let r = d.shutdown();
+    assert_eq!(r.deadline_cancels, 1);
+    assert_eq!(r.completed, 5);
+    assert!(r.drained_clean, "cancelled session leaked {} blocks", r.blocks_after_drain);
+}
+
+/// A client that vanishes mid-stream stops costing compute and KV within a
+/// step, and a concurrently served survivor's tokens are untouched.
+#[test]
+fn mid_stream_disconnect_frees_the_session_and_survivors_are_bitwise() {
+    let cfg = ModelConfig::test_tiny(64);
+    let ck = ckpt(&cfg, 21);
+    let survivor = [11u32, 3, 5, 7];
+    let doomed = [6u32, 2, 8, 4];
+    let expect = Engine::generate(ck.clone(), &survivor, 12, SampleCfg::Greedy, 0).unwrap();
+    let d = Daemon::spawn(
+        Engine::with_config(ck, EngineConfig { max_active: 2, seed: 0, kv: paged(4, None) }),
+        DaemonConfig { queue_cap: 8, ..DaemonConfig::default() },
+    )
+    .unwrap();
+    let addr = d.addr();
+    let h = {
+        let addr = addr.clone();
+        let b = body(&doomed, 24, "");
+        // reads two tokens, then drops the socket mid-stream
+        std::thread::spawn(move || client::generate_abandon(&addr, &b, 2, T).unwrap())
+    };
+    let o = client::generate_stream(&addr, &body(&survivor, 12, ""), T).unwrap();
+    assert!(h.join().unwrap() >= 2, "abandoner never saw a token");
+    assert_eq!(o.terminal, "done");
+    assert_eq!(o.tokens, expect, "survivor tokens changed by a peer disconnect");
+    // the engine notices the dead peer and cancels within the drain at the
+    // latest; the cancelled session's blocks must not leak
+    let r = d.shutdown();
+    assert_eq!(r.disconnect_cancels, 1, "disconnect was not detected");
+    assert_eq!(r.completed, 1, "only the survivor should complete");
+    assert!(r.drained_clean, "disconnect leaked {} blocks", r.blocks_after_drain);
+}
+
+/// Satellite 3a: preemption (including mid-prefill, forced by a tight pool)
+/// under full-rate swap fault injection — every swap-in takes the recovery
+/// path, and the completions checksum still matches the fault-free run.
+#[test]
+fn preemption_under_swap_faults_keeps_completions_checksum() {
+    let cfg = ModelConfig::test_tiny(64);
+    let ck = ckpt(&cfg, 29);
+    let run = |faults: Option<FaultPlan>, budget: Option<usize>| {
+        let mut e = Engine::with_config(
+            ck.clone(),
+            EngineConfig { max_active: 3, seed: 8, kv: paged(4, budget) },
+        );
+        if let Some(f) = faults {
+            e.set_faults(f);
+        }
+        for i in 0..5u32 {
+            e.submit(vec![11 + i, 3, 5, 7, 2, 4], 8, SampleCfg::Greedy, None).unwrap();
+        }
+        let done = e.run();
+        (completions_checksum(&done), e.stats)
+    };
+    let (clean, free_stats) = run(None, None);
+    assert_eq!(free_stats.preemptions, 0);
+    let plan = FaultPlan::parse("swap_torn_write:1,io_short_read:1", 7).unwrap();
+    let (faulty, stats) = run(Some(plan), Some(20));
+    assert!(stats.preemptions > 0, "tight budget never preempted");
+    assert!(stats.swap_outs > 0 && stats.swap_ins > 0);
+    assert!(stats.swap_recoveries > 0, "faults never exercised the recovery path");
+    assert_eq!(faulty, clean, "fault injection changed served tokens");
+}
+
+/// Satellite 3b: cancelling a session while its KV sits swapped out on disk
+/// (a disconnect racing a swap-in) leaves every survivor's completion
+/// identical to the fault-free run's, and the pool quiesces to zero.
+#[test]
+fn cancel_while_swapped_out_leaves_survivors_bitwise() {
+    let cfg = ModelConfig::test_tiny(64);
+    let ck = ckpt(&cfg, 29);
+    let submit_all = |e: &mut Engine| {
+        for i in 0..5u32 {
+            e.submit(vec![11 + i, 3, 5, 7, 2, 4], 8, SampleCfg::Greedy, None).unwrap();
+        }
+    };
+    let mut clean_engine = Engine::with_config(
+        ck.clone(),
+        EngineConfig { max_active: 3, seed: 8, kv: paged(4, Some(20)) },
+    );
+    submit_all(&mut clean_engine);
+    let mut clean: Vec<_> = clean_engine.run().into_iter().map(|c| (c.id, c.tokens)).collect();
+    clean.sort_by_key(|(id, _)| *id);
+    let mut e = Engine::with_config(
+        ck,
+        EngineConfig { max_active: 3, seed: 8, kv: paged(4, Some(20)) },
+    );
+    submit_all(&mut e);
+    let mut victim = None;
+    while victim.is_none() && e.step() {
+        victim = e.sched.preempted.iter().find(|s| s.swap_file.is_some()).map(|s| s.id);
+    }
+    let victim = victim.expect("tight budget never left a swapped-out session to cancel");
+    assert!(e.cancel(victim), "cancel of a swapped-out session must succeed");
+    let mut got: Vec<_> = e.run().into_iter().map(|c| (c.id, c.tokens)).collect();
+    got.sort_by_key(|(id, _)| *id);
+    let survivors: Vec<_> = clean.into_iter().filter(|(id, _)| *id != victim).collect();
+    assert_eq!(got, survivors, "cancel-while-swapped changed survivor tokens");
+    assert_eq!(e.stats.cancels, 1);
+    assert_eq!(e.quiesce(), 0, "cancelled swap session leaked blocks");
+}
+
+/// Satellite 3c + tentpole shutdown contract: shutdown arriving while a
+/// tight pool is juggling preempted sessions drains everything to
+/// completion — each stream ends `done` with the exact greedy oracle
+/// tokens, and zero KV blocks survive the drain.
+#[test]
+fn shutdown_with_preempted_sessions_drains_clean_and_streams_stay_bitwise() {
+    let cfg = ModelConfig::test_tiny(64);
+    let ck = ckpt(&cfg, 17);
+    let prompts: Vec<Vec<u32>> = (0..5u32).map(|i| vec![11 + i, 3, 5, 7, 2, 4]).collect();
+    let expect: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| Engine::generate(ck.clone(), p, 8, SampleCfg::Greedy, 0).unwrap())
+        .collect();
+    let d = Daemon::spawn(
+        Engine::with_config(ck, EngineConfig { max_active: 3, seed: 8, kv: paged(4, Some(20)) }),
+        // watermark off (100x the pool): this test wants every session
+        // admitted so the *scheduler* juggles the tight pool via preemption
+        DaemonConfig { queue_cap: 16, kv_watermark: 100.0, ..DaemonConfig::default() },
+    )
+    .unwrap();
+    let addr = d.addr();
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let addr = addr.clone();
+            let b = body(p, 8, "");
+            std::thread::spawn(move || client::generate_stream(&addr, &b, T).unwrap())
+        })
+        .collect();
+    // shutdown the moment all five are admitted — mid-flight, with the
+    // preempted queue nonempty whenever timing allows
+    assert!(wait_metric(&addr, "accepted", 5.0), "sessions never admitted");
+    d.request_shutdown();
+    let outcomes: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let r = d.join();
+    for (o, want) in outcomes.iter().zip(&expect) {
+        assert_eq!(o.terminal, "done", "drain did not complete an in-flight stream");
+        assert_eq!(&o.tokens, want, "drain changed served tokens");
+    }
+    assert!(r.stats.preemptions > 0, "tight budget never preempted");
+    assert_eq!(r.shutdown_cancels, 0, "drain window cancelled live work");
+    assert_eq!(r.completed, 5);
+    assert!(r.drained_clean, "shutdown leaked {} blocks", r.blocks_after_drain);
+}
+
+/// Daemon-restart hygiene: a run that swaps to disk cleans up after itself
+/// at drain, and a fresh daemon claiming the same swap dir reclaims any
+/// orphan `*.kvswap` a dead run left behind.
+#[test]
+fn daemon_restart_reclaims_orphaned_swap_files() {
+    let dir = std::env::temp_dir().join("averis-daemon-stale-sweep");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = ModelConfig::test_tiny(64);
+    let ck = ckpt(&cfg, 17);
+    let engine = |ck: QuantizedCheckpoint| {
+        Engine::with_config(
+            ck,
+            EngineConfig {
+                max_active: 3,
+                seed: 8,
+                kv: KvBackendCfg::Paged {
+                    block_tokens: 4,
+                    budget_tokens: Some(20),
+                    prefix_share: true,
+                    swap_dir: Some(dir.clone()),
+                },
+            },
+        )
+    };
+    let kvswaps = || {
+        std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.path().extension().and_then(|x| x.to_str()) == Some("kvswap"))
+            .count()
+    };
+    // run 1: tight budget forces swap files into `dir`; a clean drain
+    // removes every one of them
+    let d1 = Daemon::spawn(
+        engine(ck.clone()),
+        DaemonConfig { queue_cap: 16, kv_watermark: 100.0, ..DaemonConfig::default() },
+    )
+    .unwrap();
+    let addr = d1.addr();
+    let handles: Vec<_> = (0..5u32)
+        .map(|i| {
+            let addr = addr.clone();
+            let b = body(&[11 + i, 3, 5, 7, 2, 4], 8, "");
+            std::thread::spawn(move || client::generate_stream(&addr, &b, T).unwrap())
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap().terminal, "done");
+    }
+    let r1 = d1.shutdown();
+    assert!(r1.stats.swap_outs > 0, "tight budget never swapped to disk");
+    assert!(r1.drained_clean);
+    assert_eq!(kvswaps(), 0, "clean drain left swap files behind");
+    // run 2: plant an orphan as if a previous daemon died mid-swap; engine
+    // construction (daemon restart) reclaims it
+    let orphan = dir.join("sess-00000000deadbeef-9.kvswap");
+    std::fs::write(&orphan, b"orphan from a dead run").unwrap();
+    let d2 = Daemon::spawn(engine(ck), DaemonConfig::default()).unwrap();
+    assert!(!orphan.exists(), "restart did not sweep the orphan swap file");
+    let o = client::generate_stream(&d2.addr(), &body(&[1, 2, 3], 4, ""), T).unwrap();
+    assert_eq!(o.terminal, "done");
+    let r2 = d2.shutdown();
+    assert_eq!(r2.stats.stale_swaps_reclaimed, 1);
+    assert!(r2.drained_clean);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The metrics document is well-formed JSON carrying both daemon gauges and
+/// engine counters, and `POST /v1/shutdown` flips health to draining.
+#[test]
+fn metrics_and_http_shutdown_round_trip() {
+    let cfg = ModelConfig::test_tiny(64);
+    let d = Daemon::spawn(
+        Engine::with_config(
+            ckpt(&cfg, 3),
+            EngineConfig { max_active: 2, seed: 5, kv: paged(4, None) },
+        ),
+        DaemonConfig::default(),
+    )
+    .unwrap();
+    let addr = d.addr();
+    let o = client::generate_stream(&addr, &body(&[4, 2], 4, ""), T).unwrap();
+    assert_eq!(o.terminal, "done");
+    assert!(wait_metric(&addr, "completed", 1.0), "metrics never showed the completion");
+    let m = client::request(&addr, "GET", "/v1/metrics", None, T).unwrap();
+    let v = report::parse_line(&m.body).expect("metrics must be parseable JSON");
+    assert_eq!(v.get("accepted").and_then(|n| n.num()), Some(1.0));
+    let engine = v.get("engine").expect("metrics carry an engine object");
+    assert!(engine.get("steps").and_then(|n| n.num()).is_some_and(|s| s > 0.0));
+    // HTTP shutdown: accepted, health flips to draining, daemon exits
+    let s = client::request(&addr, "POST", "/v1/shutdown", Some("{}"), T).unwrap();
+    assert_eq!(s.status, 200);
+    let t0 = Instant::now();
+    while !d.shutdown_requested() && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(d.shutdown_requested(), "POST /v1/shutdown did not set the flag");
+    let r = d.join();
+    assert!(r.drained_clean);
+}
