@@ -84,6 +84,22 @@ COMMANDS:
               --telemetry-stride N        (sample FP4 numerics gauges on
                                            1-in-N quantize calls; default 1)
               --corpus-seed N             (synthetic-corpus generator seed)
+              --checkpoint-every N        (write a crash-safe train-state
+                                           record every N steps; atomic
+                                           tmp + fsync + rename, CRC32'd)
+              --checkpoint-dir DIR        (record directory; defaults to
+                                           <out>/ckpt when checkpointing)
+              --checkpoint-keep K         (retain the newest K records;
+                                           default 3)
+              --resume                    (restore the newest valid record
+                                           and continue — the resumed loss
+                                           curve is bitwise identical to an
+                                           uninterrupted run at any thread
+                                           count / SIMD level)
+              --faults kind:rate,...      (deterministic training faults:
+                                           ckpt_torn_write, ckpt_short_read,
+                                           step_nonfinite)
+              --fault-seed N              (fault draw-hash seed; default 0)
               --save FILE                 (write an f32 checkpoint + frozen
                                            calibration means after training)
               --save-quant FILE           (write the packed-E2M1 serving

@@ -72,6 +72,15 @@ pub struct ExperimentConfig {
     pub telemetry: Option<String>,
     /// Numerics-gauge sampling stride (1 = every quantize call).
     pub telemetry_stride: u32,
+    /// Write a crash-safe train-state record every N steps (0 = off).
+    pub checkpoint_every: u64,
+    /// Directory for train-state records (defaults to `<out_dir>/ckpt`
+    /// when checkpointing or resuming is requested without an explicit dir).
+    pub checkpoint_dir: Option<String>,
+    /// Keep the newest K train-state records.
+    pub checkpoint_keep: usize,
+    /// Resume from the newest valid record before training.
+    pub resume: bool,
 }
 
 /// Historical default corpus seed (the value previously hardcoded in the
@@ -97,7 +106,23 @@ impl ExperimentConfig {
             out_dir: "runs".to_string(),
             telemetry: None,
             telemetry_stride: 1,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            checkpoint_keep: 3,
+            resume: false,
         }
+    }
+
+    /// The effective checkpoint directory: the explicit one, or
+    /// `<out_dir>/ckpt` when checkpointing or resume is requested.
+    pub fn checkpoint_dir_effective(&self) -> Option<String> {
+        if let Some(d) = &self.checkpoint_dir {
+            return Some(d.clone());
+        }
+        if self.checkpoint_every > 0 || self.resume {
+            return Some(format!("{}/ckpt", self.out_dir));
+        }
+        None
     }
 
     pub fn model_config(&self) -> ModelConfig {
@@ -140,6 +165,22 @@ pub fn apply_overrides(exp: &mut ExperimentConfig, file: &ConfigFile) -> Result<
                 exp.telemetry_stride =
                     v.parse().map_err(|e| format!("telemetry_stride: {e}"))?
             }
+            "checkpoint_every" => {
+                exp.checkpoint_every =
+                    v.parse().map_err(|e| format!("checkpoint_every: {e}"))?
+            }
+            "checkpoint_dir" => exp.checkpoint_dir = Some(v.clone()),
+            "checkpoint_keep" => {
+                exp.checkpoint_keep =
+                    v.parse().map_err(|e| format!("checkpoint_keep: {e}"))?
+            }
+            "resume" => {
+                exp.resume = match v.as_str() {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    other => return Err(format!("resume: expected true/false, got '{other}'")),
+                }
+            }
             other => return Err(format!("unknown config key '{other}'")),
         }
     }
@@ -176,7 +217,8 @@ mod tests {
     fn overrides_apply() {
         let mut e = ExperimentConfig::defaults(ModelPreset::Tiny, QuantRecipe::Bf16);
         let f = ConfigFile::parse_str(
-            "steps = 7\nrecipe = averis\n# comment\nseq=32\ncorpus_seed = 99",
+            "steps = 7\nrecipe = averis\n# comment\nseq=32\ncorpus_seed = 99\n\
+             checkpoint_every = 5\ncheckpoint_dir = /tmp/ck\ncheckpoint_keep = 2\nresume = true",
         )
         .unwrap();
         apply_overrides(&mut e, &f).unwrap();
@@ -184,6 +226,20 @@ mod tests {
         assert_eq!(e.recipe, QuantRecipe::Averis);
         assert_eq!(e.train.seq, 32);
         assert_eq!(e.corpus_seed, 99);
+        assert_eq!(e.checkpoint_every, 5);
+        assert_eq!(e.checkpoint_dir.as_deref(), Some("/tmp/ck"));
+        assert_eq!(e.checkpoint_keep, 2);
+        assert!(e.resume);
+    }
+
+    #[test]
+    fn checkpoint_dir_defaults_under_out_dir() {
+        let mut e = ExperimentConfig::defaults(ModelPreset::Tiny, QuantRecipe::Bf16);
+        assert_eq!(e.checkpoint_dir_effective(), None);
+        e.checkpoint_every = 10;
+        assert_eq!(e.checkpoint_dir_effective().as_deref(), Some("runs/ckpt"));
+        e.checkpoint_dir = Some("elsewhere".into());
+        assert_eq!(e.checkpoint_dir_effective().as_deref(), Some("elsewhere"));
     }
 
     #[test]

@@ -15,4 +15,4 @@ pub mod sim_train;
 pub use pjrt_train::{pjrt_train_run, PjrtRunResult};
 pub use probe_eval::{evaluate_probes, ProbeResult};
 pub use runs::RunDir;
-pub use sim_train::sim_train_run;
+pub use sim_train::{sim_train_run, sim_train_run_with, train_options_for};

@@ -1,17 +1,46 @@
-//! Simulator training runs: drive `train::train` from an `ExperimentConfig`
-//! and persist curves + summaries in the run registry.
+//! Simulator training runs: drive `train::train_with` from an
+//! `ExperimentConfig` and persist curves + summaries in the run registry.
+
+use std::path::PathBuf;
 
 use crate::config::ExperimentConfig;
 use crate::data::Corpus;
 use crate::metrics::{CsvSink, JsonObj};
-use crate::train::{train, TrainResult};
+use crate::train::{train_with, CheckpointConfig, TrainOptions, TrainResult};
 use anyhow::Result;
 
 use super::runs::RunDir;
 
+/// Build the training options an experiment implies: checkpoint cadence and
+/// resume from the config, faults from `AVERIS_FAULTS` unless the caller
+/// already armed a plan.
+pub fn train_options_for(exp: &ExperimentConfig) -> TrainOptions {
+    TrainOptions {
+        checkpoint: CheckpointConfig {
+            every: exp.checkpoint_every,
+            dir: exp.checkpoint_dir_effective().map(PathBuf::from),
+            keep: exp.checkpoint_keep,
+            resume: exp.resume,
+        },
+        ..TrainOptions::default()
+    }
+}
+
 /// Run one simulator experiment and persist outputs. Set `capture_taps` to
 /// instrument the early/late checkpoints for the analysis pipeline.
 pub fn sim_train_run(exp: &ExperimentConfig, capture_taps: bool) -> Result<TrainResult> {
+    let mut opts = train_options_for(exp);
+    opts.faults = crate::serve::FaultPlan::from_env().map_err(anyhow::Error::msg)?;
+    sim_train_run_with(exp, capture_taps, opts)
+}
+
+/// [`sim_train_run`] with explicit robustness options (checkpointing,
+/// sentinel thresholds, fault injection).
+pub fn sim_train_run_with(
+    exp: &ExperimentConfig,
+    capture_taps: bool,
+    opts: TrainOptions,
+) -> Result<TrainResult> {
     // one persistent pool serves the whole experiment — corpus generation,
     // training, and eval — sized here from the experiment's thread knob
     crate::tensor::parallel::install(exp.train.threads);
@@ -26,13 +55,14 @@ pub fn sim_train_run(exp: &ExperimentConfig, capture_taps: bool) -> Result<Train
     let corpus = Corpus::generate(exp.corpus, exp.corpus_seed);
     let mut tc = exp.train;
     tc.tap_steps = [capture_taps, capture_taps];
-    let result = train(
+    let result = train_with(
         exp.model_config(),
         exp.recipe,
         tc,
+        opts,
         corpus.train.clone(),
         corpus.heldout.clone(),
-    );
+    )?;
 
     let run = RunDir::create(&exp.out_dir, &exp.run_name())?;
     let mut csv = CsvSink::create(run.file("loss.csv"), &["step", "loss"])?;
@@ -50,6 +80,12 @@ pub fn sim_train_run(exp: &ExperimentConfig, capture_taps: bool) -> Result<Train
         .num("final_train_loss", result.final_train_loss as f64)
         .num("final_eval_loss", result.final_eval_loss as f64)
         .num("sec_per_step", result.sec_per_step)
+        .str("final_recipe", &result.final_recipe.to_string())
+        .int("resumed_from", result.report.resumed_from.map(|s| s as i64).unwrap_or(-1))
+        .int("checkpoints_written", result.report.checkpoints_written as i64)
+        .int("sentinel_skipped", result.report.skipped_steps as i64)
+        .int("sentinel_rollbacks", result.report.rollbacks as i64)
+        .int("sentinel_escalations", result.report.escalations as i64)
         .write(run.file("summary.json"))?;
     if crate::telemetry::enabled() {
         crate::telemetry::snapshot("train_summary", exp.train.steps as u64)

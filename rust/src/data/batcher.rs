@@ -1,7 +1,7 @@
 //! Batch iterator: cuts a token stream into (input, target) next-token
 //! training batches of shape batch×seq, with deterministic shuffled offsets.
 
-use crate::tensor::Rng;
+use crate::tensor::{Rng, RngState};
 
 pub struct Batcher {
     tokens: Vec<u32>,
@@ -19,6 +19,17 @@ impl Batcher {
     /// Tokens consumed per batch.
     pub fn tokens_per_batch(&self) -> usize {
         self.batch * self.seq
+    }
+
+    /// Snapshot the shuffle-RNG position — the corpus cursor of a training
+    /// checkpoint: it determines every future batch's row offsets.
+    pub fn rng_state(&self) -> RngState {
+        self.rng.state()
+    }
+
+    /// Restore the corpus cursor captured by [`Batcher::rng_state`].
+    pub fn restore_rng(&mut self, state: RngState) {
+        self.rng = Rng::from_state(state);
     }
 
     /// Next (inputs, targets), each batch·seq flat, targets shifted by one.
@@ -81,6 +92,18 @@ mod tests {
         let mut a = Batcher::new(tokens.clone(), 2, 8, 42);
         let mut b = Batcher::new(tokens, 2, 8, 42);
         assert_eq!(a.next_batch(), b.next_batch());
+    }
+
+    #[test]
+    fn rng_state_restore_resumes_the_batch_stream() {
+        let tokens: Vec<u32> = (0..1000u32).collect();
+        let mut live = Batcher::new(tokens.clone(), 2, 8, 7);
+        let _ = live.next_batch();
+        let snap = live.rng_state();
+        let mut resumed = Batcher::new(tokens, 2, 8, 7);
+        resumed.restore_rng(snap);
+        assert_eq!(live.next_batch(), resumed.next_batch());
+        assert_eq!(live.next_batch(), resumed.next_batch());
     }
 
     #[test]

@@ -7,7 +7,10 @@ use anyhow::{bail, Context, Result};
 use averis::bench_harness::record_markdown_block;
 use averis::config::cli::{CliArgs, Command, USAGE};
 use averis::config::{apply_overrides, ConfigFile, ExperimentConfig, ModelPreset};
-use averis::coordinator::{evaluate_probes, figures, pjrt_train_run, sim_train_run, RunDir};
+use averis::coordinator::{
+    evaluate_probes, figures, pjrt_train_run, sim_train_run, sim_train_run_with,
+    train_options_for, RunDir,
+};
 use averis::coordinator::probe_eval::mean_accuracy;
 use averis::data::{Corpus, CorpusConfig};
 use averis::metrics::CsvSink;
@@ -79,7 +82,30 @@ fn experiment_from_args(args: &CliArgs) -> Result<ExperimentConfig> {
     if let Some(v) = args.get_parse::<u32>("telemetry-stride").map_err(anyhow::Error::msg)? {
         exp.telemetry_stride = v;
     }
+    if let Some(v) = args.get_parse::<u64>("checkpoint-every").map_err(anyhow::Error::msg)? {
+        exp.checkpoint_every = v;
+    }
+    if let Some(v) = args.get("checkpoint-dir") {
+        exp.checkpoint_dir = Some(v.to_string());
+    }
+    if let Some(v) = args.get_parse::<usize>("checkpoint-keep").map_err(anyhow::Error::msg)? {
+        exp.checkpoint_keep = v;
+    }
+    if args.get("resume").is_some() {
+        exp.resume = true;
+    }
     Ok(exp)
+}
+
+/// Resolve the fault plan for training: `--faults kind:rate,...` (with
+/// `--fault-seed N`) wins over the `AVERIS_FAULTS` environment.
+fn fault_plan_from_args(args: &CliArgs) -> Result<FaultPlan> {
+    if let Some(spec) = args.get("faults") {
+        let seed =
+            args.get_parse::<u64>("fault-seed").map_err(anyhow::Error::msg)?.unwrap_or(0);
+        return FaultPlan::parse(spec, seed).map_err(anyhow::Error::msg);
+    }
+    FaultPlan::from_env().map_err(anyhow::Error::msg)
 }
 
 /// Apply a `--simd off|sse2|avx2` flag: force the kernel dispatch level,
@@ -207,11 +233,32 @@ fn train_cmd(args: &CliArgs) -> Result<()> {
                 exp.recipe,
                 exp.train.steps
             );
-            let r = sim_train_run(&exp, false)?;
+            let mut opts = train_options_for(&exp);
+            opts.faults = fault_plan_from_args(args)?;
+            let r = sim_train_run_with(&exp, false, opts)?;
             println!(
                 "final train loss (ema) {:.4}   heldout {:.4}   {:.2} s/step",
                 r.final_train_loss, r.final_eval_loss, r.sec_per_step
             );
+            // the CI kill-and-resume leg greps this line: a resumed run must
+            // print the same checksum as an uninterrupted one
+            println!(
+                "loss-curve checksum {:#010x} ({} points)",
+                averis::train::loss_curve_checksum(&r.loss_curve),
+                r.loss_curve.len()
+            );
+            if let Some(step) = r.report.resumed_from {
+                println!("resumed from step {step}");
+            }
+            if !r.report.interventions.is_empty() {
+                println!(
+                    "sentinel: {} skipped, {} rollbacks, {} escalations, final recipe {}",
+                    r.report.skipped_steps,
+                    r.report.rollbacks,
+                    r.report.escalations,
+                    r.final_recipe
+                );
+            }
             if args.get("save").is_some() || args.get("save-quant").is_some() {
                 let (calib, cfg) = calibrate_from_corpus(&exp, &r.params);
                 if let Some(path) = args.get("save") {

@@ -21,7 +21,7 @@ use super::nvfp4::{Nvfp4Config, Nvfp4Quantizer};
 use super::pipeline::{GemmKind, QuantPipeline, StageCtx};
 use super::recipe::QuantRecipe;
 use super::sr::SrStream;
-use crate::tensor::{Mat, Rng};
+use crate::tensor::{Mat, Rng, RngState};
 
 /// Hadamard tile size used by the NVIDIA-style baseline (paper Table 2).
 pub const HADAMARD_TILE: usize = 16;
@@ -60,6 +60,39 @@ impl QuantGemm {
             sr: SrStream::new(seed),
             aux_rng: Rng::new(seed ^ 0x5D50_F27A),
         }
+    }
+
+    /// Snapshot the stochastic-stream cursors: the SR ticket counter and the
+    /// auxiliary RNG position. Together with the construction seed these
+    /// pin every random bit a future GeMM will consume, which is what makes
+    /// a checkpointed training run resumable bit-for-bit.
+    pub fn stream_cursors(&self) -> (u64, RngState) {
+        (self.sr.cursor(), self.aux_rng.state())
+    }
+
+    /// Restore the cursors captured by [`QuantGemm::stream_cursors`] on an
+    /// engine rebuilt with the same seed.
+    pub fn restore_stream_cursors(&mut self, sr_ctr: u64, aux: RngState) {
+        self.sr.set_cursor(sr_ctr);
+        self.aux_rng = Rng::from_state(aux);
+    }
+
+    /// Swap the recipe mid-run (the sentinel's escalation rung): rebuild the
+    /// per-kind stage stacks and quantizer configs for `recipe` while
+    /// keeping the SR ticket counter and auxiliary RNG exactly where they
+    /// are. The decision to escalate is a pure function of step data, so an
+    /// escalated run stays bit-identical at any thread count.
+    pub fn set_recipe(&mut self, recipe: QuantRecipe) {
+        let (fwd_cfg, bwd_cfg) = match recipe {
+            QuantRecipe::Mxfp4 => (Nvfp4Config::mxfp4(), Nvfp4Config::mxfp4()),
+            _ => (Nvfp4Config::nvfp4(), Nvfp4Config::nvfp4_sr()),
+        };
+        self.recipe = recipe;
+        self.fwd = QuantPipeline::for_recipe(recipe, GemmKind::Forward);
+        self.dgrad = QuantPipeline::for_recipe(recipe, GemmKind::Dgrad);
+        self.wgrad = QuantPipeline::for_recipe(recipe, GemmKind::Wgrad);
+        self.fwd_quant = Nvfp4Quantizer::new(fwd_cfg);
+        self.bwd_quant = Nvfp4Quantizer::new(bwd_cfg);
     }
 
     /// The stage stack of one GeMM kind, e.g.
@@ -250,6 +283,43 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "{recipe}: {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn stream_cursor_restore_resumes_sr_bitwise() {
+        // run a few SR-consuming backward GeMMs, snapshot, rebuild from the
+        // same seed at the snapshot cursors: subsequent outputs must match
+        // the uninterrupted engine bit for bit
+        let mut rng = Rng::new(66);
+        let x = Mat::randn(16, 32, 1.0, &mut rng);
+        let w = Mat::randn(32, 8, 0.3, &mut rng);
+        let d = Mat::randn(16, 8, 0.2, &mut rng);
+        let mut live = QuantGemm::new(QuantRecipe::Nvfp4, 17);
+        let _ = live.dgrad(&d, &w);
+        let _ = live.wgrad(&x, &d);
+        let (sr_ctr, aux) = live.stream_cursors();
+        let mut resumed = QuantGemm::new(QuantRecipe::Nvfp4, 17);
+        resumed.restore_stream_cursors(sr_ctr, aux);
+        for (a, b) in live.wgrad(&x, &d).data.iter().zip(resumed.wgrad(&x, &d).data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn set_recipe_preserves_cursors_and_switches_stack() {
+        let mut g = QuantGemm::new(QuantRecipe::Nvfp4, 5);
+        let mut rng = Rng::new(67);
+        let w = Mat::randn(32, 8, 0.3, &mut rng);
+        let d = Mat::randn(16, 8, 0.2, &mut rng);
+        let _ = g.dgrad(&d, &w);
+        let (ctr_before, _) = g.stream_cursors();
+        g.set_recipe(QuantRecipe::Averis);
+        assert_eq!(g.recipe, QuantRecipe::Averis);
+        assert_eq!(g.stream_cursors().0, ctr_before, "escalation must not move the SR cursor");
+        assert_eq!(
+            g.describe(GemmKind::Forward),
+            "mean_split→quantize→multiply_packed→mean_correct"
+        );
     }
 
     #[test]

@@ -52,6 +52,18 @@ impl SrStream {
         self.ctr += 1;
         SrTicket { key: self.key, ctr: self.ctr }
     }
+
+    /// The number of tickets minted so far — the stream's resume cursor.
+    pub fn cursor(&self) -> u64 {
+        self.ctr
+    }
+
+    /// Rewind/advance the mint to an exact cursor (checkpoint resume). The
+    /// key stays: a stream restored at `cursor()` mints the same tickets an
+    /// uninterrupted stream would have.
+    pub fn set_cursor(&mut self, ctr: u64) {
+        self.ctr = ctr;
+    }
 }
 
 #[cfg(test)]
@@ -67,6 +79,19 @@ mod tests {
         assert_eq!(a1, a2, "same stream position must replay identically");
         let b1 = s1.ticket().lane_rng(0).next_u64();
         assert_ne!(a1, b1, "successive tickets must differ");
+    }
+
+    #[test]
+    fn cursor_restore_resumes_the_ticket_sequence() {
+        let mut live = SrStream::new(9);
+        let _ = live.ticket();
+        let _ = live.ticket();
+        let mut resumed = SrStream::new(9);
+        resumed.set_cursor(live.cursor());
+        assert_eq!(
+            live.ticket().lane_rng(3).next_u64(),
+            resumed.ticket().lane_rng(3).next_u64()
+        );
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! round trip is bit-exact (`load(save(p)) == p` on every tensor), which is
 //! what makes "eval after reload matches in-memory eval exactly" testable.
 
-use super::wire::{put_f32s, put_u32, Reader};
+use super::wire::{append_crc_trailer, check_crc_trailer, put_f32s, put_u32, write_file_atomic, Reader};
 use crate::model::config::ModelConfig;
 use crate::model::Params;
 use crate::quant::QuantRecipe;
@@ -16,7 +16,9 @@ use std::path::{Path, PathBuf};
 
 /// Magic prefix of the f32 training checkpoint ("AVC1").
 pub const PARAMS_MAGIC: u32 = 0x4156_4331;
-const PARAMS_VERSION: u32 = 1;
+/// v2 appends a CRC32 trailer over the whole record; v1 (no trailer) is
+/// still readable.
+const PARAMS_VERSION: u32 = 2;
 
 /// Serialize model config + calibration means + every parameter tensor
 /// (little-endian f32, `Params::for_each` order) to one file.
@@ -38,21 +40,27 @@ pub fn save_params_checkpoint(
     params.for_each(|_| n_tensors += 1);
     put_u32(&mut out, n_tensors);
     params.for_each(|s| put_f32s(&mut out, s));
-    std::fs::write(path.as_ref(), out)
+    append_crc_trailer(&mut out);
+    write_file_atomic(path.as_ref(), &out)
         .with_context(|| format!("writing {}", path.as_ref().display()))
 }
 
 /// Parse an f32 training checkpoint from its encoded bytes.
 pub fn params_checkpoint_from_bytes(bytes: &[u8]) -> Result<(ModelConfig, Params, CalibMeans)> {
-    let mut r = Reader::new(bytes);
-    let magic = r.u32()?;
+    let mut head = Reader::new(bytes);
+    let magic = head.u32()?;
     if magic != PARAMS_MAGIC {
         bail!("not an f32 training checkpoint (magic {magic:#x})");
     }
-    let version = r.u32()?;
-    if version != PARAMS_VERSION {
-        bail!("unsupported checkpoint version {version}");
-    }
+    let version = head.u32()?;
+    let body: &[u8] = match version {
+        1 => bytes, // legacy: no trailer
+        2 => check_crc_trailer(bytes)?,
+        v => bail!("unsupported checkpoint version {v}"),
+    };
+    let mut r = Reader::new(body);
+    let _ = r.u32()?; // magic, validated above
+    let _ = r.u32()?; // version
     let cfg = read_config(&mut r)?;
     let n_layers = r.u32()? as usize;
     if n_layers != cfg.n_layers {
@@ -240,6 +248,32 @@ mod tests {
         put_u32(&mut buf, PARAMS_MAGIC);
         put_u32(&mut buf, 99); // bad version
         assert!(params_checkpoint_from_bytes(&buf).is_err());
+        // a real record: truncation and single bit-flips must both fail the
+        // CRC trailer, and v1 (trailer stripped, version patched) must load
+        let cfg = ModelConfig::test_tiny(32);
+        let params = Params::init(&cfg, &mut Rng::new(23));
+        let calib = CalibMeans::zeros(cfg.n_layers, cfg.d_model);
+        let path = std::env::temp_dir().join("averis_params_ckpt_corrupt.bin");
+        save_params_checkpoint(&path, &cfg, &params, &calib).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(params_checkpoint_from_bytes(&good[..good.len() - 7]).is_err());
+        let mut flipped = good.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x04;
+        assert!(params_checkpoint_from_bytes(&flipped).is_err());
+        let mut wrong_magic = good.clone();
+        wrong_magic[0] ^= 0xFF;
+        assert!(params_checkpoint_from_bytes(&wrong_magic).is_err());
+        let mut v1 = good[..good.len() - 4].to_vec();
+        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+        let (cfg2, params2, _) = params_checkpoint_from_bytes(&v1).unwrap();
+        assert_eq!(cfg2.d_model, cfg.d_model);
+        let mut a: Vec<u32> = Vec::new();
+        params.for_each(|s| a.extend(s.iter().map(|x| x.to_bits())));
+        let mut b: Vec<u32> = Vec::new();
+        params2.for_each(|s| b.extend(s.iter().map(|x| x.to_bits())));
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -55,6 +55,68 @@ impl fmt::Display for WireError {
 
 impl std::error::Error for WireError {}
 
+// ----------------------------------------------------------------- crc32 --
+
+/// CRC32 (IEEE 802.3 polynomial, reflected), table-driven — the integrity
+/// trailer of every durable record. Hand-rolled: the offline image has no
+/// crc crate, and 50 lines beat a vendored dependency.
+fn crc32_table() -> &'static [u32; 256] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// CRC32 of a byte slice (IEEE, the zlib/PNG polynomial).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let table = crc32_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Append a little-endian CRC32 trailer covering everything encoded so far
+/// (magic and version included). The matching read side is
+/// [`check_crc_trailer`].
+pub fn append_crc_trailer(out: &mut Vec<u8>) {
+    let c = crc32(out);
+    put_u32(out, c);
+}
+
+/// Verify a record's CRC32 trailer and return the body it covers. A
+/// mismatch — torn write, bit rot, truncation — is a typed
+/// [`WireErrorKind::Corrupt`]; a buffer too short to even hold the trailer
+/// is [`WireErrorKind::Truncated`].
+pub fn check_crc_trailer(buf: &[u8]) -> Result<&[u8], WireError> {
+    if buf.len() < 4 {
+        return Err(WireError::new(
+            WireErrorKind::Truncated,
+            format!("record of {} bytes cannot hold a CRC32 trailer", buf.len()),
+        ));
+    }
+    let (body, trailer) = buf.split_at(buf.len() - 4);
+    let stored = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+    let computed = crc32(body);
+    if stored != computed {
+        return Err(WireError::new(
+            WireErrorKind::Corrupt,
+            format!("record checksum mismatch: stored {stored:#010x}, computed {computed:#010x}"),
+        ));
+    }
+    Ok(body)
+}
+
 pub fn put_u8(out: &mut Vec<u8>, v: u8) {
     out.push(v);
 }
@@ -183,13 +245,16 @@ impl<'a> Reader<'a> {
 
 /// Magic prefix of a KV swap record ("KVSW" little-endian).
 pub const KV_SWAP_MAGIC: u32 = 0x4B56_5357;
-/// Bump on layout changes; decode rejects other versions.
-pub const KV_SWAP_VERSION: u32 = 1;
+/// Bump on layout changes; decode rejects other versions. v1 has no
+/// integrity trailer; v2 appends a CRC32 over the whole record, so torn
+/// writes and bit flips are detected structurally instead of relying on
+/// slab-length checks alone. v1 records still decode (read-side compat).
+pub const KV_SWAP_VERSION: u32 = 2;
 
 /// Encode one session's evicted KV state: `pos` cached rows per layer, each
 /// layer as its flattened (K, V) row-major f32 slabs of `kv_cols` columns.
 /// Layout: magic, version, pos, kv_cols, layer count, then per layer the K
-/// slab and V slab as length-prefixed f32 runs.
+/// slab and V slab as length-prefixed f32 runs, then the CRC32 trailer.
 pub fn encode_kv_swap(pos: u64, kv_cols: u64, layers: &[(Vec<f32>, Vec<f32>)]) -> Vec<u8> {
     let mut out = Vec::new();
     put_u32(&mut out, KV_SWAP_MAGIC);
@@ -201,6 +266,7 @@ pub fn encode_kv_swap(pos: u64, kv_cols: u64, layers: &[(Vec<f32>, Vec<f32>)]) -
         put_f32s(&mut out, k);
         put_f32s(&mut out, v);
     }
+    append_crc_trailer(&mut out);
     out
 }
 
@@ -220,12 +286,22 @@ pub fn decode_kv_swap(buf: &[u8]) -> Result<(u64, u64, Vec<(Vec<f32>, Vec<f32>)>
         ));
     }
     let version = r.u32()?;
-    if version != KV_SWAP_VERSION {
-        return Err(WireError::new(
-            WireErrorKind::BadVersion,
-            format!("unsupported KV swap version {version}"),
-        ));
-    }
+    let body = match version {
+        // v1: no trailer (back compat with pre-CRC swap files)
+        1 => buf,
+        // v2: verify the CRC over everything before the trailer, then parse
+        // only the covered body
+        2 => check_crc_trailer(buf)?,
+        _ => {
+            return Err(WireError::new(
+                WireErrorKind::BadVersion,
+                format!("unsupported KV swap version {version}"),
+            ))
+        }
+    };
+    let mut r = Reader::new(body);
+    let _ = r.u32()?; // magic, already validated
+    let _ = r.u32()?; // version, already validated
     let pos = r.u64()?;
     let kv_cols = r.u64()?;
     let n_layers = r.u64()?;
@@ -269,18 +345,65 @@ pub fn decode_kv_swap(buf: &[u8]) -> Result<(u64, u64, Vec<(Vec<f32>, Vec<f32>)>
     Ok((pos, kv_cols, layers))
 }
 
-/// Write a KV swap record to disk through a tmp-file + rename, so a crash
-/// mid-write leaves at worst a stale `.tmp`, never a half-written record
-/// at the final path — unless a `swap_torn_write` fault fires, which
-/// deliberately lands a truncated record there (the crash the rename
-/// discipline exists to prevent, made reproducible for the fault tests).
+/// Atomic durable write: tmp file + `sync_all` + rename (+ a best-effort
+/// directory fsync so the rename itself is durable). The fsync before the
+/// rename is load-bearing, not belt-and-braces: without it the filesystem
+/// may commit the rename before the data blocks, and a crash in that window
+/// surfaces a record that is *renamed into place yet torn* — exactly the
+/// corruption the tmp+rename discipline is supposed to rule out.
+pub fn write_file_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    // direct the rename's metadata to disk too where the platform allows
+    // opening a directory; failure here is not actionable (the data rename
+    // already succeeded), so it is deliberately ignored
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Write a KV swap record to disk through tmp + fsync + rename
+/// ([`write_file_atomic`]), so a crash mid-write leaves at worst a stale
+/// `.tmp`, never a half-written record at the final path — unless a
+/// `swap_torn_write` fault fires, which deliberately lands a truncated
+/// record there (the crash the rename discipline exists to prevent, made
+/// reproducible for the fault tests).
 pub fn write_swap_file(path: &Path, bytes: &[u8], faults: &FaultPlan) -> std::io::Result<()> {
     if faults.fire(FaultKind::SwapTornWrite) {
         return std::fs::write(path, &bytes[..bytes.len() / 2]);
     }
-    let tmp = path.with_extension("kvswap.tmp");
-    std::fs::write(&tmp, bytes)?;
-    std::fs::rename(&tmp, path)
+    write_file_atomic(path, bytes)
+}
+
+/// Write a train-state checkpoint record durably. A `ckpt_torn_write` fault
+/// lands a truncated record at the final path instead — which the CRC32
+/// trailer catches on the next resume, falling back to the previous record.
+pub fn write_ckpt_file(path: &Path, bytes: &[u8], faults: &FaultPlan) -> std::io::Result<()> {
+    if faults.fire(FaultKind::CkptTornWrite) {
+        return std::fs::write(path, &bytes[..bytes.len() / 2]);
+    }
+    write_file_atomic(path, bytes)
+}
+
+/// Read a train-state checkpoint record. A `ckpt_short_read` fault drops
+/// the tail, which the CRC/decode layer reports as a typed error — the
+/// resume scan then tries the next-older record.
+pub fn read_ckpt_file(path: &Path, faults: &FaultPlan) -> std::io::Result<Vec<u8>> {
+    let mut buf = std::fs::read(path)?;
+    if faults.fire(FaultKind::CkptShortRead) {
+        buf.truncate(buf.len() / 2);
+    }
+    Ok(buf)
 }
 
 /// Read a KV swap record back. An `io_short_read` fault drops the tail of
@@ -366,18 +489,75 @@ mod tests {
         let mut badv = good.clone();
         badv[4] ^= 0xFF;
         assert_eq!(decode_kv_swap(&badv).unwrap_err().kind, WireErrorKind::BadVersion);
-        // truncated
+        // truncated: the CRC trailer no longer matches (v2 catches torn
+        // records by checksum, before any structural parsing)
         assert_eq!(
             decode_kv_swap(&good[..good.len() - 3]).unwrap_err().kind,
-            WireErrorKind::Truncated
+            WireErrorKind::Corrupt
         );
-        // slab size disagreeing with pos × kv_cols
+        // a single flipped payload bit fails the checksum too — the case
+        // slab-length validation alone could never catch
+        let mut flipped = good.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x10;
+        assert_eq!(decode_kv_swap(&flipped).unwrap_err().kind, WireErrorKind::Corrupt);
+        // slab size disagreeing with pos × kv_cols (CRC intact, body wrong)
         let short = encode_kv_swap(2, 4, &layers);
         assert_eq!(decode_kv_swap(&short).unwrap_err().kind, WireErrorKind::Corrupt);
-        // trailing garbage
+        // trailing garbage shifts the trailer window → checksum mismatch
         let mut long = good;
         long.push(0);
-        assert_eq!(decode_kv_swap(&long).unwrap_err().kind, WireErrorKind::TrailingBytes);
+        assert_eq!(decode_kv_swap(&long).unwrap_err().kind, WireErrorKind::Corrupt);
+    }
+
+    #[test]
+    fn kv_swap_v1_records_still_decode() {
+        // a v1 record is exactly the v2 body with version=1 and no trailer
+        let layers = vec![(vec![0.5f32; 4], vec![-2.0f32; 4])];
+        let v2 = encode_kv_swap(1, 4, &layers);
+        let mut v1 = v2[..v2.len() - 4].to_vec();
+        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+        let (pos, kv_cols, got) = decode_kv_swap(&v1).unwrap();
+        assert_eq!((pos, kv_cols), (1, 4));
+        assert_eq!(got, layers);
+    }
+
+    #[test]
+    fn crc32_known_vector_and_trailer_roundtrip() {
+        // the IEEE check value: crc32("123456789") = 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        let mut buf = b"payload".to_vec();
+        append_crc_trailer(&mut buf);
+        assert_eq!(check_crc_trailer(&buf).unwrap(), b"payload");
+        assert_eq!(check_crc_trailer(&[1, 2]).unwrap_err().kind, WireErrorKind::Truncated);
+        buf[2] ^= 1;
+        assert_eq!(check_crc_trailer(&buf).unwrap_err().kind, WireErrorKind::Corrupt);
+    }
+
+    #[test]
+    fn ckpt_file_faults_tear_and_shorten() {
+        let dir = std::env::temp_dir().join(format!("averis-ckptio-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.avts");
+        let mut rec = b"train-state-record-bytes".to_vec();
+        append_crc_trailer(&mut rec);
+        let clean = FaultPlan::none();
+        write_ckpt_file(&path, &rec, &clean).unwrap();
+        assert_eq!(read_ckpt_file(&path, &clean).unwrap(), rec);
+        // torn write lands half a record at the final path; CRC catches it
+        let torn = FaultPlan::parse("ckpt_torn_write:1", 0).unwrap();
+        write_ckpt_file(&path, &rec, &torn).unwrap();
+        let back = read_ckpt_file(&path, &clean).unwrap();
+        assert_eq!(back.len(), rec.len() / 2);
+        assert!(check_crc_trailer(&back).is_err());
+        // short read drops the tail of an intact file
+        write_ckpt_file(&path, &rec, &clean).unwrap();
+        let shorty = FaultPlan::parse("ckpt_short_read:1", 0).unwrap();
+        let half = read_ckpt_file(&path, &shorty).unwrap();
+        assert_eq!(half.len(), rec.len() / 2);
+        assert!(check_crc_trailer(&half).is_err());
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
     }
 
     #[test]

@@ -24,7 +24,10 @@ use crate::model::Transformer;
 use crate::quant::nvfp4::{Nvfp4Quantizer, QuantizedMat};
 use crate::quant::recipe::QuantRecipe;
 use crate::quant::rowq::FrozenLinear;
-use crate::runtime::wire::{put_bytes, put_f32, put_f32s, put_u32, put_u8, Reader};
+use crate::runtime::wire::{
+    append_crc_trailer, check_crc_trailer, put_bytes, put_f32, put_f32s, put_u32, put_u8,
+    write_file_atomic, Reader,
+};
 use crate::tensor::ops::silu;
 use crate::tensor::Mat;
 use anyhow::{bail, Context, Result};
@@ -32,7 +35,9 @@ use std::path::Path;
 
 /// Magic prefix of the packed serving checkpoint ("AQC1").
 pub const QCKPT_MAGIC: u32 = 0x4151_4331;
-const QCKPT_VERSION: u32 = 1;
+/// v2 appends a CRC32 trailer over the whole record; v1 (no trailer) is
+/// still readable.
+const QCKPT_VERSION: u32 = 2;
 
 /// Frozen per-operand calibration means, one pair per layer: the column
 /// mean of the tapped attention input (operand of Wq/Wk/Wv) and of the
@@ -310,21 +315,27 @@ impl QuantizedCheckpoint {
             }
             None => put_u8(&mut out, 0),
         }
-        std::fs::write(path.as_ref(), out)
+        append_crc_trailer(&mut out);
+        write_file_atomic(path.as_ref(), &out)
             .with_context(|| format!("writing {}", path.as_ref().display()))
     }
 
     /// Parse a packed checkpoint from its encoded bytes.
     pub fn from_bytes(bytes: &[u8]) -> Result<QuantizedCheckpoint> {
-        let mut r = Reader::new(bytes);
-        let magic = r.u32()?;
+        let mut head = Reader::new(bytes);
+        let magic = head.u32()?;
         if magic != QCKPT_MAGIC {
             bail!("not a packed serving checkpoint (magic {magic:#x})");
         }
-        let version = r.u32()?;
-        if version != QCKPT_VERSION {
-            bail!("unsupported packed-checkpoint version {version}");
-        }
+        let version = head.u32()?;
+        let body: &[u8] = match version {
+            1 => bytes, // legacy: no trailer
+            2 => check_crc_trailer(bytes)?,
+            v => bail!("unsupported packed-checkpoint version {v}"),
+        };
+        let mut r = Reader::new(body);
+        let _ = r.u32()?; // magic, validated above
+        let _ = r.u32()?; // version
         let cfg = read_config(&mut r)?;
         let embed = read_mat(&mut r)?;
         if embed.rows != cfg.vocab || embed.cols != cfg.d_model {
@@ -648,13 +659,38 @@ mod tests {
         QuantizedCheckpoint::from_bytes(&bytes).unwrap();
     }
 
+    /// Strip the v2 CRC trailer and patch the version byte to 1 — a legacy
+    /// record, byte-for-byte, so structural-validation tests can mutate
+    /// fields without the checksum masking the failure they target.
+    fn as_v1(bytes: &[u8]) -> Vec<u8> {
+        let mut v1 = bytes[..bytes.len() - 4].to_vec();
+        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+        v1
+    }
+
+    #[test]
+    fn legacy_v1_checkpoint_still_loads() {
+        let bytes = encoded_checkpoint(&ModelConfig::test_tiny(64), "legacy");
+        QuantizedCheckpoint::from_bytes(&as_v1(&bytes)).unwrap();
+    }
+
+    #[test]
+    fn bit_flip_anywhere_fails_the_checksum() {
+        let bytes = encoded_checkpoint(&ModelConfig::test_tiny(64), "flip");
+        for pos in [8usize, bytes.len() / 3, bytes.len() / 2, bytes.len() - 5] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            assert!(QuantizedCheckpoint::from_bytes(&bad).is_err(), "flip at {pos}");
+        }
+    }
+
     #[test]
     fn shape_config_mismatch_is_rejected_at_load() {
-        // rewrite the config's vocab field (offset 8, after magic+version):
-        // the config still validates on its own, but the embedding shape no
-        // longer matches what it implies — must fail at load, not panic in
-        // a GEMM later
-        let mut bytes = encoded_checkpoint(&ModelConfig::test_tiny(64), "shape");
+        // rewrite the config's vocab field (offset 8, after magic+version)
+        // in a v1 record (no checksum to mask it): the config still
+        // validates on its own, but the embedding shape no longer matches
+        // what it implies — must fail at load, not panic in a GEMM later
+        let mut bytes = as_v1(&encoded_checkpoint(&ModelConfig::test_tiny(64), "shape"));
         bytes[8..12].copy_from_slice(&(128u32).to_le_bytes());
         let err = QuantizedCheckpoint::from_bytes(&bytes).unwrap_err().to_string();
         assert!(err.contains("embedding"), "unexpected error: {err}");
@@ -664,7 +700,7 @@ mod tests {
     fn moe_expert_count_mismatch_is_rejected_at_load() {
         // moe_small encodes `experts` at config offset 8+7*4+1 = 37; halve
         // it so the record's routers/expert lists disagree with the config
-        let mut bytes = encoded_checkpoint(&ModelConfig::moe_small(64), "moe");
+        let mut bytes = as_v1(&encoded_checkpoint(&ModelConfig::moe_small(64), "moe"));
         assert_eq!(u32::from_le_bytes(bytes[37..41].try_into().unwrap()), 8);
         bytes[37..41].copy_from_slice(&(4u32).to_le_bytes());
         assert!(QuantizedCheckpoint::from_bytes(&bytes).is_err());
@@ -672,8 +708,14 @@ mod tests {
 
     #[test]
     fn trailing_garbage_is_rejected() {
-        let mut bytes = encoded_checkpoint(&ModelConfig::test_tiny(64), "trail");
-        bytes.extend_from_slice(&[0u8; 8]);
-        assert!(QuantizedCheckpoint::from_bytes(&bytes).is_err());
+        // v2: garbage shifts the trailer window → checksum mismatch; v1:
+        // the reader finishes with bytes left over → TrailingBytes
+        let bytes = encoded_checkpoint(&ModelConfig::test_tiny(64), "trail");
+        let mut long = bytes.clone();
+        long.extend_from_slice(&[0u8; 8]);
+        assert!(QuantizedCheckpoint::from_bytes(&long).is_err());
+        let mut long_v1 = as_v1(&bytes);
+        long_v1.extend_from_slice(&[0u8; 8]);
+        assert!(QuantizedCheckpoint::from_bytes(&long_v1).is_err());
     }
 }

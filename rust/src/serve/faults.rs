@@ -40,19 +40,38 @@ pub enum FaultKind {
     /// A daemon connection worker stalls before reading the request —
     /// a slow client / stalled network thread (surfaces as idle timeouts).
     WorkerStall = 2,
+    /// A training checkpoint write is cut short mid-record at the final
+    /// path (simulated crash mid-write, bypassing tmp + fsync + rename).
+    CkptTornWrite = 3,
+    /// A training checkpoint read returns fewer bytes than the file holds.
+    CkptShortRead = 4,
+    /// A training step's loss is forced non-finite — the divergence the
+    /// numerics sentinel exists to catch, made reproducible. Drawn with
+    /// [`FaultPlan::fire_at`] keyed on the step index, so the injection
+    /// pattern is invariant under resume, rollback replay, and thread count.
+    StepNonfinite = 5,
 }
 
-pub const N_FAULT_KINDS: usize = 3;
+pub const N_FAULT_KINDS: usize = 6;
 
 impl FaultKind {
-    pub const ALL: [FaultKind; N_FAULT_KINDS] =
-        [FaultKind::IoShortRead, FaultKind::SwapTornWrite, FaultKind::WorkerStall];
+    pub const ALL: [FaultKind; N_FAULT_KINDS] = [
+        FaultKind::IoShortRead,
+        FaultKind::SwapTornWrite,
+        FaultKind::WorkerStall,
+        FaultKind::CkptTornWrite,
+        FaultKind::CkptShortRead,
+        FaultKind::StepNonfinite,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
             FaultKind::IoShortRead => "io_short_read",
             FaultKind::SwapTornWrite => "swap_torn_write",
             FaultKind::WorkerStall => "worker_stall",
+            FaultKind::CkptTornWrite => "ckpt_torn_write",
+            FaultKind::CkptShortRead => "ckpt_short_read",
+            FaultKind::StepNonfinite => "step_nonfinite",
         }
     }
 
@@ -76,6 +95,12 @@ pub struct FaultPlan {
     /// worker_stall sleep, in milliseconds
     stall_ms: u64,
     state: Arc<FaultState>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::none()
+    }
 }
 
 impl fmt::Debug for FaultPlan {
@@ -167,6 +192,28 @@ impl FaultPlan {
         hit
     }
 
+    /// Draw a fault decision at an *externally keyed* ticket instead of the
+    /// shared counter: the decision is a pure function of
+    /// `(seed, kind, ticket)`. Training-step faults use the step index as
+    /// the ticket, so the injection pattern survives checkpoint/resume and
+    /// rollback replay bit-for-bit — a process-local counter would shift
+    /// every draw after a resume and break the bitwise-continuation
+    /// invariant. Hits still count into the injected/telemetry tallies.
+    pub fn fire_at(&self, kind: FaultKind, ticket: u64) -> bool {
+        let rate = self.rates[kind as usize];
+        if rate <= 0.0 {
+            return false;
+        }
+        let h = splitmix64(self.seed ^ ((kind as u64) << 56) ^ ticket);
+        let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+        let hit = u < rate;
+        if hit {
+            self.state.injected[kind as usize].fetch_add(1, Ordering::Relaxed);
+            crate::telemetry::incr(crate::telemetry::Counter::FaultsInjected, 1);
+        }
+        hit
+    }
+
     /// Draws made at sites of `kind` so far.
     pub fn draws(&self, kind: FaultKind) -> u64 {
         self.state.draws[kind as usize].load(Ordering::Relaxed)
@@ -220,6 +267,30 @@ mod tests {
         assert!(FaultPlan::parse("io_short_read", 0).is_err());
         assert!(FaultPlan::parse("io_short_read:x", 0).is_err());
         assert!(!FaultPlan::parse("", 0).unwrap().armed());
+    }
+
+    #[test]
+    fn training_fault_kinds_parse_and_render() {
+        let p = FaultPlan::parse("ckpt_torn_write:1,ckpt_short_read:0.5,step_nonfinite:0.25", 0)
+            .unwrap();
+        assert_eq!(p.spec(), "ckpt_torn_write:1,ckpt_short_read:0.5,step_nonfinite:0.25");
+        assert!(p.armed());
+    }
+
+    #[test]
+    fn fire_at_is_pure_in_its_ticket() {
+        let p = FaultPlan::parse("step_nonfinite:0.4", 12).unwrap();
+        let q = FaultPlan::parse("step_nonfinite:0.4", 12).unwrap();
+        let pa: Vec<bool> = (0..128).map(|t| p.fire_at(FaultKind::StepNonfinite, t)).collect();
+        // reversed order, different plan instance: identical decisions
+        let mut qa: Vec<bool> =
+            (0..128).rev().map(|t| q.fire_at(FaultKind::StepNonfinite, t)).collect();
+        qa.reverse();
+        assert_eq!(pa, qa);
+        let hits = pa.iter().filter(|&&x| x).count();
+        assert!((20..=90).contains(&hits), "hits {hits}");
+        assert_eq!(p.injected(FaultKind::StepNonfinite) as usize, hits);
+        assert_eq!(p.draws(FaultKind::StepNonfinite), 0, "fire_at must not move the counter");
     }
 
     #[test]

@@ -70,9 +70,17 @@ pub enum Counter {
     /// Swap fault-ins that fell back to recompute-from-prompt after a
     /// corrupt/truncated record (`serve/engine.rs`).
     SwapRecoveries = 7,
+    /// Train-state checkpoint records durably written (`train/checkpoint.rs`).
+    CkptWrites = 8,
+    /// Steps the numerics sentinel skipped (optimizer untouched).
+    SentinelSkips = 9,
+    /// Sentinel rollbacks to the last durable checkpoint.
+    SentinelRollbacks = 10,
+    /// Sentinel per-run recipe escalations (force MeanSplit → exact fallback).
+    SentinelEscalations = 11,
 }
 
-pub const N_COUNTERS: usize = 8;
+pub const N_COUNTERS: usize = 12;
 
 impl Counter {
     pub const ALL: [Counter; N_COUNTERS] = [
@@ -84,6 +92,10 @@ impl Counter {
         Counter::DisconnectCancels,
         Counter::FaultsInjected,
         Counter::SwapRecoveries,
+        Counter::CkptWrites,
+        Counter::SentinelSkips,
+        Counter::SentinelRollbacks,
+        Counter::SentinelEscalations,
     ];
 
     pub fn name(self) -> &'static str {
@@ -96,6 +108,10 @@ impl Counter {
             Counter::DisconnectCancels => "serve.disconnect_cancels",
             Counter::FaultsInjected => "faults.injected",
             Counter::SwapRecoveries => "serve.swap_recoveries",
+            Counter::CkptWrites => "train.ckpt_writes",
+            Counter::SentinelSkips => "sentinel.skips",
+            Counter::SentinelRollbacks => "sentinel.rollbacks",
+            Counter::SentinelEscalations => "sentinel.escalations",
         }
     }
 }

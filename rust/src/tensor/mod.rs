@@ -11,4 +11,4 @@ pub mod rng;
 pub mod scratch;
 
 pub use mat::Mat;
-pub use rng::Rng;
+pub use rng::{Rng, RngState};

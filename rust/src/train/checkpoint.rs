@@ -1,0 +1,648 @@
+//! Crash-safe train-state records (DESIGN.md §13): a versioned,
+//! CRC32-checksummed snapshot of *everything* the step loop consumes —
+//! parameters, AdamW moments, LR-schedule position, counter-seeded SR and
+//! sampling stream cursors, loss EMA, corpus cursor, and the numerics
+//! sentinel's ladder position — written atomically (tmp + fsync + rename)
+//! at a fixed cadence with keep-last-K retention.
+//!
+//! The resume contract: restoring the newest valid record continues the
+//! loss curve **bit for bit** against an uninterrupted run, at any thread
+//! count and any forced SIMD level. The argument has two halves. Every
+//! stochastic stream in the loop is counter-seeded (`quant::sr::SrStream`,
+//! `tensor::Rng`), so its entire future is determined by a small cursor
+//! this record captures; and every sentinel decision is a pure function of
+//! per-step data (loss, pre-clip grad norm, step index), so a resumed run
+//! replays the same interventions it would have taken uninterrupted.
+//!
+//! Activation taps are deliberately *not* serialized: a resumed run only
+//! re-captures taps whose steps lie after the resume point.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::{ModelConfig, Params};
+use crate::quant::QuantRecipe;
+use crate::runtime::wire::{
+    append_crc_trailer, check_crc_trailer, crc32, put_bytes, put_f32, put_f32s, put_u32, put_u64,
+    put_u8, read_ckpt_file, write_ckpt_file, Reader,
+};
+use crate::serve::checkpoint::{put_config, read_config};
+use crate::serve::FaultPlan;
+use crate::tensor::{Rng, RngState};
+
+use super::loop_::TrainConfig;
+
+/// Magic prefix of a train-state record ("AVTS").
+pub const TRAIN_STATE_MAGIC: u32 = 0x4156_5453;
+/// Train-state records have carried a CRC trailer from their first version.
+const TRAIN_STATE_VERSION: u32 = 1;
+
+/// What the sentinel did at one step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InterventionKind {
+    /// Discard the step's gradients; optimizer and params untouched.
+    SkipStep,
+    /// Restore all numeric state from the newest valid on-disk record.
+    Rollback,
+    /// Switch the quantization recipe one rung down the ladder.
+    Escalate,
+}
+
+impl InterventionKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            InterventionKind::SkipStep => "skip_step",
+            InterventionKind::Rollback => "rollback",
+            InterventionKind::Escalate => "escalate",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            InterventionKind::SkipStep => 0,
+            InterventionKind::Rollback => 1,
+            InterventionKind::Escalate => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<InterventionKind> {
+        Ok(match c {
+            0 => InterventionKind::SkipStep,
+            1 => InterventionKind::Rollback,
+            2 => InterventionKind::Escalate,
+            other => bail!("unknown intervention code {other}"),
+        })
+    }
+}
+
+/// One recorded sentinel decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Intervention {
+    pub step: u64,
+    pub kind: InterventionKind,
+    pub detail: String,
+}
+
+/// The sentinel ladder's position, serialized so a resumed run continues
+/// the intervention sequence instead of restarting it.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SentinelState {
+    /// Bad steps seen since the last good step or intervention.
+    pub consecutive_bad: u32,
+    /// 0 = the next escalation is a rollback, 1 = a recipe escalation.
+    pub rung: u8,
+    pub rollbacks: u32,
+    pub escalations: u32,
+    pub skipped: u32,
+    /// The recipe ladder is exhausted; only skip-step remains.
+    pub ladder_dead: bool,
+    pub interventions: Vec<Intervention>,
+}
+
+/// Everything the step loop consumes, captured at a step boundary.
+///
+/// (Named `TrainSnapshot` — `runtime::executor` already owns the name
+/// `TrainState` for the PJRT device-buffer set.)
+pub struct TrainSnapshot {
+    /// The step the resumed loop executes first.
+    pub next_step: u64,
+    // -- guard fields: a resume refuses to continue under a different run --
+    pub seed: u64,
+    pub steps: u64,
+    pub batch: usize,
+    pub seq: usize,
+    pub peak_lr: f32,
+    pub grad_clip: f32,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub model_cfg: ModelConfig,
+    /// The recipe the run was launched with (the guard), as opposed to the
+    /// recipe the sentinel may have escalated to.
+    pub base_recipe: QuantRecipe,
+    // -------------------------------------------------- numeric state --
+    pub active_recipe: QuantRecipe,
+    pub params: Params,
+    pub opt_m: Params,
+    pub opt_v: Params,
+    pub opt_step: u64,
+    /// Corpus cursor: the batcher's shuffle-RNG position.
+    pub batcher_rng: RngState,
+    /// Counter-seeded stochastic-rounding stream position.
+    pub sr_cursor: u64,
+    /// Auxiliary (Hadamard-sign / SVD power-iteration) stream position.
+    pub aux_rng: RngState,
+    pub ema: Option<f32>,
+    pub loss_curve: Vec<(u64, f32)>,
+    pub eval_curve: Vec<(u64, f32)>,
+    /// Wall-clock seconds accumulated before this record was written.
+    pub wall_seconds: f64,
+    pub sentinel: SentinelState,
+}
+
+fn put_params(out: &mut Vec<u8>, p: &Params) {
+    let mut n = 0u32;
+    p.for_each(|_| n += 1);
+    put_u32(out, n);
+    p.for_each(|s| put_f32s(out, s));
+}
+
+fn read_params(r: &mut Reader<'_>, cfg: &ModelConfig) -> Result<Params> {
+    let n_tensors = r.u32()? as usize;
+    // shape-correct constructor; every tensor is overwritten below
+    let mut params = Params::init(cfg, &mut Rng::new(0));
+    let mut expect = 0usize;
+    params.for_each(|_| expect += 1);
+    if n_tensors != expect {
+        bail!("record has {n_tensors} tensors, config implies {expect}");
+    }
+    let mut err: Option<anyhow::Error> = None;
+    params.for_each_mut(|s| {
+        if err.is_some() {
+            return;
+        }
+        match r.f32s() {
+            Ok(v) if v.len() == s.len() => s.copy_from_slice(&v),
+            Ok(v) => {
+                err = Some(anyhow!("tensor length {} != expected {}", v.len(), s.len()));
+            }
+            Err(e) => err = Some(e.into()),
+        }
+    });
+    match err {
+        Some(e) => Err(e),
+        None => Ok(params),
+    }
+}
+
+fn put_rng_state(out: &mut Vec<u8>, st: &RngState) {
+    for w in st.s {
+        put_u64(out, w);
+    }
+    match st.spare_normal {
+        Some(x) => {
+            put_u8(out, 1);
+            put_f32(out, x);
+        }
+        None => {
+            put_u8(out, 0);
+            put_f32(out, 0.0);
+        }
+    }
+}
+
+fn read_rng_state(r: &mut Reader<'_>) -> Result<RngState> {
+    let mut s = [0u64; 4];
+    for w in &mut s {
+        *w = r.u64()?;
+    }
+    let has_spare = r.u8()? != 0;
+    let spare = r.f32()?;
+    Ok(RngState { s, spare_normal: if has_spare { Some(spare) } else { None } })
+}
+
+fn put_curve(out: &mut Vec<u8>, curve: &[(u64, f32)]) {
+    put_u32(out, curve.len() as u32);
+    for &(step, v) in curve {
+        put_u64(out, step);
+        put_f32(out, v);
+    }
+}
+
+fn read_curve(r: &mut Reader<'_>) -> Result<Vec<(u64, f32)>> {
+    let n = r.u32()? as usize;
+    (0..n).map(|_| Ok((r.u64()?, r.f32()?))).collect()
+}
+
+fn put_recipe(out: &mut Vec<u8>, recipe: QuantRecipe) {
+    put_bytes(out, recipe.to_string().as_bytes());
+}
+
+fn read_recipe(r: &mut Reader<'_>) -> Result<QuantRecipe> {
+    let raw = r.bytes()?;
+    let s = std::str::from_utf8(&raw).context("recipe name is not utf-8")?;
+    s.parse::<QuantRecipe>().map_err(|e| anyhow!(e))
+}
+
+impl TrainSnapshot {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_u32(&mut out, TRAIN_STATE_MAGIC);
+        put_u32(&mut out, TRAIN_STATE_VERSION);
+        put_u64(&mut out, self.next_step);
+        put_u64(&mut out, self.seed);
+        put_u64(&mut out, self.steps);
+        put_u64(&mut out, self.batch as u64);
+        put_u64(&mut out, self.seq as u64);
+        put_f32(&mut out, self.peak_lr);
+        put_f32(&mut out, self.grad_clip);
+        put_u64(&mut out, self.eval_every);
+        put_u64(&mut out, self.eval_batches as u64);
+        put_config(&mut out, &self.model_cfg);
+        put_recipe(&mut out, self.base_recipe);
+        put_recipe(&mut out, self.active_recipe);
+        put_params(&mut out, &self.params);
+        put_params(&mut out, &self.opt_m);
+        put_params(&mut out, &self.opt_v);
+        put_u64(&mut out, self.opt_step);
+        put_rng_state(&mut out, &self.batcher_rng);
+        put_u64(&mut out, self.sr_cursor);
+        put_rng_state(&mut out, &self.aux_rng);
+        match self.ema {
+            Some(e) => {
+                put_u8(&mut out, 1);
+                put_f32(&mut out, e);
+            }
+            None => {
+                put_u8(&mut out, 0);
+                put_f32(&mut out, 0.0);
+            }
+        }
+        put_curve(&mut out, &self.loss_curve);
+        put_curve(&mut out, &self.eval_curve);
+        put_u64(&mut out, self.wall_seconds.to_bits());
+        put_u32(&mut out, self.sentinel.consecutive_bad);
+        put_u8(&mut out, self.sentinel.rung);
+        put_u32(&mut out, self.sentinel.rollbacks);
+        put_u32(&mut out, self.sentinel.escalations);
+        put_u32(&mut out, self.sentinel.skipped);
+        put_u8(&mut out, self.sentinel.ladder_dead as u8);
+        put_u32(&mut out, self.sentinel.interventions.len() as u32);
+        for iv in &self.sentinel.interventions {
+            put_u64(&mut out, iv.step);
+            put_u8(&mut out, iv.kind.code());
+            put_bytes(&mut out, iv.detail.as_bytes());
+        }
+        append_crc_trailer(&mut out);
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<TrainSnapshot> {
+        let mut head = Reader::new(bytes);
+        let magic = head.u32()?;
+        if magic != TRAIN_STATE_MAGIC {
+            bail!("not a train-state record (magic {magic:#x})");
+        }
+        let version = head.u32()?;
+        if version != TRAIN_STATE_VERSION {
+            bail!("unsupported train-state version {version}");
+        }
+        let body = check_crc_trailer(bytes)?;
+        let mut r = Reader::new(body);
+        let _ = r.u32()?; // magic, validated above
+        let _ = r.u32()?; // version
+        let next_step = r.u64()?;
+        let seed = r.u64()?;
+        let steps = r.u64()?;
+        let batch = r.u64()? as usize;
+        let seq = r.u64()? as usize;
+        let peak_lr = r.f32()?;
+        let grad_clip = r.f32()?;
+        let eval_every = r.u64()?;
+        let eval_batches = r.u64()? as usize;
+        let model_cfg = read_config(&mut r)?;
+        let base_recipe = read_recipe(&mut r)?;
+        let active_recipe = read_recipe(&mut r)?;
+        let params = read_params(&mut r, &model_cfg)?;
+        let opt_m = read_params(&mut r, &model_cfg)?;
+        let opt_v = read_params(&mut r, &model_cfg)?;
+        let opt_step = r.u64()?;
+        let batcher_rng = read_rng_state(&mut r)?;
+        let sr_cursor = r.u64()?;
+        let aux_rng = read_rng_state(&mut r)?;
+        let has_ema = r.u8()? != 0;
+        let ema_val = r.f32()?;
+        let loss_curve = read_curve(&mut r)?;
+        let eval_curve = read_curve(&mut r)?;
+        let wall_seconds = f64::from_bits(r.u64()?);
+        let consecutive_bad = r.u32()?;
+        let rung = r.u8()?;
+        let rollbacks = r.u32()?;
+        let escalations = r.u32()?;
+        let skipped = r.u32()?;
+        let ladder_dead = r.u8()? != 0;
+        let n_iv = r.u32()? as usize;
+        let interventions = (0..n_iv)
+            .map(|_| {
+                let step = r.u64()?;
+                let kind = InterventionKind::from_code(r.u8()?)?;
+                let raw = r.bytes()?;
+                let detail =
+                    String::from_utf8(raw).context("intervention detail is not utf-8")?;
+                Ok(Intervention { step, kind, detail })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        r.done()?;
+        Ok(TrainSnapshot {
+            next_step,
+            seed,
+            steps,
+            batch,
+            seq,
+            peak_lr,
+            grad_clip,
+            eval_every,
+            eval_batches,
+            model_cfg,
+            base_recipe,
+            active_recipe,
+            params,
+            opt_m,
+            opt_v,
+            opt_step,
+            batcher_rng,
+            sr_cursor,
+            aux_rng,
+            ema: if has_ema { Some(ema_val) } else { None },
+            loss_curve,
+            eval_curve,
+            wall_seconds,
+            sentinel: SentinelState {
+                consecutive_bad,
+                rung,
+                rollbacks,
+                escalations,
+                skipped,
+                ladder_dead,
+                interventions,
+            },
+        })
+    }
+
+    /// Refuse to resume under different hyperparameters, model geometry, or
+    /// launch recipe. Thread count and SIMD level are deliberately absent:
+    /// the bitwise-resume invariant holds across both.
+    pub fn check_guard(
+        &self,
+        model_cfg: &ModelConfig,
+        base_recipe: QuantRecipe,
+        cfg: &TrainConfig,
+    ) -> Result<()> {
+        let mut a = Vec::new();
+        put_config(&mut a, model_cfg);
+        let mut b = Vec::new();
+        put_config(&mut b, &self.model_cfg);
+        if a != b {
+            bail!("resume: model config differs from the checkpointed run");
+        }
+        if base_recipe != self.base_recipe {
+            bail!("resume: recipe {base_recipe} differs from checkpointed {}", self.base_recipe);
+        }
+        let same = self.seed == cfg.seed
+            && self.steps == cfg.steps
+            && self.batch == cfg.batch
+            && self.seq == cfg.seq
+            && self.peak_lr.to_bits() == cfg.peak_lr.to_bits()
+            && self.grad_clip.to_bits() == cfg.grad_clip.to_bits()
+            && self.eval_every == cfg.eval_every
+            && self.eval_batches == cfg.eval_batches;
+        if !same {
+            bail!("resume: training hyperparameters differ from the checkpointed run");
+        }
+        Ok(())
+    }
+}
+
+/// `trainstate-<step>.avts` path for a record whose resumed loop starts at
+/// `next_step`.
+pub fn record_path(dir: &Path, next_step: u64) -> PathBuf {
+    dir.join(format!("trainstate-{next_step:08}.avts"))
+}
+
+fn record_step(path: &Path) -> Option<u64> {
+    let name = path.file_name()?.to_str()?;
+    name.strip_prefix("trainstate-")?.strip_suffix(".avts")?.parse().ok()
+}
+
+/// All train-state records in `dir`, ascending by step.
+pub fn list_records(dir: &Path) -> Vec<(u64, PathBuf)> {
+    let Ok(rd) = std::fs::read_dir(dir) else { return Vec::new() };
+    let mut out: Vec<(u64, PathBuf)> = rd
+        .flatten()
+        .filter_map(|e| {
+            let p = e.path();
+            record_step(&p).map(|step| (step, p))
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+/// Write `snap` durably (tmp + fsync + rename, fault-injectable) and prune
+/// to the newest `keep` records. Returns the record's path.
+pub fn write_record(
+    dir: &Path,
+    snap: &TrainSnapshot,
+    keep: usize,
+    faults: &FaultPlan,
+) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    let path = record_path(dir, snap.next_step);
+    write_ckpt_file(&path, &snap.encode(), faults)
+        .with_context(|| format!("writing {}", path.display()))?;
+    crate::telemetry::incr(crate::telemetry::Counter::CkptWrites, 1);
+    let records = list_records(dir);
+    if keep > 0 && records.len() > keep {
+        for (_, old) in &records[..records.len() - keep] {
+            let _ = std::fs::remove_file(old);
+        }
+    }
+    Ok(path)
+}
+
+/// Newest record in `dir` that reads back and passes its checksum. Torn or
+/// corrupt records are *skipped with a warning*, not errors — surviving a
+/// crash mid-write by falling back to the previous record is the normal
+/// recovery path. `None` if no valid record remains.
+pub fn find_latest_valid(dir: &Path, faults: &FaultPlan) -> Option<(PathBuf, TrainSnapshot)> {
+    let mut records = list_records(dir);
+    records.reverse();
+    for (_, path) in records {
+        let parsed = read_ckpt_file(&path, faults)
+            .map_err(anyhow::Error::from)
+            .and_then(|bytes| TrainSnapshot::decode(&bytes));
+        match parsed {
+            Ok(snap) => return Some((path, snap)),
+            Err(e) => {
+                eprintln!("warning: skipping unreadable train-state {}: {e}", path.display());
+            }
+        }
+    }
+    None
+}
+
+/// CRC32 over the loss curve's (step, loss-bits) pairs — the one-line
+/// invariant the kill-and-resume CI leg greps for and compares.
+pub fn loss_curve_checksum(curve: &[(u64, f32)]) -> u32 {
+    let mut buf = Vec::with_capacity(curve.len() * 12);
+    for &(step, loss) in curve {
+        put_u64(&mut buf, step);
+        put_u32(&mut buf, loss.to_bits());
+    }
+    crc32(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params_bits(p: &Params) -> Vec<u32> {
+        let mut out = Vec::new();
+        p.for_each(|s| out.extend(s.iter().map(|x| x.to_bits())));
+        out
+    }
+
+    fn sample_snapshot() -> TrainSnapshot {
+        let cfg = ModelConfig::test_tiny(32);
+        let mut rng = Rng::new(9);
+        let params = Params::init(&cfg, &mut rng);
+        let opt_m = params.zeros_like();
+        let opt_v = params.zeros_like();
+        TrainSnapshot {
+            next_step: 7,
+            seed: 1234,
+            steps: 20,
+            batch: 2,
+            seq: 16,
+            peak_lr: 3e-3,
+            grad_clip: 1.0,
+            eval_every: 5,
+            eval_batches: 2,
+            model_cfg: cfg,
+            base_recipe: QuantRecipe::Nvfp4,
+            active_recipe: QuantRecipe::Averis,
+            params,
+            opt_m,
+            opt_v,
+            opt_step: 7,
+            batcher_rng: RngState { s: [1, 2, 3, 4], spare_normal: Some(0.25) },
+            sr_cursor: 99,
+            aux_rng: RngState { s: [5, 6, 7, 8], spare_normal: None },
+            ema: Some(3.5),
+            loss_curve: vec![(0, 4.0), (1, 3.9)],
+            eval_curve: vec![(1, 4.1)],
+            wall_seconds: 1.5,
+            sentinel: SentinelState {
+                consecutive_bad: 1,
+                rung: 1,
+                rollbacks: 1,
+                escalations: 1,
+                skipped: 3,
+                ladder_dead: false,
+                interventions: vec![Intervention {
+                    step: 3,
+                    kind: InterventionKind::SkipStep,
+                    detail: "loss=NaN".into(),
+                }],
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise() {
+        let snap = sample_snapshot();
+        let back = TrainSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(back.next_step, snap.next_step);
+        assert_eq!(back.seed, snap.seed);
+        assert_eq!(back.base_recipe, QuantRecipe::Nvfp4);
+        assert_eq!(back.active_recipe, QuantRecipe::Averis);
+        assert_eq!(params_bits(&back.params), params_bits(&snap.params));
+        assert_eq!(params_bits(&back.opt_m), params_bits(&snap.opt_m));
+        assert_eq!(params_bits(&back.opt_v), params_bits(&snap.opt_v));
+        assert_eq!(back.opt_step, 7);
+        assert_eq!(back.batcher_rng, snap.batcher_rng);
+        assert_eq!(back.sr_cursor, 99);
+        assert_eq!(back.aux_rng, snap.aux_rng);
+        assert_eq!(back.ema.map(f32::to_bits), snap.ema.map(f32::to_bits));
+        assert_eq!(back.loss_curve, snap.loss_curve);
+        assert_eq!(back.eval_curve, snap.eval_curve);
+        assert_eq!(back.wall_seconds.to_bits(), snap.wall_seconds.to_bits());
+        assert_eq!(back.sentinel, snap.sentinel);
+        // and the guard accepts its own run parameters
+        let cfg = TrainConfig {
+            steps: 20,
+            batch: 2,
+            seq: 16,
+            peak_lr: 3e-3,
+            grad_clip: 1.0,
+            eval_every: 5,
+            eval_batches: 2,
+            seed: 1234,
+            ..Default::default()
+        };
+        back.check_guard(&snap.model_cfg, QuantRecipe::Nvfp4, &cfg).unwrap();
+        assert!(back.check_guard(&snap.model_cfg, QuantRecipe::Mxfp4, &cfg).is_err());
+        let other = TrainConfig { seed: 99, ..cfg };
+        assert!(back.check_guard(&snap.model_cfg, QuantRecipe::Nvfp4, &other).is_err());
+    }
+
+    #[test]
+    fn corruption_is_rejected() {
+        let bytes = sample_snapshot().encode();
+        assert!(TrainSnapshot::decode(&bytes[..bytes.len() - 9]).is_err());
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x02;
+        assert!(TrainSnapshot::decode(&flipped).is_err());
+        let mut wrong_magic = bytes.clone();
+        wrong_magic[0] ^= 0xFF;
+        assert!(TrainSnapshot::decode(&wrong_magic).is_err());
+        TrainSnapshot::decode(&bytes).unwrap();
+    }
+
+    #[test]
+    fn retention_keeps_last_k_and_resume_picks_newest_valid() {
+        let dir = std::env::temp_dir().join(format!("averis-ts-retain-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let clean = FaultPlan::none();
+        for step in 1..=4u64 {
+            let mut snap = sample_snapshot();
+            snap.next_step = step;
+            write_record(&dir, &snap, 3, &clean).unwrap();
+        }
+        let records = list_records(&dir);
+        assert_eq!(records.iter().map(|(s, _)| *s).collect::<Vec<_>>(), vec![2, 3, 4]);
+        // truncate the newest on disk: resume must fall back to step 3
+        let newest = record_path(&dir, 4);
+        let bytes = std::fs::read(&newest).unwrap();
+        std::fs::write(&newest, &bytes[..bytes.len() / 2]).unwrap();
+        let (path, snap) = find_latest_valid(&dir, &clean).unwrap();
+        assert_eq!(path, record_path(&dir, 3));
+        assert_eq!(snap.next_step, 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_write_fault_falls_back_to_previous_record() {
+        let dir = std::env::temp_dir().join(format!("averis-ts-torn-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let clean = FaultPlan::none();
+        let torn = FaultPlan::parse("ckpt_torn_write:1", 0).unwrap();
+        let mut snap = sample_snapshot();
+        snap.next_step = 1;
+        write_record(&dir, &snap, 3, &clean).unwrap();
+        snap.next_step = 2;
+        write_record(&dir, &snap, 3, &torn).unwrap();
+        let (path, back) = find_latest_valid(&dir, &clean).unwrap();
+        assert_eq!(path, record_path(&dir, 1));
+        assert_eq!(back.next_step, 1);
+        // with nothing valid at all, resume reports None (fresh start)
+        let bytes = std::fs::read(record_path(&dir, 1)).unwrap();
+        std::fs::write(record_path(&dir, 1), &bytes[..10]).unwrap();
+        assert!(find_latest_valid(&dir, &clean).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn loss_curve_checksum_is_order_and_bit_sensitive() {
+        let a = vec![(0u64, 4.0f32), (1, 3.5)];
+        let b = vec![(1u64, 3.5f32), (0, 4.0)];
+        assert_ne!(loss_curve_checksum(&a), loss_curve_checksum(&b));
+        let mut c = a.clone();
+        c[1].1 = f32::from_bits(c[1].1.to_bits() ^ 1);
+        assert_ne!(loss_curve_checksum(&a), loss_curve_checksum(&c));
+        let again = vec![(0u64, 4.0f32), (1, 3.5)];
+        assert_eq!(loss_curve_checksum(&a), loss_curve_checksum(&again));
+    }
+}

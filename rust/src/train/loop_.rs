@@ -2,13 +2,31 @@
 //! quantization recipe, AdamW, LR schedule, gradient clipping, periodic
 //! held-out evaluation, and optional activation-capture checkpoints for the
 //! analysis pipeline.
+//!
+//! Two robustness layers ride on the plain loop (DESIGN.md §13):
+//!
+//! * **Crash-safe checkpointing** — at a fixed step cadence the loop writes
+//!   a [`TrainSnapshot`] (params, AdamW moments, stream cursors, EMA,
+//!   curves, sentinel position) atomically to disk; `--resume` restores the
+//!   newest valid record and continues the loss curve bit for bit.
+//! * **A numerics sentinel** — every step is checked for a non-finite loss
+//!   or gradient (plus an optional loss-spike threshold). Bad steps climb a
+//!   deterministic intervention ladder: skip-step (optimizer untouched) →
+//!   rollback to the last on-disk record → escalate the quantization recipe
+//!   (force mean-split, then the full-precision fallback). Every decision
+//!   is a pure function of per-step data, so intervention sequences are
+//!   identical at any thread count, and a resumed run replays them.
 
+use super::checkpoint::{self, Intervention, InterventionKind, SentinelState, TrainSnapshot};
 use super::optimizer::{clip_global_norm, AdamW, AdamWConfig};
 use super::schedule::LrSchedule;
 use crate::data::Batcher;
 use crate::model::{ModelConfig, Params, Taps, Transformer};
 use crate::quant::QuantRecipe;
+use crate::serve::{FaultKind, FaultPlan};
 use crate::tensor::Rng;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
 use std::time::Instant;
 
 #[derive(Clone, Copy, Debug)]
@@ -47,6 +65,69 @@ impl Default for TrainConfig {
     }
 }
 
+/// Crash-safe checkpointing knobs.
+#[derive(Clone, Debug)]
+pub struct CheckpointConfig {
+    /// Write a train-state record every N steps (0 = disabled).
+    pub every: u64,
+    pub dir: Option<PathBuf>,
+    /// Keep the newest K records; older ones are pruned after each write.
+    pub keep: usize,
+    /// Restore the newest valid record in `dir` before training.
+    pub resume: bool,
+}
+
+impl Default for CheckpointConfig {
+    fn default() -> Self {
+        CheckpointConfig { every: 0, dir: None, keep: 3, resume: false }
+    }
+}
+
+/// Numerics-sentinel knobs. The defaults leave healthy runs byte-identical
+/// to a sentinel-free loop: checks only *observe* until a step goes bad.
+#[derive(Clone, Copy, Debug)]
+pub struct SentinelConfig {
+    pub enabled: bool,
+    /// Consecutive bad steps before the ladder escalates past skip-step.
+    pub rollback_after: u32,
+    /// Treat `loss > factor · EMA` as bad (0 = disabled). Deterministic:
+    /// both operands are pure functions of the step data.
+    pub loss_spike_factor: f32,
+}
+
+impl Default for SentinelConfig {
+    fn default() -> Self {
+        SentinelConfig { enabled: true, rollback_after: 3, loss_spike_factor: 0.0 }
+    }
+}
+
+/// Everything beyond the core hyperparameters: checkpointing, the sentinel,
+/// fault injection, and the in-process crash hook used by resume tests.
+#[derive(Clone, Debug, Default)]
+pub struct TrainOptions {
+    pub checkpoint: CheckpointConfig,
+    pub sentinel: SentinelConfig,
+    pub faults: FaultPlan,
+    /// Stop (as if killed) after executing this many steps in this process.
+    /// Unlike `cfg.steps` this does not shorten the schedule — it simulates
+    /// an interruption for kill-and-resume tests without a child process.
+    pub halt_after_steps: Option<u64>,
+}
+
+/// What the robustness layers did during a run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    /// Step the run resumed from (`None` = fresh start).
+    pub resumed_from: Option<u64>,
+    pub checkpoints_written: u32,
+    pub skipped_steps: u32,
+    pub rollbacks: u32,
+    pub escalations: u32,
+    /// The recipe ladder ran out; remaining bad steps were skipped.
+    pub ladder_dead: bool,
+    pub interventions: Vec<Intervention>,
+}
+
 /// Everything a training run produces.
 pub struct TrainResult {
     pub recipe: QuantRecipe,
@@ -62,9 +143,14 @@ pub struct TrainResult {
     pub wall_seconds: f64,
     /// mean seconds per optimizer step (for the Table-3-style comparison)
     pub sec_per_step: f64,
+    /// The recipe the run finished on (differs from `recipe` only if the
+    /// sentinel escalated).
+    pub final_recipe: QuantRecipe,
+    pub report: TrainReport,
 }
 
-/// Train a model from scratch with the given recipe.
+/// Train a model from scratch with the given recipe (no checkpointing, no
+/// fault injection; the sentinel runs with its pure-observer defaults).
 pub fn train(
     model_cfg: ModelConfig,
     recipe: QuantRecipe,
@@ -72,6 +158,34 @@ pub fn train(
     train_tokens: Vec<u32>,
     heldout_tokens: Vec<u32>,
 ) -> TrainResult {
+    train_with(model_cfg, recipe, cfg, TrainOptions::default(), train_tokens, heldout_tokens)
+        .expect("train without checkpointing performs no fallible I/O")
+}
+
+/// The next rung of the recipe-escalation ladder: plain FP4 recipes gain
+/// mean-split (the paper's bias fix), mean-split recipes fall back to full
+/// precision, and full precision has nowhere left to go.
+fn next_recipe(r: QuantRecipe) -> Option<QuantRecipe> {
+    match r {
+        QuantRecipe::Nvfp4 | QuantRecipe::Nvfp4Hadamard | QuantRecipe::Mxfp4 => {
+            Some(QuantRecipe::Averis)
+        }
+        QuantRecipe::Averis | QuantRecipe::AverisHadamard | QuantRecipe::SvdSplit => {
+            Some(QuantRecipe::Bf16)
+        }
+        QuantRecipe::Bf16 => None,
+    }
+}
+
+/// Train with explicit robustness options. See [`TrainOptions`].
+pub fn train_with(
+    model_cfg: ModelConfig,
+    recipe: QuantRecipe,
+    cfg: TrainConfig,
+    opts: TrainOptions,
+    train_tokens: Vec<u32>,
+    heldout_tokens: Vec<u32>,
+) -> Result<TrainResult> {
     // size the persistent worker pool once for the whole run: every GeMM,
     // quantize/pack pass, and Correct stage of every step executes on it
     // with zero per-call thread spawns
@@ -88,26 +202,199 @@ pub fn train(
     let early_step = (cfg.steps / 20).max(1);
     let late_step = cfg.steps.saturating_sub(cfg.steps / 20).max(early_step + 1);
 
-    let mut loss_curve = Vec::new();
-    let mut eval_curve = Vec::new();
+    let mut loss_curve: Vec<(u64, f32)> = Vec::new();
+    let mut eval_curve: Vec<(u64, f32)> = Vec::new();
     let mut captured: Vec<(String, Taps)> = Vec::new();
-    let t0 = Instant::now();
     let mut ema: Option<f32> = None;
+    let mut wall_accum = 0.0f64;
+    let mut active_recipe = recipe;
+    let mut sentinel = SentinelState::default();
+    let mut report = TrainReport::default();
+    let mut start_step = 0u64;
 
-    for step in 0..cfg.steps {
+    let ckpt_dir = opts.checkpoint.dir.clone();
+    let ckpt_every = opts.checkpoint.every;
+
+    if opts.checkpoint.resume {
+        let dir = ckpt_dir
+            .as_ref()
+            .context("resume requested without a checkpoint dir")?;
+        if let Some((_, snap)) = checkpoint::find_latest_valid(dir, &opts.faults) {
+            snap.check_guard(&model_cfg, recipe, &cfg)?;
+            start_step = snap.next_step;
+            report.resumed_from = Some(snap.next_step);
+            params = snap.params;
+            opt = AdamW::from_parts(AdamWConfig::default(), snap.opt_m, snap.opt_v, snap.opt_step);
+            batcher.restore_rng(snap.batcher_rng);
+            active_recipe = snap.active_recipe;
+            if active_recipe != recipe {
+                model.gemm.set_recipe(active_recipe);
+            }
+            model.gemm.restore_stream_cursors(snap.sr_cursor, snap.aux_rng);
+            ema = snap.ema;
+            loss_curve = snap.loss_curve;
+            eval_curve = snap.eval_curve;
+            wall_accum = snap.wall_seconds;
+            sentinel = snap.sentinel;
+        }
+        // nothing valid on disk → fresh start (first launch with --resume
+        // in the loop, or every record lost): state above is already fresh
+    }
+
+    let halt_at = opts.halt_after_steps.map(|n| start_step.saturating_add(n));
+    let t0 = Instant::now();
+    let mut step = start_step;
+    while step < cfg.steps {
+        if let Some(h) = halt_at {
+            if step >= h {
+                break;
+            }
+        }
         let step_span = crate::telemetry::span(crate::telemetry::Span::TrainStep);
         let (inputs, targets) = batcher.next_batch();
         let capture = (cfg.tap_steps[0] && step == early_step)
             || (cfg.tap_steps[1] && step == late_step);
         let mut taps = if capture { Taps::enabled() } else { Taps::disabled() };
         let (logits, cache) = model.forward(&params, &inputs, cfg.batch, cfg.seq, &mut taps);
-        let (loss, mut grads) = model.loss_and_backward(
+        let (mut loss, mut grads) = model.loss_and_backward(
             &params, &cache, &logits, &targets, cfg.batch, cfg.seq, &mut taps,
         );
         if capture {
             let label = if step == early_step { "early" } else { "late" };
             captured.push((label.to_string(), taps));
         }
+        // injected numerics fault — keyed on the step index (not a shared
+        // draw counter), so the injection pattern is identical under
+        // resume, rollback replay, and any thread count
+        if opts.faults.fire_at(FaultKind::StepNonfinite, step) {
+            loss = f32::NAN;
+        }
+        // the sentinel reads only per-step deterministic data: the loss,
+        // the pre-clip gradient norm (finite ⟺ every gradient entry — and
+        // hence the grad amax — is finite), and the deterministic EMA.
+        // Telemetry gauges are cumulative and stride-sampled, so they are
+        // recorded but never consulted.
+        let grad_norm = grads.global_norm();
+        let spike = opts.sentinel.loss_spike_factor > 0.0
+            && matches!(ema, Some(e) if loss > opts.sentinel.loss_spike_factor * e);
+        let bad =
+            opts.sentinel.enabled && (!loss.is_finite() || !grad_norm.is_finite() || spike);
+        if bad {
+            drop(step_span);
+            sentinel.consecutive_bad += 1;
+            sentinel.skipped += 1;
+            report.skipped_steps += 1;
+            crate::telemetry::incr(crate::telemetry::Counter::SentinelSkips, 1);
+            let detail = format!("loss={loss} grad_norm={grad_norm} spike={spike}");
+            sentinel.interventions.push(Intervention {
+                step,
+                kind: InterventionKind::SkipStep,
+                detail: detail.clone(),
+            });
+            report.interventions.push(Intervention {
+                step,
+                kind: InterventionKind::SkipStep,
+                detail,
+            });
+            if sentinel.consecutive_bad >= opts.sentinel.rollback_after.max(1)
+                && !sentinel.ladder_dead
+            {
+                // ladder rung 0: roll back to the newest valid on-disk
+                // record, if one exists. Numeric state only — the active
+                // recipe and the sentinel's own bookkeeping survive, so a
+                // rollback→re-diverge cycle escalates instead of looping.
+                let rollback_to = if sentinel.rung == 0 {
+                    ckpt_dir
+                        .as_ref()
+                        .and_then(|d| checkpoint::find_latest_valid(d, &opts.faults))
+                        .filter(|(_, s)| s.check_guard(&model_cfg, recipe, &cfg).is_ok())
+                } else {
+                    None
+                };
+                match rollback_to {
+                    Some((path, snap)) => {
+                        sentinel.rollbacks += 1;
+                        report.rollbacks += 1;
+                        crate::telemetry::incr(
+                            crate::telemetry::Counter::SentinelRollbacks,
+                            1,
+                        );
+                        let detail =
+                            format!("restored step {} from {}", snap.next_step, path.display());
+                        sentinel.interventions.push(Intervention {
+                            step,
+                            kind: InterventionKind::Rollback,
+                            detail: detail.clone(),
+                        });
+                        report.interventions.push(Intervention {
+                            step,
+                            kind: InterventionKind::Rollback,
+                            detail,
+                        });
+                        params = snap.params;
+                        opt = AdamW::from_parts(
+                            AdamWConfig::default(),
+                            snap.opt_m,
+                            snap.opt_v,
+                            snap.opt_step,
+                        );
+                        batcher.restore_rng(snap.batcher_rng);
+                        model.gemm.restore_stream_cursors(snap.sr_cursor, snap.aux_rng);
+                        ema = snap.ema;
+                        loss_curve = snap.loss_curve;
+                        eval_curve = snap.eval_curve;
+                        step = snap.next_step;
+                        sentinel.rung = 1;
+                        sentinel.consecutive_bad = 0;
+                        continue;
+                    }
+                    None => match next_recipe(active_recipe) {
+                        Some(next) => {
+                            sentinel.escalations += 1;
+                            report.escalations += 1;
+                            crate::telemetry::incr(
+                                crate::telemetry::Counter::SentinelEscalations,
+                                1,
+                            );
+                            let detail = format!("recipe {active_recipe} → {next}");
+                            sentinel.interventions.push(Intervention {
+                                step,
+                                kind: InterventionKind::Escalate,
+                                detail: detail.clone(),
+                            });
+                            report.interventions.push(Intervention {
+                                step,
+                                kind: InterventionKind::Escalate,
+                                detail,
+                            });
+                            active_recipe = next;
+                            model.gemm.set_recipe(next);
+                            sentinel.rung = 0;
+                            sentinel.consecutive_bad = 0;
+                        }
+                        None => {
+                            sentinel.ladder_dead = true;
+                            report.ladder_dead = true;
+                            sentinel.consecutive_bad = 0;
+                            let detail = "ladder exhausted; skipping remaining bad steps";
+                            sentinel.interventions.push(Intervention {
+                                step,
+                                kind: InterventionKind::Escalate,
+                                detail: detail.to_string(),
+                            });
+                            report.interventions.push(Intervention {
+                                step,
+                                kind: InterventionKind::Escalate,
+                                detail: detail.to_string(),
+                            });
+                        }
+                    },
+                }
+            }
+            step += 1;
+            continue;
+        }
+        sentinel.consecutive_bad = 0;
         clip_global_norm(&mut grads, cfg.grad_clip);
         opt.update(&mut params, &mut grads, sched.lr_at(step));
         drop(step_span);
@@ -125,14 +412,52 @@ pub fn train(
                 eprintln!("warning: telemetry snapshot failed: {e}");
             }
         }
+        // checkpoint cadence sits *after* the eval block: held-out eval
+        // consumes auxiliary stream draws under some recipes, and the
+        // record must capture the cursors a resumed run will start from
+        if ckpt_every > 0 && (step + 1) % ckpt_every == 0 {
+            if let Some(dir) = ckpt_dir.as_ref() {
+                let (sr_cursor, aux_rng) = model.gemm.stream_cursors();
+                let (m, v) = opt.moments();
+                let snap = TrainSnapshot {
+                    next_step: step + 1,
+                    seed: cfg.seed,
+                    steps: cfg.steps,
+                    batch: cfg.batch,
+                    seq: cfg.seq,
+                    peak_lr: cfg.peak_lr,
+                    grad_clip: cfg.grad_clip,
+                    eval_every: cfg.eval_every,
+                    eval_batches: cfg.eval_batches,
+                    model_cfg,
+                    base_recipe: recipe,
+                    active_recipe,
+                    params: params.clone(),
+                    opt_m: m.clone(),
+                    opt_v: v.clone(),
+                    opt_step: opt.step,
+                    batcher_rng: batcher.rng_state(),
+                    sr_cursor,
+                    aux_rng,
+                    ema,
+                    loss_curve: loss_curve.clone(),
+                    eval_curve: eval_curve.clone(),
+                    wall_seconds: wall_accum + t0.elapsed().as_secs_f64(),
+                    sentinel: sentinel.clone(),
+                };
+                checkpoint::write_record(dir, &snap, opts.checkpoint.keep, &opts.faults)?;
+                report.checkpoints_written += 1;
+            }
+        }
+        step += 1;
     }
-    let wall = t0.elapsed().as_secs_f64();
+    let wall = wall_accum + t0.elapsed().as_secs_f64();
     let final_eval = evaluate(&mut model, &params, &eval_set, cfg.batch, cfg.seq);
     eval_curve.push((cfg.steps, final_eval));
     if let Err(e) = crate::telemetry::write_snapshot("train", cfg.steps) {
         eprintln!("warning: telemetry snapshot failed: {e}");
     }
-    TrainResult {
+    Ok(TrainResult {
         recipe,
         final_train_loss: ema.unwrap_or(f32::NAN),
         final_eval_loss: final_eval,
@@ -142,7 +467,9 @@ pub fn train(
         taps: captured,
         wall_seconds: wall,
         sec_per_step: wall / cfg.steps.max(1) as f64,
-    }
+        final_recipe: active_recipe,
+        report,
+    })
 }
 
 /// Mean held-out loss over a fixed eval set.
@@ -153,9 +480,9 @@ pub fn evaluate(
     batch: usize,
     seq: usize,
 ) -> f32 {
-    if eval_set.is_empty() {
-        return f32::NAN;
-    }
+    // an empty eval set used to yield a silent NaN that poisoned summary
+    // tables downstream; it is always a configuration bug, so fail loudly
+    assert!(!eval_set.is_empty(), "evaluate called with an empty eval set (eval_batches = 0?)");
     let mut acc = 0.0f64;
     for (x, y) in eval_set {
         acc += model.eval_loss(params, x, y, batch, seq) as f64;
@@ -187,6 +514,10 @@ mod tests {
         let last = r.final_train_loss;
         assert!(last < first, "loss should drop: {first} → {last}");
         assert!(r.final_eval_loss.is_finite());
+        // healthy run: the sentinel observed but never intervened
+        assert_eq!(r.report.skipped_steps, 0);
+        assert!(r.report.interventions.is_empty());
+        assert_eq!(r.final_recipe, QuantRecipe::Bf16);
     }
 
     #[test]
@@ -262,5 +593,14 @@ mod tests {
         let r4 = run(4);
         assert_eq!(r1.loss_curve, r2.loss_curve, "1 vs 2 threads");
         assert_eq!(r1.loss_curve, r4.loss_curve, "1 vs 4 threads");
+    }
+
+    #[test]
+    #[should_panic(expected = "empty eval set")]
+    fn evaluate_rejects_empty_eval_set() {
+        let cfg = ModelConfig::test_tiny(64);
+        let params = Params::init(&cfg, &mut Rng::new(1));
+        let mut model = Transformer::new(cfg, QuantRecipe::Bf16, 0);
+        let _ = evaluate(&mut model, &params, &[], 2, 16);
     }
 }

@@ -1,11 +1,21 @@
-//! Training substrate: AdamW optimizer, LR schedule, gradient clipping, and
-//! the single-process training loop over the pure-Rust simulator.
+//! Training substrate: AdamW optimizer, LR schedule, gradient clipping,
+//! the single-process training loop over the pure-Rust simulator, and the
+//! crash-safe train-state checkpointing + numerics sentinel that ride on
+//! it (DESIGN.md §13).
 //! (The PJRT-artifact training loop lives in `coordinator`.)
 
+pub mod checkpoint;
 pub mod loop_;
 pub mod optimizer;
 pub mod schedule;
 
-pub use loop_::{train, TrainConfig, TrainResult};
+pub use checkpoint::{
+    find_latest_valid, list_records, loss_curve_checksum, record_path, Intervention,
+    InterventionKind, SentinelState, TrainSnapshot,
+};
+pub use loop_::{
+    train, train_with, CheckpointConfig, SentinelConfig, TrainConfig, TrainOptions, TrainReport,
+    TrainResult,
+};
 pub use optimizer::{AdamW, AdamWConfig};
 pub use schedule::LrSchedule;
